@@ -1,0 +1,465 @@
+//! Regenerate every table and figure of the paper's evaluation
+//! (DESIGN.md §5 maps each to its modules). Results are printed
+//! paper-style and appended to results/<name>.txt.
+//!
+//!   cargo run --release --example paper_tables -- <cmd> [--seeds N]
+//!       [--cap N] [--epochs N] [--fast]
+//!   cmd: table1 table2 table3 table4 table5 table6 table7 table12
+//!        fig3 fig4 all
+//!
+//! Absolute numbers differ from the paper (synthetic substrate, MiniLM
+//! backbones — DESIGN.md §4); the *shape* — who wins, parameter-count
+//! ordering, crossovers — is the reproduction target.
+
+use anyhow::Result;
+use std::fmt::Write as _;
+use uni_lora::config::ModelCfg;
+use uni_lora::coordinator::sweep::over_seeds;
+use uni_lora::coordinator::{
+    evaluator, pretrain_backbone, ClsTrainer, Hyper, LmTrainer,
+};
+use uni_lora::coordinator::trainer::FullClsTrainer;
+use uni_lora::data::{glue, instruct, math_tasks, vision};
+use uni_lora::projection::properties;
+use uni_lora::projection::statics::d_effective;
+use uni_lora::runtime::Executor;
+use uni_lora::util::cli::Args;
+use uni_lora::util::{fmt_params, peak_rss_mib};
+
+
+
+struct Ctx {
+    exec: Executor,
+    seeds: Vec<u64>,
+    cap: usize,
+    epochs: usize,
+    out: String,
+}
+
+impl Ctx {
+    fn new(args: &Args) -> Result<Ctx> {
+        let fast = args.has("fast");
+        let seeds: Vec<u64> = (0..args.usize_or("seeds", if fast { 1 } else { 3 }) as u64)
+            .map(|i| 41 + i)
+            .collect();
+        Ok(Ctx {
+            exec: Executor::with_default_manifest()?,
+            seeds,
+            cap: args.usize_or("cap", if fast { 300 } else { 800 }),
+            epochs: args.usize_or("epochs", if fast { 1 } else { 2 }),
+            out: String::new(),
+        })
+    }
+
+    fn backbone(&mut self, size: &str) -> Result<Vec<f32>> {
+        Ok(pretrain_backbone(&mut self.exec, size, 42, uni_lora::coordinator::backbone::default_steps())?.0)
+    }
+
+    fn emit(&mut self, line: &str) {
+        println!("{line}");
+        self.out.push_str(line);
+        self.out.push('\n');
+    }
+
+    fn flush(&mut self, name: &str) -> Result<()> {
+        std::fs::create_dir_all("results")?;
+        std::fs::write(format!("results/{name}.txt"), &self.out)?;
+        self.out.clear();
+        Ok(())
+    }
+
+    fn hyper(&self) -> Hyper {
+        Hyper { lr_theta: 5e-3, lr_head: 5e-2, wd: 0.0, epochs: self.epochs }
+    }
+
+    /// One GLUE-like fine-tune run -> metric value.
+    fn glue_run(
+        &mut self,
+        size: &str,
+        method: &str,
+        task: &str,
+        seed: u64,
+        w0: &[f32],
+    ) -> Result<f64> {
+        let c = if task == "stsb" { 1 } else { 2 };
+        let base = format!("glue_{size}_{method}_c{c}");
+        let mut tr = ClsTrainer::new(&self.exec, &base, seed, w0.to_vec())?;
+        let split = glue::generate(task, seed, tr.cfg.seq, tr.cfg.vocab);
+        let train = &split.train[..split.train.len().min(self.cap)];
+        let hp = self.hyper();
+        let (score, _) =
+            tr.run_and_score(&mut self.exec, train, &split.dev, split.metric, &hp)?;
+        Ok(score)
+    }
+}
+
+// ------------------------------------------------------------------ tables
+
+fn d_of(size: &str, method: &str) -> usize {
+    let mut cfg = ModelCfg::test_base(method);
+    if size == "large" {
+        cfg.hidden = 96;
+        cfg.layers = 3;
+        cfg.d = 512;
+    }
+    if size == "lm" {
+        cfg.hidden = 128;
+        cfg.layers = 4;
+        cfg.d = 1024;
+    }
+    d_effective(&cfg)
+}
+
+fn table1(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 1: properties of the projection matrices P ==");
+    ctx.emit(&format!(
+        "{:<12} {:<9} {:<9} {:<10} {:<9} {:<12} {:<10}",
+        "Method", "LearnedP", "Global", "Uniform", "Isometry", "iso_err", "load_ratio"
+    ));
+    for method in ["vera", "tied", "vb", "lora_xs", "fastfood", "uni", "local", "nonuniform"] {
+        let mut cfg = ModelCfg::test_base(method);
+        cfg.hidden = 16;
+        cfg.layers = 2;
+        cfg.rank = 2;
+        cfg.d = 32;
+        cfg.vb_b = 16;
+        cfg.vb_bank = 8;
+        cfg.n_coef = 12;
+        let p = properties::analyze(&cfg, 42)?;
+        let yn = |b: bool| if b { "yes" } else { "no" };
+        ctx.emit(&format!(
+            "{:<12} {:<9} {:<9} {:<10} {:<9} {:<12.2e} {:<10.2}",
+            method,
+            yn(p.learned_p),
+            yn(p.globality),
+            yn(p.uniformity),
+            yn(p.isometry),
+            p.isometry_err,
+            p.load_ratio
+        ));
+    }
+    ctx.flush("table1")
+}
+
+fn table2(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 2: GLUE-like suite (median over seeds, paper metric/task) ==");
+    let methods = ["lora", "vera", "tied", "vb", "lora_xs", "fourierft", "uni"];
+    for size in ["base", "large"] {
+        let w0 = ctx.backbone(size)?;
+        ctx.emit(&format!("-- backbone: {size} --"));
+        ctx.emit(&format!(
+            "{:<11} {:>9} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7}",
+            "Method", "#Params", "SST2", "MRPC", "COLA", "QNLI", "RTE", "STSB", "Avg"
+        ));
+        for method in methods {
+            let mut row = format!("{:<11} {:>9}", method, fmt_params(d_of(size, method)));
+            let mut scores = Vec::new();
+            for task in glue::TASKS {
+                let seeds = ctx.seeds.clone();
+                let s = over_seeds(&seeds, |seed| ctx.glue_run(size, method, task, seed, &w0))?;
+                let scaled = 100.0 * s.median;
+                scores.push(scaled);
+                let _ = write!(row, " {scaled:>7.1}");
+            }
+            let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+            let _ = write!(row, " {avg:>7.1}");
+            ctx.emit(&row);
+        }
+    }
+    ctx.flush("table2")
+}
+
+fn lm_run(
+    ctx: &mut Ctx,
+    base: &str,
+    seed: u64,
+    w0: &[f32],
+    task: &str,
+) -> Result<(f64, f64, f64)> {
+    // returns (metric1, metric2, train_secs)
+    let mut tr = LmTrainer::new(&ctx.exec, base, seed, w0.to_vec())?;
+    let seq = tr.cfg.seq;
+    let hp = Hyper { lr_theta: 2e-3, lr_head: 0.0, wd: 0.0, epochs: ctx.epochs };
+    if task == "math" {
+        let (split, dev_math) = math_tasks::generate(seed, seq, ctx.cap, 64);
+        let rr = tr.train(&mut ctx.exec, &split.train, &hp)?;
+        let gsm = evaluator::exact_match_accuracy(&mut tr, &mut ctx.exec, &split.dev, 8)?;
+        let mth = evaluator::exact_match_accuracy(&mut tr, &mut ctx.exec, &dev_math, 8)?;
+        Ok((gsm, mth, rr.train_secs))
+    } else {
+        let (split, dev2) = instruct::generate(seed, seq, ctx.cap, 48);
+        let rr = tr.train(&mut ctx.exec, &split.train, &hp)?;
+        let s1 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &split.dev, 10)?;
+        let s2 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &dev2, 10)?;
+        Ok((s1, s2, rr.train_secs))
+    }
+}
+
+fn table3(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 3: math reasoning (exact-match %, GSM8K-like / MATH-like) ==");
+    let w0 = ctx.backbone("lm")?;
+    ctx.emit(&format!("{:<12} {:>9} {:>9} {:>9}", "Method", "#Params", "GSM8K", "MATH"));
+    for method in ["lora", "lora_xs", "vb", "vera", "fourierft", "uni"] {
+        let seed = ctx.seeds[0];
+        let (g, m, _) = lm_run(ctx, &format!("lm_{method}"), seed, &w0, "math")?;
+        ctx.emit(&format!(
+            "{:<12} {:>9} {:>9.2} {:>9.2}",
+            method,
+            fmt_params(d_of("lm", method)),
+            g,
+            m
+        ));
+    }
+    ctx.flush("table3")
+}
+
+fn table4(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 4: instruction tuning (rubric judge, Score1/Score2) ==");
+    let w0 = ctx.backbone("lm")?;
+    ctx.emit(&format!("{:<14} {:>9} {:>8} {:>8}", "Method", "#Params", "Score1", "Score2"));
+    // w/o FT baseline: untrained adapter
+    {
+        let seed = ctx.seeds[0];
+        let mut tr = LmTrainer::new(&ctx.exec, "lm_uni", seed, w0.clone())?;
+        let (split, dev2) = instruct::generate(seed, tr.cfg.seq, 10, 48);
+        let s1 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &split.dev, 10)?;
+        let s2 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &dev2, 10)?;
+        ctx.emit(&format!("{:<14} {:>9} {:>8.2} {:>8.2}", "w/o FT", "-", s1, s2));
+    }
+    for (label, base, d) in [
+        ("lora(r64)", "lm_lora_r64", 8 * 2 * 128 * 64),
+        ("vb", "lm_vb", d_of("lm", "vb")),
+        ("uni", "lm_uni", d_of("lm", "uni")),
+    ] {
+        let seed = ctx.seeds[0];
+        let (s1, s2, _) = lm_run(ctx, base, seed, &w0, "instruct")?;
+        ctx.emit(&format!("{:<14} {:>9} {:>8.2} {:>8.2}", label, fmt_params(d), s1, s2));
+    }
+    ctx.flush("table4")
+}
+
+fn table5(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 5: vision suite (accuracy %, 8 synthetic datasets) ==");
+    for size in ["base", "large"] {
+        let w0 = ctx.backbone(size)?;
+        ctx.emit(&format!("-- ViT-{size} --"));
+        let mut header = format!("{:<11} {:>9}", "Method", "#Params");
+        for ds in vision::DATASETS {
+            let _ = write!(header, " {:>7}", &ds[..ds.len().min(7)]);
+        }
+        header.push_str("     Avg");
+        ctx.emit(&header);
+        for method in ["none", "full", "fourierft", "uni"] {
+            let params = match method {
+                "none" => 0,
+                "full" => ctx.exec.manifest.get(&format!("vit_{size}_full_full_cls_train"))?.base_params,
+                m => d_of(size, m),
+            };
+            let mut row = format!(
+                "{:<11} {:>9}",
+                match method {
+                    "none" => "LP",
+                    "full" => "FF",
+                    m => m,
+                },
+                if params == 0 { "-".to_string() } else { fmt_params(params) }
+            );
+            let mut scores = Vec::new();
+            for ds in vision::DATASETS {
+                let seed = ctx.seeds[0];
+                let split = vision::generate(ds, seed, 32, 512);
+                let cap = ctx.cap.min(split.train.len());
+                let hp = ctx.hyper();
+                let score = if method == "full" {
+                    let mut tr = FullClsTrainer::new(
+                        &ctx.exec,
+                        &format!("vit_{size}_full"),
+                        &format!("vit_{size}_none_cls_eval"),
+                        seed,
+                        w0.clone(),
+                    )?;
+                    let hp = Hyper { lr_theta: 1e-3, ..hp };
+                    tr.run_and_score(&mut ctx.exec, &split.train[..cap], &split.dev, "acc", &hp)?.0
+                } else {
+                    let mut tr = ClsTrainer::new(
+                        &ctx.exec,
+                        &format!("vit_{size}_{method}"),
+                        seed,
+                        w0.clone(),
+                    )?;
+                    tr.run_and_score(&mut ctx.exec, &split.train[..cap], &split.dev, "acc", &hp)?.0
+                };
+                scores.push(100.0 * score);
+                let _ = write!(row, " {:>7.1}", 100.0 * score);
+            }
+            let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+            let _ = write!(row, " {avg:>7.1}");
+            ctx.emit(&row);
+        }
+    }
+    ctx.flush("table5")
+}
+
+fn table6(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 6: Uni-LoRA vs Fastfood (score %, train seconds) ==");
+    let w0 = ctx.backbone("large")?;
+    ctx.emit(&format!("{:<7} {:<10} {:>8} {:>10}", "Task", "Method", "Score", "Time(s)"));
+    for task in ["mrpc", "cola", "sst2", "qnli"] {
+        for method in ["uni", "fastfood"] {
+            let seed = ctx.seeds[0];
+            let base = format!("glue_large_{method}_c2");
+            let mut tr = ClsTrainer::new(&ctx.exec, &base, seed, w0.clone())?;
+            let split = glue::generate(task, seed, tr.cfg.seq, tr.cfg.vocab);
+            let train = &split.train[..split.train.len().min(ctx.cap)];
+            let hp = ctx.hyper();
+            let (score, rr) =
+                tr.run_and_score(&mut ctx.exec, train, &split.dev, split.metric, &hp)?;
+            ctx.emit(&format!(
+                "{:<7} {:<10} {:>8.1} {:>10.1}",
+                task, method, 100.0 * score, rr.train_secs
+            ));
+        }
+    }
+    ctx.flush("table6")
+}
+
+fn table7(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 7: global vs local vs non-uniform projection (score %) ==");
+    let w0 = ctx.backbone("large")?;
+    ctx.emit(&format!(
+        "{:<7} {:>10} {:>10} {:>12}",
+        "Task", "Uni-LoRA", "Local", "Non-uniform"
+    ));
+    for task in ["mrpc", "cola", "sst2", "qnli"] {
+        let mut vals = Vec::new();
+        for method in ["uni", "local", "nonuniform"] {
+            let seeds = ctx.seeds.clone();
+            let s = over_seeds(&seeds, |seed| {
+                ctx.glue_run("large", method, task, seed, &w0)
+            })?;
+            vals.push(100.0 * s.median);
+        }
+        ctx.emit(&format!(
+            "{:<7} {:>10.1} {:>10.1} {:>12.1}",
+            task, vals[0], vals[1], vals[2]
+        ));
+    }
+    ctx.flush("table7")
+}
+
+fn table12(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Table 12: LoRA rank 64 vs rank 4 vs Uni-LoRA (instruct) ==");
+    let w0 = ctx.backbone("lm")?;
+    ctx.emit(&format!(
+        "{:<14} {:>9} {:>8} {:>10} {:>10}",
+        "Method", "#Params", "Score1", "Time(s)", "PeakRSS(MiB)"
+    ));
+    for (label, base, d) in [
+        ("lora(r64)", "lm_lora_r64", 8usize * 2 * 128 * 64),
+        ("lora(r4)", "lm_lora", d_of("lm", "lora")),
+        ("uni(r4)", "lm_uni", d_of("lm", "uni")),
+    ] {
+        let seed = ctx.seeds[0];
+        let (s1, _s2, secs) = lm_run(ctx, base, seed, &w0, "instruct")?;
+        ctx.emit(&format!(
+            "{:<14} {:>9} {:>8.2} {:>10.1} {:>10.0}",
+            label,
+            fmt_params(d),
+            s1,
+            secs,
+            peak_rss_mib()
+        ));
+    }
+    ctx.flush("table12")
+}
+
+fn fig3(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Figure 3: accuracy vs subspace dimension d ==");
+    let w0 = ctx.backbone("base")?;
+    ctx.emit("d, sst2_acc");
+    for (d, base) in [
+        (16, "fig3_base_uni_d16"),
+        (64, "fig3_base_uni_d64"),
+        (256, "glue_base_uni_c2"),
+        (1024, "fig3_base_uni_d1024"),
+    ] {
+        let seed = ctx.seeds[0];
+        let mut tr = ClsTrainer::new(&ctx.exec, base.trim_end_matches("_cls_train"), seed, w0.clone())?;
+        let split = glue::generate("sst2", seed, tr.cfg.seq, tr.cfg.vocab);
+        let train = &split.train[..split.train.len().min(ctx.cap)];
+        let hp = ctx.hyper();
+        let (score, _) = tr.run_and_score(&mut ctx.exec, train, &split.dev, "acc", &hp)?;
+        ctx.emit(&format!("{d}, {:.1}", 100.0 * score));
+    }
+    let w0lm = ctx.backbone("lm")?;
+    ctx.emit("d, gsm8k_em, math_em");
+    for (d, base) in [
+        (256, "fig3_lm_uni_d256"),
+        (1024, "lm_uni"),
+        (4096, "fig3_lm_uni_d4096"),
+    ] {
+        let seed = ctx.seeds[0];
+        let (g, m, _) = lm_run(ctx, base, seed, &w0lm, "math")?;
+        ctx.emit(&format!("{d}, {g:.2}, {m:.2}"));
+    }
+    ctx.flush("fig3")
+}
+
+fn fig4(ctx: &mut Ctx) -> Result<()> {
+    ctx.emit("== Figure 4: accuracy vs LoRA rank r (d fixed) ==");
+    let w0 = ctx.backbone("base")?;
+    ctx.emit("r, sst2_acc");
+    for (r, base) in [
+        (1, "fig4_base_uni_r1"),
+        (2, "fig4_base_uni_r2"),
+        (4, "fig4_base_uni_r4"),
+        (8, "fig4_base_uni_r8"),
+    ] {
+        let seed = ctx.seeds[0];
+        let mut tr = ClsTrainer::new(&ctx.exec, base, seed, w0.clone())?;
+        let split = glue::generate("sst2", seed, tr.cfg.seq, tr.cfg.vocab);
+        let train = &split.train[..split.train.len().min(ctx.cap)];
+        let hp = ctx.hyper();
+        let (score, _) = tr.run_and_score(&mut ctx.exec, train, &split.dev, "acc", &hp)?;
+        ctx.emit(&format!("{r}, {:.1}", 100.0 * score));
+    }
+    ctx.flush("fig4")
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+    let mut ctx = Ctx::new(&args)?;
+    let t0 = std::time::Instant::now();
+    match cmd.as_str() {
+        "table1" => table1(&mut ctx)?,
+        "table2" => table2(&mut ctx)?,
+        "table3" => table3(&mut ctx)?,
+        "table4" => table4(&mut ctx)?,
+        "table5" => table5(&mut ctx)?,
+        "table6" => table6(&mut ctx)?,
+        "table7" => table7(&mut ctx)?,
+        "table12" => table12(&mut ctx)?,
+        "fig3" => fig3(&mut ctx)?,
+        "fig4" => fig4(&mut ctx)?,
+        "all" => {
+            table1(&mut ctx)?;
+            table2(&mut ctx)?;
+            table3(&mut ctx)?;
+            table4(&mut ctx)?;
+            table5(&mut ctx)?;
+            table6(&mut ctx)?;
+            table7(&mut ctx)?;
+            table12(&mut ctx)?;
+            fig3(&mut ctx)?;
+            fig4(&mut ctx)?;
+        }
+        other => anyhow::bail!("unknown command {other:?}"),
+    }
+    println!(
+        "\n[done in {:.1}s, exec stats: {:?}]",
+        t0.elapsed().as_secs_f64(),
+        ctx.exec.stats
+    );
+    Ok(())
+}

@@ -1,0 +1,352 @@
+"""AOT: lower every experiment's train/eval graphs to HLO text + a
+manifest the Rust runtime consumes. Python runs ONCE (`make artifacts`);
+after that the Rust binary is self-contained.
+
+Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact kinds and positional signatures (all f32 unless noted):
+  cls_train   (theta[d], m[d], v[d], head[dh], hm[dh], hv[dh],
+               step[] i32, lr_t[], lr_h[], wd[], w0[P],
+               tokens[B,T] i32, attn_len[B] i32, labels[B] i32|f32,
+               *statics) -> (theta', m', v', head', hm', hv', loss)
+  cls_eval    (theta[d], head[dh], w0[P], tokens, attn_len, *statics)
+              -> (logits[B,C],)
+  lm_train    (theta, m, v, step, lr_t, wd, w0, tokens[B,T] i32,
+               labels[B,T] i32, *statics) -> (theta', m', v', loss)
+  lm_logits   (theta, w0, tokens, *statics) -> (logits[B,T,V],)
+  pretrain_lm (w0[P], m[P], v[P], step, lr, wd, tokens, labels)
+              -> (w0', m', v', loss)
+  full_cls_train (w0, m, v, head, hm, hv, step, lr_t, lr_h, wd,
+               tokens, attn_len, labels) -> (w0',m',v',head',hm',hv',loss)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from dataclasses import asdict, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import methods, model, optim
+from .configs import BASE, E2E, LARGE, LM, ModelCfg, with_method
+
+F32, I32 = "f32", "i32"
+
+
+# --------------------------------------------------------------------------
+# step builders
+
+
+def _split_statics(cfg, args):
+    names = [n for n, _, _ in methods.statics_spec(cfg)]
+    assert len(args) == len(names), (len(args), names)
+    return dict(zip(names, args))
+
+
+def make_cls_train(cfg: ModelCfg):
+    def step(theta, m, v, head, hm, hv, step_i, lr_t, lr_h, wd, w0,
+             tokens, attn_len, labels, *statics):
+        sd = _split_statics(cfg, statics)
+
+        def loss_fn(th, hd):
+            logits = model.cls_output(cfg, w0, th, sd, hd, tokens, attn_len)
+            return model.cls_loss(cfg, logits, labels)
+
+        loss, (gt, gh) = jax.value_and_grad(loss_fn, argnums=(0, 1))(theta, head)
+        th2, m2, v2 = optim.adamw(theta, gt, m, v, step_i, lr_t, wd)
+        hd2, hm2, hv2 = optim.adamw(head, gh, hm, hv, step_i, lr_h, jnp.float32(0.0))
+        return th2, m2, v2, hd2, hm2, hv2, loss
+
+    return step
+
+
+def make_cls_eval(cfg: ModelCfg):
+    def step(theta, head, w0, tokens, attn_len, *statics):
+        sd = _split_statics(cfg, statics)
+        return (model.cls_output(cfg, w0, theta, sd, head, tokens, attn_len),)
+
+    return step
+
+
+def make_lm_train(cfg: ModelCfg):
+    def step(theta, m, v, step_i, lr_t, wd, w0, tokens, labels, *statics):
+        sd = _split_statics(cfg, statics)
+
+        def loss_fn(th):
+            return model.lm_loss(cfg, model.lm_logits(cfg, w0, th, sd, tokens), labels)
+
+        loss, gt = jax.value_and_grad(loss_fn)(theta)
+        th2, m2, v2 = optim.adamw(theta, gt, m, v, step_i, lr_t, wd)
+        return th2, m2, v2, loss
+
+    return step
+
+
+def make_lm_logits(cfg: ModelCfg):
+    def step(theta, w0, tokens, *statics):
+        sd = _split_statics(cfg, statics)
+        return (model.lm_logits(cfg, w0, theta, sd, tokens),)
+
+    return step
+
+
+def make_pretrain_lm(cfg: ModelCfg):
+    # method must be "none": the backbone itself is the trainable vector.
+    def step(w0, m, v, step_i, lr, wd, tokens, labels):
+        def loss_fn(w):
+            return model.lm_loss(cfg, model.lm_logits(cfg, w, jnp.zeros((1,)), {}, tokens), labels)
+
+        loss, g = jax.value_and_grad(loss_fn)(w0)
+        w2, m2, v2 = optim.adamw(w0, g, m, v, step_i, lr, wd)
+        return w2, m2, v2, loss
+
+    return step
+
+
+def make_full_cls_train(cfg: ModelCfg):
+    def step(w0, m, v, head, hm, hv, step_i, lr_t, lr_h, wd,
+             tokens, attn_len, labels):
+        def loss_fn(w, hd):
+            logits = model.cls_output(cfg, w, jnp.zeros((1,)), {}, hd, tokens, attn_len)
+            return model.cls_loss(cfg, logits, labels)
+
+        loss, (gw, gh) = jax.value_and_grad(loss_fn, argnums=(0, 1))(w0, head)
+        w2, m2, v2 = optim.adamw(w0, gw, m, v, step_i, lr_t, wd)
+        hd2, hm2, hv2 = optim.adamw(head, gh, hm, hv, step_i, lr_h, jnp.float32(0.0))
+        return w2, m2, v2, hd2, hm2, hv2, loss
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# signatures
+
+
+def signature(cfg: ModelCfg, kind: str):
+    """Positional input signature: list of (name, dtype, shape)."""
+    d = methods.d_effective(cfg)
+    dh = model.head_param_count(cfg)
+    P = model.base_param_count(cfg)
+    B, T = cfg.batch, cfg.seq
+    lab_dt = F32 if cfg.n_classes == 1 else I32
+    stat = [(n, dt, s) for n, dt, s in methods.statics_spec(cfg)]
+    if kind == "cls_train":
+        sig = [
+            ("theta", F32, (d,)), ("m", F32, (d,)), ("v", F32, (d,)),
+            ("head", F32, (dh,)), ("hm", F32, (dh,)), ("hv", F32, (dh,)),
+            ("step", I32, ()), ("lr_t", F32, ()), ("lr_h", F32, ()), ("wd", F32, ()),
+            ("w0", F32, (P,)), ("tokens", I32, (B, T)),
+            ("attn_len", I32, (B,)), ("labels", lab_dt, (B,)),
+        ] + stat
+        outs = ["theta", "m", "v", "head", "hm", "hv", "loss"]
+    elif kind == "cls_eval":
+        sig = [
+            ("theta", F32, (d,)), ("head", F32, (dh,)), ("w0", F32, (P,)),
+            ("tokens", I32, (B, T)), ("attn_len", I32, (B,)),
+        ] + stat
+        outs = ["logits"]
+    elif kind == "lm_train":
+        sig = [
+            ("theta", F32, (d,)), ("m", F32, (d,)), ("v", F32, (d,)),
+            ("step", I32, ()), ("lr_t", F32, ()), ("wd", F32, ()),
+            ("w0", F32, (P,)), ("tokens", I32, (B, T)), ("labels", I32, (B, T)),
+        ] + stat
+        outs = ["theta", "m", "v", "loss"]
+    elif kind == "lm_logits":
+        sig = [
+            ("theta", F32, (d,)), ("w0", F32, (P,)), ("tokens", I32, (B, T)),
+        ] + stat
+        outs = ["logits"]
+    elif kind == "pretrain_lm":
+        sig = [
+            ("w0", F32, (P,)), ("m", F32, (P,)), ("v", F32, (P,)),
+            ("step", I32, ()), ("lr", F32, ()), ("wd", F32, ()),
+            ("tokens", I32, (B, T)), ("labels", I32, (B, T)),
+        ]
+        outs = ["w0", "m", "v", "loss"]
+    elif kind == "full_cls_train":
+        sig = [
+            ("w0", F32, (P,)), ("m", F32, (P,)), ("v", F32, (P,)),
+            ("head", F32, (dh,)), ("hm", F32, (dh,)), ("hv", F32, (dh,)),
+            ("step", I32, ()), ("lr_t", F32, ()), ("lr_h", F32, ()), ("wd", F32, ()),
+            ("tokens", I32, (B, T)), ("attn_len", I32, (B,)), ("labels", lab_dt, (B,)),
+        ]
+        outs = ["w0", "m", "v", "head", "hm", "hv", "loss"]
+    else:
+        raise ValueError(kind)
+    return sig, outs
+
+
+BUILDERS = {
+    "cls_train": make_cls_train,
+    "cls_eval": make_cls_eval,
+    "lm_train": make_lm_train,
+    "lm_logits": make_lm_logits,
+    "pretrain_lm": make_pretrain_lm,
+    "full_cls_train": make_full_cls_train,
+}
+
+
+# --------------------------------------------------------------------------
+# registry of every artifact (DESIGN.md §5 maps these to paper exps)
+
+GLUE_METHODS = ["lora", "vera", "tied", "vb", "lora_xs", "fourierft", "uni"]
+ABLATION_METHODS = ["local", "nonuniform", "fastfood"]
+LM_METHODS = ["lora", "vera", "vb", "lora_xs", "fourierft", "uni"]
+
+
+def registry() -> dict[str, tuple[ModelCfg, str]]:
+    arts: dict[str, tuple[ModelCfg, str]] = {}
+
+    def add(name, cfg, kinds):
+        for k in kinds:
+            arts[f"{name}_{k}"] = (cfg, k)
+
+    # Table 2 (GLUE): 2 scales x 7 methods x {cls C=2, reg C=1}
+    for size in (BASE, LARGE):
+        for meth in GLUE_METHODS:
+            for C in (2, 1):
+                cfg = with_method(size, meth, n_classes=C)
+                add(f"glue_{size.name}_{meth}_c{C}", cfg, ["cls_train", "cls_eval"])
+
+    # Tables 6/7 ablations on the large backbone, classification head
+    for meth in ABLATION_METHODS:
+        cfg = with_method(LARGE, meth, n_classes=2)
+        add(f"glue_large_{meth}_c2", cfg, ["cls_train", "cls_eval"])
+
+    # Figure 3: d-sweep (uni, base backbone)
+    for dv in (16, 64, 1024):
+        cfg = with_method(BASE, "uni", n_classes=2, d=dv)
+        add(f"fig3_base_uni_d{dv}", cfg, ["cls_train", "cls_eval"])
+
+    # Figure 4: rank sweep (uni, base backbone). d = 128 for all points
+    # so D/d stays >= 4 even at r = 1 (full-support resampling needs
+    # headroom; see paper footnote 1).
+    for rv in (1, 2, 4, 8):
+        cfg = with_method(BASE, "uni", n_classes=2, rank=rv, d=128)
+        add(f"fig4_base_uni_r{rv}", cfg, ["cls_train", "cls_eval"])
+
+    # Tables 3/4/12: LM fine-tuning (math reasoning + instruction tuning)
+    for meth in LM_METHODS:
+        cfg = with_method(LM, meth)
+        add(f"lm_{meth}", cfg, ["lm_train", "lm_logits"])
+    add("lm_lora_r64", with_method(LM, "lora", rank=64), ["lm_train", "lm_logits"])
+    for dv in (256, 4096):
+        add(f"fig3_lm_uni_d{dv}", with_method(LM, "uni", d=dv),
+            ["lm_train", "lm_logits"])
+
+    # Table 5 (vision): C=10 heads; LP = none, FF = full fine-tune
+    for size in (BASE, LARGE):
+        for meth in ("uni", "fourierft", "none"):
+            cfg = with_method(size, meth, n_classes=10)
+            add(f"vit_{size.name}_{meth}", cfg, ["cls_train", "cls_eval"])
+        cfg = with_method(size, "none", n_classes=10)
+        add(f"vit_{size.name}_full", cfg, ["full_cls_train"])
+
+    # Pretraining (the in-system "foundation models") + e2e driver
+    for size in (BASE, LARGE, LM, E2E):
+        cfg = with_method(size, "none", n_classes=0)
+        add(f"pretrain_{size.name}", cfg, ["pretrain_lm"])
+    add("e2e_uni", with_method(E2E, "uni"), ["lm_train", "lm_logits"])
+
+    return arts
+
+
+# --------------------------------------------------------------------------
+# lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name: str, cfg: ModelCfg, kind: str, out_dir: str) -> dict:
+    sig, outs = signature(cfg, kind)
+    args = [
+        jax.ShapeDtypeStruct(s, jnp.int32 if dt == I32 else jnp.float32)
+        for _, dt, s in sig
+    ]
+    fn = BUILDERS[kind](cfg)
+    t0 = time.time()
+    # keep_unused: methods with no trainable adapter ("none"/LP) must keep
+    # the positional theta input so every artifact kind shares one
+    # signature shape (the Rust runtime validates against the manifest).
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    meta = {
+        "name": name,
+        "kind": kind,
+        "cfg": asdict(cfg),
+        "d": methods.d_effective(cfg),
+        "D": cfg.d_full,
+        "base_params": model.base_param_count(cfg),
+        "head_params": model.head_param_count(cfg),
+        "theta_segments": [
+            {"name": n, "shape": list(s), "init": i}
+            for n, s, i in methods.theta_segments(cfg)
+        ],
+        "base_segments": [
+            {"name": n, "shape": list(s), "init": i}
+            for n, s, i in model.base_segments(cfg)
+        ],
+        "statics": [
+            {"name": n, "dtype": dt, "shape": list(s)}
+            for n, dt, s in methods.statics_spec(cfg)
+        ],
+        "inputs": [
+            {"name": n, "dtype": dt, "shape": list(s)} for n, dt, s in sig
+        ],
+        "outputs": outs,
+        "hlo": f"{name}.hlo.txt",
+        "lower_secs": round(time.time() - t0, 2),
+    }
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--filter", default="", help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    arts = registry()
+    manifest = {}
+    n = 0
+    t0 = time.time()
+    for name, (cfg, kind) in sorted(arts.items()):
+        if args.filter and args.filter not in name:
+            continue
+        meta = lower_one(name, cfg, kind, args.out)
+        manifest[name] = meta
+        n += 1
+        print(f"[{n}] {name} ({kind}) lowered in {meta['lower_secs']}s", flush=True)
+    man_path = os.path.join(args.out, "manifest.json")
+    # merge with any existing manifest (supports --filter incremental runs)
+    if os.path.exists(man_path) and args.filter:
+        with open(man_path) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {n} artifacts + manifest in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

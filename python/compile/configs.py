@@ -1,0 +1,69 @@
+"""Model / experiment configuration shared by methods.py, model.py, aot.py.
+
+Sizes are scaled so every experiment in the paper's evaluation runs on a
+single CPU core through the PJRT runtime (see DESIGN.md §4 for the
+substitution table). The *structure* — which matrices are adapted, how
+each PEFT method parameterizes them, the d/D ratios — follows the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """One (backbone, method, head) combination = one pair of artifacts."""
+
+    name: str = "base"
+    vocab: int = 512
+    seq: int = 32
+    hidden: int = 64
+    layers: int = 2
+    heads: int = 4
+    ffn: int = 128
+    # PEFT
+    method: str = "uni"       # see methods.REGISTRY
+    rank: int = 4
+    d: int = 256              # subspace dim (uni family / fastfood / vb...)
+    scale: float = 2.0        # lora alpha/r scaling applied to DeltaW
+    # head
+    n_classes: int = 2        # 0 = LM head (frozen, part of base); 1 = regression
+    batch: int = 32
+    # method extras
+    vb_b: int = 64            # VB-LoRA sub-vector length
+    vb_k: int = 2             # VB-LoRA top-K
+    vb_bank: int = 24         # VB-LoRA bank size h
+    n_coef: int = 96          # FourierFT coefficients per module
+    use_pallas: bool = True   # route uni/fastfood projections through L1 kernels
+
+    @property
+    def n_modules(self) -> int:
+        """Adapted modules: q and v per layer (paper §4.1)."""
+        return 2 * self.layers
+
+    @property
+    def module_len(self) -> int:
+        """Per-module LoRA params: A [h, r] + B [r, h]."""
+        return 2 * self.hidden * self.rank
+
+    @property
+    def d_full(self) -> int:
+        """D = total LoRA parameter count across adapted modules."""
+        return self.n_modules * self.module_len
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+
+# Backbone families (see DESIGN.md §4: MiniLM stands in for RoBERTa etc.)
+BASE = ModelCfg(name="base", hidden=64, layers=2, ffn=128, heads=4, seq=32)
+LARGE = ModelCfg(name="large", hidden=96, layers=3, ffn=192, heads=4, seq=32)
+LM = ModelCfg(name="lm", hidden=128, layers=4, ffn=256, heads=4, seq=64,
+              vocab=512, n_classes=0, batch=16, d=1024)
+E2E = ModelCfg(name="e2e", hidden=256, layers=8, ffn=1024, heads=8, seq=64,
+               vocab=2048, n_classes=0, batch=8, d=4096)
+
+
+def with_method(cfg: ModelCfg, method: str, **kw) -> ModelCfg:
+    return replace(cfg, method=method, **kw)

@@ -1,0 +1,127 @@
+"""Pallas kernel for the Fastfood baseline (Uni-LoRA (Fastfood), Table 6).
+
+Fastfood projects theta through S.H.G_hat.Pi.H.B — O(D log d) against
+Uni-LoRA's O(D). The orthonormal FWHT is a log2(d)-stage butterfly inside
+one Pallas block (on TPU a VPU-friendly in-VMEM schedule; here
+interpret=True). A custom VJP makes the block differentiable: every
+factor is orthogonal-or-diagonal, so the backward pass is the transpose
+chain B.H.Pi^T.G_hat.H.S — same structure, same kernel shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .unilora import INTERPRET, _int_zero
+
+
+def _fwht_body(v, d):
+    """Orthonormal FWHT of a [d] vector (jnp ops, used inside kernels)."""
+    h = 1
+    y = v
+    while h < d:
+        y = y.reshape(d // (2 * h), 2, h)
+        a = y[:, 0, :]
+        b = y[:, 1, :]
+        y = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    return y.reshape(d) / jnp.sqrt(jnp.asarray(d, v.dtype))
+
+
+def fwht(x):
+    """FWHT of a [d] vector as a Pallas kernel (d a power of two).
+    Self-inverse and self-adjoint, so it is its own VJP."""
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, "FWHT length must be a power of two"
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = _fwht_body(x_ref[...], d)
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )
+
+    @jax.custom_vjp
+    def f(v):
+        return call(v)
+
+    f.defvjp(lambda v: (call(v), None), lambda _, g: (call(g),))
+    return f(x)
+
+
+def _block_raw(theta, sgn_b, gauss, perm, sgn_s):
+    d = theta.shape[0]
+
+    def kernel(th_ref, sb_ref, g_ref, p_ref, ss_ref, o_ref):
+        th = th_ref[...]
+        g = g_ref[...]
+        g_hat = g * jnp.sqrt(jnp.asarray(d, th.dtype)) / jnp.sqrt(jnp.sum(g * g))
+        v = _fwht_body(th * sb_ref[...], d)
+        v = v[p_ref[...]] * g_hat
+        v = _fwht_body(v, d)
+        o_ref[...] = v * ss_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), theta.dtype),
+        interpret=INTERPRET,
+    )(theta, sgn_b, gauss, perm, sgn_s)
+
+
+def _block_bwd_raw(g_out, sgn_b, gauss, perm, sgn_s):
+    """Transpose chain: gtheta = B.H.Pi^T(G_hat.H(S.g))."""
+    d = g_out.shape[0]
+
+    def kernel(g_ref, sb_ref, gg_ref, p_ref, ss_ref, o_ref):
+        gg = gg_ref[...]
+        g_hat = gg * jnp.sqrt(jnp.asarray(d, gg.dtype)) / jnp.sqrt(jnp.sum(gg * gg))
+        v = _fwht_body(g_ref[...] * ss_ref[...], d)
+        v = v * g_hat
+        v = jnp.zeros((d,), v.dtype).at[p_ref[...]].add(v)  # Pi^T scatter
+        v = _fwht_body(v, d)
+        o_ref[...] = v * sb_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), g_out.dtype),
+        interpret=INTERPRET,
+    )(g_out, sgn_b, gauss, perm, sgn_s)
+
+
+@jax.custom_vjp
+def fastfood_block(theta, sgn_b, gauss, perm, sgn_s):
+    """One Fastfood block S*H(G_hat*Pi(H(B*theta))): theta [d] -> [d]."""
+    return _block_raw(theta, sgn_b, gauss, perm, sgn_s)
+
+
+def _ff_fwd(theta, sgn_b, gauss, perm, sgn_s):
+    return _block_raw(theta, sgn_b, gauss, perm, sgn_s), (sgn_b, gauss, perm, sgn_s)
+
+
+def _ff_bwd(res, g):
+    sgn_b, gauss, perm, sgn_s = res
+    gt = _block_bwd_raw(g, sgn_b, gauss, perm, sgn_s)
+    # frozen statics: zero cotangents (correct enough for frozen inputs;
+    # they are never trained anywhere in this system)
+    return gt, jnp.zeros_like(sgn_b), jnp.zeros_like(gauss), _int_zero(perm), \
+        jnp.zeros_like(sgn_s)
+
+
+fastfood_block.defvjp(_ff_fwd, _ff_bwd)
+
+
+def fastfood_project(theta, sgn_b, gauss, perm, sgn_s, out_len):
+    """Full projection R^d -> R^out_len (nb blocks, concat + truncate).
+    Statics have leading dim nb."""
+    nb = sgn_b.shape[0]
+    outs = [
+        fastfood_block(theta, sgn_b[i], gauss[i], perm[i], sgn_s[i])
+        for i in range(nb)
+    ]
+    return jnp.concatenate(outs)[:out_len]

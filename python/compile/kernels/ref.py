@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth semantics: every Pallas kernel in this package
+is pytest-checked (with hypothesis shape/dtype sweeps) against the
+functions here, and the L2 model can be built against either
+implementation (`use_pallas` flag) — both lower into the same HLO
+artifact format.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def project_ref(theta, idx, nrm):
+    """The Uni-LoRA projection theta_D = P theta_d, computed as the O(D)
+    gather theta_d[idx] * nrm (P is never materialized)."""
+    return theta[idx] * nrm
+
+
+def gather_ab_ref(theta, idx, nrm, shape):
+    """Reconstruct one LoRA factor (A or B) from the shared vector."""
+    return (theta[idx] * nrm).reshape(shape)
+
+
+def unilora_matmul_ref(x, w0, theta, idx_a, nrm_a, idx_b, nrm_b, r, scale):
+    """Adapted matmul y = x @ W0 + scale * (x @ A) @ B with A, B gathered
+    on the fly from theta (paper Alg. 1 forward). Shapes:
+      x [M, n_in], w0 [n_in, n_out], A [n_in, r], B [r, n_out].
+    """
+    n_in = x.shape[-1]
+    n_out = w0.shape[-1]
+    a = gather_ab_ref(theta, idx_a, nrm_a, (n_in, r))
+    b = gather_ab_ref(theta, idx_b, nrm_b, (r, n_out))
+    return x @ w0 + scale * ((x @ a) @ b)
+
+
+def fwht_ref(x):
+    """Orthonormal fast Walsh-Hadamard transform along the last axis
+    (power-of-two length). Self-inverse: fwht(fwht(x)) == x."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, "FWHT length must be a power of two"
+    shape = x.shape
+    h = 1
+    y = x.reshape(-1, n)
+    while h < n:
+        y = y.reshape(-1, n // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return (y.reshape(shape) / jnp.sqrt(jnp.asarray(n, x.dtype))).astype(x.dtype)
+
+
+def fastfood_block_ref(theta, sgn_b, gauss, perm, sgn_s):
+    """One Fastfood block: v = S * H(G_hat * Pi(H(B * theta))).
+
+    theta: [d] (d a power of two). Returns [d]. G is normalized so the
+    block is (approximately) isometric: G_hat = G * sqrt(d) / ||G||.
+    """
+    d = theta.shape[0]
+    g_hat = gauss * jnp.sqrt(jnp.asarray(d, theta.dtype)) / jnp.linalg.norm(gauss)
+    v = fwht_ref(theta * sgn_b)
+    v = v[perm] * g_hat
+    v = fwht_ref(v)
+    return v * sgn_s
+
+
+def fastfood_project_ref(theta, sgn_b, gauss, perm, sgn_s, out_len):
+    """Full Fastfood projection R^d -> R^out_len: nb = ceil(out_len/d)
+    independent blocks, concatenated and truncated. Statics have leading
+    dim nb."""
+    nb = sgn_b.shape[0]
+    outs = [
+        fastfood_block_ref(theta, sgn_b[i], gauss[i], perm[i], sgn_s[i])
+        for i in range(nb)
+    ]
+    return jnp.concatenate(outs)[:out_len]

@@ -1,0 +1,184 @@
+"""Pallas kernels for the Uni-LoRA hot path, with custom VJPs so the L2
+training graphs differentiate *through* the kernels (pallas_call has no
+built-in reverse rule).
+
+Kernels:
+  * `project`    — theta_D = P theta_d as an O(D) VMEM gather.
+  * `project_t`  — the transpose P^T g (O(D) scatter-add); this is the
+    backward hot path: because P^T P = I (Theorem 1), the gradient w.r.t.
+    theta_d is exactly the scatter of the LoRA-space gradient.
+  * `apply`      — fused adapted matmul y = x@W0 + scale*(x@A)@B with
+    A, B reconstructed in-kernel; DeltaW never materializes.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): theta_d pins in VMEM for
+the whole grid; idx/nrm tiles share the BlockSpec of the A/B tiles they
+produce; the matmuls target the MXU. On this CPU image we lower with
+interpret=True (Mosaic custom-calls are not runnable on CPU PJRT) and
+size grids so one block covers each small operand, which lowers the
+kernels to straight-line HLO.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls.
+
+
+def _int_zero(x):
+    """float0 cotangent for integer inputs (required by custom_vjp)."""
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# --------------------------------------------------------------------------
+# projection kernels
+
+
+def _project_kernel(th_ref, idx_ref, nrm_ref, o_ref):
+    th = th_ref[...]
+    o_ref[...] = th[idx_ref[...]] * nrm_ref[...]
+
+
+def _project_raw(theta, idx, nrm):
+    return pl.pallas_call(
+        _project_kernel,
+        out_shape=jax.ShapeDtypeStruct(idx.shape, theta.dtype),
+        interpret=INTERPRET,
+    )(theta, idx, nrm)
+
+
+def project_t(g, idx, nrm, d):
+    """Transpose projection P^T g: out[j] = sum_{i: idx[i]=j} g[i]*nrm[i].
+
+    O(D) scatter-add — the gradient route back into theta_d."""
+
+    def kernel(g_ref, idx_ref, nrm_ref, o_ref):
+        gv = g_ref[...] * nrm_ref[...]
+        o_ref[...] = jnp.zeros((d,), gv.dtype).at[idx_ref[...]].add(gv)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), g.dtype),
+        interpret=INTERPRET,
+    )(g, idx, nrm)
+
+
+@jax.custom_vjp
+def project(theta, idx, nrm):
+    """theta_D = P theta_d (O(D) gather; differentiable w.r.t. theta)."""
+    return _project_raw(theta, idx, nrm)
+
+
+def _project_fwd(theta, idx, nrm):
+    return _project_raw(theta, idx, nrm), (theta, idx, nrm)
+
+
+def _project_bwd(res, g):
+    theta, idx, nrm = res
+    gt = project_t(g, idx, nrm, theta.shape[0])
+    gnrm = g * theta[idx]
+    return gt, _int_zero(idx), gnrm
+
+
+project.defvjp(_project_fwd, _project_bwd)
+
+
+# --------------------------------------------------------------------------
+# fused adapted matmul
+
+
+def _apply_raw(r, scale, x, w0, theta, idx_a, nrm_a, idx_b, nrm_b):
+    m_rows, n_in = x.shape
+    n_out = w0.shape[1]
+
+    def kernel(x_ref, w_ref, th_ref, ia_ref, na_ref, ib_ref, nb_ref, o_ref):
+        th = th_ref[...]
+        a = (th[ia_ref[...]] * na_ref[...]).reshape(n_in, r)
+        b = (th[ib_ref[...]] * nb_ref[...]).reshape(r, n_out)
+        xv = x_ref[...]
+        o_ref[...] = xv @ w_ref[...] + scale * ((xv @ a) @ b)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m_rows, n_out), x.dtype),
+        interpret=INTERPRET,
+    )(x, w0, theta, idx_a, nrm_a, idx_b, nrm_b)
+
+
+def _apply_bwd_kernel(r, scale, d, x, w0, theta, idx_a, nrm_a, idx_b, nrm_b, g):
+    """Fused backward: one Pallas kernel produces (gx, gtheta).
+
+    A, B are *regenerated* from theta (never stored — the memory-
+    efficiency point), then:
+      gx     = g @ W0^T + scale * (g @ B^T) @ A^T
+      gA     = scale * x^T (g B^T),  gB = scale * (x A)^T g
+      gtheta = P_a^T vec(gA) + P_b^T vec(gB)   (scatter-add)
+    """
+    m_rows, n_in = x.shape
+    n_out = w0.shape[1]
+
+    def kernel(x_ref, w_ref, th_ref, ia_ref, na_ref, ib_ref, nb_ref, g_ref,
+               gx_ref, gth_ref):
+        th = th_ref[...]
+        ia, na = ia_ref[...], na_ref[...]
+        ib, nb = ib_ref[...], nb_ref[...]
+        a = (th[ia] * na).reshape(n_in, r)
+        b = (th[ib] * nb).reshape(r, n_out)
+        xv, gv = x_ref[...], g_ref[...]
+        gbt = gv @ b.T                        # [M, r]
+        gx_ref[...] = gv @ w_ref[...].T + scale * (gbt @ a.T)
+        ga = scale * (xv.T @ gbt)             # [n_in, r]
+        gb = scale * ((xv @ a).T @ gv)        # [r, n_out]
+        gth = jnp.zeros((d,), th.dtype)
+        gth = gth.at[ia].add(ga.reshape(-1) * na)
+        gth = gth.at[ib].add(gb.reshape(-1) * nb)
+        gth_ref[...] = gth
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m_rows, n_in), x.dtype),
+            jax.ShapeDtypeStruct((d,), theta.dtype),
+        ),
+        interpret=INTERPRET,
+    )(x, w0, theta, idx_a, nrm_a, idx_b, nrm_b, g)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def apply_core(r, scale, x, w0, theta, idx_a, nrm_a, idx_b, nrm_b):
+    return _apply_raw(r, scale, x, w0, theta, idx_a, nrm_a, idx_b, nrm_b)
+
+
+def _apply_fwd(r, scale, x, w0, theta, idx_a, nrm_a, idx_b, nrm_b):
+    y = _apply_raw(r, scale, x, w0, theta, idx_a, nrm_a, idx_b, nrm_b)
+    return y, (x, w0, theta, idx_a, nrm_a, idx_b, nrm_b)
+
+
+def _apply_bwd(r, scale, res, g):
+    x, w0, theta, idx_a, nrm_a, idx_b, nrm_b = res
+    d = theta.shape[0]
+    gx, gth = _apply_bwd_kernel(r, scale, d, x, w0, theta,
+                                idx_a, nrm_a, idx_b, nrm_b, g)
+    # w0 is frozen in every adapter graph; the x^T g term is still the
+    # mathematically correct cotangent and is DCE'd by XLA when unused.
+    gw0 = x.T @ g
+    zf = jnp.zeros_like(nrm_a), jnp.zeros_like(nrm_b)
+    return (gx, gw0, gth, _int_zero(idx_a), zf[0], _int_zero(idx_b), zf[1])
+
+
+apply_core.defvjp(_apply_fwd, _apply_bwd)
+
+
+def apply(x, w0, theta, idx_a, nrm_a, idx_b, nrm_b, r, scale):
+    """Fused adapted matmul: y = x @ W0 + scale * (x @ A) @ B.
+
+    x [M, n_in], w0 [n_in, n_out], idx_a/nrm_a [n_in*r], idx_b/nrm_b
+    [r*n_out]. A and B are gathered from theta inside the kernel, in both
+    the forward and backward passes.
+    """
+    return apply_core(int(r), float(scale), x, w0, theta,
+                      idx_a, nrm_a, idx_b, nrm_b)

@@ -1,0 +1,386 @@
+"""The unified framework (paper §3.2): every PEFT method is a projection
+theta_D = P theta_d, realized here as (a) a layout for the trainable
+vector theta_d, (b) a spec for frozen statics (the implicit P, generated
+from a seed — by numpy here for tests, by rust/src/projection at
+runtime), and (c) an `apply` that computes the adapted matmul
+y = x @ W0 + scale * DeltaW-contribution for one module.
+
+Methods (Table 1 of the paper):
+  lora        P = I (d = D)                                 [identity]
+  uni         each row one-hot, uniform column, 1/sqrt(n_j) [ours]
+  local       same, but per-layer subspace slices           [ablation T7]
+  nonuniform  same, but A->2/3 of slots, B->1/3             [ablation T7]
+  fastfood    S.H.G.Pi.H.B structured projection            [ablation T6]
+  vera        frozen shared P_A/P_B + trainable diag pair   [baseline]
+  tied        trainable shared P_A/P_B + diag pair          [baseline]
+  vb          vector bank + fixed top-K admixture           [baseline]
+  lora_xs     frozen per-module bases + trainable r x r     [baseline]
+  fourierft   frozen random Fourier bases + trainable coefs [baseline]
+  none        no adapter (linear probing)                   [Table 5 LP]
+
+Statics generation must stay bit-identical with rust/src/projection/*.rs
+(both sides build on the shared SplitMix64 streams in unirng / rng.rs).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import unirng as rng
+from .configs import ModelCfg
+from .kernels import fastfood as ff_kernel
+from .kernels import ref as kref
+from .kernels import unilora as uni_kernel
+
+F32, I32 = "f32", "i32"
+
+
+# --------------------------------------------------------------------------
+# helpers
+
+
+def _seg_offsets(segments):
+    """[(name, shape, init)] -> dict name -> (offset, shape)."""
+    out, off = {}, 0
+    for name, shape, _init in segments:
+        n = int(np.prod(shape))
+        out[name] = (off, tuple(shape))
+        off += n
+    return out, off
+
+
+def unflatten(theta, segments):
+    """Split the flat trainable vector into named jnp views."""
+    offs, total = _seg_offsets(segments)
+    assert theta.shape[0] == total, (theta.shape, total)
+    return {
+        name: theta[o: o + int(np.prod(s))].reshape(s)
+        for name, (o, s) in offs.items()
+    }
+
+
+def init_array(init: str, shape, seed: int) -> np.ndarray:
+    """Materialize an init spec string (mirrored by rust adapters::init)."""
+    n = int(np.prod(shape))
+    if init == "zeros":
+        return np.zeros(shape, np.float32)
+    if init == "ones":
+        return np.ones(shape, np.float32)
+    if init.startswith("normal:"):
+        s = float(init.split(":")[1])
+        return (rng.normals(seed, n) * s).reshape(shape).astype(np.float32)
+    if init.startswith("uniform:"):
+        a = float(init.split(":")[1])
+        return rng.uniform_range(seed, n, -a, a).reshape(shape)
+    if init.startswith("const:"):
+        return np.full(shape, float(init.split(":")[1]), np.float32)
+    raise ValueError(f"unknown init {init!r}")
+
+
+def init_theta(cfg: ModelCfg, seed: int) -> np.ndarray:
+    """Build the initial trainable vector (used by tests; rust mirrors)."""
+    parts = []
+    for i, (name, shape, init) in enumerate(theta_segments(cfg)):
+        parts.append(
+            init_array(init, shape, rng.child_seed(seed, rng.STREAM_THETA_INIT + 1000 * i)).ravel()
+        )
+    if not parts:
+        return np.zeros((1,), np.float32)
+    return np.concatenate(parts)
+
+
+def _mgs_columns(a: np.ndarray) -> np.ndarray:
+    """Modified Gram-Schmidt column orthonormalization (float64 in,
+    sequential per-element dot products to stay bit-comparable with the
+    Rust mirror within f32 tolerance)."""
+    a = a.copy()
+    h, r = a.shape
+    for j in range(r):
+        v = a[:, j]
+        for i in range(j):
+            v -= float(np.dot(a[:, i], v)) * a[:, i]
+        a[:, j] = v / float(np.sqrt(np.dot(v, v)))
+    return a
+
+
+def _patch_support(idx: np.ndarray, d: int, used: int, patch_seed: int) -> np.ndarray:
+    """Give every empty column in [0, used) a row stolen from a column
+    with occupancy >= 2. Deterministic; mirrored in rust uni.rs."""
+    idx = idx.copy()
+    cnt = np.bincount(idx, minlength=d)
+    stream_pos = 0
+    for j in range(used):
+        if cnt[j] > 0:
+            continue
+        while True:
+            row = rng.value(patch_seed, stream_pos) % len(idx)
+            stream_pos += 1
+            if cnt[idx[row]] >= 2:
+                cnt[idx[row]] -= 1
+                idx[row] = j
+                cnt[j] = 1
+                break
+    return idx
+
+
+def _uni_counts_to_nrm(idx: np.ndarray, d: int) -> np.ndarray:
+    cnt = np.bincount(idx, minlength=d).astype(np.float64)
+    return (1.0 / np.sqrt(np.maximum(cnt, 1.0)))[idx].astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# per-method specs
+
+
+def theta_segments(cfg: ModelCfg):
+    """Trainable-vector layout: list of (name, shape, init)."""
+    h, r, L, nm, d = cfg.hidden, cfg.rank, cfg.layers, cfg.n_modules, cfg.d
+    m = cfg.method
+    if m == "lora":
+        segs = []
+        for i in range(nm):
+            # B zero-init so DeltaW = 0 at start (standard LoRA init).
+            segs.append((f"A{i}", (h, r), "normal:0.02"))
+            segs.append((f"B{i}", (r, h), "zeros"))
+        return segs
+    if m in ("uni", "local", "nonuniform", "fastfood"):
+        return [("theta", (d,), "uniform:0.02")]  # paper: U(-0.02, 0.02)
+    if m == "vera":
+        # VeRA init: lambda_d = 0.1, lambda_b = 0 -> DeltaW = 0 at start.
+        return [("lamb_b", (nm, h), "zeros"), ("lamb_d", (nm, r), "const:0.1")]
+    if m == "tied":
+        return [
+            ("pa_t", (h, r), "normal:0.02"),
+            ("pb_t", (r, h), "normal:0.02"),
+            ("lamb_b", (nm, h), "zeros"),
+            ("lamb_d", (nm, r), "const:0.1"),
+        ]
+    if m == "vb":
+        n_sub = cfg.d_full // cfg.vb_b
+        return [
+            ("bank", (cfg.vb_bank, cfg.vb_b), "uniform:0.02"),
+            ("coef", (n_sub, cfg.vb_k), "const:0.5"),
+        ]
+    if m == "lora_xs":
+        return [(f"R{i}", (r, r), "zeros") for i in range(nm)]
+    if m == "fourierft":
+        return [("coef", (nm, cfg.n_coef), "zeros")]
+    if m == "none":
+        return []
+    raise ValueError(f"unknown method {cfg.method!r}")
+
+
+def d_effective(cfg: ModelCfg) -> int:
+    """Number of trainable adapter parameters (reported in every table)."""
+    _, total = _seg_offsets(theta_segments(cfg))
+    return max(total, 1)
+
+
+def statics_spec(cfg: ModelCfg):
+    """Frozen side inputs (the implicit P): list of (name, dtype, shape)."""
+    h, r, nm, d, D = cfg.hidden, cfg.rank, cfg.n_modules, cfg.d, cfg.d_full
+    m = cfg.method
+    if m in ("uni", "local", "nonuniform"):
+        return [("idx", I32, (D,)), ("nrm", F32, (D,))]
+    if m == "fastfood":
+        nb = math.ceil(cfg.module_len / d)
+        return [
+            ("sgn_b", F32, (nm, nb, d)),
+            ("gauss", F32, (nm, nb, d)),
+            ("perm", I32, (nm, nb, d)),
+            ("sgn_s", F32, (nm, nb, d)),
+        ]
+    if m == "vera":
+        return [("pa_t", F32, (h, r)), ("pb_t", F32, (r, h))]
+    if m == "vb":
+        n_sub = D // cfg.vb_b
+        return [("top_idx", I32, (n_sub, cfg.vb_k))]
+    if m == "lora_xs":
+        return [("pa_t", F32, (nm, h, r)), ("pb_t", F32, (nm, r, h))]
+    if m == "fourierft":
+        return [("freq", I32, (nm, cfg.n_coef, 2))]
+    return []  # lora, tied, none
+
+
+def gen_statics(cfg: ModelCfg, seed: int) -> dict[str, np.ndarray]:
+    """Generate the frozen statics from a seed. MUST stay bit-identical
+    with rust/src/projection/statics.rs (same streams, same order)."""
+    h, r, nm, d, D = cfg.hidden, cfg.rank, cfg.n_modules, cfg.d, cfg.d_full
+    m = cfg.method
+    out: dict[str, np.ndarray] = {}
+    if m in ("uni", "local", "nonuniform"):
+        # Paper footnote 1: re-sample P if any column is empty (keeps the
+        # n_j > 0 assumption of Theorem 1). Resampling loop MUST match
+        # rust/src/projection/uni.rs: attempt k uses child_seed(s, k).
+        s = rng.child_seed(seed, rng.STREAM_IDX)
+        used = d if m != "local" else (d // cfg.layers) * cfg.layers
+        for attempt in range(32):
+            raw = rng.u64_stream(rng.child_seed(s, attempt), D)
+            if m == "uni":
+                idx = (raw % np.uint64(d)).astype(np.int64)
+            elif m == "local":
+                # per-layer subspace slices of size d/L (ablation, Table 7)
+                dl = d // cfg.layers
+                idx = np.empty(D, np.int64)
+                per_layer = 2 * cfg.module_len
+                for l in range(cfg.layers):
+                    lo, hi = l * per_layer, (l + 1) * per_layer
+                    idx[lo:hi] = l * dl + (raw[lo:hi] % np.uint64(dl)).astype(np.int64)
+            else:  # nonuniform: A -> first 2d/3 slots, B -> last d/3
+                da = 2 * d // 3
+                db = d - da
+                idx = np.empty(D, np.int64)
+                ml, ar = cfg.module_len, cfg.hidden * cfg.rank
+                for i in range(nm):
+                    o = i * ml
+                    idx[o: o + ar] = (raw[o: o + ar] % np.uint64(da)).astype(np.int64)
+                    idx[o + ar: o + ml] = da + (
+                        raw[o + ar: o + ml] % np.uint64(db)
+                    ).astype(np.int64)
+            if (np.bincount(idx, minlength=d)[:used] > 0).all():
+                break
+            if attempt == 31:
+                # Low D/d ratio: resampling alone may never find full
+                # support. Patch deterministically: give each empty
+                # column a row stolen from a column with count >= 2.
+                # MUST match rust/src/projection/uni.rs::patch_support.
+                idx = _patch_support(idx, d, used, rng.child_seed(s, 999_983))
+                break
+        out["idx"] = idx.astype(np.int32)
+        out["nrm"] = _uni_counts_to_nrm(idx, d)
+    elif m == "fastfood":
+        nb = math.ceil(cfg.module_len / d)
+        sb = np.empty((nm, nb, d), np.float32)
+        g = np.empty((nm, nb, d), np.float32)
+        pm = np.empty((nm, nb, d), np.int32)
+        ss = np.empty((nm, nb, d), np.float32)
+        for i in range(nm):
+            for j in range(nb):
+                base = rng.child_seed(seed, rng.STREAM_FASTFOOD + 16 * i + j)
+                sb[i, j] = rng.signs(rng.child_seed(base, 1), d)
+                g[i, j] = rng.normals(rng.child_seed(base, 2), d)
+                pm[i, j] = rng.permutation(rng.child_seed(base, 3), d).astype(np.int32)
+                ss[i, j] = rng.signs(rng.child_seed(base, 4), d)
+        out.update(sgn_b=sb, gauss=g, perm=pm, sgn_s=ss)
+    elif m == "vera":
+        s = 1.0 / math.sqrt(h)
+        out["pa_t"] = (
+            rng.normals(rng.child_seed(seed, rng.STREAM_VERA_PA), h * r) * s
+        ).reshape(h, r).astype(np.float32)
+        out["pb_t"] = (
+            rng.normals(rng.child_seed(seed, rng.STREAM_VERA_PB), r * h) * s
+        ).reshape(r, h).astype(np.float32)
+    elif m == "vb":
+        n_sub = D // cfg.vb_b
+        s = rng.child_seed(seed, rng.STREAM_VB_TOPIDX)
+        out["top_idx"] = rng.indices(s, n_sub * cfg.vb_k, cfg.vb_bank).reshape(
+            n_sub, cfg.vb_k
+        ).astype(np.int32)
+    elif m == "lora_xs":
+        # Orthonormal frozen bases (stand-in for the paper's SVD bases:
+        # orthonormality is what makes LoRA-XS isometric in Table 1).
+        # Modified Gram-Schmidt in float64, mirrored in rust statics.rs.
+        pa = np.empty((nm, h, r), np.float32)
+        pb = np.empty((nm, r, h), np.float32)
+        for i in range(nm):
+            base = rng.child_seed(seed, rng.STREAM_XS_BASES + i)
+            ra = rng.normals(rng.child_seed(base, 1), h * r).reshape(h, r)
+            rb = rng.normals(rng.child_seed(base, 2), r * h).reshape(r, h)
+            pa[i] = _mgs_columns(ra.astype(np.float64)).astype(np.float32)
+            pb[i] = _mgs_columns(rb.T.astype(np.float64)).T.astype(np.float32)
+        out.update(pa_t=pa, pb_t=pb)
+    elif m == "fourierft":
+        f = np.empty((nm, cfg.n_coef, 2), np.int32)
+        for i in range(nm):
+            base = rng.child_seed(seed, rng.STREAM_FOURIER_FREQ + i)
+            f[i, :, 0] = rng.indices(rng.child_seed(base, 1), cfg.n_coef, h)
+            f[i, :, 1] = rng.indices(rng.child_seed(base, 2), cfg.n_coef, h)
+        out["freq"] = f
+    return out
+
+
+# --------------------------------------------------------------------------
+# apply: the adapted matmul for one module
+
+
+def apply(cfg: ModelCfg, theta_map, statics, mod_i: int, x, w0):
+    """y = x @ w0 + scale * DeltaW-path for adapted module mod_i.
+
+    x: [..., h] (flattened to 2-D internally), w0: [h, h].
+    """
+    h, r, sc = cfg.hidden, cfg.rank, cfg.scale
+    m = cfg.method
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, h)
+
+    if m == "none":
+        return (x2 @ w0).reshape(*lead, h)
+
+    if m == "lora":
+        a, b = theta_map[f"A{mod_i}"], theta_map[f"B{mod_i}"]
+        y = x2 @ w0 + sc * ((x2 @ a) @ b)
+    elif m in ("uni", "local", "nonuniform"):
+        ml, ar = cfg.module_len, h * r
+        o = mod_i * ml
+        th = theta_map["theta"]
+        ia, na = statics["idx"][o: o + ar], statics["nrm"][o: o + ar]
+        ib, nb = statics["idx"][o + ar: o + ml], statics["nrm"][o + ar: o + ml]
+        if cfg.use_pallas:
+            y = uni_kernel.apply(x2, w0, th, ia, na, ib, nb, r, sc)
+        else:
+            y = kref.unilora_matmul_ref(x2, w0, th, ia, na, ib, nb, r, sc)
+    elif m == "fastfood":
+        th = theta_map["theta"]
+        proj = ff_kernel.fastfood_project if cfg.use_pallas else kref.fastfood_project_ref
+        nb = statics["sgn_b"].shape[1]
+        flat = proj(
+            th,
+            statics["sgn_b"][mod_i],
+            statics["gauss"][mod_i],
+            statics["perm"][mod_i],
+            statics["sgn_s"][mod_i],
+            cfg.module_len,
+        ) / math.sqrt(cfg.n_modules * nb)  # full-P isometry normalization
+        a = flat[: h * r].reshape(h, r)
+        b = flat[h * r:].reshape(r, h)
+        y = x2 @ w0 + sc * ((x2 @ a) @ b)
+    elif m in ("vera", "tied"):
+        src = theta_map if m == "tied" else statics
+        pa_t, pb_t = src["pa_t"], src["pb_t"]
+        lb = theta_map["lamb_b"][mod_i]  # [h]
+        ld = theta_map["lamb_d"][mod_i]  # [r]
+        a = pa_t * ld[None, :]           # [h, r]
+        b = pb_t * lb[None, :]           # [r, h]
+        y = x2 @ w0 + sc * ((x2 @ a) @ b)
+    elif m == "vb":
+        bank, coef = theta_map["bank"], theta_map["coef"]
+        ml = cfg.module_len
+        n_sub_mod = ml // cfg.vb_b
+        lo = mod_i * n_sub_mod
+        ti = statics["top_idx"][lo: lo + n_sub_mod]      # [ns, K]
+        cf = coef[lo: lo + n_sub_mod]                     # [ns, K]
+        sub = jnp.einsum("sk,skb->sb", cf, bank[ti])      # [ns, b]
+        flat = sub.reshape(ml)
+        a = flat[: h * r].reshape(h, r)
+        b = flat[h * r:].reshape(r, h)
+        y = x2 @ w0 + sc * ((x2 @ a) @ b)
+    elif m == "lora_xs":
+        pa_t, pb_t = statics["pa_t"][mod_i], statics["pb_t"][mod_i]
+        rr = theta_map[f"R{mod_i}"]
+        y = x2 @ w0 + sc * (((x2 @ pa_t) @ rr.T) @ pb_t)
+    elif m == "fourierft":
+        c = theta_map["coef"][mod_i]                      # [n_coef]
+        f = statics["freq"][mod_i]                        # [n_coef, 2]
+        i = jnp.arange(h, dtype=jnp.float32)
+        ang1 = 2.0 * jnp.pi * f[:, 0][:, None].astype(jnp.float32) * i[None, :] / h
+        ang2 = 2.0 * jnp.pi * f[:, 1][:, None].astype(jnp.float32) * i[None, :] / h
+        dw = (
+            jnp.einsum("k,ki,kj->ij", c, jnp.cos(ang1), jnp.cos(ang2))
+            - jnp.einsum("k,ki,kj->ij", c, jnp.sin(ang1), jnp.sin(ang2))
+        ) / math.sqrt(cfg.n_coef)
+        y = x2 @ (w0 + sc * dw)
+    else:
+        raise ValueError(f"unknown method {m!r}")
+    return y.reshape(*lead, h)

@@ -1,0 +1,139 @@
+"""L2: the MiniLM transformer backbone with PEFT-adapted q/v projections.
+
+A single pre-LN causal transformer serves every experiment:
+  * classification / regression head (GLUE-like, vision)  — mean-pool
+  * LM head (math reasoning, instruction tuning, pretraining)
+
+Base weights are a single flat f32 vector `w0` (runtime input, frozen
+during fine-tuning); `base_segments` records the layout, which the Rust
+coordinator reads from the artifact meta to initialize / checkpoint the
+backbone. The adapted matmuls (q and v, paper §4.1) route through
+methods.apply, i.e. through the L1 Pallas kernels.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import methods
+from .configs import ModelCfg
+
+
+def base_segments(cfg: ModelCfg):
+    """Flat layout of the frozen backbone: list of (name, shape, init)."""
+    h, f, V, T = cfg.hidden, cfg.ffn, cfg.vocab, cfg.seq
+    segs = [
+        ("tok_emb", (V, h), "normal:0.02"),
+        ("pos_emb", (T, h), "normal:0.02"),
+    ]
+    for l in range(cfg.layers):
+        segs += [
+            (f"ln1_g{l}", (h,), "ones"),
+            (f"ln1_b{l}", (h,), "zeros"),
+            (f"wq{l}", (h, h), "normal:0.02"),
+            (f"wk{l}", (h, h), "normal:0.02"),
+            (f"wv{l}", (h, h), "normal:0.02"),
+            (f"wo{l}", (h, h), "normal:0.02"),
+            (f"ln2_g{l}", (h,), "ones"),
+            (f"ln2_b{l}", (h,), "zeros"),
+            (f"w1{l}", (h, f), "normal:0.02"),
+            (f"w2{l}", (f, h), "normal:0.02"),
+        ]
+    segs += [("lnf_g", (h,), "ones"), ("lnf_b", (h,), "zeros")]
+    segs += [("lm_head", (h, V), "normal:0.02")]
+    return segs
+
+
+def base_param_count(cfg: ModelCfg) -> int:
+    return sum(int(np.prod(s)) for _, s, _ in base_segments(cfg))
+
+
+def head_param_count(cfg: ModelCfg) -> int:
+    c = max(cfg.n_classes, 1)
+    return cfg.hidden * c + c
+
+
+def unflatten_base(cfg: ModelCfg, w0):
+    return methods.unflatten(w0, base_segments(cfg))
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _attention(cfg: ModelCfg, q, k, v):
+    """Causal multi-head attention. q/k/v: [B, T, h]."""
+    B, T, h = q.shape
+    nh, hd = cfg.heads, cfg.head_dim
+
+    def split(t):
+        return t.reshape(B, T, nh, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    att = jnp.einsum("bnid,bnjd->bnij", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bnij,bnjd->bnid", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(B, T, h)
+
+
+def forward(cfg: ModelCfg, w0, theta, statics, tokens):
+    """Backbone forward. tokens [B, T] i32 -> hidden states [B, T, h]."""
+    p = unflatten_base(cfg, w0)
+    tm = methods.unflatten(theta, methods.theta_segments(cfg)) \
+        if methods.theta_segments(cfg) else {}
+    T = tokens.shape[1]
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :T]
+    for l in range(cfg.layers):
+        x2 = _layer_norm(x, p[f"ln1_g{l}"], p[f"ln1_b{l}"])
+        q = methods.apply(cfg, tm, statics, 2 * l, x2, p[f"wq{l}"])
+        k = x2 @ p[f"wk{l}"]
+        v = methods.apply(cfg, tm, statics, 2 * l + 1, x2, p[f"wv{l}"])
+        x = x + _attention(cfg, q, k, v) @ p[f"wo{l}"]
+        x2 = _layer_norm(x, p[f"ln2_g{l}"], p[f"ln2_b{l}"])
+        x = x + jax.nn.gelu(x2 @ p[f"w1{l}"]) @ p[f"w2{l}"]
+    return _layer_norm(x, p["lnf_g"], p["lnf_b"])
+
+
+def cls_output(cfg: ModelCfg, w0, theta, statics, head, tokens, attn_len):
+    """Mean-pooled classification/regression output [B, C].
+
+    attn_len [B] i32: number of real (non-pad) tokens per example."""
+    hidden = forward(cfg, w0, theta, statics, tokens)
+    T = tokens.shape[1]
+    pos = jnp.arange(T)[None, :]
+    m = (pos < attn_len[:, None]).astype(hidden.dtype)
+    pooled = (hidden * m[..., None]).sum(1) / jnp.maximum(m.sum(1, keepdims=True), 1.0)
+    c = max(cfg.n_classes, 1)
+    wh = head[: cfg.hidden * c].reshape(cfg.hidden, c)
+    bh = head[cfg.hidden * c:]
+    return pooled @ wh + bh
+
+
+def lm_logits(cfg: ModelCfg, w0, theta, statics, tokens):
+    """Next-token logits [B, T, V]."""
+    hidden = forward(cfg, w0, theta, statics, tokens)
+    p = unflatten_base(cfg, w0)
+    return hidden @ p["lm_head"]
+
+
+def cls_loss(cfg: ModelCfg, logits, labels):
+    """CE for C>=2; MSE (labels f32) for regression (C == 1)."""
+    if cfg.n_classes == 1:
+        return jnp.mean((logits[:, 0] - labels) ** 2)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, labels[:, None], axis=1))
+
+
+def lm_loss(cfg: ModelCfg, logits, labels):
+    """Next-token CE; positions with label < 0 are masked (prompt/pad)."""
+    V = logits.shape[-1]
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    m = (labels >= 0).astype(nll.dtype)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)

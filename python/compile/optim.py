@@ -1,0 +1,20 @@
+"""AdamW, written against flat f32 vectors so optimizer state moves
+through the artifact boundary as plain arrays (the Rust coordinator owns
+them as device buffers between steps)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+
+def adamw(theta, grad, m, v, step, lr, wd):
+    """One AdamW update. `step` is the 1-based i32 step counter (scalar),
+    lr/wd f32 scalars. Returns (theta', m', v')."""
+    t = step.astype(jnp.float32)
+    m2 = B1 * m + (1.0 - B1) * grad
+    v2 = B2 * v + (1.0 - B2) * grad * grad
+    mhat = m2 / (1.0 - B1**t)
+    vhat = v2 / (1.0 - B2**t)
+    upd = mhat / (jnp.sqrt(vhat) + EPS) + wd * theta
+    return theta - lr * upd, m2, v2

@@ -1,0 +1,81 @@
+"""AOT layer: signatures, registry coverage, HLO text round-trip via the
+same xla_client conversion path the artifacts use."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, methods, model
+from compile.configs import BASE, LM, with_method
+
+
+def test_registry_covers_every_paper_experiment():
+    arts = aot.registry()
+    names = set(arts)
+    # Table 2: every GLUE method on both scales, both head types
+    for size in ("base", "large"):
+        for m in aot.GLUE_METHODS:
+            for c in (1, 2):
+                assert f"glue_{size}_{m}_c{c}_cls_train" in names
+    # Tables 6/7 ablations
+    for m in ("local", "nonuniform", "fastfood"):
+        assert f"glue_large_{m}_c2_cls_train" in names
+    # Table 3/4/12 LM methods + rank-64 LoRA
+    for m in aot.LM_METHODS:
+        assert f"lm_{m}_lm_train" in names
+    assert "lm_lora_r64_lm_train" in names
+    # Table 5 vision incl. LP/FF
+    for size in ("base", "large"):
+        assert f"vit_{size}_none_cls_train" in names
+        assert f"vit_{size}_full_full_cls_train" in names
+    # Figures 3/4 sweeps + pretraining + e2e
+    assert any(n.startswith("fig3_") for n in names)
+    assert any(n.startswith("fig4_") for n in names)
+    for size in ("base", "large", "lm", "e2e"):
+        assert f"pretrain_{size}_pretrain_lm" in names
+    assert "e2e_uni_lm_train" in names
+
+
+@pytest.mark.parametrize("kind", list(aot.BUILDERS))
+def test_signature_matches_builder_arity(kind):
+    cfg = with_method(BASE if kind.startswith(("cls", "full")) else LM, "uni")
+    if kind in ("pretrain_lm", "full_cls_train"):
+        cfg = with_method(cfg, "none", n_classes=0 if kind == "pretrain_lm" else 2)
+    sig, outs = aot.signature(cfg, kind)
+    args = [
+        jnp.zeros(s, jnp.int32 if dt == "i32" else jnp.float32)
+        for _, dt, s in sig
+    ]
+    fn = aot.BUILDERS[kind](cfg)
+    res = fn(*args)
+    assert len(res) == len(outs)
+
+
+def test_lower_one_writes_hlo_and_meta(tmp_path):
+    cfg = with_method(BASE, "uni", n_classes=2)
+    meta = aot.lower_one("tiny_test", cfg, "cls_eval", str(tmp_path))
+    hlo = (tmp_path / "tiny_test.hlo.txt").read_text()
+    assert "ENTRY" in hlo
+    assert meta["d"] == cfg.d
+    assert meta["D"] == cfg.d_full
+    # input count in meta matches the HLO entry parameter count
+    entry = hlo[hlo.index("ENTRY"):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(meta["inputs"])
+
+
+def test_manifest_exists_and_is_consistent():
+    man = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(man):
+        pytest.skip("artifacts not built")
+    with open(man) as f:
+        manifest = json.load(f)
+    assert len(manifest) >= 100
+    for name, meta in list(manifest.items())[:10]:
+        assert meta["name"] == name
+        assert os.path.exists(os.path.join(os.path.dirname(man), meta["hlo"]))
+        total = sum(int(np.prod(s["shape"])) for s in meta["theta_segments"])
+        assert meta["d"] == max(total, 1)

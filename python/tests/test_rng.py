@@ -1,0 +1,66 @@
+"""SplitMix64 stream tests — the cross-language contract.
+
+GOLDEN_SEED42 is asserted verbatim by rust/src/rng.rs tests; if either
+side drifts, adapters stop being reconstructible from (seed, theta_d).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import unirng as rng
+
+
+def test_golden_seed42():
+    got = [int(x) for x in rng.u64_stream(42, 4)]
+    assert got == rng.GOLDEN_SEED42
+
+
+def test_stream_deterministic_and_extendable():
+    a = rng.u64_stream(7, 100)
+    b = rng.u64_stream(7, 1000)
+    assert np.array_equal(a, b[:100])
+
+
+def test_child_seeds_distinct():
+    seeds = {rng.child_seed(42, s) for s in range(64)}
+    assert len(seeds) == 64
+
+
+@given(st.integers(0, 2**32), st.integers(1, 2**20))
+@settings(max_examples=50, deadline=None)
+def test_indices_in_range(seed, d):
+    idx = rng.indices(seed, 257, d)
+    assert idx.min() >= 0 and idx.max() < d
+
+
+@given(st.integers(0, 2**32))
+@settings(max_examples=25, deadline=None)
+def test_uniform01_range(seed):
+    u = rng.uniform01(seed, 512)
+    assert (u >= 0).all() and (u < 1).all()
+
+
+def test_normals_moments():
+    z = rng.normals(123, 200_000)
+    assert abs(z.mean()) < 0.01
+    assert abs(z.std() - 1.0) < 0.01
+
+
+def test_signs_balanced():
+    s = rng.signs(5, 100_000)
+    assert set(np.unique(s)) == {-1.0, 1.0}
+    assert abs(s.mean()) < 0.02
+
+
+@given(st.integers(0, 2**32), st.integers(1, 300))
+@settings(max_examples=40, deadline=None)
+def test_permutation_is_permutation(seed, n):
+    p = rng.permutation(seed, n)
+    assert sorted(p.tolist()) == list(range(n))
+
+
+def test_uniform_range_bounds():
+    u = rng.uniform_range(9, 10_000, -0.02, 0.02)
+    assert u.min() >= -0.02 and u.max() < 0.02
+    assert u.dtype == np.float32

@@ -1,0 +1,71 @@
+//! Projection complexity bench (paper §3.4 + Table 6's timing claim):
+//!   Uni-LoRA gather      O(D)
+//!   Fastfood (FWHT)      O(D log d)
+//!   Dense Gaussian       O(D d)
+//! plus the transpose (gradient) path. Run: cargo bench --bench projection
+
+use uni_lora::bench::{bench, black_box};
+use uni_lora::projection::{fastfood, gaussian, uni};
+use uni_lora::rng;
+
+fn main() {
+    let d = 4096usize;
+    println!("-- projection forward: R^{d} -> R^D --");
+    let theta = rng::normals(1, d);
+    for big_d in [65_536usize, 262_144, 1_048_576] {
+        // uni: O(D) gather
+        let idx = rng::indices(2, big_d, d);
+        let nrm = uni::counts_to_nrm(&idx, d);
+        let mut out = vec![0f32; big_d];
+        let r_uni = bench(&format!("uni/gather D={big_d}"), 2, 9, || {
+            uni::project(&theta, &idx, &nrm, &mut out);
+            black_box(out[0]);
+        });
+
+        // fastfood: O(D log d) FWHT chain
+        let nb = big_d / d;
+        let blocks: Vec<fastfood::FastfoodBlock> =
+            (0..nb).map(|i| fastfood::FastfoodBlock::generate(i as u64, d)).collect();
+        let r_ff = bench(&format!("fastfood/fwht D={big_d}"), 2, 9, || {
+            black_box(fastfood::project(&blocks, &theta, big_d));
+        });
+
+        // dense gaussian: O(D d) — only at the smallest D (too slow above)
+        if big_d == 65_536 {
+            let r_g = bench(&format!("gaussian/dense D={big_d}"), 1, 3, || {
+                black_box(gaussian::project(7, &theta, big_d));
+            });
+            println!(
+                "   speedup vs fastfood: {:.1}x, vs gaussian: {:.0}x",
+                r_ff.median_secs / r_uni.median_secs,
+                r_g.median_secs / r_uni.median_secs
+            );
+        } else {
+            println!(
+                "   speedup vs fastfood: {:.1}x",
+                r_ff.median_secs / r_uni.median_secs
+            );
+        }
+    }
+
+    println!("-- transpose (gradient) path P^T g --");
+    let big_d = 262_144;
+    let idx = rng::indices(2, big_d, d);
+    let nrm = uni::counts_to_nrm(&idx, d);
+    let g = rng::normals(3, big_d);
+    bench(&format!("uni/scatter_t D={big_d}"), 2, 9, || {
+        black_box(uni::project_t(&g, &idx, &nrm, d));
+    });
+
+    println!("-- index generation (adapter load path) --");
+    let cfg = {
+        let mut c = uni_lora::config::ModelCfg::test_base("uni");
+        c.hidden = 256;
+        c.layers = 8;
+        c.d = 4096;
+        c
+    };
+    bench(&format!("uni/gen_indices D={}", cfg.d_full()), 1, 5, || {
+        black_box(uni::gen_indices(&cfg, 42, uni::Variant::Uni));
+    });
+}

@@ -1,0 +1,88 @@
+//! Serving bench: throughput/latency of the multi-adapter router under
+//! (a) single-adapter, (b) mixed-adapter workloads — quantifies the
+//! batch-coalescing win and the adapter-residency footprint.
+//! Run: cargo bench --bench serving (requires `make artifacts`).
+
+use std::sync::Arc;
+use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::coordinator::init_base;
+use uni_lora::data::vocab;
+use uni_lora::projection::statics::init_theta;
+use uni_lora::runtime::{Executor, Manifest};
+use uni_lora::server::server::Client;
+use uni_lora::server::{serve, ServerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let mut exec = Executor::new(Manifest::load(dir)?)?;
+    let art = "lm_uni_lm_logits";
+    let meta = exec.manifest.get(art)?.clone();
+    let w0 = init_base(&meta, 42);
+    exec.prepare(art)?;
+
+    // 64 resident adapters (untrained — latency is what matters here)
+    let registry = Registry::new();
+    for i in 0..64u64 {
+        registry.insert(
+            format!("a{i}"),
+            AdapterCheckpoint {
+                seed: i,
+                method: "uni".into(),
+                artifact: art.into(),
+                theta: init_theta(&meta.cfg, i).unwrap(),
+                head: vec![],
+            },
+        );
+    }
+    println!(
+        "64 adapters resident in {} KiB total ({} KiB each)",
+        registry.resident_bytes() / 1024,
+        registry.resident_bytes() / 1024 / 64
+    );
+
+    let handle = serve(
+        ServerConfig { addr: "127.0.0.1:0".into(), art_logits: art.into() },
+        exec,
+        Arc::new(registry),
+        meta.cfg.clone(),
+        w0,
+    )?;
+
+    let prompt = vec![vocab::BOS, vocab::Q_MARKER, vocab::digit(3), vocab::PLUS,
+                      vocab::digit(4), vocab::EQUALS, vocab::A_MARKER];
+    let n = 32;
+
+    for (label, n_adapters) in [("single-adapter", 1usize), ("mixed-16-adapters", 16)] {
+        // concurrent submissions through the router's sync API
+        let t0 = std::time::Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..4usize {
+            let router = handle.router.clone();
+            let prompt = prompt.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..n / 4 {
+                    let a = format!("a{}", (c * 7 + i) % n_adapters);
+                    router.generate(&a, prompt.clone(), 4).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let st = handle.router.stats.lock().unwrap().clone();
+        println!(
+            "{label:<20} {n} reqs in {wall:.2}s = {:.1} req/s | mean batch {:.2} | mean latency {:.0}ms",
+            n as f64 / wall,
+            st.mean_batch_size(),
+            st.mean_latency_ms()
+        );
+        *handle.router.stats.lock().unwrap() = Default::default();
+    }
+    handle.shutdown();
+    Ok(())
+}

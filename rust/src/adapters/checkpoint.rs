@@ -1,0 +1,213 @@
+//! `UNI1` adapter file format.
+//!
+//! Layout (little-endian):
+//!   magic   b"UNI1"
+//!   u32     version (1)
+//!   u64     seed
+//!   u32     method name length, then UTF-8 method name
+//!   u32     artifact name length, then UTF-8 artifact name
+//!   u32     d  (theta length)
+//!   u32     head length (0 for LM adapters)
+//!   f32*d   theta
+//!   f32*h   head
+//!
+//! For Uni-LoRA the payload really is "one vector plus a seed": the
+//! projection (idx, nrm) is regenerated via projection::statics. The
+//! same container stores every baseline method's theta, which is what
+//! makes the Table-2 storage comparison a one-liner.
+
+use crate::config::ModelCfg;
+use crate::projection::reconstruct::{reconstruct, ModuleDelta};
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"UNI1";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterCheckpoint {
+    pub seed: u64,
+    pub method: String,
+    /// eval artifact this adapter pairs with (binds the ModelCfg)
+    pub artifact: String,
+    pub theta: Vec<f32>,
+    pub head: Vec<f32>,
+}
+
+impl AdapterCheckpoint {
+    pub fn d(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Serialized size in bytes — asserted small in tests (§3.4).
+    pub fn byte_size(&self) -> usize {
+        4 + 4 + 8 + 4 + self.method.len() + 4 + self.artifact.len() + 4 + 4
+            + 4 * self.theta.len()
+            + 4 * self.head.len()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = Vec::with_capacity(self.byte_size());
+        w.extend_from_slice(MAGIC);
+        w.extend_from_slice(&1u32.to_le_bytes());
+        w.extend_from_slice(&self.seed.to_le_bytes());
+        w.extend_from_slice(&(self.method.len() as u32).to_le_bytes());
+        w.extend_from_slice(self.method.as_bytes());
+        w.extend_from_slice(&(self.artifact.len() as u32).to_le_bytes());
+        w.extend_from_slice(self.artifact.as_bytes());
+        w.extend_from_slice(&(self.theta.len() as u32).to_le_bytes());
+        w.extend_from_slice(&(self.head.len() as u32).to_le_bytes());
+        for x in &self.theta {
+            w.extend_from_slice(&x.to_le_bytes());
+        }
+        for x in &self.head {
+            w.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path.as_ref(), w)
+            .with_context(|| format!("writing adapter {:?}", path.as_ref()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<AdapterCheckpoint> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening adapter {:?}", path.as_ref()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<AdapterCheckpoint> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated adapter file");
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad magic (not a UNI1 adapter)");
+        }
+        let ver = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        if ver != 1 {
+            bail!("unsupported adapter version {ver}");
+        }
+        let seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let mlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let method = String::from_utf8(take(&mut pos, mlen)?.to_vec())?;
+        let alen = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let artifact = String::from_utf8(take(&mut pos, alen)?.to_vec())?;
+        let d = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let h = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut theta = Vec::with_capacity(d);
+        for _ in 0..d {
+            theta.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into()?));
+        }
+        let mut head = Vec::with_capacity(h);
+        for _ in 0..h {
+            head.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into()?));
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in adapter file");
+        }
+        Ok(AdapterCheckpoint { seed, method, artifact, theta, head })
+    }
+
+    /// Expand to per-module weight increments (self-contained: only the
+    /// checkpoint + cfg are needed, no artifacts, no Python).
+    pub fn expand(&self, cfg: &ModelCfg) -> Result<Vec<ModuleDelta>> {
+        reconstruct(cfg, self.seed, &self.theta)
+    }
+
+    /// Merge into dense per-module weights: W_i = W0_i + scale * DeltaW_i.
+    pub fn merge_into(&self, cfg: &ModelCfg, w0_modules: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let deltas = self.expand(cfg)?;
+        if deltas.len() != w0_modules.len() {
+            bail!("module count mismatch");
+        }
+        Ok(deltas
+            .iter()
+            .zip(w0_modules)
+            .map(|(d, w)| {
+                let dw = d.to_dense(cfg.hidden, cfg.rank);
+                w.iter()
+                    .zip(&dw)
+                    .map(|(a, b)| a + cfg.scale * b)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::statics::init_theta;
+
+    fn ckpt() -> AdapterCheckpoint {
+        let cfg = ModelCfg::test_base("uni");
+        AdapterCheckpoint {
+            seed: 42,
+            method: "uni".into(),
+            artifact: "glue_base_uni_c2_cls_eval".into(),
+            theta: init_theta(&cfg, 42).unwrap(),
+            head: vec![0.5; 130],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = ckpt();
+        let tmp = std::env::temp_dir().join("unilora_test_adapter.uni1");
+        c.save(&tmp).unwrap();
+        let back = AdapterCheckpoint::load(&tmp).unwrap();
+        assert_eq!(c, back);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn storage_is_d_plus_seed_sized() {
+        // §3.4: ~ d+1 numbers. Allow a small fixed header + the head.
+        let c = ckpt();
+        let payload = 4 * (c.theta.len() + c.head.len());
+        assert!(c.byte_size() <= payload + 128, "{}", c.byte_size());
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let c = ckpt();
+        let tmp = std::env::temp_dir().join("unilora_test_corrupt.uni1");
+        c.save(&tmp).unwrap();
+        let mut bytes = std::fs::read(&tmp).unwrap();
+        bytes[0] = b'X';
+        assert!(AdapterCheckpoint::from_bytes(&bytes).is_err());
+        let truncated = &std::fs::read(&tmp).unwrap()[..20];
+        assert!(AdapterCheckpoint::from_bytes(truncated).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn expand_is_deterministic_from_seed() {
+        let cfg = ModelCfg::test_base("uni");
+        let c = ckpt();
+        let d1 = c.expand(&cfg).unwrap();
+        let d2 = c.expand(&cfg).unwrap();
+        let a1 = d1[0].to_dense(cfg.hidden, cfg.rank);
+        let a2 = d2[0].to_dense(cfg.hidden, cfg.rank);
+        assert_eq!(a1, a2);
+        assert!(a1.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn merge_adds_scaled_delta() {
+        let cfg = ModelCfg::test_base("uni");
+        let c = ckpt();
+        let w0: Vec<Vec<f32>> =
+            (0..cfg.n_modules()).map(|_| vec![1.0; cfg.hidden * cfg.hidden]).collect();
+        let merged = c.merge_into(&cfg, &w0).unwrap();
+        let dw = c.expand(&cfg).unwrap()[0].to_dense(cfg.hidden, cfg.rank);
+        for (m, d) in merged[0].iter().zip(&dw) {
+            assert!((m - (1.0 + cfg.scale * d)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Adapter checkpoints and registry — the paper's §3.4 storage claim
+//! made concrete: a trained adapter is stored as *seed + theta_d*
+//! (d+1 numbers) and everything else (projection indices, norms, frozen
+//! bases) is regenerated from the seed at load time.
+
+pub mod checkpoint;
+pub mod registry;
+
+pub use checkpoint::AdapterCheckpoint;
+pub use registry::Registry;

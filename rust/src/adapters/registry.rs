@@ -1,0 +1,113 @@
+//! In-memory + on-disk adapter registry for the multi-adapter server.
+//! Adapters are tiny (seed + one vector), so the registry keeps every
+//! loaded adapter resident — the deployment story the paper's storage
+//! complexity enables.
+
+use super::checkpoint::AdapterCheckpoint;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::RwLock;
+
+#[derive(Default)]
+pub struct Registry {
+    inner: RwLock<BTreeMap<String, AdapterCheckpoint>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Load every *.uni1 file in a directory; adapter name = file stem.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Registry> {
+        let reg = Registry::new();
+        let rd = std::fs::read_dir(dir.as_ref());
+        if let Ok(rd) = rd {
+            for entry in rd.flatten() {
+                let p: PathBuf = entry.path();
+                if p.extension().map(|e| e == "uni1").unwrap_or(false) {
+                    let name = p
+                        .file_stem()
+                        .and_then(|s| s.to_str())
+                        .ok_or_else(|| anyhow!("bad adapter filename {p:?}"))?
+                        .to_string();
+                    reg.insert(name, AdapterCheckpoint::load(&p)?);
+                }
+            }
+        }
+        Ok(reg)
+    }
+
+    pub fn insert(&self, name: String, ckpt: AdapterCheckpoint) {
+        self.inner.write().unwrap().insert(name, ckpt);
+    }
+
+    pub fn get(&self, name: &str) -> Option<AdapterCheckpoint> {
+        self.inner.read().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total resident bytes across all adapters — the multi-tenant
+    /// footprint number for the serving bench.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.read().unwrap().values().map(|c| c.byte_size()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ckpt(seed: u64) -> AdapterCheckpoint {
+        AdapterCheckpoint {
+            seed,
+            method: "uni".into(),
+            artifact: "a".into(),
+            theta: vec![seed as f32; 16],
+            head: vec![],
+        }
+    }
+
+    #[test]
+    fn insert_get_names() {
+        let r = Registry::new();
+        r.insert("x".into(), ckpt(1));
+        r.insert("y".into(), ckpt(2));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("x").unwrap().seed, 1);
+        assert!(r.get("z").is_none());
+        assert_eq!(r.names(), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn dir_roundtrip() {
+        let dir = std::env::temp_dir().join("unilora_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        ckpt(7).save(dir.join("seven.uni1")).unwrap();
+        ckpt(8).save(dir.join("eight.uni1")).unwrap();
+        std::fs::write(dir.join("ignore.txt"), b"x").unwrap();
+        let r = Registry::load_dir(&dir).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("seven").unwrap().seed, 7);
+        assert!(r.resident_bytes() > 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_empty() {
+        let r = Registry::load_dir("/no/such/dir/unilora").unwrap();
+        assert!(r.is_empty());
+    }
+}

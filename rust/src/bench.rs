@@ -1,0 +1,98 @@
+//! Hand-rolled micro-bench harness (criterion is unavailable in the
+//! offline vendor set). Median-of-runs with warmup; prints
+//! criterion-style lines so `cargo bench` output stays readable.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  (min {}, max {}, n={})",
+            self.name,
+            fmt_time(self.median_secs),
+            fmt_time(self.min_secs),
+            fmt_time(self.max_secs),
+            self.iters
+        )
+    }
+
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.median_secs
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = BenchResult {
+        name: name.to_string(),
+        median_secs: times[times.len() / 2],
+        min_secs: times[0],
+        max_secs: *times.last().unwrap(),
+        iters,
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noopish", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            black_box(acc);
+        });
+        assert!(r.median_secs >= 0.0);
+        assert!(r.min_secs <= r.median_secs && r.median_secs <= r.max_secs);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-5).ends_with("µs"));
+        assert!(fmt_time(2.5e-2).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with("s"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Rust mirror of `python/compile/configs.ModelCfg`. Parsed from the
+//! artifact manifest (the Python side is the source of truth; the Rust
+//! side never invents a config that has no artifact behind it).
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub method: String,
+    pub rank: usize,
+    pub d: usize,
+    pub scale: f32,
+    pub n_classes: usize,
+    pub batch: usize,
+    pub vb_b: usize,
+    pub vb_k: usize,
+    pub vb_bank: usize,
+    pub n_coef: usize,
+}
+
+impl ModelCfg {
+    pub fn from_json(j: &Json) -> Result<ModelCfg> {
+        Ok(ModelCfg {
+            name: j.req("name")?.as_str()?.to_string(),
+            vocab: j.req("vocab")?.as_usize()?,
+            seq: j.req("seq")?.as_usize()?,
+            hidden: j.req("hidden")?.as_usize()?,
+            layers: j.req("layers")?.as_usize()?,
+            heads: j.req("heads")?.as_usize()?,
+            ffn: j.req("ffn")?.as_usize()?,
+            method: j.req("method")?.as_str()?.to_string(),
+            rank: j.req("rank")?.as_usize()?,
+            d: j.req("d")?.as_usize()?,
+            scale: j.req("scale")?.as_f64()? as f32,
+            n_classes: j.req("n_classes")?.as_usize()?,
+            batch: j.req("batch")?.as_usize()?,
+            vb_b: j.req("vb_b")?.as_usize()?,
+            vb_k: j.req("vb_k")?.as_usize()?,
+            vb_bank: j.req("vb_bank")?.as_usize()?,
+            n_coef: j.req("n_coef")?.as_usize()?,
+        })
+    }
+
+    /// Adapted modules: q and v per layer.
+    pub fn n_modules(&self) -> usize {
+        2 * self.layers
+    }
+
+    /// Per-module LoRA params: A [h, r] + B [r, h].
+    pub fn module_len(&self) -> usize {
+        2 * self.hidden * self.rank
+    }
+
+    /// D = total LoRA parameter count across adapted modules.
+    pub fn d_full(&self) -> usize {
+        self.n_modules() * self.module_len()
+    }
+
+    /// Test/bench constructor matching python configs.BASE.
+    pub fn test_base(method: &str) -> ModelCfg {
+        ModelCfg {
+            name: "base".into(),
+            vocab: 512,
+            seq: 32,
+            hidden: 64,
+            layers: 2,
+            heads: 4,
+            ffn: 128,
+            method: method.into(),
+            rank: 4,
+            d: 256,
+            scale: 2.0,
+            n_classes: 2,
+            batch: 32,
+            vb_b: 64,
+            vb_k: 2,
+            vb_bank: 24,
+            n_coef: 96,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_dims_match_python() {
+        let c = ModelCfg::test_base("uni");
+        assert_eq!(c.n_modules(), 4);
+        assert_eq!(c.module_len(), 512);
+        assert_eq!(c.d_full(), 2048);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"base","vocab":512,"seq":32,"hidden":64,"layers":2,
+                "heads":4,"ffn":128,"method":"uni","rank":4,"d":256,
+                "scale":2.0,"n_classes":2,"batch":32,"vb_b":64,"vb_k":2,
+                "vb_bank":24,"n_coef":96,"use_pallas":true}"#,
+        )
+        .unwrap();
+        let c = ModelCfg::from_json(&j).unwrap();
+        assert_eq!(c, ModelCfg::test_base("uni"));
+    }
+}

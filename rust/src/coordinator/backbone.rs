@@ -1,0 +1,92 @@
+//! In-system "foundation models": pretrain each backbone size once on
+//! the synthetic corpus (pretrain_<size> artifact) and cache the weights
+//! under artifacts/backbones/. Every fine-tuning experiment then starts
+//! from the same pretrained checkpoint — the stand-in for downloading
+//! RoBERTa/Mistral (DESIGN.md §4).
+
+use crate::coordinator::init_base;
+use crate::data::corpus::CorpusBatches;
+use crate::runtime::{Executor, TensorIn};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+fn cache_path(exec: &Executor, size: &str, seed: u64, steps: usize) -> PathBuf {
+    exec.manifest
+        .dir
+        .join("backbones")
+        .join(format!("{size}_s{seed}_n{steps}.f32"))
+}
+
+fn save_f32(path: &PathBuf, v: &[f32]) -> Result<()> {
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    let mut bytes = Vec::with_capacity(4 * v.len());
+    for x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).context("writing backbone cache")
+}
+
+fn load_f32(path: &PathBuf, n: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() == 4 * n, "backbone cache size mismatch");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Pretrain (or load from cache) the `size` backbone. Returns
+/// (weights, loss curve — empty when loaded from cache).
+pub fn pretrain_backbone(
+    exec: &mut Executor,
+    size: &str,
+    seed: u64,
+    steps: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let art = format!("pretrain_{size}_pretrain_lm");
+    let meta = exec.manifest.get(&art)?.clone();
+    let path = cache_path(exec, size, seed, steps);
+    if path.exists() {
+        return Ok((load_f32(&path, meta.base_params)?, Vec::new()));
+    }
+    let cfg = meta.cfg.clone();
+    let mut w0 = init_base(&meta, seed);
+    let mut m = vec![0f32; meta.base_params];
+    let mut v = vec![0f32; meta.base_params];
+    let mut corpus = CorpusBatches::new(seed.wrapping_add(17), cfg.batch, cfg.seq, cfg.vocab);
+    let mut losses = Vec::with_capacity(steps);
+    // linear warmup to 3e-3 then constant — a simple, stable recipe at
+    // this scale; the e2e example logs this curve into EXPERIMENTS.md
+    for step in 1..=steps {
+        let (toks, labs) = corpus.next_batch();
+        let lr = 3e-3f32 * (step as f32 / (steps as f32 * 0.1).max(1.0)).min(1.0);
+        let out = exec.run(
+            &art,
+            &[
+                TensorIn::F32(w0),
+                TensorIn::F32(m),
+                TensorIn::F32(v),
+                TensorIn::ScalarI32(step as i32),
+                TensorIn::ScalarF32(lr),
+                TensorIn::ScalarF32(0.01),
+                TensorIn::I32(toks),
+                TensorIn::I32(labs),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        w0 = it.next().unwrap().f32()?;
+        m = it.next().unwrap().f32()?;
+        v = it.next().unwrap().f32()?;
+        losses.push(it.next().unwrap().scalar_f32()?);
+    }
+    save_f32(&path, &w0)?;
+    Ok((w0, losses))
+}
+
+/// Default pretraining length: env UNI_LORA_PRETRAIN_STEPS or 300.
+pub fn default_steps() -> usize {
+    std::env::var("UNI_LORA_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300)
+}

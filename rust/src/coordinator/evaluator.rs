@@ -1,0 +1,43 @@
+//! Generation-based evaluation: exact-match accuracy (GSM8K/MATH-like)
+//! and MT-Bench-style rubric scores, via batched greedy decoding.
+
+use crate::coordinator::trainer::LmTrainer;
+use crate::data::LmExample;
+use crate::metrics;
+use crate::runtime::Executor;
+use anyhow::Result;
+
+/// Exact-match accuracy over a dev split: decode from each prompt and
+/// require the full reference answer as a prefix of the generation.
+pub fn exact_match_accuracy(
+    trainer: &mut LmTrainer,
+    exec: &mut Executor,
+    dev: &[LmExample],
+    max_new: usize,
+) -> Result<f64> {
+    let prompts: Vec<Vec<i32>> = dev.iter().map(|e| e.tokens[..e.prompt_len].to_vec()).collect();
+    let gens = trainer.greedy_decode(exec, &prompts, max_new)?;
+    let hits = gens
+        .iter()
+        .zip(dev)
+        .filter(|(g, e)| metrics::exact_match(g, &e.answer))
+        .count();
+    Ok(100.0 * hits as f64 / dev.len().max(1) as f64)
+}
+
+/// Mean rubric score (0-10) over a dev split — the Table 4 judge.
+pub fn rubric_score(
+    trainer: &mut LmTrainer,
+    exec: &mut Executor,
+    dev: &[LmExample],
+    max_new: usize,
+) -> Result<f64> {
+    let prompts: Vec<Vec<i32>> = dev.iter().map(|e| e.tokens[..e.prompt_len].to_vec()).collect();
+    let gens = trainer.greedy_decode(exec, &prompts, max_new)?;
+    let total: f64 = gens
+        .iter()
+        .zip(dev)
+        .map(|(g, e)| metrics::rubric_score(g, &e.answer))
+        .sum();
+    Ok(total / dev.len().max(1) as f64)
+}

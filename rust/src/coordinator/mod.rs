@@ -1,0 +1,28 @@
+//! L3 coordinator: the training/evaluation orchestrator that drives the
+//! AOT artifacts. Owns parameter/optimizer state between steps, feeds
+//! synthetic data batches, runs evaluation + metrics, caches pretrained
+//! backbones, and provides the multi-seed / grid-search protocol every
+//! paper table uses.
+
+pub mod backbone;
+pub mod evaluator;
+pub mod sweep;
+pub mod trainer;
+
+pub use backbone::pretrain_backbone;
+pub use trainer::{ClsTrainer, Hyper, LmTrainer};
+
+use crate::projection::statics::init_array;
+use crate::rng;
+use crate::runtime::ArtifactMeta;
+
+/// Initialize the frozen backbone weights from the manifest layout.
+pub fn init_base(meta: &ArtifactMeta, seed: u64) -> Vec<f32> {
+    let mut w0 = Vec::with_capacity(meta.base_params);
+    for (i, seg) in meta.base_segments.iter().enumerate() {
+        let s = rng::child_seed(seed, rng::STREAM_BASE_INIT + 1000 * i as u64);
+        w0.extend(init_array(&seg.init, seg.numel(), s).expect("init spec"));
+    }
+    debug_assert_eq!(w0.len(), meta.base_params);
+    w0
+}

@@ -1,0 +1,61 @@
+//! Multi-seed / grid-search protocol: the paper reports the median over
+//! 5 seeds with std (Table 2) after a per-task learning-rate grid
+//! search (Appendix A.2). This module encodes that protocol once so
+//! every table driver uses the same procedure.
+
+use crate::util::{median, stddev};
+
+/// Summary over seeds.
+#[derive(Debug, Clone)]
+pub struct SeedSummary {
+    pub median: f64,
+    pub std: f64,
+    pub values: Vec<f64>,
+}
+
+/// Run `f(seed)` over seeds and summarize (median ± std, paper style).
+pub fn over_seeds<F: FnMut(u64) -> anyhow::Result<f64>>(
+    seeds: &[u64],
+    mut f: F,
+) -> anyhow::Result<SeedSummary> {
+    let mut values = Vec::with_capacity(seeds.len());
+    for &s in seeds {
+        values.push(f(s)?);
+    }
+    Ok(SeedSummary { median: median(&values), std: stddev(&values), values })
+}
+
+/// Grid search: evaluate `f(lr)` on a holdout criterion and return the
+/// best (lr, score).
+pub fn grid_search<F: FnMut(f32) -> anyhow::Result<f64>>(
+    grid: &[f32],
+    mut f: F,
+) -> anyhow::Result<(f32, f64)> {
+    let mut best = (grid[0], f64::NEG_INFINITY);
+    for &lr in grid {
+        let v = f(lr)?;
+        if v > best.1 {
+            best = (lr, v);
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_summary() {
+        let s = over_seeds(&[1, 2, 3], |seed| Ok(seed as f64)).unwrap();
+        assert_eq!(s.median, 2.0);
+        assert!(s.std > 0.9 && s.std < 1.1);
+    }
+
+    #[test]
+    fn grid_picks_max() {
+        let (lr, v) = grid_search(&[1e-3, 1e-2, 1e-1], |lr| Ok(-((lr - 1e-2) as f64).abs())).unwrap();
+        assert_eq!(lr, 1e-2);
+        assert_eq!(v, 0.0);
+    }
+}

@@ -1,0 +1,481 @@
+//! Trainers: drive the cls_train / lm_train artifacts step by step,
+//! owning theta/optimizer/head state between executions.
+
+use crate::config::ModelCfg;
+use crate::data::batcher::{cls_batches, lm_batches, ClsBatch, LmBatch};
+use crate::data::{ClsExample, LmExample};
+use crate::projection::statics::{gen_statics, init_theta, Static};
+use crate::runtime::{Executor, TensorIn};
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Hyperparameters for one run (paper Appendix A.2 analogues).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub lr_theta: f32,
+    pub lr_head: f32,
+    pub wd: f32,
+    pub epochs: usize,
+}
+
+impl Default for Hyper {
+    fn default() -> Hyper {
+        Hyper { lr_theta: 5e-3, lr_head: 5e-2, wd: 0.0, epochs: 3 }
+    }
+}
+
+/// Result of one training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub losses: Vec<f32>,
+    pub train_secs: f64,
+    pub steps: usize,
+}
+
+/// Classification fine-tuning driver.
+pub struct ClsTrainer {
+    pub art_train: String,
+    pub art_eval: String,
+    pub cfg: ModelCfg,
+    pub seed: u64,
+    pub theta: Vec<f32>,
+    pub head: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    hm: Vec<f32>,
+    hv: Vec<f32>,
+    pub w0: Vec<f32>,
+    stats: Vec<Static>,
+    step: i32,
+    /// frozen inputs (w0, statics) uploaded once as device buffers
+    pinned: bool,
+}
+
+impl ClsTrainer {
+    /// `base`: artifact family name without the `_cls_train` suffix.
+    pub fn new(exec: &Executor, base: &str, seed: u64, w0: Vec<f32>) -> Result<ClsTrainer> {
+        let art_train = format!("{base}_cls_train");
+        let art_eval = format!("{base}_cls_eval");
+        let meta = exec.manifest.get(&art_train)?.clone();
+        let cfg = meta.cfg.clone();
+        let theta = init_theta(&cfg, seed)?;
+        let stats = gen_statics(&cfg, seed)?;
+        anyhow::ensure!(w0.len() == meta.base_params, "w0 size mismatch");
+        Ok(ClsTrainer {
+            art_train,
+            art_eval,
+            seed,
+            theta: theta.clone(),
+            head: vec![0f32; meta.head_params],
+            m: vec![0f32; theta.len()],
+            v: vec![0f32; theta.len()],
+            hm: vec![0f32; meta.head_params],
+            hv: vec![0f32; meta.head_params],
+            w0,
+            stats,
+            step: 0,
+            pinned: false,
+            cfg,
+        })
+    }
+
+    /// §Perf: upload the frozen inputs (w0 + statics) to the device once;
+    /// every subsequent train step passes resident buffers instead of
+    /// re-transferring them.
+    pub fn pin_frozen(&mut self, exec: &mut Executor) -> Result<()> {
+        exec.prepare(&self.art_train)?;
+        exec.pin(&self.art_train, "w0", &TensorIn::F32(self.w0.clone()))?;
+        for s in &self.stats {
+            exec.pin(&self.art_train, &s.name, &TensorIn::from(s))?;
+        }
+        self.pinned = true;
+        Ok(())
+    }
+
+    pub fn train_step(&mut self, exec: &mut Executor, b: &ClsBatch, hp: &Hyper) -> Result<f32> {
+        self.step += 1;
+        let labels = if self.cfg.n_classes == 1 {
+            TensorIn::F32(b.labels_f.clone())
+        } else {
+            TensorIn::I32(b.labels_i.clone())
+        };
+        let mut inputs = vec![
+            TensorIn::F32(std::mem::take(&mut self.theta)),
+            TensorIn::F32(std::mem::take(&mut self.m)),
+            TensorIn::F32(std::mem::take(&mut self.v)),
+            TensorIn::F32(std::mem::take(&mut self.head)),
+            TensorIn::F32(std::mem::take(&mut self.hm)),
+            TensorIn::F32(std::mem::take(&mut self.hv)),
+            TensorIn::ScalarI32(self.step),
+            TensorIn::ScalarF32(hp.lr_theta),
+            TensorIn::ScalarF32(hp.lr_head),
+            TensorIn::ScalarF32(hp.wd),
+            if self.pinned { TensorIn::Pinned } else { TensorIn::F32(self.w0.clone()) },
+            TensorIn::I32(b.tokens.clone()),
+            TensorIn::I32(b.attn_len.clone()),
+            labels,
+        ];
+        if self.pinned {
+            inputs.extend(self.stats.iter().map(|_| TensorIn::Pinned));
+        } else {
+            inputs.extend(self.stats.iter().map(TensorIn::from));
+        }
+        let mut out = exec
+            .run(&self.art_train, &inputs)
+            .with_context(|| format!("train step {}", self.step))?;
+        let loss = out[6].scalar_f32()?;
+        self.hv = out.remove(5).f32()?;
+        self.hm = out.remove(4).f32()?;
+        self.head = out.remove(3).f32()?;
+        self.v = out.remove(2).f32()?;
+        self.m = out.remove(1).f32()?;
+        self.theta = out.remove(0).f32()?;
+        Ok(loss)
+    }
+
+    /// Full training run over epochs of seeded-shuffled batches.
+    pub fn train(
+        &mut self,
+        exec: &mut Executor,
+        examples: &[ClsExample],
+        hp: &Hyper,
+    ) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let mut losses = Vec::new();
+        for epoch in 0..hp.epochs {
+            for b in cls_batches(examples, self.cfg.batch, self.seed, epoch as u64) {
+                losses.push(self.train_step(exec, &b, hp)?);
+            }
+        }
+        Ok(RunResult { steps: losses.len(), losses, train_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Dev-set logits (only `real` rows of each batch are kept).
+    pub fn eval_logits(
+        &mut self,
+        exec: &mut Executor,
+        examples: &[ClsExample],
+    ) -> Result<Vec<Vec<f32>>> {
+        let c = self.cfg.n_classes.max(1);
+        let mut rows = Vec::with_capacity(examples.len());
+        for b in cls_batches(examples, self.cfg.batch, 0, 0) {
+            let mut inputs = vec![
+                TensorIn::F32(self.theta.clone()),
+                TensorIn::F32(self.head.clone()),
+                TensorIn::F32(self.w0.clone()),
+                TensorIn::I32(b.tokens.clone()),
+                TensorIn::I32(b.attn_len.clone()),
+            ];
+            inputs.extend(self.stats.iter().map(TensorIn::from));
+            let out = exec.run(&self.art_eval, &inputs)?;
+            let logits = out[0].as_f32()?;
+            for k in 0..b.real {
+                rows.push(logits[k * c..(k + 1) * c].to_vec());
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Train + evaluate one metric value.
+    pub fn run_and_score(
+        &mut self,
+        exec: &mut Executor,
+        train: &[ClsExample],
+        dev: &[ClsExample],
+        metric: &str,
+        hp: &Hyper,
+    ) -> Result<(f64, RunResult)> {
+        let rr = self.train(exec, train, hp)?;
+        // eval-batch shuffling is seeded 0 — recover gold labels the same way
+        let order = crate::data::batcher::shuffled_indices(dev.len(), 0, 0);
+        let labels: Vec<f32> = order.iter().map(|&i| dev[i].label).collect();
+        let logits = self.eval_logits(exec, dev)?;
+        Ok((crate::metrics::compute(metric, &logits, &labels), rr))
+    }
+}
+
+/// Full fine-tuning driver (Table 5 "FF"): the backbone itself is the
+/// trainable vector; drives the full_cls_train artifact.
+pub struct FullClsTrainer {
+    pub art_train: String,
+    pub art_eval: String,
+    pub cfg: ModelCfg,
+    pub seed: u64,
+    pub w0: Vec<f32>,
+    pub head: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    hm: Vec<f32>,
+    hv: Vec<f32>,
+    step: i32,
+}
+
+impl FullClsTrainer {
+    /// `base`: e.g. "vit_base_full"; eval reuses the matching "none"
+    /// adapter eval artifact (same signature, theta unused).
+    pub fn new(exec: &Executor, base: &str, eval_art: &str, seed: u64, w0: Vec<f32>) -> Result<FullClsTrainer> {
+        let art_train = format!("{base}_full_cls_train");
+        let meta = exec.manifest.get(&art_train)?.clone();
+        anyhow::ensure!(w0.len() == meta.base_params, "w0 size mismatch");
+        Ok(FullClsTrainer {
+            art_train,
+            art_eval: eval_art.to_string(),
+            cfg: meta.cfg.clone(),
+            seed,
+            m: vec![0f32; w0.len()],
+            v: vec![0f32; w0.len()],
+            hm: vec![0f32; meta.head_params],
+            hv: vec![0f32; meta.head_params],
+            head: vec![0f32; meta.head_params],
+            w0,
+            step: 0,
+        })
+    }
+
+    pub fn train(
+        &mut self,
+        exec: &mut Executor,
+        examples: &[ClsExample],
+        hp: &Hyper,
+    ) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let mut losses = Vec::new();
+        for epoch in 0..hp.epochs {
+            for b in cls_batches(examples, self.cfg.batch, self.seed, epoch as u64) {
+                self.step += 1;
+                let labels = if self.cfg.n_classes == 1 {
+                    TensorIn::F32(b.labels_f.clone())
+                } else {
+                    TensorIn::I32(b.labels_i.clone())
+                };
+                let inputs = vec![
+                    TensorIn::F32(std::mem::take(&mut self.w0)),
+                    TensorIn::F32(std::mem::take(&mut self.m)),
+                    TensorIn::F32(std::mem::take(&mut self.v)),
+                    TensorIn::F32(std::mem::take(&mut self.head)),
+                    TensorIn::F32(std::mem::take(&mut self.hm)),
+                    TensorIn::F32(std::mem::take(&mut self.hv)),
+                    TensorIn::ScalarI32(self.step),
+                    TensorIn::ScalarF32(hp.lr_theta),
+                    TensorIn::ScalarF32(hp.lr_head),
+                    TensorIn::ScalarF32(hp.wd),
+                    TensorIn::I32(b.tokens.clone()),
+                    TensorIn::I32(b.attn_len.clone()),
+                    labels,
+                ];
+                let mut out = exec.run(&self.art_train, &inputs)?;
+                losses.push(out[6].scalar_f32()?);
+                self.hv = out.remove(5).f32()?;
+                self.hm = out.remove(4).f32()?;
+                self.head = out.remove(3).f32()?;
+                self.v = out.remove(2).f32()?;
+                self.m = out.remove(1).f32()?;
+                self.w0 = out.remove(0).f32()?;
+            }
+        }
+        Ok(RunResult { steps: losses.len(), losses, train_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Evaluate via the paired "none"-method eval artifact (theta dummy).
+    pub fn run_and_score(
+        &mut self,
+        exec: &mut Executor,
+        train: &[ClsExample],
+        dev: &[ClsExample],
+        metric: &str,
+        hp: &Hyper,
+    ) -> Result<(f64, RunResult)> {
+        let rr = self.train(exec, train, hp)?;
+        let c = self.cfg.n_classes.max(1);
+        let mut rows = Vec::with_capacity(dev.len());
+        for b in cls_batches(dev, self.cfg.batch, 0, 0) {
+            let inputs = vec![
+                TensorIn::F32(vec![0f32]), // dummy theta for method "none"
+                TensorIn::F32(self.head.clone()),
+                TensorIn::F32(self.w0.clone()),
+                TensorIn::I32(b.tokens.clone()),
+                TensorIn::I32(b.attn_len.clone()),
+            ];
+            let out = exec.run(&self.art_eval, &inputs)?;
+            let logits = out[0].as_f32()?;
+            for k in 0..b.real {
+                rows.push(logits[k * c..(k + 1) * c].to_vec());
+            }
+        }
+        let order = crate::data::batcher::shuffled_indices(dev.len(), 0, 0);
+        let labels: Vec<f32> = order.iter().map(|&i| dev[i].label).collect();
+        Ok((crate::metrics::compute(metric, &rows, &labels), rr))
+    }
+}
+
+/// LM fine-tuning + greedy decoding driver.
+pub struct LmTrainer {
+    pub art_train: String,
+    pub art_logits: String,
+    pub cfg: ModelCfg,
+    pub seed: u64,
+    pub theta: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    pub w0: Vec<f32>,
+    stats: Vec<Static>,
+    step: i32,
+    pinned: bool,
+}
+
+impl LmTrainer {
+    /// `base`: artifact family name without the `_lm_train` suffix.
+    pub fn new(exec: &Executor, base: &str, seed: u64, w0: Vec<f32>) -> Result<LmTrainer> {
+        let art_train = format!("{base}_lm_train");
+        let art_logits = format!("{base}_lm_logits");
+        let meta = exec.manifest.get(&art_train)?.clone();
+        let cfg = meta.cfg.clone();
+        let theta = init_theta(&cfg, seed)?;
+        let stats = gen_statics(&cfg, seed)?;
+        anyhow::ensure!(w0.len() == meta.base_params, "w0 size mismatch");
+        Ok(LmTrainer {
+            art_train,
+            art_logits,
+            seed,
+            m: vec![0f32; theta.len()],
+            v: vec![0f32; theta.len()],
+            theta,
+            w0,
+            stats,
+            step: 0,
+            pinned: false,
+            cfg,
+        })
+    }
+
+    /// §Perf: see ClsTrainer::pin_frozen.
+    pub fn pin_frozen(&mut self, exec: &mut Executor) -> Result<()> {
+        exec.prepare(&self.art_train)?;
+        exec.pin(&self.art_train, "w0", &TensorIn::F32(self.w0.clone()))?;
+        for s in &self.stats {
+            exec.pin(&self.art_train, &s.name, &TensorIn::from(s))?;
+        }
+        self.pinned = true;
+        Ok(())
+    }
+
+    pub fn train_step(&mut self, exec: &mut Executor, b: &LmBatch, hp: &Hyper) -> Result<f32> {
+        self.step += 1;
+        let mut inputs = vec![
+            TensorIn::F32(std::mem::take(&mut self.theta)),
+            TensorIn::F32(std::mem::take(&mut self.m)),
+            TensorIn::F32(std::mem::take(&mut self.v)),
+            TensorIn::ScalarI32(self.step),
+            TensorIn::ScalarF32(hp.lr_theta),
+            TensorIn::ScalarF32(hp.wd),
+            if self.pinned { TensorIn::Pinned } else { TensorIn::F32(self.w0.clone()) },
+            TensorIn::I32(b.tokens.clone()),
+            TensorIn::I32(b.labels.clone()),
+        ];
+        if self.pinned {
+            inputs.extend(self.stats.iter().map(|_| TensorIn::Pinned));
+        } else {
+            inputs.extend(self.stats.iter().map(TensorIn::from));
+        }
+        let mut out = exec.run(&self.art_train, &inputs)?;
+        let loss = out[3].scalar_f32()?;
+        self.v = out.remove(2).f32()?;
+        self.m = out.remove(1).f32()?;
+        self.theta = out.remove(0).f32()?;
+        Ok(loss)
+    }
+
+    pub fn train(
+        &mut self,
+        exec: &mut Executor,
+        examples: &[LmExample],
+        hp: &Hyper,
+    ) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let mut losses = Vec::new();
+        for epoch in 0..hp.epochs {
+            for b in lm_batches(examples, self.cfg.batch, self.seed, epoch as u64) {
+                losses.push(self.train_step(exec, &b, hp)?);
+            }
+        }
+        Ok(RunResult { steps: losses.len(), losses, train_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Batched greedy decoding: prompts (token prefixes) -> generations
+    /// of up to `max_new` tokens (stopping per-sequence at EOS).
+    pub fn greedy_decode(
+        &mut self,
+        exec: &mut Executor,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        decode_with(
+            exec,
+            &self.art_logits,
+            &self.cfg,
+            &self.theta,
+            &self.w0,
+            &self.stats,
+            prompts,
+            max_new,
+        )
+    }
+}
+
+/// Greedy decode helper shared by the trainer and the serving router.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_with(
+    exec: &mut Executor,
+    art_logits: &str,
+    cfg: &ModelCfg,
+    theta: &[f32],
+    w0: &[f32],
+    stats: &[Static],
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>> {
+    use crate::data::vocab;
+    let (bsz, t, vocab_n) = (cfg.batch, cfg.seq, cfg.vocab);
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    for group in (0..prompts.len()).collect::<Vec<_>>().chunks(bsz) {
+        let mut toks = vec![vocab::PAD; bsz * t];
+        let mut lens = vec![0usize; bsz];
+        for (row, &pi) in group.iter().enumerate() {
+            let p = &prompts[pi];
+            let l = p.len().min(t);
+            toks[row * t..row * t + l].copy_from_slice(&p[..l]);
+            lens[row] = l;
+        }
+        let mut done = vec![false; group.len()];
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let mut inputs = vec![
+                TensorIn::F32(theta.to_vec()),
+                TensorIn::F32(w0.to_vec()),
+                TensorIn::I32(toks.clone()),
+            ];
+            inputs.extend(stats.iter().map(TensorIn::from));
+            let out = exec.run(art_logits, &inputs)?;
+            let logits = out[0].as_f32()?; // [B, T, V]
+            for (row, &pi) in group.iter().enumerate() {
+                if done[row] || lens[row] >= t {
+                    done[row] = true;
+                    continue;
+                }
+                let pos = lens[row] - 1;
+                let slice = &logits[(row * t + pos) * vocab_n..(row * t + pos + 1) * vocab_n];
+                let next = crate::metrics::argmax(slice) as i32;
+                if next == vocab::EOS {
+                    done[row] = true;
+                    continue;
+                }
+                toks[row * t + lens[row]] = next;
+                lens[row] += 1;
+                outputs[pi].push(next);
+            }
+        }
+    }
+    Ok(outputs)
+}

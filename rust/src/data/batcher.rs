@@ -1,0 +1,129 @@
+//! Deterministic batching: seeded shuffling, padding of ragged final
+//! batches, and flattening into the artifact's [B*T] input layout.
+
+use super::{ClsExample, LmExample};
+use crate::rng::Stream;
+
+/// A classification batch in artifact input layout.
+#[derive(Debug, Clone)]
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,   // [B*T]
+    pub attn_len: Vec<i32>, // [B]
+    pub labels_i: Vec<i32>, // [B] (class ids)
+    pub labels_f: Vec<f32>, // [B] (regression targets)
+    /// number of real (non-repeated-pad) examples in this batch
+    pub real: usize,
+}
+
+/// An LM batch in artifact input layout.
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>, // [B*T]
+    pub labels: Vec<i32>, // [B*T]
+    pub real: usize,
+}
+
+/// Seeded epoch shuffler over example indices.
+pub fn shuffled_indices(n: usize, seed: u64, epoch: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut s = Stream::new(seed.wrapping_add(epoch.wrapping_mul(0x9E37)));
+    for i in (1..n).rev() {
+        let j = s.next_index(i + 1);
+        idx.swap(i, j);
+    }
+    idx
+}
+
+pub fn cls_batches(examples: &[ClsExample], batch: usize, seed: u64, epoch: u64) -> Vec<ClsBatch> {
+    let order = shuffled_indices(examples.len(), seed, epoch);
+    order
+        .chunks(batch)
+        .map(|chunk| {
+            let mut b = ClsBatch {
+                tokens: Vec::with_capacity(batch * examples[0].tokens.len()),
+                attn_len: Vec::with_capacity(batch),
+                labels_i: Vec::with_capacity(batch),
+                labels_f: Vec::with_capacity(batch),
+                real: chunk.len(),
+            };
+            for k in 0..batch {
+                // ragged final batch: repeat examples cyclically (they are
+                // excluded from metrics via `real`)
+                let ex = &examples[chunk[k % chunk.len()]];
+                b.tokens.extend(&ex.tokens);
+                b.attn_len.push(ex.attn_len as i32);
+                b.labels_i.push(ex.label as i32);
+                b.labels_f.push(ex.label);
+            }
+            b
+        })
+        .collect()
+}
+
+pub fn lm_batches(examples: &[LmExample], batch: usize, seed: u64, epoch: u64) -> Vec<LmBatch> {
+    let order = shuffled_indices(examples.len(), seed, epoch);
+    order
+        .chunks(batch)
+        .map(|chunk| {
+            let mut b = LmBatch {
+                tokens: Vec::with_capacity(batch * examples[0].tokens.len()),
+                labels: Vec::with_capacity(batch * examples[0].tokens.len()),
+                real: chunk.len(),
+            };
+            for k in 0..batch {
+                let ex = &examples[chunk[k % chunk.len()]];
+                b.tokens.extend(&ex.tokens);
+                b.labels.extend(&ex.labels);
+            }
+            b
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_cls(n: usize) -> Vec<ClsExample> {
+        (0..n)
+            .map(|i| ClsExample {
+                tokens: vec![i as i32; 8],
+                attn_len: 8,
+                label: (i % 2) as f32,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batches_cover_all_examples_once() {
+        let ex = mk_cls(10);
+        let bs = cls_batches(&ex, 4, 1, 0);
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[2].real, 2);
+        let mut seen: Vec<i32> = bs
+            .iter()
+            .flat_map(|b| (0..b.real).map(|k| b.tokens[k * 8]))
+            .collect();
+        seen.sort();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_depends_on_epoch_not_call() {
+        let a = shuffled_indices(50, 3, 0);
+        let b = shuffled_indices(50, 3, 0);
+        let c = shuffled_indices(50, 3, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ragged_batch_padded_cyclically() {
+        let ex = mk_cls(5);
+        let bs = cls_batches(&ex, 4, 1, 0);
+        assert_eq!(bs[1].real, 1);
+        assert_eq!(bs[1].tokens.len(), 4 * 8);
+        // repeated example fills the rest
+        assert_eq!(bs[1].tokens[0], bs[1].tokens[8]);
+    }
+}

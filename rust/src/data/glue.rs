@@ -1,0 +1,301 @@
+//! GLUE-like synthetic task suite (DESIGN.md §4): six tasks matching the
+//! *shape* of the paper's GLUE subset — single vs paired sentences,
+//! binary vs graded labels, large vs tiny training sets, and the
+//! metric each reports (Table 2).
+
+use super::vocab;
+use super::{ClsExample, ClsSplit};
+use crate::rng::{self, Stream};
+
+/// The six tasks of Table 2.
+pub const TASKS: [&str; 6] = ["sst2", "mrpc", "cola", "qnli", "rte", "stsb"];
+
+/// Per-task metric (paper: Matthews for CoLA, Pearson for STS-B,
+/// accuracy otherwise).
+pub fn metric_for(task: &str) -> &'static str {
+    match task {
+        "cola" => "matthews",
+        "stsb" => "pearson",
+        _ => "acc",
+    }
+}
+
+pub fn n_classes_for(task: &str) -> usize {
+    if task == "stsb" { 1 } else { 2 }
+}
+
+/// Dataset sizes mirror GLUE's relative scale (RTE/MRPC small -> higher
+/// variance, exactly the effect the paper notes on RTE).
+fn sizes(task: &str) -> (usize, usize) {
+    match task {
+        "sst2" => (4000, 400),
+        "mrpc" => (600, 200),
+        "cola" => (1600, 400),
+        "qnli" => (4000, 400),
+        "rte" => (400, 150),
+        "stsb" => (1200, 300),
+        _ => (1000, 200),
+    }
+}
+
+/// Label-noise rate per task: sets a Bayes ceiling below 100% so scores
+/// land in the paper's range and methods can separate (harder tasks =
+/// more noise, mirroring GLUE's difficulty spread).
+fn label_noise(task: &str) -> f64 {
+    match task {
+        "sst2" => 0.03,
+        "mrpc" => 0.07,
+        "cola" => 0.10,
+        "qnli" => 0.05,
+        "rte" => 0.12,
+        "stsb" => 0.0, // stsb gets additive score noise instead
+        _ => 0.05,
+    }
+}
+
+pub fn generate(task: &str, seed: u64, seq: usize, vocab_size: usize) -> ClsSplit {
+    let (n_train, n_dev) = sizes(task);
+    let mut s = Stream::child(rng::child_seed(seed, rng::STREAM_DATA), task_id(task));
+    let p_noise = label_noise(task);
+    let gen = |s: &mut Stream| {
+        let mut ex = example(task, s, seq, vocab_size);
+        if task == "stsb" {
+            ex.label = (ex.label + (s.next_f64() as f32 - 0.5) * 0.8).clamp(0.0, 4.0);
+        } else if s.next_f64() < p_noise {
+            ex.label = 1.0 - ex.label; // binary flip
+        }
+        ex
+    };
+    let train = (0..n_train).map(|_| gen(&mut s)).collect();
+    let dev = (0..n_dev).map(|_| gen(&mut s)).collect();
+    ClsSplit { train, dev, metric: metric_for(task), n_classes: n_classes_for(task) }
+}
+
+fn task_id(task: &str) -> u64 {
+    1 + TASKS.iter().position(|t| *t == task).expect("unknown task") as u64
+}
+
+fn pad_to(mut toks: Vec<i32>, seq: usize) -> (Vec<i32>, usize) {
+    toks.truncate(seq);
+    let attn = toks.len();
+    toks.resize(seq, vocab::PAD);
+    (toks, attn)
+}
+
+fn words_from(s: &mut Stream, cluster: usize, n: usize) -> Vec<i32> {
+    (0..n)
+        .map(|_| vocab::cluster_base(cluster) + s.next_index(vocab::CLUSTER as usize) as i32)
+        .collect()
+}
+
+fn example(task: &str, s: &mut Stream, seq: usize, vocab_size: usize) -> ClsExample {
+    let nc = vocab::n_clusters(vocab_size);
+    match task {
+        // Sentiment: positive cluster (0/1) vs negative cluster (2/3)
+        // words dominate a noisy sentence.
+        "sst2" => {
+            let label = s.next_index(2);
+            let len = 8 + s.next_index(8);
+            let mut toks = vec![vocab::BOS];
+            for _ in 0..len {
+                let signal = s.next_f64() < 0.65;
+                let c = if signal {
+                    2 * label + s.next_index(2)
+                } else {
+                    4 + s.next_index(nc - 4) // neutral clusters
+                };
+                toks.extend(words_from(s, c, 1));
+            }
+            let (tokens, attn_len) = pad_to(toks, seq);
+            ClsExample { tokens, attn_len, label: label as f32 }
+        }
+        // Paraphrase: paraphrase pairs share the same lexical register
+        // ("side"): clusters are split into two registers; paraphrases
+        // draw both sentences from one register, non-paraphrases mix
+        // registers. Register mass is a pooled-linear signal the MiniLM
+        // backbone can exploit (DESIGN.md §4).
+        "mrpc" => {
+            let label = s.next_index(2);
+            let len = 6 + s.next_index(5);
+            let half = nc / 2;
+            let side1 = 0; // premise register is fixed ("formal side"):
+                           // the label is then linear in s2's register mass
+            let _ = s.next_index(2); // keep stream alignment
+            let k1 = s.next_index(half);
+            let c1 = side1 * half + k1;
+            let side2 = if label == 1 { side1 } else { 1 - side1 };
+            let k2 = s.next_index(half);
+            let c2 = side2 * half + k2;
+            let s1 = words_from(s, c1, len);
+            let s2 = words_from(s, c2, len);
+            let mut toks = vec![vocab::BOS];
+            toks.extend(&s1);
+            toks.push(vocab::SEP);
+            toks.extend(&s2);
+            let (tokens, attn_len) = pad_to(toks, seq);
+            ClsExample { tokens, attn_len, label: label as f32 }
+        }
+        // Acceptability: "grammatical" sentences alternate the two fixed
+        // function-word clusters evenly; violations replace a third of
+        // the odd-position words, skewing the cluster balance.
+        "cola" => {
+            let label = s.next_index(2);
+            let len = 9 + s.next_index(6);
+            let mut toks = vec![vocab::BOS];
+            for i in 0..len {
+                let c = 12 + (i % 2);
+                toks.extend(words_from(s, c, 1));
+            }
+            if label == 0 {
+                for k in 1..len {
+                    if k % 3 == 0 {
+                        toks[k + 1] =
+                            vocab::cluster_base(12) + s.next_index(vocab::CLUSTER as usize) as i32;
+                    }
+                }
+            }
+            let (tokens, attn_len) = pad_to(toks, seq);
+            ClsExample { tokens, attn_len, label: label as f32 }
+        }
+        // QA inference: entailed passages carry the answer span — the
+        // query word flanked by the A_MARKER token; non-entailed
+        // passages mention related words but no answer span.
+        "qnli" => {
+            let label = s.next_index(2);
+            let topic = s.next_index(nc);
+            let plen = 10 + s.next_index(8);
+            let mut passage = words_from(s, topic, plen);
+            let query = vocab::cluster_base(topic) + s.next_index(vocab::CLUSTER as usize) as i32;
+            if label == 1 {
+                let pos = s.next_index(plen - 1);
+                passage[pos] = vocab::A_MARKER;
+                passage[pos + 1] = query;
+            }
+            let mut toks = vec![vocab::BOS, query, vocab::QMARK, vocab::SEP];
+            toks.extend(&passage);
+            let (tokens, attn_len) = pad_to(toks, seq);
+            ClsExample { tokens, attn_len, label: label as f32 }
+        }
+        // Entailment: entailed hypotheses stay in the premise's register
+        // (same cluster side); non-entailed hypotheses jump register.
+        "rte" => {
+            let label = s.next_index(2);
+            let half = nc / 2;
+            let side_p = 0; // fixed premise register (see mrpc comment)
+            let _ = s.next_index(2);
+            let cp = side_p * half + s.next_index(half);
+            let lp = 8 + s.next_index(6);
+            let premise = words_from(s, cp, lp);
+            let side_h = if label == 1 { side_p } else { 1 - side_p };
+            let ch = side_h * half + s.next_index(half);
+            let lh = 3 + s.next_index(3);
+            let hypothesis = words_from(s, ch, lh);
+            let mut toks = vec![vocab::BOS];
+            toks.extend(&premise);
+            toks.push(vocab::SEP);
+            toks.extend(&hypothesis);
+            let (tokens, attn_len) = pad_to(toks, seq);
+            ClsExample { tokens, attn_len, label: label as f32 }
+        }
+        // Similarity regression: score = 4 * (shared-register fraction):
+        // k of the 8 second-sentence words stay in s1's register, the
+        // rest come from the opposite register.
+        "stsb" => {
+            let half = nc / 2;
+            let side = 0; // fixed register for s1 (see mrpc comment)
+            let _ = s.next_index(2);
+            let len = 8;
+            let c1 = side * half + s.next_index(half);
+            let s1 = words_from(s, c1, len);
+            let k = s.next_index(len + 1);
+            let mut s2 = Vec::with_capacity(len);
+            for i in 0..len {
+                let sd = if i < k { side } else { 1 - side };
+                let c = sd * half + s.next_index(half);
+                s2.push(vocab::cluster_base(c) + s.next_index(vocab::CLUSTER as usize) as i32);
+            }
+            let mut toks = vec![vocab::BOS];
+            toks.extend(&s1);
+            toks.push(vocab::SEP);
+            toks.extend(&s2);
+            let (tokens, attn_len) = pad_to(toks, seq);
+            ClsExample { tokens, attn_len, label: 4.0 * k as f32 / len as f32 }
+        }
+        other => panic!("unknown GLUE-like task {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        for task in TASKS {
+            let split = generate(task, 42, 32, 512);
+            assert!(!split.train.is_empty() && !split.dev.is_empty(), "{task}");
+            for ex in split.train.iter().take(50).chain(split.dev.iter().take(20)) {
+                assert_eq!(ex.tokens.len(), 32, "{task}");
+                assert!(ex.attn_len > 0 && ex.attn_len <= 32, "{task}");
+                assert!(ex.tokens.iter().all(|&t| (0..512).contains(&t)), "{task}");
+                if task == "stsb" {
+                    assert!((0.0..=4.0).contains(&ex.label), "{task}");
+                } else {
+                    assert!(ex.label == 0.0 || ex.label == 1.0, "{task}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        for task in ["sst2", "mrpc", "cola", "qnli", "rte"] {
+            let split = generate(task, 1, 32, 512);
+            let pos: usize = split.train.iter().filter(|e| e.label == 1.0).count();
+            let frac = pos as f64 / split.train.len() as f64;
+            assert!((0.35..0.65).contains(&frac), "{task}: {frac}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate("sst2", 5, 32, 512);
+        let b = generate("sst2", 5, 32, 512);
+        assert_eq!(a.train[0].tokens, b.train[0].tokens);
+        let c = generate("sst2", 6, 32, 512);
+        assert_ne!(a.train[0].tokens, c.train[0].tokens);
+    }
+
+    #[test]
+    fn rte_is_small_data() {
+        let (rte, _) = super::sizes("rte");
+        let (sst, _) = super::sizes("sst2");
+        assert!(rte * 5 <= sst);
+    }
+
+    #[test]
+    fn qnli_answer_span_is_the_signal() {
+        // pre-noise semantics: A_MARKER followed by the query <=> label 1
+        let mut s = Stream::child(rng::child_seed(3, rng::STREAM_DATA), task_id("qnli"));
+        for _ in 0..200 {
+            let ex = example("qnli", &mut s, 32, 512);
+            let query = ex.tokens[1];
+            let passage = &ex.tokens[4..ex.attn_len];
+            let has_span = passage
+                .windows(2)
+                .any(|w| w[0] == vocab::A_MARKER && w[1] == query);
+            assert_eq!(has_span, ex.label == 1.0);
+        }
+    }
+
+    #[test]
+    fn label_noise_applied() {
+        // with noise, generate() labels disagree with the clean signal
+        // at roughly the configured rate
+        let split = generate("rte", 9, 32, 512);
+        assert!(!split.train.is_empty());
+        // stsb score noise keeps range
+        let st = generate("stsb", 9, 32, 512);
+        assert!(st.train.iter().all(|e| (0.0..=4.0).contains(&e.label)));
+    }
+}

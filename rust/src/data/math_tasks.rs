@@ -1,0 +1,167 @@
+//! Mathematical-reasoning LM tasks (Table 3 substitution).
+//!
+//! MetaMathQA -> synthetic arithmetic training set; GSM8K-like dev =
+//! 2-step chains over small numbers; MATH-like dev = deeper chains with
+//! larger operands and multiplication (strictly harder, so every method
+//! scores lower on it — matching the paper's GSM8K >> MATH gap).
+
+use super::vocab;
+use super::{LmExample, LmSplit};
+use crate::rng::{self, Stream};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Difficulty {
+    /// 2-step, operands < 20 (GSM8K-like)
+    Gsm,
+    /// 3-step, operands < 50, multiplication-heavy (MATH-like)
+    Math,
+}
+
+/// Build one chained-arithmetic example:
+///   Q a1 OP b1 = c1 ; c1 OP b2 = c2 [; ...] A <answer> EOS
+/// The prompt ends right after A_MARKER; labels cover answer + EOS.
+pub fn example(s: &mut Stream, diff: Difficulty, seq: usize) -> LmExample {
+    let (steps, max_op) = match diff {
+        Difficulty::Gsm => (2, 20u64),
+        Difficulty::Math => (3, 50u64),
+    };
+    let mut toks = vec![vocab::BOS, vocab::Q_MARKER];
+    let mut acc = 1 + s.next_index(max_op as usize) as u64;
+    toks.extend(vocab::encode_number(acc));
+    for step in 0..steps {
+        let b = 1 + s.next_index(max_op as usize) as u64;
+        let mul_bias = matches!(diff, Difficulty::Math) && step > 0;
+        let (op, val) = match s.next_index(if mul_bias { 4 } else { 3 }) {
+            0 => (vocab::PLUS, acc + b),
+            1 => (vocab::MINUS, acc.max(b) - acc.min(b)),
+            _ => (vocab::TIMES, acc.saturating_mul(b).min(9999)),
+        };
+        toks.push(op);
+        toks.extend(vocab::encode_number(b));
+        toks.push(vocab::EQUALS);
+        acc = val;
+        if step + 1 < steps {
+            toks.extend(vocab::encode_number(acc));
+            toks.push(vocab::COLON);
+        }
+    }
+    toks.push(vocab::A_MARKER);
+    let prompt_len = toks.len();
+    let answer = vocab::encode_number(acc);
+    toks.extend(&answer);
+    toks.push(vocab::EOS);
+    toks.truncate(seq);
+    let attn = toks.len();
+    toks.resize(seq, vocab::PAD);
+
+    // labels: next-token targets only over the answer span (incl. EOS)
+    let mut labels = vec![-1i32; seq];
+    for pos in (prompt_len - 1)..(attn - 1) {
+        labels[pos] = toks[pos + 1];
+    }
+    LmExample { tokens: toks, labels, prompt_len, answer }
+}
+
+/// Training mixes both difficulties (like MetaMathQA mixes sources);
+/// dev splits are per-benchmark.
+pub fn generate(seed: u64, seq: usize, n_train: usize, n_dev: usize) -> (LmSplit, Vec<LmExample>) {
+    let mut s = Stream::child(rng::child_seed(seed, rng::STREAM_DATA), 50);
+    let train = (0..n_train)
+        .map(|i| {
+            let d = if i % 2 == 0 { Difficulty::Gsm } else { Difficulty::Math };
+            example(&mut s, d, seq)
+        })
+        .collect();
+    let dev_gsm: Vec<LmExample> = (0..n_dev).map(|_| example(&mut s, Difficulty::Gsm, seq)).collect();
+    let dev_math: Vec<LmExample> = (0..n_dev).map(|_| example(&mut s, Difficulty::Math, seq)).collect();
+    (LmSplit { train, dev: dev_gsm }, dev_math)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_structure() {
+        let mut s = Stream::new(1);
+        for _ in 0..100 {
+            let ex = example(&mut s, Difficulty::Gsm, 64);
+            assert_eq!(ex.tokens.len(), 64);
+            assert_eq!(ex.labels.len(), 64);
+            assert_eq!(ex.tokens[1], vocab::Q_MARKER);
+            assert_eq!(ex.tokens[ex.prompt_len - 1], vocab::A_MARKER);
+            // labels masked over prompt except the A_MARKER position
+            assert!(ex.labels[..ex.prompt_len - 1].iter().all(|&l| l == -1));
+            assert_eq!(ex.labels[ex.prompt_len - 1], ex.answer[0]);
+            assert!(!ex.answer.is_empty());
+        }
+    }
+
+    #[test]
+    fn answers_are_correct_chains() {
+        // re-evaluate the chain from the surface tokens and compare
+        let mut s = Stream::new(9);
+        for _ in 0..200 {
+            let ex = example(&mut s, Difficulty::Math, 64);
+            let toks = &ex.tokens[2..ex.prompt_len - 1]; // strip BOS Q .. A
+            let mut acc: Option<u64> = None;
+            let mut i = 0;
+            // parse: n (OP n =[ n ;])*
+            let mut cur = Vec::new();
+            let mut pending_op: Option<i32> = None;
+            while i < toks.len() {
+                let t = toks[i];
+                if vocab::is_digit(t) {
+                    cur.push(t);
+                } else {
+                    if !cur.is_empty() {
+                        let n = vocab::decode_number(&cur).unwrap();
+                        cur.clear();
+                        acc = Some(match (acc, pending_op) {
+                            (None, _) => n,
+                            (Some(a), Some(vocab::PLUS)) => a + n,
+                            (Some(a), Some(vocab::MINUS)) => a.max(n) - a.min(n),
+                            (Some(a), Some(vocab::TIMES)) => (a * n).min(9999),
+                            (Some(_), _) => n, // intermediate restated value
+                        });
+                        pending_op = None;
+                    }
+                    if matches!(t, vocab::PLUS | vocab::MINUS | vocab::TIMES) {
+                        pending_op = Some(t);
+                    }
+                }
+                i += 1;
+            }
+            if !cur.is_empty() {
+                let n = vocab::decode_number(&cur).unwrap();
+                acc = Some(match (acc, pending_op) {
+                    (Some(a), Some(vocab::PLUS)) => a + n,
+                    (Some(a), Some(vocab::MINUS)) => a.max(n) - a.min(n),
+                    (Some(a), Some(vocab::TIMES)) => (a * n).min(9999),
+                    _ => n,
+                });
+            }
+            let want = vocab::decode_number(&ex.answer).unwrap();
+            assert_eq!(acc, Some(want), "tokens {toks:?}");
+        }
+    }
+
+    #[test]
+    fn math_is_harder_than_gsm() {
+        let mut s = Stream::new(2);
+        let avg_len = |d: Difficulty, s: &mut Stream| -> f64 {
+            (0..100).map(|_| example(s, d, 64).prompt_len as f64).sum::<f64>() / 100.0
+        };
+        let g = avg_len(Difficulty::Gsm, &mut s);
+        let m = avg_len(Difficulty::Math, &mut s);
+        assert!(m > g, "math {m} vs gsm {g}");
+    }
+
+    #[test]
+    fn generate_splits() {
+        let (split, dev_math) = generate(3, 64, 50, 20);
+        assert_eq!(split.train.len(), 50);
+        assert_eq!(split.dev.len(), 20);
+        assert_eq!(dev_math.len(), 20);
+    }
+}

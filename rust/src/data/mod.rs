@@ -1,0 +1,53 @@
+//! Synthetic data substrate (DESIGN.md §4 substitutions).
+//!
+//! Everything is generated deterministically from SplitMix64 streams, so
+//! every experiment is exactly reproducible from its seed. Token space
+//! is shared across tasks (`vocab`): a small structured "language" with
+//! word clusters, digits and operator symbols, so that one pretrained
+//! backbone transfers to all downstream tasks — mirroring how the
+//! paper's RoBERTa/Mistral backbones serve GLUE/math/instruct.
+
+pub mod batcher;
+pub mod corpus;
+pub mod glue;
+pub mod instruct;
+pub mod math_tasks;
+pub mod vision;
+pub mod vocab;
+
+/// A classification / regression example.
+#[derive(Debug, Clone)]
+pub struct ClsExample {
+    pub tokens: Vec<i32>,
+    pub attn_len: usize,
+    /// class id for C>=2 tasks; graded score for regression tasks
+    pub label: f32,
+}
+
+/// An LM example: full token sequence + per-position labels
+/// (-1 = masked / prompt / padding).
+#[derive(Debug, Clone)]
+pub struct LmExample {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    /// prompt prefix length (for generation-style eval)
+    pub prompt_len: usize,
+    /// reference answer tokens (for exact-match scoring)
+    pub answer: Vec<i32>,
+}
+
+/// A labelled dataset split.
+#[derive(Debug, Clone)]
+pub struct ClsSplit {
+    pub train: Vec<ClsExample>,
+    pub dev: Vec<ClsExample>,
+    /// metric to report: "acc" | "matthews" | "pearson" | "f1"
+    pub metric: &'static str,
+    pub n_classes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LmSplit {
+    pub train: Vec<LmExample>,
+    pub dev: Vec<LmExample>,
+}

@@ -1,0 +1,114 @@
+//! Vision tasks (Table 5 substitution): 8 synthetic "datasets" of
+//! patch-token images. An image is a 4x4 grid of patch tokens (a
+//! VQ-style tokenization of a ViT's patch embedding); each class has a
+//! signature set of patch tokens placed at class-dependent positions,
+//! with dataset-specific noise/distractor levels that induce the same
+//! difficulty ordering as the paper's suite (CIFAR10/EuroSAT easy,
+//! StanfordCars/FGVC hard).
+
+use super::vocab;
+use super::{ClsExample, ClsSplit};
+use crate::rng::{self, Stream};
+
+pub const DATASETS: [&str; 8] = [
+    "oxford_pets", "stanford_cars", "cifar10", "dtd",
+    "eurosat", "fgvc", "resisc45", "cifar100",
+];
+
+/// (n_classes, noise, signature_patches, train_size)
+fn spec(ds: &str) -> (usize, f64, usize, usize) {
+    match ds {
+        "oxford_pets" => (10, 0.30, 5, 1200),
+        "stanford_cars" => (10, 0.55, 3, 1200),
+        "cifar10" => (10, 0.15, 6, 2000),
+        "dtd" => (10, 0.40, 4, 1000),
+        "eurosat" => (10, 0.15, 6, 1600),
+        "fgvc" => (10, 0.65, 3, 1000),
+        "resisc45" => (10, 0.30, 5, 1600),
+        "cifar100" => (10, 0.35, 4, 2000),
+        _ => panic!("unknown vision dataset {ds:?}"),
+    }
+}
+
+const GRID: usize = 16; // 4x4 patches
+
+pub fn generate(ds: &str, seed: u64, seq: usize, vocab_size: usize) -> ClsSplit {
+    let (n_classes, noise, sig, n_train) = spec(ds);
+    let ds_id = DATASETS.iter().position(|d| *d == ds).unwrap() as u64;
+    let mut s = Stream::child(rng::child_seed(seed, rng::STREAM_DATA), 70 + ds_id);
+    // class signatures: per class, `sig` (position, token) pairs
+    let n_patch_tokens = vocab_size - vocab::WORD0 as usize;
+    let sigs: Vec<Vec<(usize, i32)>> = (0..n_classes)
+        .map(|_| {
+            (0..sig)
+                .map(|_| {
+                    (
+                        s.next_index(GRID),
+                        vocab::WORD0 + s.next_index(n_patch_tokens) as i32,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let gen = |s: &mut Stream| -> ClsExample {
+        let label = s.next_index(n_classes);
+        let mut patches: Vec<i32> = (0..GRID)
+            .map(|_| vocab::WORD0 + s.next_index(n_patch_tokens) as i32)
+            .collect();
+        for &(pos, tok) in &sigs[label] {
+            if s.next_f64() >= noise {
+                patches[pos] = tok;
+            }
+        }
+        let mut toks = vec![vocab::BOS];
+        toks.extend(&patches);
+        toks.truncate(seq);
+        let attn = toks.len();
+        toks.resize(seq, vocab::PAD);
+        ClsExample { tokens: toks, attn_len: attn, label: label as f32 }
+    };
+    let train = (0..n_train).map(|_| gen(&mut s)).collect();
+    let dev = (0..300).map(|_| gen(&mut s)).collect();
+    ClsSplit { train, dev, metric: "acc", n_classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_datasets_generate() {
+        for ds in DATASETS {
+            let split = generate(ds, 42, 32, 512);
+            assert!(split.train.len() >= 1000, "{ds}");
+            assert_eq!(split.dev.len(), 300);
+            for ex in split.train.iter().take(20) {
+                assert_eq!(ex.tokens.len(), 32);
+                assert_eq!(ex.attn_len, 1 + GRID);
+                assert!((ex.label as usize) < split.n_classes);
+            }
+        }
+    }
+
+    #[test]
+    fn difficulty_ordering_easy_vs_hard() {
+        // easy dataset images carry more intact signature patches
+        let count_sig = |ds: &str| -> f64 {
+            let (_, noise, sig, _) = spec(ds);
+            (1.0 - noise) * sig as f64
+        };
+        assert!(count_sig("cifar10") > count_sig("fgvc"));
+        assert!(count_sig("eurosat") > count_sig("stanford_cars"));
+    }
+
+    #[test]
+    fn class_balance() {
+        let split = generate("cifar10", 3, 32, 512);
+        let mut counts = vec![0usize; split.n_classes];
+        for ex in &split.train {
+            counts[ex.label as usize] += 1;
+        }
+        let mean = split.train.len() / split.n_classes;
+        assert!(counts.iter().all(|&c| c > mean / 2 && c < mean * 2));
+    }
+}

@@ -1,0 +1,122 @@
+//! Shared token space for all synthetic tasks.
+//!
+//! Layout (vocab = 512 for base/large/lm backbones):
+//!   0       PAD
+//!   1       BOS
+//!   2       SEP
+//!   3       EOS
+//!   4..=13  digits 0-9
+//!   14..=23 operators / markers (+, -, *, =, ?, :, ARROW, Q, A, TURN)
+//!   24..=31 task-tag tokens (instruction opcodes)
+//!   32..    content "words", organized in clusters of 16
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const EOS: i32 = 3;
+
+pub const DIGIT0: i32 = 4;
+
+pub const PLUS: i32 = 14;
+pub const MINUS: i32 = 15;
+pub const TIMES: i32 = 16;
+pub const EQUALS: i32 = 17;
+pub const QMARK: i32 = 18;
+pub const COLON: i32 = 19;
+pub const ARROW: i32 = 20;
+pub const Q_MARKER: i32 = 21;
+pub const A_MARKER: i32 = 22;
+pub const TURN: i32 = 23;
+
+/// Instruction opcodes (data::instruct).
+pub const OP_COPY: i32 = 24;
+pub const OP_REVERSE: i32 = 25;
+pub const OP_LAST: i32 = 26;
+pub const OP_SORT: i32 = 27;
+pub const OP_COUNT: i32 = 28;
+pub const OP_MAP: i32 = 29;
+pub const OP_PICK: i32 = 30;
+pub const OP_MATH: i32 = 31;
+
+pub const WORD0: i32 = 32;
+pub const CLUSTER: i32 = 16;
+
+/// First token id of word-cluster `c`.
+pub fn cluster_base(c: usize) -> i32 {
+    WORD0 + (c as i32) * CLUSTER
+}
+
+/// Number of word clusters available under a vocab size.
+pub fn n_clusters(vocab: usize) -> usize {
+    (vocab - WORD0 as usize) / CLUSTER as usize
+}
+
+pub fn digit(d: u32) -> i32 {
+    DIGIT0 + d as i32
+}
+
+pub fn is_digit(t: i32) -> bool {
+    (DIGIT0..DIGIT0 + 10).contains(&t)
+}
+
+pub fn digit_value(t: i32) -> Option<u32> {
+    is_digit(t).then_some((t - DIGIT0) as u32)
+}
+
+/// Encode a non-negative integer as digit tokens (decimal, no leading +).
+pub fn encode_number(mut n: u64) -> Vec<i32> {
+    if n == 0 {
+        return vec![digit(0)];
+    }
+    let mut ds = Vec::new();
+    while n > 0 {
+        ds.push(digit((n % 10) as u32));
+        n /= 10;
+    }
+    ds.reverse();
+    ds
+}
+
+/// Decode digit tokens back to an integer (stops at first non-digit).
+pub fn decode_number(toks: &[i32]) -> Option<u64> {
+    let mut n: u64 = 0;
+    let mut seen = false;
+    for &t in toks {
+        match digit_value(t) {
+            Some(d) => {
+                n = n * 10 + d as u64;
+                seen = true;
+            }
+            None => break,
+        }
+    }
+    seen.then_some(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn number_roundtrip() {
+        for n in [0u64, 7, 10, 99, 1234, 98765] {
+            assert_eq!(decode_number(&encode_number(n)), Some(n));
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_non_digit() {
+        let mut toks = encode_number(42);
+        toks.push(EOS);
+        toks.extend(encode_number(9));
+        assert_eq!(decode_number(&toks), Some(42));
+        assert_eq!(decode_number(&[EOS]), None);
+    }
+
+    #[test]
+    fn clusters_fit_vocab() {
+        assert!(n_clusters(512) >= 16);
+        assert_eq!(cluster_base(0), WORD0);
+        assert_eq!(cluster_base(2), WORD0 + 32);
+    }
+}

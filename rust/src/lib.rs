@@ -1,0 +1,22 @@
+//! Uni-LoRA: One Vector is All You Need — system reproduction.
+//!
+//! Three-layer architecture:
+//! - L1/L2 (build time, Python): Pallas projection kernels + JAX transformer,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! - L3 (this crate, Rust): training coordinator, projection substrate,
+//!   synthetic data pipelines, adapter registry, and a multi-adapter server.
+//!
+//! Python never runs on the request path: the coordinator loads the HLO
+//! artifacts through PJRT (`xla` crate) and drives everything from Rust.
+
+pub mod adapters;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod projection;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod util;

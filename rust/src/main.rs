@@ -1,0 +1,270 @@
+//! `uni-lora` — the L3 launcher. Subcommands:
+//!
+//!   pretrain  --size base|large|lm|e2e --steps N [--seed S]
+//!   finetune  --task sst2|...|math|instruct --method uni|lora|... [--size base|large]
+//!             [--seed S] [--epochs N] [--lr-theta X] [--lr-head X] [--out adapter.uni1]
+//!   eval      --adapter adapter.uni1 --task <task>
+//!   serve     --addr 127.0.0.1:7401 --adapters <dir> [--base lm_uni]
+//!   inspect   --adapter adapter.uni1       (print metadata + expansion norms)
+//!   props     --method uni|vera|...        (Table-1 property analysis)
+//!   list      (artifacts in the manifest)
+//!
+//! Everything runs from AOT artifacts: `make artifacts` first.
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::config::ModelCfg;
+use uni_lora::coordinator::{evaluator, pretrain_backbone, ClsTrainer, Hyper, LmTrainer};
+use uni_lora::data::{glue, instruct, math_tasks};
+use uni_lora::projection::properties;
+use uni_lora::runtime::{Executor, Manifest};
+use uni_lora::server::{serve, ServerConfig};
+use uni_lora::util::cli::Args;
+use uni_lora::util::fmt_params;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "pretrain" => cmd_pretrain(args),
+        "finetune" => cmd_finetune(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "inspect" => cmd_inspect(args),
+        "props" => cmd_props(args),
+        "list" => cmd_list(),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "uni-lora — Uni-LoRA system reproduction
+  pretrain --size base|large|lm|e2e [--steps N] [--seed S]
+  finetune --task <task> [--method uni] [--size base] [--seed 42]
+           [--epochs 2] [--lr-theta 5e-3] [--lr-head 5e-2] [--out a.uni1]
+  eval     --adapter a.uni1 --task <task>
+  serve    [--addr 127.0.0.1:7401] [--adapters dir] [--base lm_uni]
+  inspect  --adapter a.uni1
+  props    [--method uni]
+  list
+tasks: sst2 mrpc cola qnli rte stsb | math | instruct";
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let size = args.get_or("size", "base");
+    let steps = args.usize_or("steps", 300);
+    let seed = args.u64_or("seed", 42);
+    let mut exec = Executor::with_default_manifest()?;
+    let (w0, losses) = pretrain_backbone(&mut exec, &size, seed, steps)?;
+    if losses.is_empty() {
+        println!("backbone '{size}' loaded from cache ({} params)", fmt_params(w0.len()));
+    } else {
+        println!(
+            "pretrained '{size}' ({} params, {steps} steps): loss {:.3} -> {:.3}",
+            fmt_params(w0.len()),
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+    Ok(())
+}
+
+fn artifact_base(task: &str, size: &str, method: &str) -> Result<String> {
+    Ok(match task {
+        "math" | "instruct" => format!("lm_{method}"),
+        t if glue::TASKS.contains(&t) => {
+            let c = if t == "stsb" { 1 } else { 2 };
+            format!("glue_{size}_{method}_c{c}")
+        }
+        other => bail!("unknown task {other:?}"),
+    })
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let task = args.get_or("task", "sst2");
+    let method = args.get_or("method", "uni");
+    let size = args.get_or("size", "base");
+    let seed = args.u64_or("seed", 42);
+    let hp = Hyper {
+        lr_theta: args.f32_or("lr-theta", 5e-3),
+        lr_head: args.f32_or("lr-head", 5e-2),
+        wd: args.f32_or("wd", 0.0),
+        epochs: args.usize_or("epochs", 2),
+    };
+    let mut exec = Executor::with_default_manifest()?;
+    let base = artifact_base(&task, &size, &method)?;
+
+    if task == "math" || task == "instruct" {
+        let (w0, _) = pretrain_backbone(&mut exec, "lm", 42, uni_lora::coordinator::backbone::default_steps())?;
+        let meta = exec.manifest.get(&format!("{base}_lm_train"))?.clone();
+        let mut tr = LmTrainer::new(&exec, &base, seed, w0)?;
+        let (split, extra) = if task == "math" {
+            math_tasks::generate(seed, meta.cfg.seq, 600, 80)
+        } else {
+            instruct::generate(seed, meta.cfg.seq, 600, 60)
+        };
+        let rr = tr.train(&mut exec, &split.train, &hp)?;
+        println!(
+            "trained {} ({}, d={}): loss {:.3} -> {:.3} in {:.1}s / {} steps",
+            base, method, fmt_params(meta.d),
+            rr.losses[0], rr.losses.last().unwrap(), rr.train_secs, rr.steps
+        );
+        if task == "math" {
+            let gsm = evaluator::exact_match_accuracy(&mut tr, &mut exec, &split.dev, 8)?;
+            let mth = evaluator::exact_match_accuracy(&mut tr, &mut exec, &extra, 8)?;
+            println!("GSM8K-like: {gsm:.2}%   MATH-like: {mth:.2}%");
+        } else {
+            let s1 = evaluator::rubric_score(&mut tr, &mut exec, &split.dev, 10)?;
+            let s2 = evaluator::rubric_score(&mut tr, &mut exec, &extra, 10)?;
+            println!("Score1 (single-turn): {s1:.2}   Score2 (multi-turn): {s2:.2}");
+        }
+        if let Some(out) = args.get("out") {
+            AdapterCheckpoint {
+                seed,
+                method: method.clone(),
+                artifact: format!("{base}_lm_logits"),
+                theta: tr.theta.clone(),
+                head: vec![],
+            }
+            .save(out)?;
+            println!("adapter saved to {out}");
+        }
+    } else {
+        let (w0, _) = pretrain_backbone(&mut exec, &size, 42, uni_lora::coordinator::backbone::default_steps())?;
+        let meta = exec.manifest.get(&format!("{base}_cls_train"))?.clone();
+        let mut tr = ClsTrainer::new(&exec, &base, seed, w0)?;
+        let split = glue::generate(&task, seed, meta.cfg.seq, meta.cfg.vocab);
+        let (score, rr) =
+            tr.run_and_score(&mut exec, &split.train, &split.dev, split.metric, &hp)?;
+        println!(
+            "{task} [{method}, d={}]: {} = {:.4} ({} steps, {:.1}s)",
+            fmt_params(meta.d), split.metric, score, rr.steps, rr.train_secs
+        );
+        if let Some(out) = args.get("out") {
+            AdapterCheckpoint {
+                seed,
+                method: method.clone(),
+                artifact: format!("{base}_cls_eval"),
+                theta: tr.theta.clone(),
+                head: tr.head.clone(),
+            }
+            .save(out)?;
+            println!("adapter saved to {out}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let path = args.required("adapter")?;
+    let task = args.get_or("task", "sst2");
+    let ckpt = AdapterCheckpoint::load(path)?;
+    let mut exec = Executor::with_default_manifest()?;
+    let meta = exec.manifest.get(&ckpt.artifact)?.clone();
+    let cfg = meta.cfg.clone();
+    if ckpt.artifact.ends_with("_cls_eval") {
+        let base = ckpt.artifact.trim_end_matches("_cls_eval").to_string();
+        let size = cfg.name.clone();
+        let (w0, _) = pretrain_backbone(&mut exec, &size, 42, uni_lora::coordinator::backbone::default_steps())?;
+        let mut tr = ClsTrainer::new(&exec, &base, ckpt.seed, w0)?;
+        tr.theta = ckpt.theta.clone();
+        tr.head = ckpt.head.clone();
+        let split = glue::generate(&task, ckpt.seed, cfg.seq, cfg.vocab);
+        let order = uni_lora::data::batcher::shuffled_indices(split.dev.len(), 0, 0);
+        let labels: Vec<f32> = order.iter().map(|&i| split.dev[i].label).collect();
+        let logits = tr.eval_logits(&mut exec, &split.dev)?;
+        println!(
+            "{task}: {} = {:.4}",
+            split.metric,
+            uni_lora::metrics::compute(split.metric, &logits, &labels)
+        );
+    } else {
+        bail!("eval for artifact kind of {:?} not wired in CLI; see examples/", ckpt.artifact);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7401");
+    let base = args.get_or("base", "lm_uni");
+    let dir = args.get_or("adapters", "adapters");
+    let mut exec = Executor::with_default_manifest()?;
+    let (w0, _) = pretrain_backbone(&mut exec, "lm", 42, uni_lora::coordinator::backbone::default_steps())?;
+    let art = format!("{base}_lm_logits");
+    let cfg: ModelCfg = exec.manifest.get(&art)?.cfg.clone();
+    exec.prepare(&art)?;
+    let registry = Arc::new(Registry::load_dir(&dir)?);
+    println!("serving {} adapters from {dir} on {addr}", registry.len());
+    let handle = serve(
+        ServerConfig { addr: addr.clone(), art_logits: art },
+        exec,
+        registry,
+        cfg,
+        w0,
+    )?;
+    println!("listening on {}", handle.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.required("adapter")?;
+    let ckpt = AdapterCheckpoint::load(path)?;
+    println!(
+        "adapter: method={} artifact={} seed={} d={} head={} bytes={}",
+        ckpt.method,
+        ckpt.artifact,
+        ckpt.seed,
+        ckpt.d(),
+        ckpt.head.len(),
+        ckpt.byte_size()
+    );
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let cfg = manifest.get(&ckpt.artifact)?.cfg.clone();
+    let deltas = ckpt.expand(&cfg)?;
+    for (i, d) in deltas.iter().enumerate() {
+        let dw = d.to_dense(cfg.hidden, cfg.rank);
+        let norm: f32 = dw.iter().map(|x| x * x).sum::<f32>().sqrt();
+        println!("  module {i}: ||DeltaW||_F = {norm:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_props(args: &Args) -> Result<()> {
+    let method = args.get_or("method", "uni");
+    let mut cfg = ModelCfg::test_base(&method);
+    cfg.hidden = 16;
+    cfg.layers = 2;
+    cfg.rank = 2;
+    cfg.d = 32;
+    cfg.vb_b = 16;
+    cfg.vb_bank = 8;
+    cfg.n_coef = 12;
+    let p = properties::analyze(&cfg, args.u64_or("seed", 42)).context("property analysis")?;
+    println!("{p:#?}");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    for (name, a) in &manifest.artifacts {
+        println!(
+            "{name:<44} {:<14} d={:<8} D={:<8} P={}",
+            a.kind,
+            a.d,
+            a.big_d,
+            fmt_params(a.base_params)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Evaluation metrics for every table: accuracy, Matthews correlation
+//! (CoLA), Pearson correlation (STS-B), F1, exact-match, and the
+//! MT-Bench-style 0-10 rubric scorer (the deterministic stand-in for
+//! the paper's GPT-4 judge).
+
+/// argmax over a logits row.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hit = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hit as f64 / pred.len() as f64
+}
+
+/// Matthews correlation coefficient for binary labels.
+pub fn matthews(pred: &[usize], gold: &[usize]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fne) / denom
+    }
+}
+
+/// Pearson correlation between two real-valued series.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0f64;
+    let mut sxx2 = 0f64;
+    let mut syy2 = 0f64;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx2 += (a - mx) * (a - mx);
+        syy2 += (b - my) * (b - my);
+    }
+    if sxx2 == 0.0 || syy2 == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx2 * syy2).sqrt()
+    }
+}
+
+/// Binary F1 (positive class = 1).
+pub fn f1(pred: &[usize], gold: &[usize]) -> f64 {
+    let tp = pred.iter().zip(gold).filter(|(&p, &g)| p == 1 && g == 1).count() as f64;
+    let fp = pred.iter().zip(gold).filter(|(&p, &g)| p == 1 && g == 0).count() as f64;
+    let fne = pred.iter().zip(gold).filter(|(&p, &g)| p == 0 && g == 1).count() as f64;
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fne);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Exact-match of a generated answer against the reference.
+pub fn exact_match(generated: &[i32], reference: &[i32]) -> bool {
+    generated.len() >= reference.len() && &generated[..reference.len()] == reference
+}
+
+/// MT-Bench-style rubric: 10 for exact match, else up to 8 by longest
+/// common prefix fraction, plus 1 if the length matches — a fixed,
+/// deterministic judge so *relative* method ordering is meaningful
+/// (which is all Table 4 uses).
+pub fn rubric_score(generated: &[i32], reference: &[i32]) -> f64 {
+    if exact_match(generated, reference) {
+        return 10.0;
+    }
+    if reference.is_empty() {
+        return 0.0;
+    }
+    let prefix = generated
+        .iter()
+        .zip(reference)
+        .take_while(|(a, b)| a == b)
+        .count();
+    let mut score = 8.0 * prefix as f64 / reference.len() as f64;
+    if generated.len() >= reference.len() {
+        // right length, partially wrong content
+        let overlap = generated[..reference.len()]
+            .iter()
+            .zip(reference)
+            .filter(|(a, b)| a == b)
+            .count();
+        score = score.max(6.0 * overlap as f64 / reference.len() as f64);
+        score += 1.0;
+    }
+    score.min(9.5)
+}
+
+/// Dispatch a named metric over logits rows + float labels.
+pub fn compute(metric: &str, logits: &[Vec<f32>], labels: &[f32]) -> f64 {
+    match metric {
+        "pearson" => {
+            let x: Vec<f64> = logits.iter().map(|r| r[0] as f64).collect();
+            let y: Vec<f64> = labels.iter().map(|&l| l as f64).collect();
+            pearson(&x, &y)
+        }
+        _ => {
+            let pred: Vec<usize> = logits.iter().map(|r| argmax(r)).collect();
+            let gold: Vec<usize> = labels.iter().map(|&l| l as usize).collect();
+            match metric {
+                "acc" => accuracy(&pred, &gold),
+                "matthews" => matthews(&pred, &gold),
+                "f1" => f1(&pred, &gold),
+                other => panic!("unknown metric {other:?}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn matthews_known_values() {
+        // perfect prediction -> 1; inverted -> -1; constant -> 0
+        assert!((matthews(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+        assert_eq!(matthews(&[1, 1, 1, 1], &[1, 0, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_known_values() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&x, &[1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn f1_known() {
+        // pred [1,1,0,0] gold [1,0,1,0]: tp=1 fp=1 fn=1 -> P=R=0.5 -> F1=0.5
+        assert!((f1(&[1, 1, 0, 0], &[1, 0, 1, 0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rubric_ordering() {
+        let reference = [5, 6, 7];
+        assert_eq!(rubric_score(&[5, 6, 7], &reference), 10.0);
+        let close = rubric_score(&[5, 6, 9], &reference);
+        let far = rubric_score(&[9, 9, 9], &reference);
+        let empty = rubric_score(&[], &reference);
+        assert!(close > far, "{close} vs {far}");
+        assert!(far >= empty);
+        assert!(close < 10.0);
+    }
+
+    #[test]
+    fn exact_match_allows_trailing() {
+        assert!(exact_match(&[1, 2, 3, 0], &[1, 2, 3]));
+        assert!(!exact_match(&[1, 2], &[1, 2, 3]));
+    }
+
+    #[test]
+    fn compute_dispatch() {
+        let logits = vec![vec![0.1, 0.9], vec![0.8, 0.2]];
+        assert_eq!(compute("acc", &logits, &[1.0, 0.0]), 1.0);
+        let reg = vec![vec![1.0], vec![2.0], vec![3.0]];
+        assert!((compute("pearson", &reg, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,141 @@
+//! Fastfood projection baseline — O(D log d) against Uni-LoRA's O(D)
+//! (paper §3.4 and Table 6). Forward chain: S * H(G_hat * Pi(H(B*x))).
+
+use crate::rng;
+
+/// In-place orthonormal fast Walsh-Hadamard transform (len power of 2).
+pub fn fwht(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let (a, b) = (v[j], v[j + h]);
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for x in v.iter_mut() {
+        *x *= scale;
+    }
+}
+
+/// Frozen per-block statics for one Fastfood block.
+#[derive(Debug, Clone)]
+pub struct FastfoodBlock {
+    pub sgn_b: Vec<f32>,
+    pub gauss: Vec<f32>,
+    pub perm: Vec<i32>,
+    pub sgn_s: Vec<f32>,
+}
+
+impl FastfoodBlock {
+    /// Same stream derivation as methods.gen_statics: base seed is the
+    /// per-(module, block) child; components are children 1..4 of it.
+    pub fn generate(base_seed: u64, d: usize) -> FastfoodBlock {
+        FastfoodBlock {
+            sgn_b: rng::signs(rng::child_seed(base_seed, 1), d),
+            gauss: rng::normals(rng::child_seed(base_seed, 2), d),
+            perm: rng::permutation(rng::child_seed(base_seed, 3), d),
+            sgn_s: rng::signs(rng::child_seed(base_seed, 4), d),
+        }
+    }
+
+    /// Apply the block: theta [d] -> out [d]. O(d log d).
+    pub fn apply(&self, theta: &[f32]) -> Vec<f32> {
+        let d = theta.len();
+        let norm: f32 = self.gauss.iter().map(|g| g * g).sum::<f32>().sqrt();
+        let gscale = (d as f32).sqrt() / norm;
+        let mut v: Vec<f32> = theta
+            .iter()
+            .zip(&self.sgn_b)
+            .map(|(t, s)| t * s)
+            .collect();
+        fwht(&mut v);
+        let mut w = vec![0f32; d];
+        for i in 0..d {
+            w[i] = v[self.perm[i] as usize] * self.gauss[i] * gscale;
+        }
+        fwht(&mut w);
+        for i in 0..d {
+            w[i] *= self.sgn_s[i];
+        }
+        w
+    }
+}
+
+/// Full Fastfood projection R^d -> R^out_len: ceil(out_len/d) blocks.
+pub fn project(blocks: &[FastfoodBlock], theta: &[f32], out_len: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(out_len);
+    for b in blocks {
+        out.extend(b.apply(theta));
+        if out.len() >= out_len {
+            break;
+        }
+    }
+    out.truncate(out_len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_involution_isometry() {
+        for seed in 0..8u64 {
+            let x = rng::normals(seed, 128);
+            let mut v = x.clone();
+            fwht(&mut v);
+            let n0: f64 = x.iter().map(|a| (a * a) as f64).sum();
+            let n1: f64 = v.iter().map(|a| (a * a) as f64).sum();
+            assert!((n0 - n1).abs() < 1e-3 * n0, "isometry {n0} {n1}");
+            fwht(&mut v);
+            for (a, b) in x.iter().zip(&v) {
+                assert!((a - b).abs() < 1e-4, "involution");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_matches_dense_hadamard_small() {
+        // n = 4: H (unnormalized) rows = [+ + + +; + - + -; + + - -; + - - +]
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        fwht(&mut v);
+        let want = [10.0, -2.0, -4.0, 0.0].map(|x: f32| x / 2.0);
+        for (a, b) in v.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn block_preserves_norm_approximately() {
+        // G normalization makes each block approximately isometric.
+        let d = 256;
+        let b = FastfoodBlock::generate(7, d);
+        let x = rng::normals(3, d);
+        let y = b.apply(&x);
+        let n0: f64 = x.iter().map(|a| (a * a) as f64).sum();
+        let n1: f64 = y.iter().map(|a| (a * a) as f64).sum();
+        let ratio = (n1 / n0).sqrt();
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn project_truncates() {
+        let d = 64;
+        let blocks: Vec<_> = (0..3).map(|i| FastfoodBlock::generate(i, d)).collect();
+        let theta = rng::normals(1, d);
+        let out = project(&blocks, &theta, 130);
+        assert_eq!(out.len(), 130);
+        // first block output is a prefix
+        let b0 = blocks[0].apply(&theta);
+        assert_eq!(&out[..64], &b0[..]);
+    }
+}

@@ -1,0 +1,49 @@
+//! Dense Gaussian projection — the classical O(D d) intrinsic-dimension
+//! baseline [Li et al. 2018]. Rows are generated on the fly from the
+//! PRNG (never stored), which keeps the *space* at O(1) but leaves the
+//! time at O(D d): exactly the complexity row the paper's §3.4 compares
+//! against.
+
+use crate::rng;
+
+/// y = (1/sqrt(d)) G theta with G_ij ~ N(0, 1), G generated row-streamed.
+pub fn project(seed: u64, theta: &[f32], out_len: usize) -> Vec<f32> {
+    let d = theta.len();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0f32; out_len];
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = rng::normals(rng::child_seed(seed, i as u64 + 1), d);
+        let mut acc = 0f32;
+        for j in 0..d {
+            acc += row[j] * theta[j];
+        }
+        *o = acc * scale;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let th = rng::normals(1, 32);
+        assert_eq!(project(7, &th, 64), project(7, &th, 64));
+    }
+
+    #[test]
+    fn approximately_isometric_in_expectation() {
+        // E||Gx/sqrt(d)||^2 per output dim = ||x||^2/d; over out_len=4096
+        // outputs the norm ratio concentrates around out/d... we check
+        // the JL-style concentration of <Px, Py> ~ <x, y> * (out/d)
+        let d = 64;
+        let out_len = 4096;
+        let x = rng::normals(2, d);
+        let px = project(9, &x, out_len);
+        let nx: f64 = x.iter().map(|a| (a * a) as f64).sum();
+        let npx: f64 = px.iter().map(|a| (a * a) as f64).sum();
+        let ratio = npx / (nx * out_len as f64 / d as f64);
+        assert!((0.7..1.3).contains(&ratio), "ratio {ratio}");
+    }
+}

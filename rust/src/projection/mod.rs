@@ -1,0 +1,18 @@
+//! The projection substrate: everything about P.
+//!
+//! - `uni`        — the paper's O(D) one-hot projection (gather/scatter,
+//!                  index generation for the uni/local/nonuniform variants)
+//! - `fastfood`   — the O(D log d) structured baseline (FWHT chain)
+//! - `gaussian`   — the O(D d) dense Gaussian baseline
+//! - `statics`    — seed -> frozen method statics, bit-identical with
+//!                  python/compile/methods.gen_statics
+//! - `reconstruct`— theta_d -> per-module LoRA factors for *every*
+//!                  method (adapter expansion, Table 1 Jacobians)
+//! - `properties` — numeric globality/uniformity/isometry checks (Table 1)
+
+pub mod fastfood;
+pub mod gaussian;
+pub mod properties;
+pub mod reconstruct;
+pub mod statics;
+pub mod uni;

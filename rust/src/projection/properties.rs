@@ -1,0 +1,213 @@
+//! Numeric analysis of each method's projection matrix P (paper Table 1).
+//!
+//! P is built as the Jacobian of the reconstruct map theta_d -> theta_D
+//! at the method's initialization (exact for the linear methods; for the
+//! bilinear ones — VeRA/Tied-LoRA, VB-LoRA — this is the Jacobian at
+//! init, which is also how the paper's Figure 1 linearizes them).
+//!
+//! Checks:
+//!   globality   — fraction of subspace dims whose support spans >1
+//!                 adapted module
+//!   uniformity  — max/min column load ratio within a band
+//!   isometry    — ||P x|| == ||x|| on random probes
+
+use crate::config::ModelCfg;
+use crate::projection::reconstruct::{reconstruct, theta_big};
+use crate::projection::statics::{d_effective, init_theta};
+use crate::rng;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Props {
+    pub method: String,
+    pub d: usize,
+    pub big_d: usize,
+    pub learned_p: bool,
+    pub globality: bool,
+    pub uniformity: bool,
+    pub isometry: bool,
+    /// max over probes of |(||Px|| - ||x||)| / ||x||
+    pub isometry_err: f64,
+    /// max/min nonzero-column load ratio (inf if some column is empty)
+    pub load_ratio: f64,
+    /// fraction of subspace dims touching more than one module
+    pub cross_module_frac: f64,
+}
+
+/// Whether P itself contains trainable parameters (paper Table 1 col 1).
+pub fn p_is_learned(method: &str) -> bool {
+    matches!(method, "tied" | "vb" | "lora")
+}
+
+/// Build the explicit D x d Jacobian of reconstruct at init.
+pub fn jacobian(cfg: &ModelCfg, seed: u64) -> Result<(Vec<Vec<f32>>, usize)> {
+    let d = d_effective(cfg);
+    let th0 = init_theta(cfg, seed)?;
+    let base = theta_big(cfg, &reconstruct(cfg, seed, &th0)?);
+    let big_d = base.len();
+    let eps = 1e-2f32;
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut th = th0.clone();
+        th[j] += eps;
+        let out = theta_big(cfg, &reconstruct(cfg, seed, &th)?);
+        cols.push(
+            out.iter()
+                .zip(&base)
+                .map(|(a, b)| (a - b) / eps)
+                .collect(),
+        );
+    }
+    Ok((cols, big_d))
+}
+
+/// Row index -> *layer* index, per the theta_D layout. Globality is a
+/// cross-layer sharing property (paper §3.3: "local with layer-wise
+/// projection"), so we bucket at layer granularity (2 modules/layer).
+fn row_layer(cfg: &ModelCfg, row: usize) -> usize {
+    let per_module = if cfg.method == "fourierft" {
+        cfg.hidden * cfg.hidden
+    } else {
+        cfg.module_len()
+    };
+    row / (2 * per_module)
+}
+
+pub fn analyze(cfg: &ModelCfg, seed: u64) -> Result<Props> {
+    let (cols, big_d) = jacobian(cfg, seed)?;
+    let d = cols.len();
+    let tol = 1e-5f32;
+
+    // column loads + module support
+    let mut loads = Vec::with_capacity(d);
+    let mut cross = 0usize;
+    let mut active_cols = 0usize;
+    for col in &cols {
+        let nnz = col.iter().filter(|x| x.abs() > tol).count();
+        if nnz == 0 {
+            continue;
+        }
+        active_cols += 1;
+        loads.push(nnz as f64);
+        let mut layers = std::collections::HashSet::new();
+        for (row, v) in col.iter().enumerate() {
+            if v.abs() > tol {
+                layers.insert(row_layer(cfg, row));
+            }
+        }
+        if layers.len() > 1 {
+            cross += 1;
+        }
+    }
+    let load_max = loads.iter().cloned().fold(0.0f64, f64::max);
+    let load_min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+    let load_mean = loads.iter().sum::<f64>() / loads.len().max(1) as f64;
+    let load_ratio = if loads.is_empty() { f64::INFINITY } else { load_max / load_min };
+    let cross_module_frac = if active_cols == 0 {
+        0.0
+    } else {
+        cross as f64 / active_cols as f64
+    };
+
+    // isometry on random probes through the Jacobian
+    let mut iso_err = 0f64;
+    for t in 0..8u64 {
+        let x = rng::normals(1000 + t, d);
+        let mut px = vec![0f64; big_d];
+        for (j, col) in cols.iter().enumerate() {
+            let xj = x[j] as f64;
+            if xj == 0.0 {
+                continue;
+            }
+            for (i, v) in col.iter().enumerate() {
+                px[i] += *v as f64 * xj;
+            }
+        }
+        let nx = x.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+        let npx = px.iter().map(|a| a * a).sum::<f64>().sqrt();
+        iso_err = iso_err.max(((npx - nx) / nx).abs());
+    }
+
+    Ok(Props {
+        method: cfg.method.clone(),
+        d,
+        big_d,
+        learned_p: p_is_learned(&cfg.method),
+        globality: cross_module_frac > 0.5,
+        // statistical balance band: no systematic disparity beyond what
+        // balls-in-bins produces (vera's h-vs-r split blows max/mean)
+        uniformity: load_min >= load_mean / 8.0 && load_max <= 3.0 * load_mean,
+        // 0.1 band: exact for Uni-LoRA (err ~ 1e-6); admits Fastfood's
+        // JL-style approximate isometry; excludes vera/tied/vb (err >> 1)
+        isometry: iso_err < 0.1,
+        isometry_err: iso_err,
+        load_ratio,
+        cross_module_frac,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(method: &str) -> ModelCfg {
+        let mut c = ModelCfg::test_base(method);
+        c.hidden = 16;
+        c.layers = 2;
+        c.rank = 2;
+        c.d = 32;
+        c.vb_b = 16;
+        c.vb_bank = 8;
+        c.n_coef = 12;
+        c
+    }
+
+    #[test]
+    fn uni_has_all_three_properties() {
+        let p = analyze(&small("uni"), 42).unwrap();
+        assert!(p.globality, "{p:?}");
+        assert!(p.uniformity, "{p:?}");
+        assert!(p.isometry, "isometry err {}", p.isometry_err);
+        assert!(!p.learned_p);
+    }
+
+    #[test]
+    fn fastfood_is_global_and_isometric() {
+        let p = analyze(&small("fastfood"), 42).unwrap();
+        assert!(p.globality, "{p:?}");
+        assert!(p.isometry, "isometry err {}", p.isometry_err);
+    }
+
+    #[test]
+    fn vera_is_local_nonuniform_nonisometric() {
+        let p = analyze(&small("vera"), 42).unwrap();
+        assert!(!p.globality, "{p:?}");
+        assert!(!p.uniformity, "load ratio {}", p.load_ratio);
+        assert!(!p.isometry, "{p:?}");
+        assert!(!p.learned_p);
+    }
+
+    #[test]
+    fn tied_projection_is_learned() {
+        assert!(p_is_learned("tied"));
+        assert!(p_is_learned("vb"));
+        assert!(!p_is_learned("uni"));
+        assert!(!p_is_learned("vera"));
+        assert!(!p_is_learned("lora_xs"));
+        assert!(!p_is_learned("fastfood"));
+    }
+
+    #[test]
+    fn local_variant_loses_globality_keeps_isometry() {
+        let p = analyze(&small("local"), 42).unwrap();
+        assert!(!p.globality, "{p:?}");
+        assert!(p.isometry, "{p:?}");
+    }
+
+    #[test]
+    fn vb_is_global_not_isometric() {
+        let p = analyze(&small("vb"), 42).unwrap();
+        assert!(p.globality, "{p:?}");
+        assert!(!p.isometry, "{p:?}");
+    }
+}

@@ -1,0 +1,337 @@
+//! theta_d -> LoRA factors, for every method, in pure Rust.
+//!
+//! This is what makes an adapter checkpoint self-contained: given
+//! (cfg, seed, theta_d) the coordinator can expand the full DeltaW
+//! without any artifact or Python — used for adapter export/merging
+//! (adapters::expand) and for the Table-1 projection analysis
+//! (properties.rs builds P as the Jacobian of this map).
+
+use crate::config::ModelCfg;
+use crate::projection::fastfood::FastfoodBlock;
+use crate::projection::statics::{gen_statics, theta_segments};
+use crate::projection::uni;
+use crate::rng;
+use anyhow::{bail, Result};
+
+/// Per-module weight increment, before the alpha/r scale.
+#[derive(Debug, Clone)]
+pub enum ModuleDelta {
+    /// DeltaW^T = A @ B with A [h, r] row-major, B [r, h] row-major
+    /// (the row convention of Alg. 1: y = x@W0 + scale*(x@A)@B).
+    LowRank { a: Vec<f32>, b: Vec<f32> },
+    /// Dense [h, h] increment (FourierFT).
+    Dense(Vec<f32>),
+}
+
+impl ModuleDelta {
+    /// Materialize the dense [h, h] increment (row-major).
+    pub fn to_dense(&self, h: usize, r: usize) -> Vec<f32> {
+        match self {
+            ModuleDelta::Dense(dw) => dw.clone(),
+            ModuleDelta::LowRank { a, b } => {
+                let mut dw = vec![0f32; h * h];
+                for i in 0..h {
+                    for k in 0..r {
+                        let aik = a[i * r + k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        for j in 0..h {
+                            dw[i * h + j] += aik * b[k * h + j];
+                        }
+                    }
+                }
+                dw
+            }
+        }
+    }
+}
+
+fn seg_slices<'t>(cfg: &ModelCfg, theta: &'t [f32]) -> Vec<(String, &'t [f32])> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    for (name, shape, _init) in theta_segments(cfg) {
+        let n: usize = shape.iter().product();
+        out.push((name, &theta[off..off + n]));
+        off += n;
+    }
+    out
+}
+
+fn find<'a>(segs: &'a [(String, &'a [f32])], name: &str) -> &'a [f32] {
+    segs.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap()
+}
+
+/// Expand theta_d into the per-module weight increments.
+pub fn reconstruct(cfg: &ModelCfg, seed: u64, theta: &[f32]) -> Result<Vec<ModuleDelta>> {
+    let (h, r, nm) = (cfg.hidden, cfg.rank, cfg.n_modules());
+    let (ml, ar) = (cfg.module_len(), h * r);
+    let segs = seg_slices(cfg, theta);
+    let stats = gen_statics(cfg, seed)?;
+    let m = cfg.method.as_str();
+
+    let lowrank_from_flat = |flat: &[f32]| -> Vec<ModuleDelta> {
+        (0..nm)
+            .map(|i| {
+                let o = i * ml;
+                ModuleDelta::LowRank {
+                    a: flat[o..o + ar].to_vec(),
+                    b: flat[o + ar..o + ml].to_vec(),
+                }
+            })
+            .collect()
+    };
+
+    Ok(match m {
+        "none" => (0..nm)
+            .map(|_| ModuleDelta::LowRank { a: vec![0.0; ar], b: vec![0.0; ar] })
+            .collect(),
+        "lora" => (0..nm)
+            .map(|i| ModuleDelta::LowRank {
+                a: find(&segs, &format!("A{i}")).to_vec(),
+                b: find(&segs, &format!("B{i}")).to_vec(),
+            })
+            .collect(),
+        "uni" | "local" | "nonuniform" => {
+            let idx = stats[0].as_i32();
+            let nrm = stats[1].as_f32();
+            let th = find(&segs, "theta");
+            let mut flat = vec![0f32; idx.len()];
+            uni::project(th, idx, nrm, &mut flat);
+            lowrank_from_flat(&flat)
+        }
+        "fastfood" => {
+            let th = find(&segs, "theta");
+            let nb = (ml + cfg.d - 1) / cfg.d;
+            // full-P isometry normalization (mirrors methods.apply)
+            let norm = 1.0 / ((nm * nb) as f32).sqrt();
+            let mut flat = Vec::with_capacity(nm * ml);
+            for i in 0..nm {
+                let blocks: Vec<FastfoodBlock> = (0..nb)
+                    .map(|j| {
+                        FastfoodBlock::generate(
+                            rng::child_seed(seed, rng::STREAM_FASTFOOD + 16 * i as u64 + j as u64),
+                            cfg.d,
+                        )
+                    })
+                    .collect();
+                flat.extend(
+                    crate::projection::fastfood::project(&blocks, th, ml)
+                        .iter()
+                        .map(|x| x * norm),
+                );
+            }
+            lowrank_from_flat(&flat)
+        }
+        "vera" | "tied" => {
+            let (pa, pb) = if m == "tied" {
+                (find(&segs, "pa_t"), find(&segs, "pb_t"))
+            } else {
+                (stats[0].as_f32(), stats[1].as_f32())
+            };
+            let lamb_b = find(&segs, "lamb_b"); // [nm, h]
+            let lamb_d = find(&segs, "lamb_d"); // [nm, r]
+            (0..nm)
+                .map(|i| {
+                    let lb = &lamb_b[i * h..(i + 1) * h];
+                    let ld = &lamb_d[i * r..(i + 1) * r];
+                    // a[p, j] = pa[p, j] * ld[j]; b[j, k] = pb[j, k] * lb[k]
+                    let mut a = vec![0f32; h * r];
+                    for p in 0..h {
+                        for j in 0..r {
+                            a[p * r + j] = pa[p * r + j] * ld[j];
+                        }
+                    }
+                    let mut b = vec![0f32; r * h];
+                    for j in 0..r {
+                        for k in 0..h {
+                            b[j * h + k] = pb[j * h + k] * lb[k];
+                        }
+                    }
+                    ModuleDelta::LowRank { a, b }
+                })
+                .collect()
+        }
+        "vb" => {
+            let top_idx = stats[0].as_i32(); // [n_sub, K]
+            let bank = find(&segs, "bank"); // [h_bank, b]
+            let coef = find(&segs, "coef"); // [n_sub, K]
+            let (bb, kk) = (cfg.vb_b, cfg.vb_k);
+            let n_sub = cfg.d_full() / bb;
+            let mut flat = vec![0f32; cfg.d_full()];
+            for sv in 0..n_sub {
+                for k in 0..kk {
+                    let c = coef[sv * kk + k];
+                    let row = top_idx[sv * kk + k] as usize;
+                    for p in 0..bb {
+                        flat[sv * bb + p] += c * bank[row * bb + p];
+                    }
+                }
+            }
+            lowrank_from_flat(&flat)
+        }
+        "lora_xs" => {
+            let pa = stats[0].as_f32(); // [nm, h, r]
+            let pb = stats[1].as_f32(); // [nm, r, h]
+            (0..nm)
+                .map(|i| {
+                    let rr = find(&segs, &format!("R{i}")); // [r, r]
+                    let pai = &pa[i * h * r..(i + 1) * h * r];
+                    let pbi = &pb[i * r * h..(i + 1) * r * h];
+                    // effective A' = pa_t @ R^T: a[p, j] = sum_q pa[p, q] R[j, q]
+                    let mut a = vec![0f32; h * r];
+                    for p in 0..h {
+                        for j in 0..r {
+                            let mut acc = 0f32;
+                            for q in 0..r {
+                                acc += pai[p * r + q] * rr[j * r + q];
+                            }
+                            a[p * r + j] = acc;
+                        }
+                    }
+                    ModuleDelta::LowRank { a, b: pbi.to_vec() }
+                })
+                .collect()
+        }
+        "fourierft" => {
+            let freq = stats[0].as_i32(); // [nm, n_coef, 2]
+            let coef = find(&segs, "coef"); // [nm, n_coef]
+            let nc = cfg.n_coef;
+            let norm = 1.0 / (nc as f32).sqrt();
+            (0..nm)
+                .map(|mi| {
+                    let mut dw = vec![0f32; h * h];
+                    for k in 0..nc {
+                        let c = coef[mi * nc + k];
+                        if c == 0.0 {
+                            continue;
+                        }
+                        let f1 = freq[(mi * nc + k) * 2] as f32;
+                        let f2 = freq[(mi * nc + k) * 2 + 1] as f32;
+                        for i in 0..h {
+                            let a1 = 2.0 * std::f32::consts::PI * f1 * i as f32 / h as f32;
+                            for j in 0..h {
+                                let a2 =
+                                    2.0 * std::f32::consts::PI * f2 * j as f32 / h as f32;
+                                dw[i * h + j] += c * (a1 + a2).cos() * norm;
+                            }
+                        }
+                    }
+                    ModuleDelta::Dense(dw)
+                })
+                .collect()
+        }
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+/// Flatten the reconstruction into the paper's theta_D vector:
+/// per module, vec(A) then vec(B) (dense modules contribute vec(DeltaW)).
+pub fn theta_big(_cfg: &ModelCfg, deltas: &[ModuleDelta]) -> Vec<f32> {
+    let mut out = Vec::new();
+    for d in deltas {
+        match d {
+            ModuleDelta::LowRank { a, b } => {
+                out.extend_from_slice(a);
+                out.extend_from_slice(b);
+            }
+            ModuleDelta::Dense(dw) => out.extend_from_slice(dw),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::statics::{d_effective, init_theta};
+
+    fn small(method: &str) -> ModelCfg {
+        let mut c = ModelCfg::test_base(method);
+        c.hidden = 16;
+        c.layers = 2;
+        c.rank = 2;
+        c.d = 32;
+        c.vb_b = 16;
+        c.vb_bank = 8;
+        c.n_coef = 12;
+        c
+    }
+
+    #[test]
+    fn all_methods_reconstruct_finite() {
+        for m in ["lora", "uni", "local", "nonuniform", "fastfood", "vera",
+                  "tied", "vb", "lora_xs", "fourierft", "none"] {
+            let cfg = small(m);
+            let th = init_theta(&cfg, 5).unwrap();
+            assert_eq!(th.len(), d_effective(&cfg), "{m}");
+            let ds = reconstruct(&cfg, 5, &th).unwrap();
+            assert_eq!(ds.len(), cfg.n_modules(), "{m}");
+            for d in &ds {
+                let dense = d.to_dense(cfg.hidden, cfg.rank);
+                assert_eq!(dense.len(), cfg.hidden * cfg.hidden);
+                assert!(dense.iter().all(|x| x.is_finite()), "{m}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_init_methods_reconstruct_zero() {
+        for m in ["lora", "vera", "lora_xs", "fourierft"] {
+            let cfg = small(m);
+            let th = init_theta(&cfg, 7).unwrap();
+            let ds = reconstruct(&cfg, 7, &th).unwrap();
+            for d in &ds {
+                let dense = d.to_dense(cfg.hidden, cfg.rank);
+                assert!(dense.iter().all(|&x| x.abs() < 1e-7), "{m}");
+            }
+        }
+    }
+
+    #[test]
+    fn uni_reconstruct_matches_manual_gather() {
+        let cfg = small("uni");
+        let th = init_theta(&cfg, 3).unwrap();
+        let stats = gen_statics(&cfg, 3).unwrap();
+        let (idx, nrm) = (stats[0].as_i32(), stats[1].as_f32());
+        let ds = reconstruct(&cfg, 3, &th).unwrap();
+        let ar = cfg.hidden * cfg.rank;
+        if let ModuleDelta::LowRank { a, .. } = &ds[1] {
+            let o = cfg.module_len(); // module 1 offset
+            for k in 0..ar {
+                let want = th[idx[o + k] as usize] * nrm[o + k];
+                assert!((a[k] - want).abs() < 1e-7);
+            }
+        } else {
+            panic!("expected low-rank");
+        }
+    }
+
+    #[test]
+    fn theta_big_layout() {
+        let cfg = small("uni");
+        let th = init_theta(&cfg, 3).unwrap();
+        let ds = reconstruct(&cfg, 3, &th).unwrap();
+        let big = theta_big(&cfg, &ds);
+        assert_eq!(big.len(), cfg.d_full());
+    }
+
+    #[test]
+    fn linearity_of_linear_methods() {
+        // reconstruct(2*theta) == 2*reconstruct(theta) for linear P
+        for m in ["uni", "fastfood", "vb", "fourierft", "lora"] {
+            let cfg = small(m);
+            let th = init_theta(&cfg, 9).unwrap();
+            // vb is linear in bank only with coef fixed; perturb bank only
+            let th2: Vec<f32> = th.iter().map(|x| x * 2.0).collect();
+            if m == "vb" {
+                continue; // bilinear in (bank, coef) jointly — skip
+            }
+            let b1 = theta_big(&cfg, &reconstruct(&cfg, 9, &th).unwrap());
+            let b2 = theta_big(&cfg, &reconstruct(&cfg, 9, &th2).unwrap());
+            for (x, y) in b1.iter().zip(&b2) {
+                assert!((2.0 * x - y).abs() < 1e-4, "{m}: {x} {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Frozen method statics: the seed-deterministic "implicit P" of every
+//! method, regenerated on the Rust side so that artifacts (and adapter
+//! checkpoints) never need to store it.
+//!
+//! MUST stay bit-identical with python/compile/methods.gen_statics —
+//! same child streams, same ordering. Cross-language goldens live in
+//! rust/tests/cross_parity.rs.
+
+use crate::config::ModelCfg;
+use crate::projection::uni::{counts_to_nrm, gen_indices, Variant};
+use crate::rng;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub enum StaticData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Static {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: StaticData,
+}
+
+impl Static {
+    fn f32(name: &str, shape: Vec<usize>, data: Vec<f32>) -> Static {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Static { name: name.into(), shape, data: StaticData::F32(data) }
+    }
+
+    fn i32(name: &str, shape: Vec<usize>, data: Vec<i32>) -> Static {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Static { name: name.into(), shape, data: StaticData::I32(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            StaticData::F32(v) => v.len(),
+            StaticData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            StaticData::F32(v) => v,
+            _ => panic!("{} is not f32", self.name),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            StaticData::I32(v) => v,
+            _ => panic!("{} is not i32", self.name),
+        }
+    }
+}
+
+/// Modified Gram-Schmidt column orthonormalization of a row-major
+/// [h, r] matrix (float64 accumulation — mirrors methods._mgs_columns).
+fn mgs_columns(a_f32: &[f32], h: usize, r: usize) -> Vec<f32> {
+    let mut a: Vec<f64> = a_f32.iter().map(|&x| x as f64).collect();
+    for j in 0..r {
+        for i in 0..j {
+            let mut dot = 0f64;
+            for k in 0..h {
+                dot += a[k * r + i] * a[k * r + j];
+            }
+            for k in 0..h {
+                a[k * r + j] -= dot * a[k * r + i];
+            }
+        }
+        let mut nrm = 0f64;
+        for k in 0..h {
+            nrm += a[k * r + j] * a[k * r + j];
+        }
+        let nrm = nrm.sqrt();
+        for k in 0..h {
+            a[k * r + j] /= nrm;
+        }
+    }
+    a.iter().map(|&x| x as f32).collect()
+}
+
+/// Blocks per module for the fastfood method.
+pub fn fastfood_blocks(cfg: &ModelCfg) -> usize {
+    (cfg.module_len() + cfg.d - 1) / cfg.d
+}
+
+/// Generate the frozen statics for `cfg.method`, in the same order as
+/// python's statics_spec (which is the artifact input order).
+pub fn gen_statics(cfg: &ModelCfg, seed: u64) -> Result<Vec<Static>> {
+    let (h, r, nm, d, big_d) =
+        (cfg.hidden, cfg.rank, cfg.n_modules(), cfg.d, cfg.d_full());
+    let m = cfg.method.as_str();
+    if let Some(variant) = Variant::from_method(m) {
+        let idx = gen_indices(cfg, seed, variant);
+        let nrm = counts_to_nrm(&idx, d);
+        return Ok(vec![
+            Static::i32("idx", vec![big_d], idx),
+            Static::f32("nrm", vec![big_d], nrm),
+        ]);
+    }
+    Ok(match m {
+        "fastfood" => {
+            let nb = fastfood_blocks(cfg);
+            let (mut sb, mut g, mut pm, mut ss) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            for i in 0..nm {
+                for j in 0..nb {
+                    let base =
+                        rng::child_seed(seed, rng::STREAM_FASTFOOD + 16 * i as u64 + j as u64);
+                    sb.extend(rng::signs(rng::child_seed(base, 1), d));
+                    g.extend(rng::normals(rng::child_seed(base, 2), d));
+                    pm.extend(rng::permutation(rng::child_seed(base, 3), d));
+                    ss.extend(rng::signs(rng::child_seed(base, 4), d));
+                }
+            }
+            vec![
+                Static::f32("sgn_b", vec![nm, nb, d], sb),
+                Static::f32("gauss", vec![nm, nb, d], g),
+                Static::i32("perm", vec![nm, nb, d], pm),
+                Static::f32("sgn_s", vec![nm, nb, d], ss),
+            ]
+        }
+        "vera" => {
+            let s = 1.0 / (h as f32).sqrt();
+            let pa: Vec<f32> = rng::normals(rng::child_seed(seed, rng::STREAM_VERA_PA), h * r)
+                .iter().map(|x| x * s).collect();
+            let pb: Vec<f32> = rng::normals(rng::child_seed(seed, rng::STREAM_VERA_PB), r * h)
+                .iter().map(|x| x * s).collect();
+            vec![
+                Static::f32("pa_t", vec![h, r], pa),
+                Static::f32("pb_t", vec![r, h], pb),
+            ]
+        }
+        "vb" => {
+            let n_sub = big_d / cfg.vb_b;
+            let s = rng::child_seed(seed, rng::STREAM_VB_TOPIDX);
+            vec![Static::i32(
+                "top_idx",
+                vec![n_sub, cfg.vb_k],
+                rng::indices(s, n_sub * cfg.vb_k, cfg.vb_bank),
+            )]
+        }
+        "lora_xs" => {
+            // Orthonormal frozen bases (SVD stand-in — orthonormality is
+            // what makes LoRA-XS isometric in Table 1). Mirrors the
+            // float64 modified Gram-Schmidt in methods.gen_statics.
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            for i in 0..nm {
+                let base = rng::child_seed(seed, rng::STREAM_XS_BASES + i as u64);
+                let ra = rng::normals(rng::child_seed(base, 1), h * r);
+                let rb = rng::normals(rng::child_seed(base, 2), r * h);
+                pa.extend(mgs_columns(&ra, h, r));
+                // pb rows orthonormal = columns of its transpose
+                let rb_t: Vec<f32> = (0..h * r)
+                    .map(|k| rb[(k % r) * h + k / r]) // [r,h] -> [h,r] transpose
+                    .collect();
+                let qt = mgs_columns(&rb_t, h, r); // [h, r] orthonormal cols
+                // transpose back to [r, h]
+                pb.extend((0..r * h).map(|k| qt[(k % h) * r + k / h]));
+            }
+            vec![
+                Static::f32("pa_t", vec![nm, h, r], pa),
+                Static::f32("pb_t", vec![nm, r, h], pb),
+            ]
+        }
+        "fourierft" => {
+            let mut f = Vec::with_capacity(nm * cfg.n_coef * 2);
+            for i in 0..nm {
+                let base = rng::child_seed(seed, rng::STREAM_FOURIER_FREQ + i as u64);
+                let f0 = rng::indices(rng::child_seed(base, 1), cfg.n_coef, h);
+                let f1 = rng::indices(rng::child_seed(base, 2), cfg.n_coef, h);
+                for k in 0..cfg.n_coef {
+                    f.push(f0[k]);
+                    f.push(f1[k]);
+                }
+            }
+            vec![Static::i32("freq", vec![nm, cfg.n_coef, 2], f)]
+        }
+        "lora" | "tied" | "none" => vec![],
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+/// Theta layout mirror of methods.theta_segments (init specs included).
+pub fn theta_segments(cfg: &ModelCfg) -> Vec<(String, Vec<usize>, String)> {
+    let (h, r, nm, d) = (cfg.hidden, cfg.rank, cfg.n_modules(), cfg.d);
+    match cfg.method.as_str() {
+        "lora" => {
+            let mut v = Vec::new();
+            for i in 0..nm {
+                v.push((format!("A{i}"), vec![h, r], "normal:0.02".into()));
+                v.push((format!("B{i}"), vec![r, h], "zeros".into()));
+            }
+            v
+        }
+        "uni" | "local" | "nonuniform" | "fastfood" => {
+            vec![("theta".into(), vec![d], "uniform:0.02".into())]
+        }
+        "vera" => vec![
+            ("lamb_b".into(), vec![nm, h], "zeros".into()),
+            ("lamb_d".into(), vec![nm, r], "const:0.1".into()),
+        ],
+        "tied" => vec![
+            ("pa_t".into(), vec![h, r], "normal:0.02".into()),
+            ("pb_t".into(), vec![r, h], "normal:0.02".into()),
+            ("lamb_b".into(), vec![nm, h], "zeros".into()),
+            ("lamb_d".into(), vec![nm, r], "const:0.1".into()),
+        ],
+        "vb" => {
+            let n_sub = cfg.d_full() / cfg.vb_b;
+            vec![
+                ("bank".into(), vec![cfg.vb_bank, cfg.vb_b], "uniform:0.02".into()),
+                ("coef".into(), vec![n_sub, cfg.vb_k], "const:0.5".into()),
+            ]
+        }
+        "lora_xs" => (0..nm)
+            .map(|i| (format!("R{i}"), vec![r, r], "zeros".into()))
+            .collect(),
+        "fourierft" => vec![("coef".into(), vec![nm, cfg.n_coef], "zeros".into())],
+        _ => vec![],
+    }
+}
+
+/// Materialize an init spec string — mirror of methods.init_array.
+pub fn init_array(init: &str, n: usize, seed: u64) -> Result<Vec<f32>> {
+    Ok(if init == "zeros" {
+        vec![0f32; n]
+    } else if init == "ones" {
+        vec![1f32; n]
+    } else if let Some(s) = init.strip_prefix("normal:") {
+        let sigma: f32 = s.parse()?;
+        rng::normals(seed, n).iter().map(|x| x * sigma).collect()
+    } else if let Some(s) = init.strip_prefix("uniform:") {
+        let a: f32 = s.parse()?;
+        rng::uniform_range(seed, n, -a, a)
+    } else if let Some(s) = init.strip_prefix("const:") {
+        vec![s.parse()?; n]
+    } else {
+        bail!("unknown init {init:?}")
+    })
+}
+
+/// Build the initial trainable vector — mirror of methods.init_theta.
+pub fn init_theta(cfg: &ModelCfg, seed: u64) -> Result<Vec<f32>> {
+    let segs = theta_segments(cfg);
+    if segs.is_empty() {
+        return Ok(vec![0f32; 1]);
+    }
+    let mut out = Vec::new();
+    for (i, (_name, shape, init)) in segs.iter().enumerate() {
+        let n: usize = shape.iter().product();
+        let s = rng::child_seed(seed, rng::STREAM_THETA_INIT + 1000 * i as u64);
+        out.extend(init_array(init, n, s)?);
+    }
+    Ok(out)
+}
+
+/// Number of trainable adapter parameters (= python d_effective).
+pub fn d_effective(cfg: &ModelCfg) -> usize {
+    let total: usize = theta_segments(cfg)
+        .iter()
+        .map(|(_, s, _)| s.iter().product::<usize>())
+        .sum();
+    total.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_orders_match_python() {
+        // names + shapes for each method, in artifact input order
+        let cases = [
+            ("uni", vec!["idx", "nrm"]),
+            ("fastfood", vec!["sgn_b", "gauss", "perm", "sgn_s"]),
+            ("vera", vec!["pa_t", "pb_t"]),
+            ("vb", vec!["top_idx"]),
+            ("lora_xs", vec!["pa_t", "pb_t"]),
+            ("fourierft", vec!["freq"]),
+            ("lora", vec![]),
+            ("tied", vec![]),
+        ];
+        for (m, want) in cases {
+            let cfg = ModelCfg::test_base(m);
+            let got: Vec<String> = gen_statics(&cfg, 1)
+                .unwrap()
+                .into_iter()
+                .map(|s| s.name)
+                .collect();
+            assert_eq!(got, want, "method {m}");
+        }
+    }
+
+    #[test]
+    fn d_effective_matches_python_values() {
+        // values asserted in python/tests/test_methods.py
+        let d_of = |m: &str| d_effective(&ModelCfg::test_base(m));
+        assert_eq!(d_of("lora"), 2048);
+        assert_eq!(d_of("uni"), 256);
+        assert_eq!(d_of("vera"), 4 * (64 + 4));
+        assert_eq!(d_of("lora_xs"), 4 * 16);
+        assert_eq!(d_of("fourierft"), 4 * 96);
+        assert_eq!(d_of("none"), 1);
+    }
+
+    #[test]
+    fn statics_deterministic() {
+        let cfg = ModelCfg::test_base("uni");
+        let a = gen_statics(&cfg, 9).unwrap();
+        let b = gen_statics(&cfg, 9).unwrap();
+        assert_eq!(a[0].as_i32(), b[0].as_i32());
+        let c = gen_statics(&cfg, 10).unwrap();
+        assert_ne!(a[0].as_i32(), c[0].as_i32());
+    }
+
+    #[test]
+    fn init_theta_vera_structure() {
+        let cfg = ModelCfg::test_base("vera");
+        let th = init_theta(&cfg, 11).unwrap();
+        let nm_h = cfg.n_modules() * cfg.hidden;
+        assert!(th[..nm_h].iter().all(|&x| x == 0.0));
+        assert!(th[nm_h..].iter().all(|&x| (x - 0.1).abs() < 1e-7));
+    }
+
+    #[test]
+    fn fastfood_statics_shapes() {
+        let cfg = ModelCfg::test_base("fastfood");
+        let st = gen_statics(&cfg, 3).unwrap();
+        let nb = fastfood_blocks(&cfg);
+        assert_eq!(nb, 2); // module_len 512 / d 256
+        for s in &st {
+            assert_eq!(s.shape, vec![cfg.n_modules(), nb, cfg.d]);
+            assert_eq!(s.len(), cfg.n_modules() * nb * cfg.d);
+        }
+    }
+}

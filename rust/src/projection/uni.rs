@@ -1,0 +1,262 @@
+//! The paper's projection: each row of P one-hot at a uniformly random
+//! column, columns normalized to 1/sqrt(n_j). Never materialized —
+//! represented as (idx, nrm) and applied as an O(D) gather
+//! (`project`) / scatter (`project_t`).
+
+use crate::config::ModelCfg;
+use crate::rng;
+
+/// Index variant: which slots each flattened LoRA coordinate may map to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Global uniform sharing (the paper's Uni-LoRA).
+    Uni,
+    /// Per-layer subspace slices of size d/L (Table 7 "Local").
+    Local,
+    /// A matrices -> first 2d/3 slots, B -> last d/3 (Table 7 "Non-uniform").
+    NonUniform,
+}
+
+impl Variant {
+    pub fn from_method(m: &str) -> Option<Variant> {
+        match m {
+            "uni" => Some(Variant::Uni),
+            "local" => Some(Variant::Local),
+            "nonuniform" => Some(Variant::NonUniform),
+            _ => None,
+        }
+    }
+}
+
+/// Generate the row->column map. Bit-identical with
+/// methods.gen_statics (same STREAM_IDX child stream, same resampling
+/// loop — paper footnote 1: re-sample while any used column is empty so
+/// the n_j > 0 assumption of Theorem 1 always holds).
+pub fn gen_indices(cfg: &ModelCfg, seed: u64, variant: Variant) -> Vec<i32> {
+    let d = cfg.d;
+    let used = match variant {
+        Variant::Local => (d / cfg.layers) * cfg.layers,
+        _ => d,
+    };
+    let s = rng::child_seed(seed, rng::STREAM_IDX);
+    let mut idx = Vec::new();
+    for attempt in 0..32 {
+        idx = gen_indices_attempt(cfg, rng::child_seed(s, attempt), variant);
+        let cnt = column_counts(&idx, d);
+        if cnt[..used].iter().all(|&c| c > 0) {
+            return idx;
+        }
+    }
+    // Low D/d ratio: resampling alone may never find full support.
+    // Deterministic patch (mirrors methods._patch_support): give each
+    // empty column a row stolen from a column with occupancy >= 2.
+    patch_support(&mut idx, d, used, rng::child_seed(s, 999_983));
+    idx
+}
+
+fn patch_support(idx: &mut [i32], d: usize, used: usize, patch_seed: u64) {
+    let mut cnt = column_counts(idx, d);
+    let mut pos = 0u64;
+    for j in 0..used {
+        if cnt[j] > 0 {
+            continue;
+        }
+        loop {
+            let row = (rng::value(patch_seed, pos) % idx.len() as u64) as usize;
+            pos += 1;
+            if cnt[idx[row] as usize] >= 2 {
+                cnt[idx[row] as usize] -= 1;
+                idx[row] = j as i32;
+                cnt[j] = 1;
+                break;
+            }
+        }
+    }
+}
+
+fn gen_indices_attempt(cfg: &ModelCfg, attempt_seed: u64, variant: Variant) -> Vec<i32> {
+    let d = cfg.d;
+    let big_d = cfg.d_full();
+    let raw = rng::u64_stream(attempt_seed, big_d);
+    match variant {
+        Variant::Uni => raw.iter().map(|&v| (v % d as u64) as i32).collect(),
+        Variant::Local => {
+            let dl = d / cfg.layers;
+            let per_layer = 2 * cfg.module_len();
+            let mut idx = vec![0i32; big_d];
+            for l in 0..cfg.layers {
+                let (lo, hi) = (l * per_layer, (l + 1) * per_layer);
+                for k in lo..hi {
+                    idx[k] = (l * dl) as i32 + (raw[k] % dl as u64) as i32;
+                }
+            }
+            idx
+        }
+        Variant::NonUniform => {
+            let da = 2 * d / 3;
+            let db = d - da;
+            let (ml, ar) = (cfg.module_len(), cfg.hidden * cfg.rank);
+            let mut idx = vec![0i32; big_d];
+            for i in 0..cfg.n_modules() {
+                let o = i * ml;
+                for k in o..o + ar {
+                    idx[k] = (raw[k] % da as u64) as i32;
+                }
+                for k in o + ar..o + ml {
+                    idx[k] = da as i32 + (raw[k] % db as u64) as i32;
+                }
+            }
+            idx
+        }
+    }
+}
+
+/// Column occupancy counts n_j.
+pub fn column_counts(idx: &[i32], d: usize) -> Vec<u32> {
+    let mut cnt = vec![0u32; d];
+    for &i in idx {
+        cnt[i as usize] += 1;
+    }
+    cnt
+}
+
+/// nrm[k] = 1/sqrt(n_{idx[k]}) — the column normalization of Theorem 1.
+pub fn counts_to_nrm(idx: &[i32], d: usize) -> Vec<f32> {
+    let cnt = column_counts(idx, d);
+    idx.iter()
+        .map(|&i| 1.0 / (cnt[i as usize].max(1) as f32).sqrt())
+        .collect()
+}
+
+/// theta_D = P theta_d: the O(D) gather. `out` has idx.len() entries.
+pub fn project(theta: &[f32], idx: &[i32], nrm: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(idx.len(), nrm.len());
+    debug_assert_eq!(idx.len(), out.len());
+    for k in 0..idx.len() {
+        out[k] = theta[idx[k] as usize] * nrm[k];
+    }
+}
+
+/// P^T g: the O(D) scatter-add (gradient route back into theta_d).
+pub fn project_t(g: &[f32], idx: &[i32], nrm: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; d];
+    for k in 0..idx.len() {
+        out[idx[k] as usize] += g[k] * nrm[k];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(method: &str) -> ModelCfg {
+        ModelCfg::test_base(method)
+    }
+
+    #[test]
+    fn uni_indices_in_range_all_seeds() {
+        let cfg = base("uni");
+        for seed in 0..20 {
+            let idx = gen_indices(&cfg, seed, Variant::Uni);
+            assert_eq!(idx.len(), cfg.d_full());
+            assert!(idx.iter().all(|&i| (i as usize) < cfg.d));
+        }
+    }
+
+    #[test]
+    fn local_indices_layerwise() {
+        let cfg = base("local");
+        let idx = gen_indices(&cfg, 3, Variant::Local);
+        let per_layer = 2 * cfg.module_len();
+        let dl = cfg.d / cfg.layers;
+        for l in 0..cfg.layers {
+            let chunk = &idx[l * per_layer..(l + 1) * per_layer];
+            assert!(chunk.iter().all(|&i| {
+                (i as usize) >= l * dl && (i as usize) < (l + 1) * dl
+            }));
+        }
+    }
+
+    #[test]
+    fn nonuniform_split() {
+        let cfg = base("nonuniform");
+        let idx = gen_indices(&cfg, 3, Variant::NonUniform);
+        let da = 2 * cfg.d / 3;
+        let (ml, ar) = (cfg.module_len(), cfg.hidden * cfg.rank);
+        for i in 0..cfg.n_modules() {
+            let o = i * ml;
+            assert!(idx[o..o + ar].iter().all(|&v| (v as usize) < da));
+            assert!(idx[o + ar..o + ml].iter().all(|&v| (v as usize) >= da));
+        }
+    }
+
+    /// Property sweep: P^T P = I for many random seeds (Theorem 1).
+    #[test]
+    fn isometry_property_sweep() {
+        let cfg = base("uni");
+        for seed in 0..12u64 {
+            let idx = gen_indices(&cfg, seed, Variant::Uni);
+            let nrm = counts_to_nrm(&idx, cfg.d);
+            // <P x, P y> == <x, y> for random x, y
+            let x = rng::normals(seed * 2 + 1, cfg.d);
+            let y = rng::normals(seed * 2 + 2, cfg.d);
+            let mut px = vec![0f32; idx.len()];
+            let mut py = vec![0f32; idx.len()];
+            project(&x, &idx, &nrm, &mut px);
+            project(&y, &idx, &nrm, &mut py);
+            let dot_sub: f64 = x.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+            let dot_full: f64 = px.iter().zip(&py).map(|(a, b)| (a * b) as f64).sum();
+            assert!(
+                (dot_sub - dot_full).abs() < 1e-3 * dot_sub.abs().max(1.0),
+                "seed {seed}: {dot_sub} vs {dot_full}"
+            );
+        }
+    }
+
+    /// Adjoint property sweep: <P x, y> == <x, P^T y>.
+    #[test]
+    fn transpose_is_adjoint_sweep() {
+        let cfg = base("uni");
+        for seed in 0..12u64 {
+            let idx = gen_indices(&cfg, seed, Variant::Uni);
+            let nrm = counts_to_nrm(&idx, cfg.d);
+            let x = rng::normals(seed + 100, cfg.d);
+            let y = rng::normals(seed + 200, idx.len());
+            let mut px = vec![0f32; idx.len()];
+            project(&x, &idx, &nrm, &mut px);
+            let pty = project_t(&y, &idx, &nrm, cfg.d);
+            let lhs: f64 = px.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+            let rhs: f64 = x.iter().zip(&pty).map(|(a, b)| (a * b) as f64).sum();
+            assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn load_balance_band() {
+        let cfg = base("uni");
+        let idx = gen_indices(&cfg, 7, Variant::Uni);
+        let cnt = column_counts(&idx, cfg.d);
+        let mean = cfg.d_full() as f64 / cfg.d as f64;
+        let max = *cnt.iter().max().unwrap() as f64;
+        let min = *cnt.iter().min().unwrap() as f64;
+        assert!(max < 3.0 * mean, "max load {max} vs mean {mean}");
+        assert!(min > 0.2 * mean, "min load {min} vs mean {mean}");
+    }
+
+    #[test]
+    fn project_roundtrip_identity_when_d_equals_rows() {
+        // When every row maps to a distinct column, P is a signed
+        // permutation-like isometry and P^T P x == x exactly.
+        let d = 64;
+        let idx: Vec<i32> = (0..d as i32).collect();
+        let nrm = counts_to_nrm(&idx, d);
+        let x = rng::normals(5, d);
+        let mut px = vec![0f32; d];
+        project(&x, &idx, &nrm, &mut px);
+        let back = project_t(&px, &idx, &nrm, d);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

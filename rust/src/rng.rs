@@ -1,0 +1,232 @@
+//! Counter-based SplitMix64 PRNG — bit-identical with
+//! `python/compile/unirng.py` (golden-tested on both sides).
+//!
+//! Everything random in this system flows from these streams: the
+//! Uni-LoRA projection indices, every method's frozen statics, base
+//! weight init, theta init, and the synthetic data generators. That is
+//! what makes the paper's storage claim real here: an adapter checkpoint
+//! is literally `(seed, theta_d)` and the Rust side reconstructs the
+//! rest from the same streams Python used at build/test time.
+
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+pub const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+pub const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+pub const CHILD: u64 = 0xA24B_AED4_963E_E407;
+
+// Shared stream ids (must match python/compile/unirng.py).
+pub const STREAM_IDX: u64 = 1;
+pub const STREAM_THETA_INIT: u64 = 2;
+pub const STREAM_VERA_PB: u64 = 3;
+pub const STREAM_VERA_PA: u64 = 4;
+pub const STREAM_FASTFOOD: u64 = 5;
+pub const STREAM_VB_TOPIDX: u64 = 6;
+pub const STREAM_XS_BASES: u64 = 7;
+pub const STREAM_FOURIER_FREQ: u64 = 8;
+pub const STREAM_BASE_INIT: u64 = 9;
+pub const STREAM_DATA: u64 = 100;
+
+/// SplitMix64 finalizer.
+#[inline]
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+    z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// Derive an independent sub-seed for a named stream.
+pub fn child_seed(seed: u64, stream: u64) -> u64 {
+    mix(seed ^ stream.wrapping_mul(CHILD))
+}
+
+/// Stateless stream access: value(seed, i) = mix(seed + (i+1)*GOLDEN).
+#[inline]
+pub fn value(seed: u64, i: u64) -> u64 {
+    mix(seed.wrapping_add((i + 1).wrapping_mul(GOLDEN)))
+}
+
+/// A cheap iterator view over a stream.
+#[derive(Debug, Clone, Copy)]
+pub struct Stream {
+    pub seed: u64,
+    pub pos: u64,
+}
+
+impl Stream {
+    pub fn new(seed: u64) -> Stream {
+        Stream { seed, pos: 0 }
+    }
+
+    pub fn child(seed: u64, stream: u64) -> Stream {
+        Stream::new(child_seed(seed, stream))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let v = value(self.seed, self.pos);
+        self.pos += 1;
+        v
+    }
+
+    /// Uniform double in [0, 1) with 53-bit mantissa.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform index in [0, d).
+    #[inline]
+    pub fn next_index(&mut self, d: usize) -> usize {
+        (self.next_u64() % d as u64) as usize
+    }
+
+    pub fn next_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        (self.next_f64() * (hi as f64 - lo as f64) + lo as f64) as f32
+    }
+}
+
+pub fn u64_stream(seed: u64, n: usize) -> Vec<u64> {
+    (0..n as u64).map(|i| value(seed, i)).collect()
+}
+
+pub fn uniform01(seed: u64, n: usize) -> Vec<f64> {
+    (0..n as u64)
+        .map(|i| (value(seed, i) >> 11) as f64 * (1.0 / (1u64 << 53) as f64))
+        .collect()
+}
+
+pub fn indices(seed: u64, n: usize, d: usize) -> Vec<i32> {
+    (0..n as u64).map(|i| (value(seed, i) % d as u64) as i32).collect()
+}
+
+pub fn uniform_range(seed: u64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    uniform01(seed, n)
+        .into_iter()
+        .map(|u| (u * (hi as f64 - lo as f64) + lo as f64) as f32)
+        .collect()
+}
+
+/// n float32 standard normals via pairwise Box-Muller — identical
+/// pairing with unirng.normals (first half cos, second half sin).
+pub fn normals(seed: u64, n: usize) -> Vec<f32> {
+    let m = (n + 1) / 2;
+    let u = uniform01(seed, 2 * m);
+    let mut out = Vec::with_capacity(2 * m);
+    for k in 0..m {
+        let r = (-2.0 * (1.0 - u[k]).ln()).sqrt();
+        out.push((r * (2.0 * std::f64::consts::PI * u[m + k]).cos()) as f32);
+    }
+    for k in 0..m {
+        let r = (-2.0 * (1.0 - u[k]).ln()).sqrt();
+        out.push((r * (2.0 * std::f64::consts::PI * u[m + k]).sin()) as f32);
+    }
+    out.truncate(n);
+    out
+}
+
+/// n float32 values in {-1, +1} from bit 0.
+pub fn signs(seed: u64, n: usize) -> Vec<f32> {
+    (0..n as u64)
+        .map(|i| if value(seed, i) & 1 == 1 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// Fisher-Yates permutation of 0..n-1 — identical with unirng.permutation.
+pub fn permutation(seed: u64, n: usize) -> Vec<i32> {
+    let vals = u64_stream(seed, n);
+    let mut p: Vec<i32> = (0..n as i32).collect();
+    for i in (1..n).rev() {
+        let j = (vals[n - 1 - i] % (i as u64 + 1)) as usize;
+        p.swap(i, j);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Must match unirng.GOLDEN_SEED42 — the cross-language contract.
+    const GOLDEN_SEED42: [u64; 4] = [
+        0xBDD7_3226_2FEB_6E95,
+        0x28EF_E333_B266_F103,
+        0x4752_6757_130F_9F52,
+        0x581C_E1FF_0E4A_E394,
+    ];
+
+    #[test]
+    fn golden_seed42() {
+        assert_eq!(u64_stream(42, 4), GOLDEN_SEED42);
+    }
+
+    /// Values printed by python: unirng.permutation(7, 8), indices(3,8,10),
+    /// child_seed(42, 1), normals(7, 6).
+    #[test]
+    fn python_parity_goldens() {
+        assert_eq!(permutation(7, 8), vec![1, 4, 5, 2, 6, 0, 3, 7]);
+        assert_eq!(indices(3, 8, 10), vec![3, 1, 9, 7, 6, 5, 2, 0]);
+        assert_eq!(child_seed(42, 1), 16449314825907640220);
+        let z = normals(7, 6);
+        let want = [-0.86208445, -0.17586078, 0.00767775, -0.4948181, 0.05417212, 2.1495075];
+        for (a, b) in z.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn stream_matches_vectorized() {
+        let mut s = Stream::new(99);
+        let v = u64_stream(99, 16);
+        for (i, want) in v.iter().enumerate() {
+            assert_eq!(s.next_u64(), *want, "pos {i}");
+        }
+    }
+
+    #[test]
+    fn indices_in_range_many_seeds() {
+        for seed in 0..50u64 {
+            let idx = indices(seed, 257, 17);
+            assert!(idx.iter().all(|&i| (0..17).contains(&i)));
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation_many() {
+        for seed in 0..50u64 {
+            let n = 1 + (seed as usize * 7) % 200;
+            let mut p = permutation(seed, n);
+            p.sort();
+            assert_eq!(p, (0..n as i32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn normals_moments() {
+        let z = normals(123, 200_000);
+        let mean = z.iter().map(|&x| x as f64).sum::<f64>() / z.len() as f64;
+        let var = z.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / z.len() as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.01, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn signs_balanced() {
+        let s = signs(5, 100_000);
+        let mean = s.iter().sum::<f32>() / s.len() as f32;
+        assert!(mean.abs() < 0.02);
+    }
+
+    #[test]
+    fn child_seeds_distinct() {
+        let mut set = std::collections::HashSet::new();
+        for k in 0..64 {
+            set.insert(child_seed(42, k));
+        }
+        assert_eq!(set.len(), 64);
+    }
+
+    #[test]
+    fn uniform_range_bounds() {
+        let u = uniform_range(9, 10_000, -0.02, 0.02);
+        assert!(u.iter().all(|&x| (-0.02..0.02).contains(&x)));
+    }
+}

@@ -1,0 +1,227 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust coordinator. One `manifest.json` describes every artifact's
+//! positional input signature, theta/base layouts (with init specs) and
+//! method config.
+
+use crate::config::ModelCfg;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(anyhow!("unknown dtype {other:?}")),
+        }
+    }
+}
+
+/// One positional input of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One named segment of a flat parameter vector (theta or base).
+#[derive(Debug, Clone)]
+pub struct SegmentSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+}
+
+impl SegmentSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub cfg: ModelCfg,
+    pub d: usize,
+    pub big_d: usize,
+    pub base_params: usize,
+    pub head_params: usize,
+    pub theta_segments: Vec<SegmentSpec>,
+    pub base_segments: Vec<SegmentSpec>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    pub hlo_path: PathBuf,
+}
+
+impl ArtifactMeta {
+    fn from_json(dir: &Path, j: &Json) -> Result<ArtifactMeta> {
+        let segs = |key: &str| -> Result<Vec<SegmentSpec>> {
+            j.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(SegmentSpec {
+                        name: s.req("name")?.as_str()?.to_string(),
+                        shape: s.req("shape")?.as_shape()?,
+                        init: s.req("init")?.as_str()?.to_string(),
+                    })
+                })
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: j.req("name")?.as_str()?.to_string(),
+            kind: j.req("kind")?.as_str()?.to_string(),
+            cfg: ModelCfg::from_json(j.req("cfg")?)?,
+            d: j.req("d")?.as_usize()?,
+            big_d: j.req("D")?.as_usize()?,
+            base_params: j.req("base_params")?.as_usize()?,
+            head_params: j.req("head_params")?.as_usize()?,
+            theta_segments: segs("theta_segments")?,
+            base_segments: segs("base_segments")?,
+            inputs: j
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(InputSpec {
+                        name: s.req("name")?.as_str()?.to_string(),
+                        dtype: DType::parse(s.req("dtype")?.as_str()?)?,
+                        shape: s.req("shape")?.as_shape()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            outputs: j
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            hlo_path: dir.join(j.req("hlo")?.as_str()?),
+        })
+    }
+
+    /// Index of a named input in the positional signature.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input {name:?}", self.name))
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output {name:?}", self.name))
+    }
+}
+
+/// The full artifact directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in j.as_obj()? {
+            artifacts.insert(name.clone(), ArtifactMeta::from_json(&dir, meta)?);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Locate the artifacts directory: $UNI_LORA_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("UNI_LORA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact {name:?} in manifest ({} entries)", self.artifacts.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_loads_and_is_complete() {
+        let Some(m) = manifest() else { return };
+        assert!(m.artifacts.len() >= 100, "{}", m.artifacts.len());
+        for (name, a) in &m.artifacts {
+            assert!(a.hlo_path.exists(), "{name} missing hlo file");
+            assert!(!a.inputs.is_empty(), "{name}");
+            assert!(!a.outputs.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn meta_consistency_with_cfg() {
+        let Some(m) = manifest() else { return };
+        let a = m.get("glue_base_uni_c2_cls_train").unwrap();
+        assert_eq!(a.cfg.method, "uni");
+        assert_eq!(a.d, a.cfg.d);
+        assert_eq!(a.big_d, a.cfg.d_full());
+        assert_eq!(a.input_index("theta").unwrap(), 0);
+        let ti = a.input_index("tokens").unwrap();
+        assert_eq!(a.inputs[ti].shape, vec![a.cfg.batch, a.cfg.seq]);
+        // theta segment total == d
+        let total: usize = a.theta_segments.iter().map(|s| s.numel()).sum();
+        assert_eq!(total.max(1), a.d);
+    }
+
+    #[test]
+    fn rust_statics_match_manifest_shapes() {
+        let Some(m) = manifest() else { return };
+        for name in ["glue_base_uni_c2_cls_train", "glue_base_vera_c2_cls_train",
+                     "glue_base_vb_c2_cls_train", "glue_base_lora_xs_c2_cls_train",
+                     "glue_base_fourierft_c2_cls_train", "glue_large_fastfood_c2_cls_train"] {
+            let a = m.get(name).unwrap();
+            let stats = crate::projection::statics::gen_statics(&a.cfg, 1).unwrap();
+            // the final `stats.len()` inputs of the artifact are the statics
+            let n_in = a.inputs.len();
+            for (k, s) in stats.iter().enumerate() {
+                let spec = &a.inputs[n_in - stats.len() + k];
+                assert_eq!(spec.name, s.name, "{name}");
+                assert_eq!(spec.numel(), s.len(), "{name}/{}", s.name);
+            }
+        }
+    }
+}

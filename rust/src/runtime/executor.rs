@@ -1,0 +1,248 @@
+//! PJRT execution: compile-once, run-many. Wraps the `xla` crate so the
+//! rest of the system deals only in `TensorIn`/`TensorOut`.
+
+use super::artifact::{DType, Manifest};
+use crate::projection::statics::{Static, StaticData};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Host-side input tensor (flat, row-major; shape from the artifact spec).
+#[derive(Debug, Clone)]
+pub enum TensorIn {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    ScalarF32(f32),
+    ScalarI32(i32),
+    /// Placeholder for an input previously uploaded via `Executor::pin`.
+    Pinned,
+}
+
+impl TensorIn {
+    pub fn numel(&self) -> usize {
+        match self {
+            TensorIn::F32(v) => v.len(),
+            TensorIn::I32(v) => v.len(),
+            _ => 1,
+        }
+    }
+}
+
+impl From<&Static> for TensorIn {
+    fn from(s: &Static) -> TensorIn {
+        match &s.data {
+            StaticData::F32(v) => TensorIn::F32(v.clone()),
+            StaticData::I32(v) => TensorIn::I32(v.clone()),
+        }
+    }
+}
+
+/// Host-side output tensor.
+#[derive(Debug, Clone)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn f32(self) -> Result<Vec<f32>> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            _ => bail!("expected f32 output"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            TensorOut::F32(v) if !v.is_empty() => Ok(v[0]),
+            _ => bail!("expected non-empty f32 output"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            _ => bail!("expected f32 output"),
+        }
+    }
+}
+
+/// Cumulative execution statistics (perf accounting, EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+    pub transfer_secs: f64,
+    pub executions: u64,
+}
+
+/// Compile-once executable cache over the PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// pinned frozen inputs, keyed "artifact/input_name" (§Perf: the
+    /// trainer passes `TensorIn::Pinned` so frozen vectors (w0, statics)
+    /// are not cloned on every step; true device residency via
+    /// execute_b was measured to SIGSEGV in xla 0.1.6 — the crate's
+    /// buffer execute appears to donate inputs — so pinning caches the
+    //// prepared Literal host-side instead).
+    pinned: HashMap<String, xla::Literal>,
+    pub stats: ExecStats,
+}
+
+impl Executor {
+    pub fn new(manifest: Manifest) -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Executor {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            pinned: HashMap::new(),
+            stats: ExecStats::default(),
+        })
+    }
+
+    /// Upload an input to the device once; subsequent `run` calls for
+    /// this artifact pass the resident buffer instead of re-transferring
+    /// the host vector. Intended for frozen inputs (w0, statics).
+    pub fn pin(&mut self, artifact: &str, input: &str, t: &TensorIn) -> Result<()> {
+        let meta = self.manifest.get(artifact)?;
+        let i = meta.input_index(input)?;
+        let lit = Self::literal(&meta.inputs[i].shape, t)?;
+        self.pinned.insert(format!("{artifact}/{input}"), lit);
+        Ok(())
+    }
+
+    pub fn unpin_all(&mut self) {
+        self.pinned.clear();
+    }
+
+    pub fn with_default_manifest() -> Result<Executor> {
+        Executor::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.hlo_path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.stats.compile_secs += t0.elapsed().as_secs_f64();
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn literal(spec_dims: &[usize], t: &TensorIn) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec_dims.iter().map(|&d| d as i64).collect();
+        Ok(match t {
+            TensorIn::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            TensorIn::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            TensorIn::ScalarF32(x) => xla::Literal::scalar(*x),
+            TensorIn::ScalarI32(x) => xla::Literal::scalar(*x),
+            TensorIn::Pinned => bail!("Pinned tensor has no literal form"),
+        })
+    }
+
+    /// Execute an artifact with positional inputs; returns the decomposed
+    /// output tuple in the artifact's declared output order.
+    pub fn run(&mut self, name: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+        self.prepare(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        let meta = &meta;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact {name}: got {} inputs, signature has {}",
+                inputs.len(),
+                meta.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        let mut pinned_slots: Vec<Option<String>> = Vec::with_capacity(inputs.len());
+        for (spec, t) in meta.inputs.iter().zip(inputs) {
+            if matches!(t, TensorIn::Pinned) {
+                let key = format!("{name}/{}", spec.name);
+                if !self.pinned.contains_key(&key) {
+                    bail!("artifact {name} input {}: Pinned but never pin()ed", spec.name);
+                }
+                pinned_slots.push(Some(key));
+                continue;
+            }
+            if t.numel() != spec.numel() {
+                bail!(
+                    "artifact {name} input {}: got {} elements, want {} {:?}",
+                    spec.name,
+                    t.numel(),
+                    spec.numel(),
+                    spec.shape
+                );
+            }
+            match (&spec.dtype, t) {
+                (DType::F32, TensorIn::F32(_) | TensorIn::ScalarF32(_)) => {}
+                (DType::I32, TensorIn::I32(_) | TensorIn::ScalarI32(_)) => {}
+                _ => bail!("artifact {name} input {}: dtype mismatch", spec.name),
+            }
+            pinned_slots.push(None);
+            literals.push(Self::literal(&spec.shape, t)?);
+        }
+        self.stats.transfer_secs += t0.elapsed().as_secs_f64();
+
+        let exe = self.cache.get(name).unwrap();
+        let t1 = Instant::now();
+        let result = {
+            // interleave owned fresh literals with pinned references
+            let mut refs: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+            let mut fresh_it = literals.iter();
+            for slot in &pinned_slots {
+                match slot {
+                    Some(key) => refs.push(&self.pinned[key]),
+                    None => refs.push(fresh_it.next().unwrap()),
+                }
+            }
+            let bufs = exe.execute::<&xla::Literal>(&refs)?;
+            bufs[0][0].to_literal_sync()?
+        };
+        self.stats.execute_secs += t1.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+
+        let t2 = Instant::now();
+        let parts = result.to_tuple()?;
+        let meta = self.manifest.get(name)?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact {name}: {} outputs, expected {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in parts {
+            let ty = p.ty()?;
+            outs.push(match ty {
+                xla::ElementType::F32 => TensorOut::F32(p.to_vec::<f32>()?),
+                xla::ElementType::S32 => TensorOut::I32(p.to_vec::<i32>()?),
+                other => bail!("unsupported output element type {other:?}"),
+            });
+        }
+        self.stats.transfer_secs += t2.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Number of compiled executables held.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}

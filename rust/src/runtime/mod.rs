@@ -1,0 +1,9 @@
+//! L3 runtime: loads the AOT HLO artifacts and executes them on the
+//! PJRT CPU client. This is the only place the `xla` crate is touched;
+//! everything above works with plain `Vec<f32>`/`Vec<i32>` tensors.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, InputSpec, Manifest, SegmentSpec};
+pub use executor::{Executor, TensorIn, TensorOut};

@@ -1,0 +1,19 @@
+//! Multi-adapter serving — the deployment story the paper's storage
+//! complexity enables: thousands of adapters are resident at once
+//! because each is a seed plus one vector, and the router hot-swaps
+//! them per batch.
+//!
+//! Architecture (vLLM-router flavored, std::net — tokio is unavailable
+//! in the offline vendor set):
+//!   client (JSON lines over TCP)
+//!     -> server::serve accept loop (thread per connection)
+//!     -> router::Router queue (adapter-aware batch former)
+//!     -> worker thread owning the Executor (PJRT) + backbone weights
+//!     -> greedy decode via the lm_logits artifact
+
+pub mod protocol;
+pub mod router;
+pub mod server;
+
+pub use router::{Router, RouterStats};
+pub use server::{serve, ServerConfig, ServerHandle};

@@ -1,0 +1,145 @@
+//! Wire protocol: one JSON object per line.
+//!
+//! Requests:
+//!   {"op":"generate","adapter":"<name>","prompt":[ids],"max_new":N}
+//!   {"op":"adapters"}
+//!   {"op":"stats"}
+//! Responses:
+//!   {"ok":true,"tokens":[ids]}
+//!   {"ok":true,"adapters":[names]}
+//!   {"ok":true,"stats":{...}}
+//!   {"ok":false,"error":"..."}
+
+use crate::util::json::{n, obj, s, Json};
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Generate { adapter: String, prompt: Vec<i32>, max_new: usize },
+    Adapters,
+    Stats,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line)?;
+        match j.req("op")?.as_str()? {
+            "generate" => Ok(Request::Generate {
+                adapter: j.req("adapter")?.as_str()?.to_string(),
+                prompt: j
+                    .req("prompt")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_i64()? as i32))
+                    .collect::<Result<_>>()?,
+                max_new: j.get("max_new").map(|v| v.as_usize()).transpose()?.unwrap_or(8),
+            }),
+            "adapters" => Ok(Request::Adapters),
+            "stats" => Ok(Request::Stats),
+            other => Err(anyhow!("unknown op {other:?}")),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        match self {
+            Request::Generate { adapter, prompt, max_new } => obj(vec![
+                ("op", s("generate")),
+                ("adapter", s(adapter)),
+                ("prompt", Json::Arr(prompt.iter().map(|&t| n(t as f64)).collect())),
+                ("max_new", n(*max_new as f64)),
+            ])
+            .to_string(),
+            Request::Adapters => obj(vec![("op", s("adapters"))]).to_string(),
+            Request::Stats => obj(vec![("op", s("stats"))]).to_string(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Response {
+    Tokens(Vec<i32>),
+    Adapters(Vec<String>),
+    Stats(Json),
+    Error(String),
+}
+
+impl Response {
+    pub fn to_json(&self) -> String {
+        match self {
+            Response::Tokens(t) => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("tokens", Json::Arr(t.iter().map(|&x| n(x as f64)).collect())),
+            ])
+            .to_string(),
+            Response::Adapters(a) => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("adapters", Json::Arr(a.iter().map(|x| s(x)).collect())),
+            ])
+            .to_string(),
+            Response::Stats(j) => {
+                obj(vec![("ok", Json::Bool(true)), ("stats", j.clone())]).to_string()
+            }
+            Response::Error(e) => {
+                obj(vec![("ok", Json::Bool(false)), ("error", s(e))]).to_string()
+            }
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        let j = Json::parse(line)?;
+        if !j.req("ok")?.as_bool()? {
+            return Ok(Response::Error(j.req("error")?.as_str()?.to_string()));
+        }
+        if let Some(t) = j.get("tokens") {
+            return Ok(Response::Tokens(
+                t.as_arr()?.iter().map(|v| Ok(v.as_i64()? as i32)).collect::<Result<_>>()?,
+            ));
+        }
+        if let Some(a) = j.get("adapters") {
+            return Ok(Response::Adapters(
+                a.as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+            ));
+        }
+        if let Some(st) = j.get("stats") {
+            return Ok(Response::Stats(st.clone()));
+        }
+        Err(anyhow!("unrecognized response {line:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request::Generate { adapter: "math".into(), prompt: vec![1, 5, 9], max_new: 4 };
+        let back = Request::parse(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(Request::parse(r#"{"op":"adapters"}"#).unwrap(), Request::Adapters);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::Tokens(vec![4, 5, 6]);
+        match Response::parse(&r.to_json()).unwrap() {
+            Response::Tokens(t) => assert_eq!(t, vec![4, 5, 6]),
+            other => panic!("{other:?}"),
+        }
+        match Response::parse(&Response::Error("boom".into()).to_json()).unwrap() {
+            Response::Error(e) => assert_eq!(e, "boom"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn default_max_new() {
+        match Request::parse(r#"{"op":"generate","adapter":"a","prompt":[1]}"#).unwrap() {
+            Request::Generate { max_new, .. } => assert_eq!(max_new, 8),
+            other => panic!("{other:?}"),
+        }
+    }
+}

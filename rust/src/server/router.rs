@@ -1,0 +1,235 @@
+//! Adapter-aware request router: forms batches of requests that share an
+//! adapter (so one decode pass serves the whole batch), hot-swapping the
+//! per-batch theta vector. The batching policy is greedy same-adapter
+//! coalescing up to the artifact batch size — the policy knob the
+//! serving bench sweeps.
+
+use crate::adapters::Registry;
+use crate::config::ModelCfg;
+use crate::coordinator::trainer::decode_with;
+use crate::projection::statics::{gen_statics, Static};
+use crate::runtime::Executor;
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+pub struct PendingReq {
+    pub adapter: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Result<Vec<i32>, String>>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RouterStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub total_latency_secs: f64,
+    pub total_queue_secs: f64,
+}
+
+impl RouterStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            1000.0 * self.total_latency_secs / self.requests as f64
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<PendingReq>>,
+    cv: Condvar,
+    stopped: Mutex<bool>,
+}
+
+/// The router owns the queue; `worker_loop` owns the Executor.
+pub struct Router {
+    shared: Arc<Shared>,
+    pub stats: Arc<Mutex<RouterStats>>,
+}
+
+impl Clone for Router {
+    fn clone(&self) -> Router {
+        Router { shared: self.shared.clone(), stats: self.stats.clone() }
+    }
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                stopped: Mutex::new(false),
+            }),
+            stats: Arc::new(Mutex::new(RouterStats::default())),
+        }
+    }
+
+    pub fn submit(&self, req: PendingReq) {
+        self.shared.queue.lock().unwrap().push_back(req);
+        self.shared.cv.notify_one();
+    }
+
+    /// Synchronous convenience: submit and wait for the generation.
+    pub fn generate(&self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>, String> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(PendingReq {
+            adapter: adapter.to_string(),
+            prompt,
+            max_new,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        rx.recv().map_err(|e| e.to_string())?
+    }
+
+    pub fn stop(&self) {
+        *self.shared.stopped.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Pop the next same-adapter batch (blocks; None on stop).
+    fn next_batch(&self, max_batch: usize) -> Option<Vec<PendingReq>> {
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if *self.shared.stopped.lock().unwrap() && q.is_empty() {
+                return None;
+            }
+            if let Some(first) = q.front() {
+                let adapter = first.adapter.clone();
+                let mut batch = vec![q.pop_front().unwrap()];
+                let mut i = 0;
+                while i < q.len() && batch.len() < max_batch {
+                    if q[i].adapter == adapter {
+                        batch.push(q.remove(i).unwrap());
+                    } else {
+                        i += 1;
+                    }
+                }
+                return Some(batch);
+            }
+            q = self.shared.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Worker: runs until stop(). Owns the executor, backbone weights
+    /// and the statics cache (statics are per-(method, seed), generated
+    /// once per adapter and reused across batches).
+    pub fn worker_loop(
+        &self,
+        exec: &mut Executor,
+        registry: &Registry,
+        art_logits: &str,
+        cfg: &ModelCfg,
+        w0: &[f32],
+    ) {
+        let mut statics_cache: HashMap<String, Vec<Static>> = HashMap::new();
+        while let Some(batch) = self.next_batch(cfg.batch) {
+            let adapter_name = batch[0].adapter.clone();
+            let queue_wait: f64 = batch
+                .iter()
+                .map(|r| r.enqueued.elapsed().as_secs_f64())
+                .sum();
+            let result = (|| -> Result<Vec<Vec<i32>>, String> {
+                let ckpt = registry
+                    .get(&adapter_name)
+                    .ok_or_else(|| format!("unknown adapter {adapter_name:?}"))?;
+                let stats = statics_cache
+                    .entry(adapter_name.clone())
+                    .or_insert_with(|| gen_statics(cfg, ckpt.seed).expect("statics"));
+                let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+                let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
+                decode_with(exec, art_logits, cfg, &ckpt.theta, w0, stats, &prompts, max_new)
+                    .map_err(|e| e.to_string())
+            })();
+            let mut st = self.stats.lock().unwrap();
+            st.batches += 1;
+            st.batched_requests += batch.len() as u64;
+            st.requests += batch.len() as u64;
+            st.total_queue_secs += queue_wait;
+            for (k, req) in batch.into_iter().enumerate() {
+                st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+                let reply = match &result {
+                    Ok(gens) => Ok(gens[k].clone()),
+                    Err(e) => Err(e.clone()),
+                };
+                let _ = req.reply.send(reply);
+            }
+        }
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_coalesce_same_adapter() {
+        let r = Router::new();
+        let (tx, _rx) = mpsc::channel();
+        for a in ["x", "y", "x", "x", "y"] {
+            r.submit(PendingReq {
+                adapter: a.into(),
+                prompt: vec![1],
+                max_new: 1,
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            });
+        }
+        let b1 = r.next_batch(8).unwrap();
+        assert_eq!(b1.len(), 3);
+        assert!(b1.iter().all(|q| q.adapter == "x"));
+        let b2 = r.next_batch(8).unwrap();
+        assert_eq!(b2.len(), 2);
+        assert!(b2.iter().all(|q| q.adapter == "y"));
+    }
+
+    #[test]
+    fn batch_size_cap() {
+        let r = Router::new();
+        let (tx, _rx) = mpsc::channel();
+        for _ in 0..10 {
+            r.submit(PendingReq {
+                adapter: "x".into(),
+                prompt: vec![1],
+                max_new: 1,
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            });
+        }
+        assert_eq!(r.next_batch(4).unwrap().len(), 4);
+        assert_eq!(r.next_batch(4).unwrap().len(), 4);
+        assert_eq!(r.next_batch(4).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn stop_unblocks() {
+        let r = Router::new();
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || r2.next_batch(4));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        r.stop();
+        assert!(h.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,176 @@
+//! TCP front end: JSON-lines protocol over std::net, one reader thread
+//! per connection, single PJRT worker behind the router.
+
+use super::protocol::{Request, Response};
+use super::router::Router;
+use crate::adapters::Registry;
+use crate::config::ModelCfg;
+use crate::runtime::Executor;
+use crate::util::json::{n, obj, Json};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// bind address, e.g. "127.0.0.1:0" (0 = ephemeral port for tests)
+    pub addr: String,
+    /// lm_logits artifact the worker decodes with
+    pub art_logits: String,
+}
+
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    pub router: Router,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    worker_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.router.stop();
+        // poke the accept loop so it notices the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.worker_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The `xla` crate's client holds `Rc`/raw pointers, so `Executor` is
+/// not auto-Send. We move the *whole* executor into exactly one worker
+/// thread and never touch it from another, which makes the transfer
+/// sound: the non-Send internals are never aliased across threads.
+struct SendExecutor(Executor);
+// SAFETY: see above — single-owner move, no cross-thread aliasing.
+unsafe impl Send for SendExecutor {}
+
+/// Start the server; the Executor (and backbone weights) move into the
+/// worker thread. Returns once the socket is bound.
+pub fn serve(
+    cfg: ServerConfig,
+    exec: Executor,
+    registry: Arc<Registry>,
+    model_cfg: ModelCfg,
+    w0: Vec<f32>,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr).context("binding server socket")?;
+    let addr = listener.local_addr()?;
+    let router = Router::new();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let worker = {
+        let router = router.clone();
+        let registry = registry.clone();
+        let art = cfg.art_logits.clone();
+        let boxed = SendExecutor(exec);
+        std::thread::spawn(move || {
+            let mut boxed = boxed;
+            router.worker_loop(&mut boxed.0, &registry, &art, &model_cfg, &w0);
+        })
+    };
+
+    let accept = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let registry = registry.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let router = router.clone();
+                let registry = registry.clone();
+                std::thread::spawn(move || handle_conn(stream, router, registry));
+            }
+        })
+    };
+
+    Ok(ServerHandle {
+        addr,
+        router,
+        stop,
+        accept_thread: Some(accept),
+        worker_thread: Some(worker),
+    })
+}
+
+fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Request::parse(&line) {
+            Err(e) => Response::Error(e.to_string()),
+            Ok(Request::Adapters) => Response::Adapters(registry.names()),
+            Ok(Request::Stats) => {
+                let st = router.stats.lock().unwrap().clone();
+                Response::Stats(obj(vec![
+                    ("requests", n(st.requests as f64)),
+                    ("batches", n(st.batches as f64)),
+                    ("mean_batch_size", n(st.mean_batch_size())),
+                    ("mean_latency_ms", n(st.mean_latency_ms())),
+                ]))
+            }
+            Ok(Request::Generate { adapter, prompt, max_new }) => {
+                match router.generate(&adapter, prompt, max_new) {
+                    Ok(tokens) => Response::Tokens(tokens),
+                    Err(e) => Response::Error(e),
+                }
+            }
+        };
+        if writeln!(writer, "{}", resp.to_json()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Minimal blocking client for tests, examples and benches.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", req.to_json())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Response::parse(&line)
+    }
+
+    pub fn generate(&mut self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>> {
+        match self.call(&Request::Generate { adapter: adapter.into(), prompt, max_new })? {
+            Response::Tokens(t) => Ok(t),
+            Response::Error(e) => anyhow::bail!("server error: {e}"),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(j) => Ok(j),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+}

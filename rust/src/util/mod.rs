@@ -1,0 +1,93 @@
+//! Small substrate utilities: JSON (offline — no serde), CLI argument
+//! parsing (no clap), wall-clock timing and memory introspection.
+
+pub mod cli;
+pub mod json;
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Peak resident set size of this process in MiB (Linux), for the
+/// Table 12 "GPU memory" analogue.
+pub fn peak_rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                if let Some(kb) = rest.split_whitespace().next() {
+                    if let Ok(kb) = kb.parse::<f64>() {
+                        return kb / 1024.0;
+                    }
+                }
+            }
+        }
+    }
+    0.0
+}
+
+/// Median of a slice (sorted copy). Empty slice -> NaN.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Sample standard deviation. <2 samples -> 0.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Human format for parameter counts, paper style: 524288 -> "0.52M".
+pub fn fmt_params(n: usize) -> String {
+    if n >= 100_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 1000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_std() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(&[]).is_nan());
+        assert_eq!(stddev(&[1.0]), 0.0);
+        assert!((stddev(&[1.0, 3.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_params(532), "532");
+        assert_eq!(fmt_params(2048), "2.0K");
+        assert_eq!(fmt_params(524_288), "0.52M");
+    }
+
+    #[test]
+    fn rss_positive() {
+        assert!(peak_rss_mib() > 0.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Cross-language parity: the Rust statics generators must reproduce
+//! python/compile/methods.gen_statics bit-for-bit. The golden values
+//! below were printed by the Python side (BASE config, seed 42); see
+//! python/tests/test_methods.py::test_statics_deterministic_in_seed for
+//! the Python half of the contract.
+
+use uni_lora::config::ModelCfg;
+use uni_lora::projection::statics::gen_statics;
+
+fn assert_f32_prefix(got: &[f32], want: &[f32], what: &str) {
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!((a - b).abs() < 1e-6, "{what}[{i}]: {a} vs {b}");
+    }
+}
+
+fn sum_f32(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64).sum()
+}
+
+fn sum_i32(v: &[i32]) -> f64 {
+    v.iter().map(|&x| x as f64).sum()
+}
+
+#[test]
+fn uni_statics_match_python_golden() {
+    let s = gen_statics(&ModelCfg::test_base("uni"), 42).unwrap();
+    assert_eq!(&s[0].as_i32()[..5], &[202, 247, 230, 159, 28]);
+    assert_eq!(sum_i32(s[0].as_i32()), 262522.0);
+    assert_f32_prefix(
+        s[1].as_f32(),
+        &[0.30151135, 0.37796447, 0.2773501, 0.33333334, 0.31622776],
+        "nrm",
+    );
+    assert!((sum_f32(s[1].as_f32()) - 711.4678007811308).abs() < 1e-3);
+}
+
+#[test]
+fn vera_statics_match_python_golden() {
+    let s = gen_statics(&ModelCfg::test_base("vera"), 42).unwrap();
+    assert_f32_prefix(
+        s[0].as_f32(),
+        &[0.03753513, 0.0749092, 0.05410943, 0.17175354, -0.05891167],
+        "pa_t",
+    );
+    assert_f32_prefix(
+        s[1].as_f32(),
+        &[-0.010586159, -0.005263741, 0.012683991, -0.053174097, -0.012768381],
+        "pb_t",
+    );
+    assert!((sum_f32(s[0].as_f32()) - -0.07502054052156382).abs() < 1e-4);
+    assert!((sum_f32(s[1].as_f32()) - 0.4427085903007537).abs() < 1e-4);
+}
+
+#[test]
+fn vb_statics_match_python_golden() {
+    let s = gen_statics(&ModelCfg::test_base("vb"), 42).unwrap();
+    assert_eq!(&s[0].as_i32()[..5], &[1, 16, 21, 0, 21]);
+    assert_eq!(sum_i32(s[0].as_i32()), 716.0);
+}
+
+#[test]
+fn lora_xs_statics_match_python_golden() {
+    let s = gen_statics(&ModelCfg::test_base("lora_xs"), 42).unwrap();
+    assert_f32_prefix(
+        s[0].as_f32(),
+        &[-0.043297932, 0.024219781, 0.016942367, -0.16729401, -0.005372011],
+        "pa_t",
+    );
+    assert!((sum_f32(s[0].as_f32()) - -3.1627256906776893).abs() < 1e-3);
+    assert_f32_prefix(
+        s[1].as_f32(),
+        &[-0.0786746, -0.020421462, -0.016240019, -0.13979605, -0.15243852],
+        "pb_t",
+    );
+    assert!((sum_f32(s[1].as_f32()) - 5.656312849663664).abs() < 1e-3);
+}
+
+#[test]
+fn lora_xs_bases_are_orthonormal() {
+    let cfg = ModelCfg::test_base("lora_xs");
+    let s = gen_statics(&cfg, 7).unwrap();
+    let (h, r) = (cfg.hidden, cfg.rank);
+    let pa = &s[0].as_f32()[..h * r]; // module 0, [h, r]
+    for i in 0..r {
+        for j in 0..r {
+            let dot: f32 = (0..h).map(|k| pa[k * r + i] * pa[k * r + j]).sum();
+            let want = if i == j { 1.0 } else { 0.0 };
+            assert!((dot - want).abs() < 1e-5, "pa[{i}]·pa[{j}] = {dot}");
+        }
+    }
+    let pb = &s[1].as_f32()[..r * h]; // module 0, [r, h] (orthonormal rows)
+    for i in 0..r {
+        for j in 0..r {
+            let dot: f32 = (0..h).map(|k| pb[i * h + k] * pb[j * h + k]).sum();
+            let want = if i == j { 1.0 } else { 0.0 };
+            assert!((dot - want).abs() < 1e-5, "pb[{i}]·pb[{j}] = {dot}");
+        }
+    }
+}
+
+#[test]
+fn fourierft_statics_match_python_golden() {
+    let s = gen_statics(&ModelCfg::test_base("fourierft"), 42).unwrap();
+    assert_eq!(&s[0].as_i32()[..5], &[23, 11, 12, 63, 63]);
+    assert_eq!(sum_i32(s[0].as_i32()), 24630.0);
+}
+
+#[test]
+fn fastfood_statics_match_python_golden() {
+    let s = gen_statics(&ModelCfg::test_base("fastfood"), 42).unwrap();
+    assert_eq!(&s[0].as_f32()[..5], &[1.0, 1.0, 1.0, 1.0, -1.0]);
+    assert_eq!(sum_f32(s[0].as_f32()), -2.0);
+    assert_f32_prefix(
+        s[1].as_f32(),
+        &[-1.3911655, -0.033857387, -0.9098676, 0.8568028, 0.48722452],
+        "gauss",
+    );
+    assert!((sum_f32(s[1].as_f32()) - -24.040693347225897).abs() < 1e-3);
+    assert_eq!(&s[2].as_i32()[..5], &[50, 197, 17, 221, 76]);
+    assert_eq!(sum_i32(s[2].as_i32()), 261120.0);
+    assert_eq!(&s[3].as_f32()[..5], &[1.0, 1.0, -1.0, -1.0, 1.0]);
+    assert_eq!(sum_f32(s[3].as_f32()), -4.0);
+}
+
+#[test]
+fn low_ratio_patched_indices_match_python() {
+    // D/d = 4 forces the patch_support path on both sides
+    let mut cfg = ModelCfg::test_base("uni");
+    cfg.d = 512;
+    let s = gen_statics(&cfg, 3).unwrap();
+    assert_eq!(&s[0].as_i32()[..8], &[485, 315, 445, 388, 56, 161, 247, 408]);
+    assert_eq!(sum_i32(s[0].as_i32()), 527491.0);
+    // full support after patching
+    let mut cnt = vec![0u32; 512];
+    for &i in s[0].as_i32() {
+        cnt[i as usize] += 1;
+    }
+    assert!(cnt.iter().all(|&c| c > 0));
+}

@@ -1,0 +1,196 @@
+//! Integration: real artifacts through the PJRT runtime.
+//!
+//! These tests are skipped when `artifacts/` has not been built
+//! (`make artifacts`); CI runs them after the AOT step.
+
+use uni_lora::projection::statics::{gen_statics, init_array, init_theta};
+use uni_lora::rng;
+use uni_lora::runtime::{Executor, Manifest, TensorIn};
+
+fn executor() -> Option<Executor> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Executor::new(Manifest::load(dir).unwrap()).unwrap())
+}
+
+/// Initialize the frozen backbone from the manifest's base segments.
+fn init_base(exec: &Executor, name: &str, seed: u64) -> Vec<f32> {
+    let meta = exec.manifest.get(name).unwrap();
+    let mut w0 = Vec::with_capacity(meta.base_params);
+    for (i, seg) in meta.base_segments.iter().enumerate() {
+        let s = rng::child_seed(seed, rng::STREAM_BASE_INIT + 1000 * i as u64);
+        w0.extend(init_array(&seg.init, seg.numel(), s).unwrap());
+    }
+    assert_eq!(w0.len(), meta.base_params);
+    w0
+}
+
+#[test]
+fn cls_train_step_runs_and_learns() {
+    let Some(mut exec) = executor() else { return };
+    let name = "glue_base_uni_c2_cls_train";
+    let meta = exec.manifest.get(name).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let seed = 42u64;
+
+    let mut theta = init_theta(&cfg, seed).unwrap();
+    let mut m = vec![0f32; meta.d];
+    let mut v = vec![0f32; meta.d];
+    let mut head = vec![0f32; meta.head_params];
+    let mut hm = vec![0f32; meta.head_params];
+    let mut hv = vec![0f32; meta.head_params];
+    let w0 = init_base(&exec, name, seed);
+    let stats = gen_statics(&cfg, seed).unwrap();
+
+    // learnable toy batch: label = parity of first token
+    let (b, t) = (cfg.batch, cfg.seq);
+    let tokens = rng::indices(7, b * t, cfg.vocab);
+    let labels: Vec<i32> = (0..b).map(|i| tokens[i * t] % 2).collect();
+    let attn_len = vec![t as i32; b];
+
+    let mut losses = Vec::new();
+    for step in 1..=10 {
+        let mut inputs = vec![
+            TensorIn::F32(theta.clone()),
+            TensorIn::F32(m.clone()),
+            TensorIn::F32(v.clone()),
+            TensorIn::F32(head.clone()),
+            TensorIn::F32(hm.clone()),
+            TensorIn::F32(hv.clone()),
+            TensorIn::ScalarI32(step),
+            TensorIn::ScalarF32(5e-3),
+            TensorIn::ScalarF32(5e-2),
+            TensorIn::ScalarF32(0.0),
+            TensorIn::F32(w0.clone()),
+            TensorIn::I32(tokens.clone()),
+            TensorIn::I32(attn_len.clone()),
+            TensorIn::I32(labels.clone()),
+        ];
+        inputs.extend(stats.iter().map(TensorIn::from));
+        let out = exec.run(name, &inputs).unwrap();
+        theta = out[0].clone().f32().unwrap();
+        m = out[1].clone().f32().unwrap();
+        v = out[2].clone().f32().unwrap();
+        head = out[3].clone().f32().unwrap();
+        hm = out[4].clone().f32().unwrap();
+        hv = out[5].clone().f32().unwrap();
+        losses.push(out[6].scalar_f32().unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(losses[9] < losses[0], "loss did not decrease: {losses:?}");
+}
+
+#[test]
+fn cls_eval_shapes() {
+    let Some(mut exec) = executor() else { return };
+    let name = "glue_base_uni_c2_cls_eval";
+    let meta = exec.manifest.get(name).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let theta = init_theta(&cfg, 1).unwrap();
+    let head = vec![0f32; meta.head_params];
+    let w0 = init_base(&exec, name, 1);
+    let stats = gen_statics(&cfg, 1).unwrap();
+    let tokens = rng::indices(3, cfg.batch * cfg.seq, cfg.vocab);
+    let attn_len = vec![cfg.seq as i32; cfg.batch];
+    let mut inputs = vec![
+        TensorIn::F32(theta),
+        TensorIn::F32(head),
+        TensorIn::F32(w0),
+        TensorIn::I32(tokens),
+        TensorIn::I32(attn_len),
+    ];
+    inputs.extend(stats.iter().map(TensorIn::from));
+    let out = exec.run(name, &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let logits = out[0].as_f32().unwrap();
+    assert_eq!(logits.len(), cfg.batch * cfg.n_classes);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn executor_input_validation() {
+    let Some(mut exec) = executor() else { return };
+    let err = exec
+        .run("glue_base_uni_c2_cls_eval", &[TensorIn::F32(vec![0.0])])
+        .unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+    assert!(exec.run("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn server_roundtrip_and_batching() {
+    use std::sync::Arc;
+    use uni_lora::adapters::{AdapterCheckpoint, Registry};
+    use uni_lora::server::server::Client;
+    use uni_lora::server::{serve, ServerConfig};
+
+    let Some(mut exec) = executor() else { return };
+    let art = "lm_uni_lm_logits";
+    let meta = exec.manifest.get(art).unwrap().clone();
+    let w0 = init_base(&exec, art, 42);
+    exec.prepare(art).unwrap();
+
+    let registry = Registry::new();
+    for i in 0..3u64 {
+        registry.insert(
+            format!("a{i}"),
+            AdapterCheckpoint {
+                seed: i,
+                method: "uni".into(),
+                artifact: art.into(),
+                theta: init_theta(&meta.cfg, i).unwrap(),
+                head: vec![],
+            },
+        );
+    }
+    let handle = serve(
+        ServerConfig { addr: "127.0.0.1:0".into(), art_logits: art.into() },
+        exec,
+        Arc::new(registry),
+        meta.cfg.clone(),
+        w0,
+    )
+    .unwrap();
+
+    let mut client = Client::connect(handle.addr).unwrap();
+    // adapters listing
+    match client.call(&uni_lora::server::protocol::Request::Adapters).unwrap() {
+        uni_lora::server::protocol::Response::Adapters(a) => {
+            assert_eq!(a, vec!["a0", "a1", "a2"])
+        }
+        other => panic!("{other:?}"),
+    }
+    // generation returns tokens (untrained model: content arbitrary)
+    let toks = client.generate("a1", vec![1, 21, 7, 14, 8, 17, 22], 3).unwrap();
+    assert!(toks.len() <= 3);
+    // determinism: same adapter+prompt -> same generation
+    let toks2 = client.generate("a1", vec![1, 21, 7, 14, 8, 17, 22], 3).unwrap();
+    assert_eq!(toks, toks2);
+    // unknown adapter -> error response, connection stays usable
+    assert!(client.generate("nope", vec![1], 2).is_err());
+    let toks3 = client.generate("a0", vec![1, 21, 7], 2).unwrap();
+    assert!(toks3.len() <= 2);
+    // stats reflect the traffic
+    let stats = client.stats().unwrap();
+    assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 3.0);
+    handle.shutdown();
+}
+
+#[test]
+fn lm_decode_respects_prompt_and_eos() {
+    use uni_lora::coordinator::{init_base as ib, LmTrainer};
+    let Some(mut exec) = executor() else { return };
+    let meta = exec.manifest.get("lm_uni_lm_train").unwrap().clone();
+    let w0 = ib(&meta, 42);
+    let mut tr = LmTrainer::new(&exec, "lm_uni", 42, w0).unwrap();
+    let prompts = vec![vec![1, 21, 7, 14, 8, 17, 22], vec![1, 21, 9, 16, 5, 17, 22]];
+    let gens = tr.greedy_decode(&mut exec, &prompts, 5).unwrap();
+    assert_eq!(gens.len(), 2);
+    for g in &gens {
+        assert!(g.len() <= 5);
+        assert!(g.iter().all(|&t| t >= 0 && (t as usize) < meta.cfg.vocab));
+    }
+}
