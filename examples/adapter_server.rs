@@ -4,19 +4,22 @@
 //! stats showing same-adapter batch coalescing.
 //!
 //!   cargo run --release --example adapter_server -- [--requests 48]
+//!
+//! Runs on the native backend by default (UNI_LORA_BACKEND=pjrt to use
+//! AOT artifacts instead).
 
 use anyhow::Result;
 use std::sync::Arc;
 use uni_lora::adapters::{AdapterCheckpoint, Registry};
 use uni_lora::coordinator::{pretrain_backbone, Hyper, LmTrainer};
 use uni_lora::data::{instruct, math_tasks, vocab};
-use uni_lora::runtime::Executor;
+use uni_lora::runtime::Backend;
 use uni_lora::server::server::Client;
 use uni_lora::server::{serve, ServerConfig};
 use uni_lora::util::cli::Args;
 
 fn train_adapter(
-    exec: &mut Executor,
+    exec: &mut dyn Backend,
     w0: &[f32],
     seed: u64,
     task: &str,
@@ -46,21 +49,27 @@ fn train_adapter(
 fn main() -> Result<()> {
     let args = Args::from_env();
     let n_requests = args.usize_or("requests", 48);
-    let mut exec = Executor::with_default_manifest()?;
-    let (w0, _) = pretrain_backbone(&mut exec, "lm", 42, uni_lora::coordinator::backbone::default_steps())?;
+    let mut exec = uni_lora::runtime::default_backend()?;
+    println!("[setup] backend: {}", exec.name());
+    let (w0, _) = pretrain_backbone(
+        exec.as_mut(),
+        "lm",
+        42,
+        uni_lora::coordinator::backbone::default_steps(),
+    )?;
 
     println!("[setup] training 3 one-vector adapters...");
     let registry = Registry::new();
-    registry.insert("math-a".into(), train_adapter(&mut exec, &w0, 1, "math")?);
-    registry.insert("math-b".into(), train_adapter(&mut exec, &w0, 2, "math")?);
-    registry.insert("instruct".into(), train_adapter(&mut exec, &w0, 3, "instruct")?);
+    registry.insert("math-a".into(), train_adapter(exec.as_mut(), &w0, 1, "math")?);
+    registry.insert("math-b".into(), train_adapter(exec.as_mut(), &w0, 2, "math")?);
+    registry.insert("instruct".into(), train_adapter(exec.as_mut(), &w0, 3, "instruct")?);
     println!(
         "[setup] registry holds {} adapters in {} bytes total",
         registry.len(),
         registry.resident_bytes()
     );
 
-    let cfg = exec.manifest.get("lm_uni_lm_logits")?.cfg.clone();
+    let cfg = exec.meta("lm_uni_lm_logits")?.cfg.clone();
     exec.prepare("lm_uni_lm_logits")?;
     let handle = serve(
         ServerConfig { addr: "127.0.0.1:0".into(), art_logits: "lm_uni_lm_logits".into() },

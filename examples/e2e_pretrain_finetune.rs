@@ -4,25 +4,25 @@
 //!   cargo run --release --example e2e_pretrain_finetune -- [--steps 300]
 //!       [--size lm|e2e] [--ft-examples 400]
 //!
-//! 1. Pretrain a decoder LM from scratch on the synthetic corpus through
-//!    the AOT pretrain artifact, logging the loss curve (recorded in
-//!    EXPERIMENTS.md). `--size e2e` uses the ~7M-param backbone; `lm`
-//!    (default) the ~0.7M one so the default run finishes in minutes on
-//!    one CPU core.
-//! 2. Fine-tune a Uni-LoRA adapter for math reasoning through the
-//!    lm_train artifact (L1 Pallas gather kernel inside).
+//! 1. Pretrain a decoder LM from scratch on the synthetic corpus,
+//!    logging the loss curve (recorded in EXPERIMENTS.md). `--size e2e`
+//!    uses the ~7M-param backbone; `lm` (default) the ~0.7M one so the
+//!    default run finishes in minutes on one CPU core.
+//! 2. Fine-tune a Uni-LoRA adapter for math reasoning.
 //! 3. Evaluate exact-match via Rust-side batched greedy decoding.
 //! 4. Save the adapter, reload, and serve one request through the
 //!    in-process router — the full request path, Python-free.
+//!
+//! Backend: native by default; UNI_LORA_BACKEND=pjrt for AOT artifacts.
 
 use anyhow::Result;
 use std::sync::Arc;
 use uni_lora::adapters::{AdapterCheckpoint, Registry};
 use uni_lora::coordinator::{evaluator, pretrain_backbone, Hyper, LmTrainer};
 use uni_lora::data::{math_tasks, vocab};
-use uni_lora::runtime::Executor;
-use uni_lora::server::{serve, ServerConfig};
+use uni_lora::runtime::Backend;
 use uni_lora::server::server::Client;
+use uni_lora::server::{serve, ServerConfig};
 use uni_lora::util::cli::Args;
 use uni_lora::util::fmt_params;
 
@@ -33,11 +33,12 @@ fn main() -> Result<()> {
     let n_ft = args.usize_or("ft-examples", 400);
     let base = if size == "e2e" { "e2e_uni".to_string() } else { "lm_uni".to_string() };
 
-    let mut exec = Executor::with_default_manifest()?;
+    let mut exec = uni_lora::runtime::default_backend()?;
+    println!("[backend] {}", exec.name());
     let t0 = std::time::Instant::now();
 
     // ---- 1. pretraining ----
-    let (w0, curve) = pretrain_backbone(&mut exec, &size, 42, steps)?;
+    let (w0, curve) = pretrain_backbone(exec.as_mut(), &size, 42, steps)?;
     if curve.is_empty() {
         println!("[pretrain] loaded cached '{size}' backbone ({} params)", fmt_params(w0.len()));
     } else {
@@ -55,11 +56,11 @@ fn main() -> Result<()> {
 
     // ---- 2. Uni-LoRA fine-tuning ----
     let seed = 11;
-    let mut tr = LmTrainer::new(&exec, &base, seed, w0.clone())?;
+    let mut tr = LmTrainer::new(exec.as_ref(), &base, seed, w0.clone())?;
     let seq = tr.cfg.seq;
     let (split, dev_math) = math_tasks::generate(seed, seq, n_ft, 64);
     let hp = Hyper { lr_theta: 2e-3, lr_head: 0.0, wd: 0.0, epochs: 2 };
-    let rr = tr.train(&mut exec, &split.train, &hp)?;
+    let rr = tr.train(exec.as_mut(), &split.train, &hp)?;
     println!(
         "[finetune] d={} adapter on {} examples: loss {:.3} -> {:.3} ({} steps, {:.1}s)",
         tr.theta.len(),
@@ -71,8 +72,8 @@ fn main() -> Result<()> {
     );
 
     // ---- 3. generation eval ----
-    let gsm = evaluator::exact_match_accuracy(&mut tr, &mut exec, &split.dev, 8)?;
-    let mth = evaluator::exact_match_accuracy(&mut tr, &mut exec, &dev_math, 8)?;
+    let gsm = evaluator::exact_match_accuracy(&mut tr, exec.as_mut(), &split.dev, 8)?;
+    let mth = evaluator::exact_match_accuracy(&mut tr, exec.as_mut(), &dev_math, 8)?;
     println!("[eval] exact-match: GSM8K-like {gsm:.1}%  MATH-like {mth:.1}%");
 
     // ---- 4. save adapter + serve one request through the router ----
@@ -88,7 +89,7 @@ fn main() -> Result<()> {
     ckpt.save(dir.join("math.uni1"))?;
     println!("[adapter] saved ({} bytes — seed + one vector)", ckpt.byte_size());
 
-    let cfg = exec.manifest.get(&format!("{base}_lm_logits"))?.cfg.clone();
+    let cfg = exec.meta(&format!("{base}_lm_logits"))?.cfg.clone();
     let registry = Arc::new(Registry::load_dir(&dir)?);
     let handle = serve(
         ServerConfig { addr: "127.0.0.1:0".into(), art_logits: format!("{base}_lm_logits") },

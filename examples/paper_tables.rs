@@ -10,6 +10,11 @@
 //! Absolute numbers differ from the paper (synthetic substrate, MiniLM
 //! backbones — DESIGN.md §4); the *shape* — who wins, parameter-count
 //! ordering, crossovers — is the reproduction target.
+//!
+//! Backend note: the native backend trains the uni family, LoRA and
+//! full/linear-probe rows; baseline methods whose adjoint is not yet
+//! implemented natively (vera/tied/vb/lora_xs/fourierft/fastfood) are
+//! skipped there and need UNI_LORA_BACKEND=pjrt + AOT artifacts.
 
 use anyhow::Result;
 use std::fmt::Write as _;
@@ -22,14 +27,20 @@ use uni_lora::coordinator::trainer::FullClsTrainer;
 use uni_lora::data::{glue, instruct, math_tasks, vision};
 use uni_lora::projection::properties;
 use uni_lora::projection::statics::d_effective;
-use uni_lora::runtime::Executor;
+use uni_lora::runtime::Backend;
 use uni_lora::util::cli::Args;
 use uni_lora::util::{fmt_params, peak_rss_mib};
 
-
+/// Whether the active backend can train a table row's method. "full"
+/// is full fine-tuning (full_cls_train, method "none" under the hood).
+fn trainable_here(backend: &str, method: &str) -> bool {
+    backend != "native"
+        || method == "full"
+        || uni_lora::runtime::native::can_train(method)
+}
 
 struct Ctx {
-    exec: Executor,
+    exec: Box<dyn Backend>,
     seeds: Vec<u64>,
     cap: usize,
     epochs: usize,
@@ -43,7 +54,7 @@ impl Ctx {
             .map(|i| 41 + i)
             .collect();
         Ok(Ctx {
-            exec: Executor::with_default_manifest()?,
+            exec: uni_lora::runtime::default_backend()?,
             seeds,
             cap: args.usize_or("cap", if fast { 300 } else { 800 }),
             epochs: args.usize_or("epochs", if fast { 1 } else { 2 }),
@@ -52,7 +63,17 @@ impl Ctx {
     }
 
     fn backbone(&mut self, size: &str) -> Result<Vec<f32>> {
-        Ok(pretrain_backbone(&mut self.exec, size, 42, uni_lora::coordinator::backbone::default_steps())?.0)
+        Ok(pretrain_backbone(
+            self.exec.as_mut(),
+            size,
+            42,
+            uni_lora::coordinator::backbone::default_steps(),
+        )?
+        .0)
+    }
+
+    fn skip(&self, method: &str) -> bool {
+        !trainable_here(self.exec.name(), method)
     }
 
     fn emit(&mut self, line: &str) {
@@ -83,12 +104,12 @@ impl Ctx {
     ) -> Result<f64> {
         let c = if task == "stsb" { 1 } else { 2 };
         let base = format!("glue_{size}_{method}_c{c}");
-        let mut tr = ClsTrainer::new(&self.exec, &base, seed, w0.to_vec())?;
+        let mut tr = ClsTrainer::new(self.exec.as_ref(), &base, seed, w0.to_vec())?;
         let split = glue::generate(task, seed, tr.cfg.seq, tr.cfg.vocab);
         let train = &split.train[..split.train.len().min(self.cap)];
         let hp = self.hyper();
         let (score, _) =
-            tr.run_and_score(&mut self.exec, train, &split.dev, split.metric, &hp)?;
+            tr.run_and_score(self.exec.as_mut(), train, &split.dev, split.metric, &hp)?;
         Ok(score)
     }
 }
@@ -152,6 +173,14 @@ fn table2(ctx: &mut Ctx) -> Result<()> {
             "Method", "#Params", "SST2", "MRPC", "COLA", "QNLI", "RTE", "STSB", "Avg"
         ));
         for method in methods {
+            if ctx.skip(method) {
+                ctx.emit(&format!(
+                    "{:<11} {:>9}   (skipped: needs pjrt backend)",
+                    method,
+                    fmt_params(d_of(size, method))
+                ));
+                continue;
+            }
             let mut row = format!("{:<11} {:>9}", method, fmt_params(d_of(size, method)));
             let mut scores = Vec::new();
             for task in glue::TASKS {
@@ -177,20 +206,20 @@ fn lm_run(
     task: &str,
 ) -> Result<(f64, f64, f64)> {
     // returns (metric1, metric2, train_secs)
-    let mut tr = LmTrainer::new(&ctx.exec, base, seed, w0.to_vec())?;
+    let mut tr = LmTrainer::new(ctx.exec.as_ref(), base, seed, w0.to_vec())?;
     let seq = tr.cfg.seq;
     let hp = Hyper { lr_theta: 2e-3, lr_head: 0.0, wd: 0.0, epochs: ctx.epochs };
     if task == "math" {
         let (split, dev_math) = math_tasks::generate(seed, seq, ctx.cap, 64);
-        let rr = tr.train(&mut ctx.exec, &split.train, &hp)?;
-        let gsm = evaluator::exact_match_accuracy(&mut tr, &mut ctx.exec, &split.dev, 8)?;
-        let mth = evaluator::exact_match_accuracy(&mut tr, &mut ctx.exec, &dev_math, 8)?;
+        let rr = tr.train(ctx.exec.as_mut(), &split.train, &hp)?;
+        let gsm = evaluator::exact_match_accuracy(&mut tr, ctx.exec.as_mut(), &split.dev, 8)?;
+        let mth = evaluator::exact_match_accuracy(&mut tr, ctx.exec.as_mut(), &dev_math, 8)?;
         Ok((gsm, mth, rr.train_secs))
     } else {
         let (split, dev2) = instruct::generate(seed, seq, ctx.cap, 48);
-        let rr = tr.train(&mut ctx.exec, &split.train, &hp)?;
-        let s1 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &split.dev, 10)?;
-        let s2 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &dev2, 10)?;
+        let rr = tr.train(ctx.exec.as_mut(), &split.train, &hp)?;
+        let s1 = evaluator::rubric_score(&mut tr, ctx.exec.as_mut(), &split.dev, 10)?;
+        let s2 = evaluator::rubric_score(&mut tr, ctx.exec.as_mut(), &dev2, 10)?;
         Ok((s1, s2, rr.train_secs))
     }
 }
@@ -200,6 +229,14 @@ fn table3(ctx: &mut Ctx) -> Result<()> {
     let w0 = ctx.backbone("lm")?;
     ctx.emit(&format!("{:<12} {:>9} {:>9} {:>9}", "Method", "#Params", "GSM8K", "MATH"));
     for method in ["lora", "lora_xs", "vb", "vera", "fourierft", "uni"] {
+        if ctx.skip(method) {
+            ctx.emit(&format!(
+                "{:<12} {:>9}   (skipped: needs pjrt backend)",
+                method,
+                fmt_params(d_of("lm", method))
+            ));
+            continue;
+        }
         let seed = ctx.seeds[0];
         let (g, m, _) = lm_run(ctx, &format!("lm_{method}"), seed, &w0, "math")?;
         ctx.emit(&format!(
@@ -220,17 +257,21 @@ fn table4(ctx: &mut Ctx) -> Result<()> {
     // w/o FT baseline: untrained adapter
     {
         let seed = ctx.seeds[0];
-        let mut tr = LmTrainer::new(&ctx.exec, "lm_uni", seed, w0.clone())?;
+        let mut tr = LmTrainer::new(ctx.exec.as_ref(), "lm_uni", seed, w0.clone())?;
         let (split, dev2) = instruct::generate(seed, tr.cfg.seq, 10, 48);
-        let s1 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &split.dev, 10)?;
-        let s2 = evaluator::rubric_score(&mut tr, &mut ctx.exec, &dev2, 10)?;
+        let s1 = evaluator::rubric_score(&mut tr, ctx.exec.as_mut(), &split.dev, 10)?;
+        let s2 = evaluator::rubric_score(&mut tr, ctx.exec.as_mut(), &dev2, 10)?;
         ctx.emit(&format!("{:<14} {:>9} {:>8.2} {:>8.2}", "w/o FT", "-", s1, s2));
     }
-    for (label, base, d) in [
-        ("lora(r64)", "lm_lora_r64", 8 * 2 * 128 * 64),
-        ("vb", "lm_vb", d_of("lm", "vb")),
-        ("uni", "lm_uni", d_of("lm", "uni")),
+    for (label, method, base, d) in [
+        ("lora(r64)", "lora", "lm_lora_r64", 8 * 2 * 128 * 64),
+        ("vb", "vb", "lm_vb", d_of("lm", "vb")),
+        ("uni", "uni", "lm_uni", d_of("lm", "uni")),
     ] {
+        if ctx.skip(method) {
+            ctx.emit(&format!("{label:<14} {:>9}   (skipped: needs pjrt backend)", fmt_params(d)));
+            continue;
+        }
         let seed = ctx.seeds[0];
         let (s1, s2, _) = lm_run(ctx, base, seed, &w0, "instruct")?;
         ctx.emit(&format!("{:<14} {:>9} {:>8.2} {:>8.2}", label, fmt_params(d), s1, s2));
@@ -250,9 +291,15 @@ fn table5(ctx: &mut Ctx) -> Result<()> {
         header.push_str("     Avg");
         ctx.emit(&header);
         for method in ["none", "full", "fourierft", "uni"] {
+            if ctx.skip(method) {
+                ctx.emit(&format!("{method:<11}           (skipped: needs pjrt backend)"));
+                continue;
+            }
             let params = match method {
                 "none" => 0,
-                "full" => ctx.exec.manifest.get(&format!("vit_{size}_full_full_cls_train"))?.base_params,
+                "full" => {
+                    ctx.exec.meta(&format!("vit_{size}_full_full_cls_train"))?.base_params
+                }
                 m => d_of(size, m),
             };
             let mut row = format!(
@@ -272,22 +319,24 @@ fn table5(ctx: &mut Ctx) -> Result<()> {
                 let hp = ctx.hyper();
                 let score = if method == "full" {
                     let mut tr = FullClsTrainer::new(
-                        &ctx.exec,
+                        ctx.exec.as_ref(),
                         &format!("vit_{size}_full"),
                         &format!("vit_{size}_none_cls_eval"),
                         seed,
                         w0.clone(),
                     )?;
                     let hp = Hyper { lr_theta: 1e-3, ..hp };
-                    tr.run_and_score(&mut ctx.exec, &split.train[..cap], &split.dev, "acc", &hp)?.0
+                    tr.run_and_score(ctx.exec.as_mut(), &split.train[..cap], &split.dev, "acc", &hp)?
+                        .0
                 } else {
                     let mut tr = ClsTrainer::new(
-                        &ctx.exec,
+                        ctx.exec.as_ref(),
                         &format!("vit_{size}_{method}"),
                         seed,
                         w0.clone(),
                     )?;
-                    tr.run_and_score(&mut ctx.exec, &split.train[..cap], &split.dev, "acc", &hp)?.0
+                    tr.run_and_score(ctx.exec.as_mut(), &split.train[..cap], &split.dev, "acc", &hp)?
+                        .0
                 };
                 scores.push(100.0 * score);
                 let _ = write!(row, " {:>7.1}", 100.0 * score);
@@ -306,14 +355,18 @@ fn table6(ctx: &mut Ctx) -> Result<()> {
     ctx.emit(&format!("{:<7} {:<10} {:>8} {:>10}", "Task", "Method", "Score", "Time(s)"));
     for task in ["mrpc", "cola", "sst2", "qnli"] {
         for method in ["uni", "fastfood"] {
+            if ctx.skip(method) {
+                ctx.emit(&format!("{task:<7} {method:<10}   (skipped: needs pjrt backend)"));
+                continue;
+            }
             let seed = ctx.seeds[0];
             let base = format!("glue_large_{method}_c2");
-            let mut tr = ClsTrainer::new(&ctx.exec, &base, seed, w0.clone())?;
+            let mut tr = ClsTrainer::new(ctx.exec.as_ref(), &base, seed, w0.clone())?;
             let split = glue::generate(task, seed, tr.cfg.seq, tr.cfg.vocab);
             let train = &split.train[..split.train.len().min(ctx.cap)];
             let hp = ctx.hyper();
             let (score, rr) =
-                tr.run_and_score(&mut ctx.exec, train, &split.dev, split.metric, &hp)?;
+                tr.run_and_score(ctx.exec.as_mut(), train, &split.dev, split.metric, &hp)?;
             ctx.emit(&format!(
                 "{:<7} {:<10} {:>8.1} {:>10.1}",
                 task, method, 100.0 * score, rr.train_secs
@@ -384,11 +437,12 @@ fn fig3(ctx: &mut Ctx) -> Result<()> {
         (1024, "fig3_base_uni_d1024"),
     ] {
         let seed = ctx.seeds[0];
-        let mut tr = ClsTrainer::new(&ctx.exec, base.trim_end_matches("_cls_train"), seed, w0.clone())?;
+        let mut tr =
+            ClsTrainer::new(ctx.exec.as_ref(), base.trim_end_matches("_cls_train"), seed, w0.clone())?;
         let split = glue::generate("sst2", seed, tr.cfg.seq, tr.cfg.vocab);
         let train = &split.train[..split.train.len().min(ctx.cap)];
         let hp = ctx.hyper();
-        let (score, _) = tr.run_and_score(&mut ctx.exec, train, &split.dev, "acc", &hp)?;
+        let (score, _) = tr.run_and_score(ctx.exec.as_mut(), train, &split.dev, "acc", &hp)?;
         ctx.emit(&format!("{d}, {:.1}", 100.0 * score));
     }
     let w0lm = ctx.backbone("lm")?;
@@ -416,11 +470,11 @@ fn fig4(ctx: &mut Ctx) -> Result<()> {
         (8, "fig4_base_uni_r8"),
     ] {
         let seed = ctx.seeds[0];
-        let mut tr = ClsTrainer::new(&ctx.exec, base, seed, w0.clone())?;
+        let mut tr = ClsTrainer::new(ctx.exec.as_ref(), base, seed, w0.clone())?;
         let split = glue::generate("sst2", seed, tr.cfg.seq, tr.cfg.vocab);
         let train = &split.train[..split.train.len().min(ctx.cap)];
         let hp = ctx.hyper();
-        let (score, _) = tr.run_and_score(&mut ctx.exec, train, &split.dev, "acc", &hp)?;
+        let (score, _) = tr.run_and_score(ctx.exec.as_mut(), train, &split.dev, "acc", &hp)?;
         ctx.emit(&format!("{r}, {:.1}", 100.0 * score));
     }
     ctx.flush("fig4")
@@ -459,7 +513,7 @@ fn main() -> Result<()> {
     println!(
         "\n[done in {:.1}s, exec stats: {:?}]",
         t0.elapsed().as_secs_f64(),
-        ctx.exec.stats
+        ctx.exec.stats()
     );
     Ok(())
 }

@@ -1,6 +1,10 @@
 //! Quickstart: the whole Uni-LoRA story in one minute.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
+//!
+//! Runs on the pure-Rust native backend out of the box (no artifacts,
+//! no Python); set UNI_LORA_BACKEND=pjrt after `make artifacts` to use
+//! the PJRT path instead.
 //!
 //! 1. pretrain (or load) a small backbone — in-system "foundation model"
 //! 2. fine-tune a Uni-LoRA adapter (one vector!) on a sentiment task
@@ -12,14 +16,20 @@ use uni_lora::adapters::AdapterCheckpoint;
 use uni_lora::coordinator::{pretrain_backbone, ClsTrainer, Hyper};
 use uni_lora::data::glue;
 use uni_lora::metrics;
-use uni_lora::runtime::Executor;
+use uni_lora::runtime::Backend;
 use uni_lora::util::fmt_params;
 
 fn main() -> Result<()> {
-    let mut exec = Executor::with_default_manifest()?;
+    let mut exec = uni_lora::runtime::default_backend()?;
+    println!("[0/4] backend: {}", exec.name());
 
     // 1. backbone
-    let (w0, curve) = pretrain_backbone(&mut exec, "base", 42, uni_lora::coordinator::backbone::default_steps())?;
+    let (w0, curve) = pretrain_backbone(
+        exec.as_mut(),
+        "base",
+        42,
+        uni_lora::coordinator::backbone::default_steps(),
+    )?;
     if curve.is_empty() {
         println!("[1/4] backbone loaded from cache ({} params)", fmt_params(w0.len()));
     } else {
@@ -33,11 +43,11 @@ fn main() -> Result<()> {
 
     // 2. fine-tune Uni-LoRA on the SST-2-like task
     let seed = 7;
-    let mut tr = ClsTrainer::new(&exec, "glue_base_uni_c2", seed, w0)?;
+    let mut tr = ClsTrainer::new(exec.as_ref(), "glue_base_uni_c2", seed, w0)?;
     let split = glue::generate("sst2", seed, tr.cfg.seq, tr.cfg.vocab);
     let hp = Hyper { lr_theta: 5e-3, lr_head: 5e-2, wd: 0.0, epochs: 2 };
     let (acc, rr) =
-        tr.run_and_score(&mut exec, &split.train[..800], &split.dev, "acc", &hp)?;
+        tr.run_and_score(exec.as_mut(), &split.train[..800], &split.dev, "acc", &hp)?;
     println!(
         "[2/4] fine-tuned d={} adapter: sst2 accuracy {:.1}% ({} steps, {:.1}s)",
         tr.theta.len(),
@@ -66,10 +76,10 @@ fn main() -> Result<()> {
     // 4. reload and verify: same predictions from (seed, theta) alone
     let loaded = AdapterCheckpoint::load(&path)?;
     assert_eq!(loaded, ckpt);
-    let mut tr2 = ClsTrainer::new(&exec, "glue_base_uni_c2", loaded.seed, tr.w0.clone())?;
+    let mut tr2 = ClsTrainer::new(exec.as_ref(), "glue_base_uni_c2", loaded.seed, tr.w0.clone())?;
     tr2.theta = loaded.theta;
     tr2.head = loaded.head;
-    let logits = tr2.eval_logits(&mut exec, &split.dev)?;
+    let logits = tr2.eval_logits(exec.as_mut(), &split.dev)?;
     let order = uni_lora::data::batcher::shuffled_indices(split.dev.len(), 0, 0);
     let labels: Vec<f32> = order.iter().map(|&i| split.dev[i].label).collect();
     let acc2 = metrics::compute("acc", &logits, &labels);

@@ -107,21 +107,31 @@ def _mgs_columns(a: np.ndarray) -> np.ndarray:
 
 def _patch_support(idx: np.ndarray, d: int, used: int, patch_seed: int) -> np.ndarray:
     """Give every empty column in [0, used) a row stolen from a column
-    with occupancy >= 2. Deterministic; mirrored in rust uni.rs."""
+    with occupancy >= 2. Deterministic; MUST match rust uni.rs
+    (rejection-sample up to 10_000 draws, then fall back to a linear
+    scan so a skewed occupancy distribution can never hang)."""
     idx = idx.copy()
     cnt = np.bincount(idx, minlength=d)
     stream_pos = 0
     for j in range(used):
         if cnt[j] > 0:
             continue
-        while True:
+        patched = False
+        for _ in range(10_000):
             row = rng.value(patch_seed, stream_pos) % len(idx)
             stream_pos += 1
             if cnt[idx[row]] >= 2:
                 cnt[idx[row]] -= 1
                 idx[row] = j
                 cnt[j] = 1
+                patched = True
                 break
+        if patched:
+            continue
+        row = next(k for k in range(len(idx)) if cnt[idx[k]] >= 2)
+        cnt[idx[row]] -= 1
+        idx[row] = j
+        cnt[j] = 1
     return idx
 
 
@@ -211,6 +221,13 @@ def gen_statics(cfg: ModelCfg, seed: int) -> dict[str, np.ndarray]:
     m = cfg.method
     out: dict[str, np.ndarray] = {}
     if m in ("uni", "local", "nonuniform"):
+        # d > D admits no assignment with full column support; bail like
+        # rust ModelCfg::validate instead of looping in _patch_support.
+        if d > D:
+            raise ValueError(
+                f"cfg {cfg.name}: subspace dim d = {d} exceeds D = {D} — "
+                f"no projection with full column support exists"
+            )
         # Paper footnote 1: re-sample P if any column is empty (keeps the
         # n_j > 0 assumption of Theorem 1). Resampling loop MUST match
         # rust/src/projection/uni.rs: attempt k uses child_seed(s, k).
@@ -256,9 +273,15 @@ def gen_statics(cfg: ModelCfg, seed: int) -> dict[str, np.ndarray]:
         g = np.empty((nm, nb, d), np.float32)
         pm = np.empty((nm, nb, d), np.int32)
         ss = np.empty((nm, nb, d), np.float32)
+        # Per-block seeds are nested child streams so no (module, block)
+        # pair can collide: the old flat `STREAM_FASTFOOD + 16*i + j`
+        # derivation repeated seeds across modules whenever nb > 16.
+        # MUST match rust statics.rs::fastfood_block_seed.
+        ff = rng.child_seed(seed, rng.STREAM_FASTFOOD)
         for i in range(nm):
+            ms = rng.child_seed(ff, i)
             for j in range(nb):
-                base = rng.child_seed(seed, rng.STREAM_FASTFOOD + 16 * i + j)
+                base = rng.child_seed(ms, j)
                 sb[i, j] = rng.signs(rng.child_seed(base, 1), d)
                 g[i, j] = rng.normals(rng.child_seed(base, 2), d)
                 pm[i, j] = rng.permutation(rng.child_seed(base, 3), d).astype(np.int32)

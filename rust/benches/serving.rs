@@ -1,26 +1,22 @@
 //! Serving bench: throughput/latency of the multi-adapter router under
 //! (a) single-adapter, (b) mixed-adapter workloads — quantifies the
 //! batch-coalescing win and the adapter-residency footprint.
-//! Run: cargo bench --bench serving (requires `make artifacts`).
+//! Runs on the default backend (native unless UNI_LORA_BACKEND=pjrt).
+//! Run: cargo bench --bench serving
 
 use std::sync::Arc;
 use uni_lora::adapters::{AdapterCheckpoint, Registry};
 use uni_lora::coordinator::init_base;
 use uni_lora::data::vocab;
 use uni_lora::projection::statics::init_theta;
-use uni_lora::runtime::{Executor, Manifest};
-use uni_lora::server::server::Client;
+use uni_lora::runtime::Backend;
 use uni_lora::server::{serve, ServerConfig};
 
 fn main() -> anyhow::Result<()> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts not built — run `make artifacts` first");
-        return Ok(());
-    }
-    let mut exec = Executor::new(Manifest::load(dir)?)?;
+    let mut exec = uni_lora::runtime::default_backend()?;
+    println!("backend: {}", exec.name());
     let art = "lm_uni_lm_logits";
-    let meta = exec.manifest.get(art)?.clone();
+    let meta = exec.meta(art)?.clone();
     let w0 = init_base(&meta, 42);
     exec.prepare(art)?;
 

@@ -1,79 +1,75 @@
-//! End-to-end artifact step latency (L2+L3 perf accounting): per-family
-//! train/eval step medians and the runtime's transfer/execute breakdown
-//! — the §Perf "L3 overhead < 5%" target is checked here.
-//! Run: cargo bench --bench train_step (requires `make artifacts`).
+//! End-to-end step latency (L2+L3 perf accounting): per-family
+//! train/eval step medians and the runtime's execute breakdown.
+//! Runs on whatever backend `UNI_LORA_BACKEND` selects (default:
+//! native — no artifacts needed). Run: cargo bench --bench train_step
 
 use uni_lora::bench::{bench, fmt_time};
 use uni_lora::coordinator::{init_base, ClsTrainer, Hyper, LmTrainer};
 use uni_lora::data::batcher::{cls_batches, lm_batches};
 use uni_lora::data::{glue, math_tasks};
-use uni_lora::runtime::{Executor, Manifest};
+use uni_lora::runtime::{Backend, TensorIn};
 
 fn main() -> anyhow::Result<()> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts not built — run `make artifacts` first");
-        return Ok(());
-    }
-    let mut exec = Executor::new(Manifest::load(dir)?)?;
+    let mut exec = uni_lora::runtime::default_backend()?;
+    println!("backend: {}", exec.name());
     let hp = Hyper::default();
 
     for family in ["glue_base_uni_c2", "glue_large_uni_c2"] {
-        let meta = exec.manifest.get(&format!("{family}_cls_train"))?.clone();
+        let meta = exec.meta(&format!("{family}_cls_train"))?.clone();
         let w0 = init_base(&meta, 42);
-        let mut tr = ClsTrainer::new(&exec, family, 42, w0)?;
+        let mut tr = ClsTrainer::new(exec.as_ref(), family, 42, w0)?;
         let split = glue::generate("sst2", 42, meta.cfg.seq, meta.cfg.vocab);
         let batch = &cls_batches(&split.train, meta.cfg.batch, 42, 0)[0];
         exec.prepare(&format!("{family}_cls_train"))?;
-        exec.stats = Default::default();
+        exec.reset_stats();
         bench(&format!("{family}/train_step"), 3, 15, || {
-            tr.train_step(&mut exec, batch, &hp).unwrap();
+            tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
-        let st = exec.stats.clone();
+        let st = exec.stats();
         println!(
-            "   breakdown: execute {} | transfer {} ({:.1}% L3 overhead)",
-            fmt_time(st.execute_secs / st.executions as f64),
-            fmt_time(st.transfer_secs / st.executions as f64),
-            100.0 * st.transfer_secs / (st.execute_secs + st.transfer_secs)
+            "   breakdown: execute {} | transfer {} over {} executions",
+            fmt_time(st.execute_secs / st.executions.max(1) as f64),
+            fmt_time(st.transfer_secs / st.executions.max(1) as f64),
+            st.executions
         );
-        // §Perf optimization: pin frozen inputs (w0 + statics) as device
-        // buffers — before/after recorded in EXPERIMENTS.md §Perf.
-        tr.pin_frozen(&mut exec)?;
+        // §Perf optimization: pin frozen inputs (w0 + statics) so they
+        // are not re-supplied on every step.
+        tr.pin_frozen(exec.as_mut())?;
         bench(&format!("{family}/train_step_pinned"), 3, 15, || {
-            tr.train_step(&mut exec, batch, &hp).unwrap();
+            tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
         exec.unpin_all();
         bench(&format!("{family}/eval_batch"), 2, 9, || {
-            tr.eval_logits(&mut exec, &split.dev[..meta.cfg.batch]).unwrap();
+            tr.eval_logits(exec.as_mut(), &split.dev[..meta.cfg.batch]).unwrap();
         });
     }
 
     for family in ["lm_uni", "lm_lora_r64"] {
-        let meta = exec.manifest.get(&format!("{family}_lm_train"))?.clone();
+        let meta = exec.meta(&format!("{family}_lm_train"))?.clone();
         let w0 = init_base(&meta, 42);
-        let mut tr = LmTrainer::new(&exec, family, 42, w0)?;
+        let mut tr = LmTrainer::new(exec.as_ref(), family, 42, w0)?;
         let (split, _) = math_tasks::generate(42, meta.cfg.seq, 64, 4);
         let batch = &lm_batches(&split.train, meta.cfg.batch, 42, 0)[0];
         exec.prepare(&format!("{family}_lm_train"))?;
         bench(&format!("{family}/train_step"), 2, 9, || {
-            tr.train_step(&mut exec, batch, &hp).unwrap();
+            tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
-        tr.pin_frozen(&mut exec)?;
+        tr.pin_frozen(exec.as_mut())?;
         bench(&format!("{family}/train_step_pinned"), 2, 9, || {
-            tr.train_step(&mut exec, batch, &hp).unwrap();
+            tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
         exec.unpin_all();
         let prompts: Vec<Vec<i32>> =
             split.dev.iter().map(|e| e.tokens[..e.prompt_len].to_vec()).collect();
         bench(&format!("{family}/decode_4tok_b{}", meta.cfg.batch), 1, 5, || {
-            tr.greedy_decode(&mut exec, &prompts, 4).unwrap();
+            tr.greedy_decode(exec.as_mut(), &prompts, 4).unwrap();
         });
     }
 
     // pretraining step (the heaviest graph)
     {
         let art = "pretrain_lm_pretrain_lm";
-        let meta = exec.manifest.get(art)?.clone();
+        let meta = exec.meta(art)?.clone();
         let w0 = init_base(&meta, 42);
         let mut corpus = uni_lora::data::corpus::CorpusBatches::new(
             1, meta.cfg.batch, meta.cfg.seq, meta.cfg.vocab,
@@ -82,7 +78,6 @@ fn main() -> anyhow::Result<()> {
         exec.prepare(art)?;
         let m = vec![0f32; meta.base_params];
         let v = vec![0f32; meta.base_params];
-        use uni_lora::runtime::TensorIn;
         bench("pretrain_lm/step", 1, 5, || {
             exec.run(
                 art,

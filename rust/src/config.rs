@@ -64,6 +64,104 @@ impl ModelCfg {
         self.n_modules() * self.module_len()
     }
 
+    /// Structural invariants shared by every consumer. In particular
+    /// the uni-family subspace dimension must satisfy d <= D: with
+    /// d > D no row assignment can give every column support, and the
+    /// full-support patching loop in projection::uni would never
+    /// terminate.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.vocab > 0, "cfg {}: vocab must be > 0", self.name);
+        anyhow::ensure!(self.seq > 0, "cfg {}: seq must be > 0", self.name);
+        anyhow::ensure!(self.batch > 0, "cfg {}: batch must be > 0", self.name);
+        anyhow::ensure!(
+            self.heads > 0 && self.hidden % self.heads == 0,
+            "cfg {}: heads ({}) must divide hidden ({})",
+            self.name,
+            self.heads,
+            self.hidden
+        );
+        if matches!(self.method.as_str(), "uni" | "local" | "nonuniform" | "fastfood") {
+            anyhow::ensure!(self.d > 0, "cfg {}: d must be > 0", self.name);
+            anyhow::ensure!(
+                self.d <= self.d_full(),
+                "cfg {}: subspace dim d = {} exceeds D = {} — no projection \
+                 with full column support exists (method {})",
+                self.name,
+                self.d,
+                self.d_full(),
+                self.method
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Mirror of python configs.BASE.
+    pub fn base() -> ModelCfg {
+        ModelCfg::test_base("uni")
+    }
+
+    /// Mirror of python configs.LARGE.
+    pub fn large() -> ModelCfg {
+        ModelCfg { name: "large".into(), hidden: 96, layers: 3, ffn: 192, ..ModelCfg::base() }
+    }
+
+    /// Mirror of python configs.LM.
+    pub fn lm() -> ModelCfg {
+        ModelCfg {
+            name: "lm".into(),
+            hidden: 128,
+            layers: 4,
+            ffn: 256,
+            seq: 64,
+            n_classes: 0,
+            batch: 16,
+            d: 1024,
+            ..ModelCfg::base()
+        }
+    }
+
+    /// Mirror of python configs.E2E.
+    pub fn e2e() -> ModelCfg {
+        ModelCfg {
+            name: "e2e".into(),
+            hidden: 256,
+            layers: 8,
+            ffn: 1024,
+            heads: 8,
+            seq: 64,
+            vocab: 2048,
+            n_classes: 0,
+            batch: 8,
+            d: 4096,
+            ..ModelCfg::base()
+        }
+    }
+
+    /// Mirror of python configs.with_method (builder style).
+    pub fn with_method(&self, method: &str) -> ModelCfg {
+        ModelCfg { method: method.into(), ..self.clone() }
+    }
+
+    pub fn with_classes(mut self, n_classes: usize) -> ModelCfg {
+        self.n_classes = n_classes;
+        self
+    }
+
+    pub fn with_d(mut self, d: usize) -> ModelCfg {
+        self.d = d;
+        self
+    }
+
+    pub fn with_rank(mut self, rank: usize) -> ModelCfg {
+        self.rank = rank;
+        self
+    }
+
     /// Test/bench constructor matching python configs.BASE.
     pub fn test_base(method: &str) -> ModelCfg {
         ModelCfg {
@@ -98,6 +196,34 @@ mod tests {
         assert_eq!(c.n_modules(), 4);
         assert_eq!(c.module_len(), 512);
         assert_eq!(c.d_full(), 2048);
+    }
+
+    #[test]
+    fn family_constructors_match_python() {
+        assert_eq!(ModelCfg::base().hidden, 64);
+        let lg = ModelCfg::large();
+        assert_eq!((lg.hidden, lg.layers, lg.ffn, lg.seq), (96, 3, 192, 32));
+        let lm = ModelCfg::lm();
+        assert_eq!((lm.hidden, lm.layers, lm.seq, lm.batch, lm.d), (128, 4, 64, 16, 1024));
+        assert_eq!(lm.n_classes, 0);
+        let e2e = ModelCfg::e2e();
+        assert_eq!((e2e.hidden, e2e.layers, e2e.vocab, e2e.d), (256, 8, 2048, 4096));
+        let m = ModelCfg::base().with_method("lora").with_classes(10).with_rank(8);
+        assert_eq!((m.method.as_str(), m.n_classes, m.rank), ("lora", 10, 8));
+    }
+
+    #[test]
+    fn validate_rejects_oversized_subspace() {
+        let ok = ModelCfg::test_base("uni");
+        assert!(ok.validate().is_ok());
+        let mut bad = ModelCfg::test_base("uni");
+        bad.d = bad.d_full() + 1;
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // non-subspace methods don't care about d vs D
+        let mut lora = ModelCfg::test_base("lora");
+        lora.d = lora.d_full() + 1;
+        assert!(lora.validate().is_ok());
     }
 
     #[test]

@@ -6,13 +6,12 @@
 
 use crate::coordinator::init_base;
 use crate::data::corpus::CorpusBatches;
-use crate::runtime::{Executor, TensorIn};
+use crate::runtime::{Backend, TensorIn};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 
-fn cache_path(exec: &Executor, size: &str, seed: u64, steps: usize) -> PathBuf {
-    exec.manifest
-        .dir
+fn cache_path(exec: &dyn Backend, size: &str, seed: u64, steps: usize) -> PathBuf {
+    exec.cache_dir()
         .join("backbones")
         .join(format!("{size}_s{seed}_n{steps}.f32"))
 }
@@ -38,13 +37,13 @@ fn load_f32(path: &PathBuf, n: usize) -> Result<Vec<f32>> {
 /// Pretrain (or load from cache) the `size` backbone. Returns
 /// (weights, loss curve — empty when loaded from cache).
 pub fn pretrain_backbone(
-    exec: &mut Executor,
+    exec: &mut dyn Backend,
     size: &str,
     seed: u64,
     steps: usize,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
     let art = format!("pretrain_{size}_pretrain_lm");
-    let meta = exec.manifest.get(&art)?.clone();
+    let meta = exec.meta(&art)?.clone();
     let path = cache_path(exec, size, seed, steps);
     if path.exists() {
         return Ok((load_f32(&path, meta.base_params)?, Vec::new()));

@@ -4,14 +4,14 @@
 use crate::coordinator::trainer::LmTrainer;
 use crate::data::LmExample;
 use crate::metrics;
-use crate::runtime::Executor;
+use crate::runtime::Backend;
 use anyhow::Result;
 
 /// Exact-match accuracy over a dev split: decode from each prompt and
 /// require the full reference answer as a prefix of the generation.
 pub fn exact_match_accuracy(
     trainer: &mut LmTrainer,
-    exec: &mut Executor,
+    exec: &mut dyn Backend,
     dev: &[LmExample],
     max_new: usize,
 ) -> Result<f64> {
@@ -28,7 +28,7 @@ pub fn exact_match_accuracy(
 /// Mean rubric score (0-10) over a dev split — the Table 4 judge.
 pub fn rubric_score(
     trainer: &mut LmTrainer,
-    exec: &mut Executor,
+    exec: &mut dyn Backend,
     dev: &[LmExample],
     max_new: usize,
 ) -> Result<f64> {

@@ -5,7 +5,7 @@ use crate::config::ModelCfg;
 use crate::data::batcher::{cls_batches, lm_batches, ClsBatch, LmBatch};
 use crate::data::{ClsExample, LmExample};
 use crate::projection::statics::{gen_statics, init_theta, Static};
-use crate::runtime::{Executor, TensorIn};
+use crate::runtime::{Backend, TensorIn};
 use anyhow::{Context, Result};
 use std::time::Instant;
 
@@ -53,10 +53,10 @@ pub struct ClsTrainer {
 
 impl ClsTrainer {
     /// `base`: artifact family name without the `_cls_train` suffix.
-    pub fn new(exec: &Executor, base: &str, seed: u64, w0: Vec<f32>) -> Result<ClsTrainer> {
+    pub fn new(exec: &dyn Backend, base: &str, seed: u64, w0: Vec<f32>) -> Result<ClsTrainer> {
         let art_train = format!("{base}_cls_train");
         let art_eval = format!("{base}_cls_eval");
-        let meta = exec.manifest.get(&art_train)?.clone();
+        let meta = exec.meta(&art_train)?.clone();
         let cfg = meta.cfg.clone();
         let theta = init_theta(&cfg, seed)?;
         let stats = gen_statics(&cfg, seed)?;
@@ -82,7 +82,7 @@ impl ClsTrainer {
     /// §Perf: upload the frozen inputs (w0 + statics) to the device once;
     /// every subsequent train step passes resident buffers instead of
     /// re-transferring them.
-    pub fn pin_frozen(&mut self, exec: &mut Executor) -> Result<()> {
+    pub fn pin_frozen(&mut self, exec: &mut dyn Backend) -> Result<()> {
         exec.prepare(&self.art_train)?;
         exec.pin(&self.art_train, "w0", &TensorIn::F32(self.w0.clone()))?;
         for s in &self.stats {
@@ -92,7 +92,7 @@ impl ClsTrainer {
         Ok(())
     }
 
-    pub fn train_step(&mut self, exec: &mut Executor, b: &ClsBatch, hp: &Hyper) -> Result<f32> {
+    pub fn train_step(&mut self, exec: &mut dyn Backend, b: &ClsBatch, hp: &Hyper) -> Result<f32> {
         self.step += 1;
         let labels = if self.cfg.n_classes == 1 {
             TensorIn::F32(b.labels_f.clone())
@@ -136,7 +136,7 @@ impl ClsTrainer {
     /// Full training run over epochs of seeded-shuffled batches.
     pub fn train(
         &mut self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         examples: &[ClsExample],
         hp: &Hyper,
     ) -> Result<RunResult> {
@@ -153,7 +153,7 @@ impl ClsTrainer {
     /// Dev-set logits (only `real` rows of each batch are kept).
     pub fn eval_logits(
         &mut self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         examples: &[ClsExample],
     ) -> Result<Vec<Vec<f32>>> {
         let c = self.cfg.n_classes.max(1);
@@ -179,7 +179,7 @@ impl ClsTrainer {
     /// Train + evaluate one metric value.
     pub fn run_and_score(
         &mut self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         train: &[ClsExample],
         dev: &[ClsExample],
         metric: &str,
@@ -213,9 +213,9 @@ pub struct FullClsTrainer {
 impl FullClsTrainer {
     /// `base`: e.g. "vit_base_full"; eval reuses the matching "none"
     /// adapter eval artifact (same signature, theta unused).
-    pub fn new(exec: &Executor, base: &str, eval_art: &str, seed: u64, w0: Vec<f32>) -> Result<FullClsTrainer> {
+    pub fn new(exec: &dyn Backend, base: &str, eval_art: &str, seed: u64, w0: Vec<f32>) -> Result<FullClsTrainer> {
         let art_train = format!("{base}_full_cls_train");
-        let meta = exec.manifest.get(&art_train)?.clone();
+        let meta = exec.meta(&art_train)?.clone();
         anyhow::ensure!(w0.len() == meta.base_params, "w0 size mismatch");
         Ok(FullClsTrainer {
             art_train,
@@ -234,7 +234,7 @@ impl FullClsTrainer {
 
     pub fn train(
         &mut self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         examples: &[ClsExample],
         hp: &Hyper,
     ) -> Result<RunResult> {
@@ -279,7 +279,7 @@ impl FullClsTrainer {
     /// Evaluate via the paired "none"-method eval artifact (theta dummy).
     pub fn run_and_score(
         &mut self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         train: &[ClsExample],
         dev: &[ClsExample],
         metric: &str,
@@ -325,10 +325,10 @@ pub struct LmTrainer {
 
 impl LmTrainer {
     /// `base`: artifact family name without the `_lm_train` suffix.
-    pub fn new(exec: &Executor, base: &str, seed: u64, w0: Vec<f32>) -> Result<LmTrainer> {
+    pub fn new(exec: &dyn Backend, base: &str, seed: u64, w0: Vec<f32>) -> Result<LmTrainer> {
         let art_train = format!("{base}_lm_train");
         let art_logits = format!("{base}_lm_logits");
-        let meta = exec.manifest.get(&art_train)?.clone();
+        let meta = exec.meta(&art_train)?.clone();
         let cfg = meta.cfg.clone();
         let theta = init_theta(&cfg, seed)?;
         let stats = gen_statics(&cfg, seed)?;
@@ -349,7 +349,7 @@ impl LmTrainer {
     }
 
     /// §Perf: see ClsTrainer::pin_frozen.
-    pub fn pin_frozen(&mut self, exec: &mut Executor) -> Result<()> {
+    pub fn pin_frozen(&mut self, exec: &mut dyn Backend) -> Result<()> {
         exec.prepare(&self.art_train)?;
         exec.pin(&self.art_train, "w0", &TensorIn::F32(self.w0.clone()))?;
         for s in &self.stats {
@@ -359,7 +359,7 @@ impl LmTrainer {
         Ok(())
     }
 
-    pub fn train_step(&mut self, exec: &mut Executor, b: &LmBatch, hp: &Hyper) -> Result<f32> {
+    pub fn train_step(&mut self, exec: &mut dyn Backend, b: &LmBatch, hp: &Hyper) -> Result<f32> {
         self.step += 1;
         let mut inputs = vec![
             TensorIn::F32(std::mem::take(&mut self.theta)),
@@ -387,7 +387,7 @@ impl LmTrainer {
 
     pub fn train(
         &mut self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         examples: &[LmExample],
         hp: &Hyper,
     ) -> Result<RunResult> {
@@ -405,7 +405,7 @@ impl LmTrainer {
     /// of up to `max_new` tokens (stopping per-sequence at EOS).
     pub fn greedy_decode(
         &mut self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         prompts: &[Vec<i32>],
         max_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
@@ -425,7 +425,7 @@ impl LmTrainer {
 /// Greedy decode helper shared by the trainer and the serving router.
 #[allow(clippy::too_many_arguments)]
 pub fn decode_with(
-    exec: &mut Executor,
+    exec: &mut dyn Backend,
     art_logits: &str,
     cfg: &ModelCfg,
     theta: &[f32],

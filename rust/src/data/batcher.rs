@@ -35,6 +35,10 @@ pub fn shuffled_indices(n: usize, seed: u64, epoch: u64) -> Vec<usize> {
 }
 
 pub fn cls_batches(examples: &[ClsExample], batch: usize, seed: u64, epoch: u64) -> Vec<ClsBatch> {
+    if examples.is_empty() {
+        // the cyclic-repeat padding below indexes examples[0]
+        return Vec::new();
+    }
     let order = shuffled_indices(examples.len(), seed, epoch);
     order
         .chunks(batch)
@@ -61,6 +65,9 @@ pub fn cls_batches(examples: &[ClsExample], batch: usize, seed: u64, epoch: u64)
 }
 
 pub fn lm_batches(examples: &[LmExample], batch: usize, seed: u64, epoch: u64) -> Vec<LmBatch> {
+    if examples.is_empty() {
+        return Vec::new();
+    }
     let order = shuffled_indices(examples.len(), seed, epoch);
     order
         .chunks(batch)
@@ -125,5 +132,43 @@ mod tests {
         assert_eq!(bs[1].tokens.len(), 4 * 8);
         // repeated example fills the rest
         assert_eq!(bs[1].tokens[0], bs[1].tokens[8]);
+    }
+
+    fn mk_lm(n: usize) -> Vec<LmExample> {
+        (0..n)
+            .map(|i| LmExample {
+                tokens: vec![i as i32; 8],
+                labels: vec![-1; 8],
+                prompt_len: 4,
+                answer: vec![1],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_corpus_yields_no_batches() {
+        // used to panic on examples[0] / chunk-cycling over zero items
+        assert!(cls_batches(&[], 4, 1, 0).is_empty());
+        assert!(lm_batches(&[], 4, 1, 0).is_empty());
+    }
+
+    #[test]
+    fn lm_ragged_final_batch_padded_cyclically() {
+        let ex = mk_lm(5);
+        let bs = lm_batches(&ex, 4, 1, 0);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[1].real, 1);
+        assert_eq!(bs[1].tokens.len(), 4 * 8);
+        assert_eq!(bs[1].labels.len(), 4 * 8);
+        assert_eq!(bs[1].tokens[0], bs[1].tokens[8]);
+    }
+
+    #[test]
+    fn single_example_fills_whole_batch() {
+        let ex = mk_cls(1);
+        let bs = cls_batches(&ex, 4, 9, 0);
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].real, 1);
+        assert_eq!(bs[0].attn_len.len(), 4);
     }
 }

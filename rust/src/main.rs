@@ -7,9 +7,11 @@
 //!   serve     --addr 127.0.0.1:7401 --adapters <dir> [--base lm_uni]
 //!   inspect   --adapter adapter.uni1       (print metadata + expansion norms)
 //!   props     --method uni|vera|...        (Table-1 property analysis)
-//!   list      (artifacts in the manifest)
+//!   list      (artifacts in the active backend's registry)
 //!
-//! Everything runs from AOT artifacts: `make artifacts` first.
+//! Every subcommand takes `--backend native|pjrt` (default: native, or
+//! $UNI_LORA_BACKEND). The native backend needs no artifacts and no
+//! Python; the PJRT backend requires `--features pjrt` + `make artifacts`.
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -18,7 +20,7 @@ use uni_lora::config::ModelCfg;
 use uni_lora::coordinator::{evaluator, pretrain_backbone, ClsTrainer, Hyper, LmTrainer};
 use uni_lora::data::{glue, instruct, math_tasks};
 use uni_lora::projection::properties;
-use uni_lora::runtime::{Executor, Manifest};
+use uni_lora::runtime::Backend;
 use uni_lora::server::{serve, ServerConfig};
 use uni_lora::util::cli::Args;
 use uni_lora::util::fmt_params;
@@ -32,6 +34,13 @@ fn main() {
     }
 }
 
+fn make_backend(args: &Args) -> Result<Box<dyn Backend>> {
+    match args.get("backend") {
+        Some(name) => uni_lora::runtime::backend_by_name(name),
+        None => uni_lora::runtime::default_backend(),
+    }
+}
+
 fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "pretrain" => cmd_pretrain(args),
@@ -40,7 +49,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "inspect" => cmd_inspect(args),
         "props" => cmd_props(args),
-        "list" => cmd_list(),
+        "list" => cmd_list(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -57,14 +66,15 @@ const HELP: &str = "uni-lora — Uni-LoRA system reproduction
   inspect  --adapter a.uni1
   props    [--method uni]
   list
+options: --backend native|pjrt (default native)
 tasks: sst2 mrpc cola qnli rte stsb | math | instruct";
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let size = args.get_or("size", "base");
     let steps = args.usize_or("steps", 300);
     let seed = args.u64_or("seed", 42);
-    let mut exec = Executor::with_default_manifest()?;
-    let (w0, losses) = pretrain_backbone(&mut exec, &size, seed, steps)?;
+    let mut exec = make_backend(args)?;
+    let (w0, losses) = pretrain_backbone(exec.as_mut(), &size, seed, steps)?;
     if losses.is_empty() {
         println!("backbone '{size}' loaded from cache ({} params)", fmt_params(w0.len()));
     } else {
@@ -100,31 +110,36 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         wd: args.f32_or("wd", 0.0),
         epochs: args.usize_or("epochs", 2),
     };
-    let mut exec = Executor::with_default_manifest()?;
+    let mut exec = make_backend(args)?;
     let base = artifact_base(&task, &size, &method)?;
 
     if task == "math" || task == "instruct" {
-        let (w0, _) = pretrain_backbone(&mut exec, "lm", 42, uni_lora::coordinator::backbone::default_steps())?;
-        let meta = exec.manifest.get(&format!("{base}_lm_train"))?.clone();
-        let mut tr = LmTrainer::new(&exec, &base, seed, w0)?;
+        let (w0, _) = pretrain_backbone(
+            exec.as_mut(),
+            "lm",
+            42,
+            uni_lora::coordinator::backbone::default_steps(),
+        )?;
+        let meta = exec.meta(&format!("{base}_lm_train"))?.clone();
+        let mut tr = LmTrainer::new(exec.as_ref(), &base, seed, w0)?;
         let (split, extra) = if task == "math" {
             math_tasks::generate(seed, meta.cfg.seq, 600, 80)
         } else {
             instruct::generate(seed, meta.cfg.seq, 600, 60)
         };
-        let rr = tr.train(&mut exec, &split.train, &hp)?;
+        let rr = tr.train(exec.as_mut(), &split.train, &hp)?;
         println!(
             "trained {} ({}, d={}): loss {:.3} -> {:.3} in {:.1}s / {} steps",
             base, method, fmt_params(meta.d),
             rr.losses[0], rr.losses.last().unwrap(), rr.train_secs, rr.steps
         );
         if task == "math" {
-            let gsm = evaluator::exact_match_accuracy(&mut tr, &mut exec, &split.dev, 8)?;
-            let mth = evaluator::exact_match_accuracy(&mut tr, &mut exec, &extra, 8)?;
+            let gsm = evaluator::exact_match_accuracy(&mut tr, exec.as_mut(), &split.dev, 8)?;
+            let mth = evaluator::exact_match_accuracy(&mut tr, exec.as_mut(), &extra, 8)?;
             println!("GSM8K-like: {gsm:.2}%   MATH-like: {mth:.2}%");
         } else {
-            let s1 = evaluator::rubric_score(&mut tr, &mut exec, &split.dev, 10)?;
-            let s2 = evaluator::rubric_score(&mut tr, &mut exec, &extra, 10)?;
+            let s1 = evaluator::rubric_score(&mut tr, exec.as_mut(), &split.dev, 10)?;
+            let s2 = evaluator::rubric_score(&mut tr, exec.as_mut(), &extra, 10)?;
             println!("Score1 (single-turn): {s1:.2}   Score2 (multi-turn): {s2:.2}");
         }
         if let Some(out) = args.get("out") {
@@ -139,12 +154,17 @@ fn cmd_finetune(args: &Args) -> Result<()> {
             println!("adapter saved to {out}");
         }
     } else {
-        let (w0, _) = pretrain_backbone(&mut exec, &size, 42, uni_lora::coordinator::backbone::default_steps())?;
-        let meta = exec.manifest.get(&format!("{base}_cls_train"))?.clone();
-        let mut tr = ClsTrainer::new(&exec, &base, seed, w0)?;
+        let (w0, _) = pretrain_backbone(
+            exec.as_mut(),
+            &size,
+            42,
+            uni_lora::coordinator::backbone::default_steps(),
+        )?;
+        let meta = exec.meta(&format!("{base}_cls_train"))?.clone();
+        let mut tr = ClsTrainer::new(exec.as_ref(), &base, seed, w0)?;
         let split = glue::generate(&task, seed, meta.cfg.seq, meta.cfg.vocab);
         let (score, rr) =
-            tr.run_and_score(&mut exec, &split.train, &split.dev, split.metric, &hp)?;
+            tr.run_and_score(exec.as_mut(), &split.train, &split.dev, split.metric, &hp)?;
         println!(
             "{task} [{method}, d={}]: {} = {:.4} ({} steps, {:.1}s)",
             fmt_params(meta.d), split.metric, score, rr.steps, rr.train_secs
@@ -168,20 +188,25 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let path = args.required("adapter")?;
     let task = args.get_or("task", "sst2");
     let ckpt = AdapterCheckpoint::load(path)?;
-    let mut exec = Executor::with_default_manifest()?;
-    let meta = exec.manifest.get(&ckpt.artifact)?.clone();
+    let mut exec = make_backend(args)?;
+    let meta = exec.meta(&ckpt.artifact)?.clone();
     let cfg = meta.cfg.clone();
     if ckpt.artifact.ends_with("_cls_eval") {
         let base = ckpt.artifact.trim_end_matches("_cls_eval").to_string();
         let size = cfg.name.clone();
-        let (w0, _) = pretrain_backbone(&mut exec, &size, 42, uni_lora::coordinator::backbone::default_steps())?;
-        let mut tr = ClsTrainer::new(&exec, &base, ckpt.seed, w0)?;
+        let (w0, _) = pretrain_backbone(
+            exec.as_mut(),
+            &size,
+            42,
+            uni_lora::coordinator::backbone::default_steps(),
+        )?;
+        let mut tr = ClsTrainer::new(exec.as_ref(), &base, ckpt.seed, w0)?;
         tr.theta = ckpt.theta.clone();
         tr.head = ckpt.head.clone();
         let split = glue::generate(&task, ckpt.seed, cfg.seq, cfg.vocab);
         let order = uni_lora::data::batcher::shuffled_indices(split.dev.len(), 0, 0);
         let labels: Vec<f32> = order.iter().map(|&i| split.dev[i].label).collect();
-        let logits = tr.eval_logits(&mut exec, &split.dev)?;
+        let logits = tr.eval_logits(exec.as_mut(), &split.dev)?;
         println!(
             "{task}: {} = {:.4}",
             split.metric,
@@ -197,13 +222,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7401");
     let base = args.get_or("base", "lm_uni");
     let dir = args.get_or("adapters", "adapters");
-    let mut exec = Executor::with_default_manifest()?;
-    let (w0, _) = pretrain_backbone(&mut exec, "lm", 42, uni_lora::coordinator::backbone::default_steps())?;
+    let mut exec = make_backend(args)?;
+    let (w0, _) = pretrain_backbone(
+        exec.as_mut(),
+        "lm",
+        42,
+        uni_lora::coordinator::backbone::default_steps(),
+    )?;
     let art = format!("{base}_lm_logits");
-    let cfg: ModelCfg = exec.manifest.get(&art)?.cfg.clone();
+    let cfg: ModelCfg = exec.meta(&art)?.cfg.clone();
     exec.prepare(&art)?;
     let registry = Arc::new(Registry::load_dir(&dir)?);
-    println!("serving {} adapters from {dir} on {addr}", registry.len());
+    println!(
+        "serving {} adapters from {dir} on {addr} [{} backend]",
+        registry.len(),
+        exec.name()
+    );
     let handle = serve(
         ServerConfig { addr: addr.clone(), art_logits: art },
         exec,
@@ -229,8 +263,8 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         ckpt.head.len(),
         ckpt.byte_size()
     );
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let cfg = manifest.get(&ckpt.artifact)?.cfg.clone();
+    let exec = make_backend(args)?;
+    let cfg = exec.meta(&ckpt.artifact)?.cfg.clone();
     let deltas = ckpt.expand(&cfg)?;
     for (i, d) in deltas.iter().enumerate() {
         let dw = d.to_dense(cfg.hidden, cfg.rank);
@@ -255,9 +289,10 @@ fn cmd_props(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_list() -> Result<()> {
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    for (name, a) in &manifest.artifacts {
+fn cmd_list(args: &Args) -> Result<()> {
+    let exec = make_backend(args)?;
+    for name in exec.artifact_names() {
+        let a = exec.meta(&name)?;
         println!(
             "{name:<44} {:<14} d={:<8} D={:<8} P={}",
             a.kind,

@@ -8,9 +8,8 @@
 
 use crate::config::ModelCfg;
 use crate::projection::fastfood::FastfoodBlock;
-use crate::projection::statics::{gen_statics, theta_segments};
+use crate::projection::statics::{gen_statics, theta_segments, Static};
 use crate::projection::uni;
-use crate::rng;
 use anyhow::{bail, Result};
 
 /// Per-module weight increment, before the alpha/r scale.
@@ -62,12 +61,23 @@ fn find<'a>(segs: &'a [(String, &'a [f32])], name: &str) -> &'a [f32] {
     segs.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap()
 }
 
-/// Expand theta_d into the per-module weight increments.
+/// Expand theta_d into the per-module weight increments, regenerating
+/// the frozen statics from the seed.
 pub fn reconstruct(cfg: &ModelCfg, seed: u64, theta: &[f32]) -> Result<Vec<ModuleDelta>> {
+    let stats = gen_statics(cfg, seed)?;
+    reconstruct_with_statics(cfg, &stats, theta)
+}
+
+/// Expand theta_d given pre-generated statics (the form the runtime
+/// backends use: statics arrive as artifact inputs, no seed in sight).
+pub fn reconstruct_with_statics(
+    cfg: &ModelCfg,
+    stats: &[Static],
+    theta: &[f32],
+) -> Result<Vec<ModuleDelta>> {
     let (h, r, nm) = (cfg.hidden, cfg.rank, cfg.n_modules());
     let (ml, ar) = (cfg.module_len(), h * r);
     let segs = seg_slices(cfg, theta);
-    let stats = gen_statics(cfg, seed)?;
     let m = cfg.method.as_str();
 
     let lowrank_from_flat = |flat: &[f32]| -> Vec<ModuleDelta> {
@@ -103,16 +113,23 @@ pub fn reconstruct(cfg: &ModelCfg, seed: u64, theta: &[f32]) -> Result<Vec<Modul
         "fastfood" => {
             let th = find(&segs, "theta");
             let nb = (ml + cfg.d - 1) / cfg.d;
+            let d = cfg.d;
+            // statics arrays are [nm, nb, d] — slice out each block
+            let (sb, g, pm, ss) =
+                (stats[0].as_f32(), stats[1].as_f32(), stats[2].as_i32(), stats[3].as_f32());
             // full-P isometry normalization (mirrors methods.apply)
             let norm = 1.0 / ((nm * nb) as f32).sqrt();
             let mut flat = Vec::with_capacity(nm * ml);
             for i in 0..nm {
                 let blocks: Vec<FastfoodBlock> = (0..nb)
                     .map(|j| {
-                        FastfoodBlock::generate(
-                            rng::child_seed(seed, rng::STREAM_FASTFOOD + 16 * i as u64 + j as u64),
-                            cfg.d,
-                        )
+                        let o = (i * nb + j) * d;
+                        FastfoodBlock {
+                            sgn_b: sb[o..o + d].to_vec(),
+                            gauss: g[o..o + d].to_vec(),
+                            perm: pm[o..o + d].to_vec(),
+                            sgn_s: ss[o..o + d].to_vec(),
+                        }
                     })
                     .collect();
                 flat.extend(
@@ -304,6 +321,18 @@ mod tests {
             }
         } else {
             panic!("expected low-rank");
+        }
+    }
+
+    #[test]
+    fn with_statics_matches_seeded_reconstruct() {
+        for m in ["uni", "fastfood", "vb", "vera", "lora_xs", "fourierft"] {
+            let cfg = small(m);
+            let th = init_theta(&cfg, 4).unwrap();
+            let stats = gen_statics(&cfg, 4).unwrap();
+            let a = theta_big(&cfg, &reconstruct(&cfg, 4, &th).unwrap());
+            let b = theta_big(&cfg, &reconstruct_with_statics(&cfg, &stats, &th).unwrap());
+            assert_eq!(a, b, "{m}");
         }
     }
 

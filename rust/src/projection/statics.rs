@@ -88,9 +88,21 @@ pub fn fastfood_blocks(cfg: &ModelCfg) -> usize {
     (cfg.module_len() + cfg.d - 1) / cfg.d
 }
 
+/// Per-(module, block) fastfood seed, derived by nesting child streams
+/// so no two (i, j) pairs can collide. The old flat derivation
+/// `STREAM_FASTFOOD + 16*i + j` collided across modules whenever the
+/// blocks-per-module count exceeded 16 (e.g. long modules with small d),
+/// silently correlating blocks of different modules.
+/// MUST match python methods.gen_statics.
+pub fn fastfood_block_seed(seed: u64, module: usize, block: usize) -> u64 {
+    let ff = rng::child_seed(seed, rng::STREAM_FASTFOOD);
+    rng::child_seed(rng::child_seed(ff, module as u64), block as u64)
+}
+
 /// Generate the frozen statics for `cfg.method`, in the same order as
 /// python's statics_spec (which is the artifact input order).
 pub fn gen_statics(cfg: &ModelCfg, seed: u64) -> Result<Vec<Static>> {
+    cfg.validate()?;
     let (h, r, nm, d, big_d) =
         (cfg.hidden, cfg.rank, cfg.n_modules(), cfg.d, cfg.d_full());
     let m = cfg.method.as_str();
@@ -109,8 +121,7 @@ pub fn gen_statics(cfg: &ModelCfg, seed: u64) -> Result<Vec<Static>> {
                 (Vec::new(), Vec::new(), Vec::new(), Vec::new());
             for i in 0..nm {
                 for j in 0..nb {
-                    let base =
-                        rng::child_seed(seed, rng::STREAM_FASTFOOD + 16 * i as u64 + j as u64);
+                    let base = fastfood_block_seed(seed, i, j);
                     sb.extend(rng::signs(rng::child_seed(base, 1), d));
                     g.extend(rng::normals(rng::child_seed(base, 2), d));
                     pm.extend(rng::permutation(rng::child_seed(base, 3), d));
@@ -325,6 +336,40 @@ mod tests {
         let nm_h = cfg.n_modules() * cfg.hidden;
         assert!(th[..nm_h].iter().all(|&x| x == 0.0));
         assert!(th[nm_h..].iter().all(|&x| (x - 0.1).abs() < 1e-7));
+    }
+
+    #[test]
+    fn fastfood_block_seeds_do_not_collide_when_nb_gt_16() {
+        // module_len = 512, d = 16 -> nb = 32 > 16: under the old flat
+        // derivation (STREAM_FASTFOOD + 16*i + j) block (0, 16) and
+        // block (1, 0) shared a seed and were bit-identical.
+        let mut cfg = ModelCfg::test_base("fastfood");
+        cfg.d = 16;
+        let nb = fastfood_blocks(&cfg);
+        assert!(nb > 16, "test config must exercise nb > 16, got {nb}");
+        let st = gen_statics(&cfg, 5).unwrap();
+        let d = cfg.d;
+        let g = st[1].as_f32(); // gauss, [nm, nb, d]
+        let blk = |i: usize, j: usize| &g[(i * nb + j) * d..(i * nb + j + 1) * d];
+        assert_ne!(blk(0, 16), blk(1, 0));
+        assert_ne!(fastfood_block_seed(5, 0, 16), fastfood_block_seed(5, 1, 0));
+        // all block seeds pairwise distinct across the whole grid
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..cfg.n_modules() {
+            for j in 0..nb {
+                assert!(seen.insert(fastfood_block_seed(5, i, j)), "collision at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn gen_statics_rejects_d_larger_than_full() {
+        // d > D means full column support is impossible; must bail
+        // instead of looping forever in patch_support.
+        let mut cfg = ModelCfg::test_base("uni");
+        cfg.d = cfg.d_full() + 1;
+        let err = gen_statics(&cfg, 1).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
     }
 
     #[test]

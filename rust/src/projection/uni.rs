@@ -34,6 +34,15 @@ impl Variant {
 /// the n_j > 0 assumption of Theorem 1 always holds).
 pub fn gen_indices(cfg: &ModelCfg, seed: u64, variant: Variant) -> Vec<i32> {
     let d = cfg.d;
+    // Guarded by ModelCfg::validate (gen_statics bails before reaching
+    // here); assert for direct callers — with d > D the support loop
+    // below could never finish.
+    assert!(
+        d <= cfg.d_full(),
+        "gen_indices: d = {d} exceeds D = {} (cfg {})",
+        cfg.d_full(),
+        cfg.name
+    );
     let used = match variant {
         Variant::Local => (d / cfg.layers) * cfg.layers,
         _ => d,
@@ -57,20 +66,30 @@ pub fn gen_indices(cfg: &ModelCfg, seed: u64, variant: Variant) -> Vec<i32> {
 fn patch_support(idx: &mut [i32], d: usize, used: usize, patch_seed: u64) {
     let mut cnt = column_counts(idx, d);
     let mut pos = 0u64;
-    for j in 0..used {
+    'cols: for j in 0..used {
         if cnt[j] > 0 {
             continue;
         }
-        loop {
+        // Rejection-sample a donor row from a column with occupancy >= 2
+        // (the common case terminates in a handful of draws). Bounded:
+        // past the cap, fall back to a deterministic scan so a skewed
+        // occupancy distribution can never hang index generation.
+        for _ in 0..10_000 {
             let row = (rng::value(patch_seed, pos) % idx.len() as u64) as usize;
             pos += 1;
             if cnt[idx[row] as usize] >= 2 {
                 cnt[idx[row] as usize] -= 1;
                 idx[row] = j as i32;
                 cnt[j] = 1;
-                break;
+                continue 'cols;
             }
         }
+        let row = (0..idx.len())
+            .find(|&k| cnt[idx[k] as usize] >= 2)
+            .expect("d <= D guarantees a donor column with occupancy >= 2");
+        cnt[idx[row] as usize] -= 1;
+        idx[row] = j as i32;
+        cnt[j] = 1;
     }
 }
 

@@ -1,0 +1,86 @@
+//! The execution backend abstraction (multi-backend architecture,
+//! ROADMAP north star). Everything above the runtime — trainers,
+//! evaluator, sweeps, the serving router, benches, examples — drives a
+//! `dyn Backend` and never knows whether steps run on the pure-Rust CPU
+//! executor or through PJRT-compiled HLO artifacts.
+//!
+//! Contract: an artifact name (e.g. `glue_base_uni_c2_cls_train`)
+//! resolves to an `ArtifactMeta` describing a positional input
+//! signature and output order; `run` executes one step. The signatures
+//! are identical across backends (they mirror `python/compile/aot.py`),
+//! so callers are backend-agnostic by construction.
+
+use super::artifact::{ArtifactMeta, DType};
+use super::tensor::{ExecStats, TensorIn, TensorOut};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+pub trait Backend: Send {
+    /// Short backend identifier ("native" | "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Metadata (signature, config, layouts) for an artifact.
+    fn meta(&self, artifact: &str) -> Result<&ArtifactMeta>;
+
+    /// All artifact names this backend can execute, sorted.
+    fn artifact_names(&self) -> Vec<String>;
+
+    /// Warm an artifact (compile for PJRT; no-op for native).
+    fn prepare(&mut self, artifact: &str) -> Result<()> {
+        self.meta(artifact).map(|_| ())
+    }
+
+    /// Cache a frozen input so later `run` calls can pass
+    /// `TensorIn::Pinned` instead of re-supplying the host vector.
+    fn pin(&mut self, artifact: &str, input: &str, t: &TensorIn) -> Result<()>;
+
+    /// Drop all pinned inputs.
+    fn unpin_all(&mut self);
+
+    /// Execute an artifact with positional inputs; returns the outputs
+    /// in the artifact's declared order.
+    fn run(&mut self, artifact: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>>;
+
+    /// Cumulative execution statistics.
+    fn stats(&self) -> ExecStats;
+
+    fn reset_stats(&mut self);
+
+    /// Directory for derived caches (pretrained backbones).
+    fn cache_dir(&self) -> PathBuf;
+}
+
+/// Shared positional-input validation: count, element count and dtype
+/// against the artifact signature. `Pinned` slots are skipped (the
+/// backend resolves them against its pin cache).
+pub fn check_inputs(meta: &ArtifactMeta, inputs: &[TensorIn]) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        bail!(
+            "artifact {}: got {} inputs, signature has {}",
+            meta.name,
+            inputs.len(),
+            meta.inputs.len()
+        );
+    }
+    for (spec, t) in meta.inputs.iter().zip(inputs) {
+        if matches!(t, TensorIn::Pinned) {
+            continue;
+        }
+        if t.numel() != spec.numel() {
+            bail!(
+                "artifact {} input {}: got {} elements, want {} {:?}",
+                meta.name,
+                spec.name,
+                t.numel(),
+                spec.numel(),
+                spec.shape
+            );
+        }
+        match (&spec.dtype, t) {
+            (DType::F32, TensorIn::F32(_) | TensorIn::ScalarF32(_)) => {}
+            (DType::I32, TensorIn::I32(_) | TensorIn::ScalarI32(_)) => {}
+            _ => bail!("artifact {} input {}: dtype mismatch", meta.name, spec.name),
+        }
+    }
+    Ok(())
+}

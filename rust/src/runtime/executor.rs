@@ -1,80 +1,15 @@
 //! PJRT execution: compile-once, run-many. Wraps the `xla` crate so the
-//! rest of the system deals only in `TensorIn`/`TensorOut`.
+//! rest of the system deals only in `TensorIn`/`TensorOut`. Compiled
+//! only with `--features pjrt`; the default build uses the pure-Rust
+//! `NativeBackend` instead.
 
-use super::artifact::{DType, Manifest};
-use crate::projection::statics::{Static, StaticData};
+use super::artifact::{ArtifactMeta, DType, Manifest};
+use super::backend::Backend;
+use super::tensor::{ExecStats, TensorIn, TensorOut};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::time::Instant;
-
-/// Host-side input tensor (flat, row-major; shape from the artifact spec).
-#[derive(Debug, Clone)]
-pub enum TensorIn {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-    ScalarF32(f32),
-    ScalarI32(i32),
-    /// Placeholder for an input previously uploaded via `Executor::pin`.
-    Pinned,
-}
-
-impl TensorIn {
-    pub fn numel(&self) -> usize {
-        match self {
-            TensorIn::F32(v) => v.len(),
-            TensorIn::I32(v) => v.len(),
-            _ => 1,
-        }
-    }
-}
-
-impl From<&Static> for TensorIn {
-    fn from(s: &Static) -> TensorIn {
-        match &s.data {
-            StaticData::F32(v) => TensorIn::F32(v.clone()),
-            StaticData::I32(v) => TensorIn::I32(v.clone()),
-        }
-    }
-}
-
-/// Host-side output tensor.
-#[derive(Debug, Clone)]
-pub enum TensorOut {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl TensorOut {
-    pub fn f32(self) -> Result<Vec<f32>> {
-        match self {
-            TensorOut::F32(v) => Ok(v),
-            _ => bail!("expected f32 output"),
-        }
-    }
-
-    pub fn scalar_f32(&self) -> Result<f32> {
-        match self {
-            TensorOut::F32(v) if !v.is_empty() => Ok(v[0]),
-            _ => bail!("expected non-empty f32 output"),
-        }
-    }
-
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            TensorOut::F32(v) => Ok(v),
-            _ => bail!("expected f32 output"),
-        }
-    }
-}
-
-/// Cumulative execution statistics (perf accounting, EXPERIMENTS.md §Perf).
-#[derive(Debug, Default, Clone)]
-pub struct ExecStats {
-    pub compile_secs: f64,
-    pub execute_secs: f64,
-    pub transfer_secs: f64,
-    pub executions: u64,
-}
 
 /// Compile-once executable cache over the PJRT CPU client.
 pub struct Executor {
@@ -86,7 +21,7 @@ pub struct Executor {
     /// are not cloned on every step; true device residency via
     /// execute_b was measured to SIGSEGV in xla 0.1.6 — the crate's
     /// buffer execute appears to donate inputs — so pinning caches the
-    //// prepared Literal host-side instead).
+    /// prepared Literal host-side instead).
     pinned: HashMap<String, xla::Literal>,
     pub stats: ExecStats,
 }
@@ -244,5 +179,71 @@ impl Executor {
     /// Number of compiled executables held.
     pub fn compiled_count(&self) -> usize {
         self.cache.len()
+    }
+}
+
+/// `Backend` adapter over the PJRT executor.
+///
+/// The `xla` crate's client holds `Rc`/raw pointers, so `Executor` is
+/// not auto-Send. The serving stack moves the *whole* backend into
+/// exactly one worker thread and never touches it from another, which
+/// makes the transfer sound: the non-Send internals are never aliased
+/// across threads.
+pub struct PjrtBackend {
+    pub exec: Executor,
+}
+
+// SAFETY: see above — single-owner move, no cross-thread aliasing.
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new(exec: Executor) -> PjrtBackend {
+        PjrtBackend { exec }
+    }
+
+    pub fn with_default_manifest() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { exec: Executor::with_default_manifest()? })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn meta(&self, artifact: &str) -> Result<&ArtifactMeta> {
+        self.exec.manifest.get(artifact)
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        self.exec.manifest.artifacts.keys().cloned().collect()
+    }
+
+    fn prepare(&mut self, artifact: &str) -> Result<()> {
+        self.exec.prepare(artifact)
+    }
+
+    fn pin(&mut self, artifact: &str, input: &str, t: &TensorIn) -> Result<()> {
+        self.exec.pin(artifact, input, t)
+    }
+
+    fn unpin_all(&mut self) {
+        self.exec.unpin_all();
+    }
+
+    fn run(&mut self, artifact: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+        self.exec.run(artifact, inputs)
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.exec.stats.clone()
+    }
+
+    fn reset_stats(&mut self) {
+        self.exec.stats = ExecStats::default();
+    }
+
+    fn cache_dir(&self) -> PathBuf {
+        self.exec.manifest.dir.clone()
     }
 }

@@ -1,9 +1,70 @@
-//! L3 runtime: loads the AOT HLO artifacts and executes them on the
-//! PJRT CPU client. This is the only place the `xla` crate is touched;
-//! everything above works with plain `Vec<f32>`/`Vec<i32>` tensors.
+//! L3 runtime: execution backends behind the `Backend` trait.
+//!
+//! - `native` (default): pure-Rust CPU forward/backward for every
+//!   artifact kind — no Python, no artifacts, no PJRT.
+//! - `executor` (`--features pjrt`): loads AOT HLO artifacts and runs
+//!   them on the PJRT CPU client (the only place the `xla` crate is
+//!   touched).
+//!
+//! Everything above works with plain `Vec<f32>`/`Vec<i32>` tensors and
+//! `&mut dyn Backend`.
 
 pub mod artifact;
+pub mod backend;
+pub mod native;
+pub mod spec;
+pub mod tensor;
+
+#[cfg(feature = "pjrt")]
 pub mod executor;
 
 pub use artifact::{ArtifactMeta, InputSpec, Manifest, SegmentSpec};
-pub use executor::{Executor, TensorIn, TensorOut};
+pub use backend::Backend;
+pub use native::NativeBackend;
+pub use tensor::{ExecStats, TensorIn, TensorOut};
+
+#[cfg(feature = "pjrt")]
+pub use executor::{Executor, PjrtBackend};
+
+use anyhow::Result;
+
+/// Construct a backend by name: "native" or "pjrt".
+pub fn backend_by_name(name: &str) -> Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new()?)),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(PjrtBackend::with_default_manifest()?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!(
+            "this binary was built without the `pjrt` feature; rebuild with \
+             `cargo build --features pjrt` (and AOT artifacts) to use the PJRT backend"
+        ),
+        other => anyhow::bail!("unknown backend {other:?} (expected \"native\" or \"pjrt\")"),
+    }
+}
+
+/// The default backend: $UNI_LORA_BACKEND if set, else native.
+pub fn default_backend() -> Result<Box<dyn Backend>> {
+    let name = std::env::var("UNI_LORA_BACKEND").unwrap_or_else(|_| "native".to_string());
+    backend_by_name(&name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_is_native() {
+        // (env override is exercised manually; tests must not depend on env)
+        let be = backend_by_name("native").unwrap();
+        assert_eq!(be.name(), "native");
+        assert!(backend_by_name("bogus").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let err = backend_by_name("pjrt").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,560 @@
+//! NativeBackend: the pure-Rust CPU execution backend. Implements every
+//! artifact kind the coordinator drives — `cls_train`, `cls_eval`,
+//! `lm_train`, `lm_logits`, `pretrain_lm`, `full_cls_train` — with the
+//! exact positional signatures the PJRT artifacts expose, so trainers,
+//! the serving router, benches and examples run end-to-end with zero
+//! external dependencies (no Python, no HLO artifacts, no PJRT).
+//!
+//! Method support: forward/eval paths work for every PEFT method (the
+//! delta expansion reuses `projection::reconstruct`). Training is
+//! implemented for the methods with a native adjoint — the uni family
+//! (via the O(D) scatter `uni::project_t`), plain LoRA (identity) and
+//! "none"/full fine-tuning. Training the remaining baselines natively
+//! is an open item (ROADMAP); they bail with a clear message.
+
+pub mod model;
+
+use super::artifact::ArtifactMeta;
+use super::backend::{check_inputs, Backend};
+use super::spec;
+use super::tensor::{ExecStats, TensorIn, TensorOut};
+use crate::config::ModelCfg;
+use crate::projection::reconstruct::{reconstruct_with_statics, ModuleDelta};
+use crate::projection::statics::{Static, StaticData};
+use crate::projection::uni;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::time::Instant;
+
+pub struct NativeBackend {
+    manifest: BTreeMap<String, ArtifactMeta>,
+    pinned: HashMap<String, TensorIn>,
+    stats: ExecStats,
+}
+
+impl NativeBackend {
+    pub fn new() -> Result<NativeBackend> {
+        Ok(NativeBackend {
+            manifest: spec::native_manifest()?,
+            pinned: HashMap::new(),
+            stats: ExecStats::default(),
+        })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn meta(&self, artifact: &str) -> Result<&ArtifactMeta> {
+        self.manifest.get(artifact).ok_or_else(|| {
+            anyhow!(
+                "no artifact {artifact:?} in native registry ({} entries)",
+                self.manifest.len()
+            )
+        })
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        self.manifest.keys().cloned().collect()
+    }
+
+    fn pin(&mut self, artifact: &str, input: &str, t: &TensorIn) -> Result<()> {
+        use super::artifact::DType;
+        let (expected, dtype) = {
+            let meta = self.meta(artifact)?;
+            let i = meta.input_index(input)?;
+            (meta.inputs[i].numel(), meta.inputs[i].dtype.clone())
+        };
+        anyhow::ensure!(
+            t.numel() == expected,
+            "pin {artifact}/{input}: got {} elements, want {expected}",
+            t.numel()
+        );
+        match (&dtype, t) {
+            (DType::F32, TensorIn::F32(_) | TensorIn::ScalarF32(_)) => {}
+            (DType::I32, TensorIn::I32(_) | TensorIn::ScalarI32(_)) => {}
+            _ => bail!("pin {artifact}/{input}: dtype mismatch"),
+        }
+        self.pinned.insert(format!("{artifact}/{input}"), t.clone());
+        Ok(())
+    }
+
+    fn unpin_all(&mut self) {
+        self.pinned.clear();
+    }
+
+    fn run(&mut self, name: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+        let t0 = Instant::now();
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact {name:?} in native registry"))?;
+        check_inputs(meta, inputs)?;
+        let mut resolved: Vec<&TensorIn> = Vec::with_capacity(inputs.len());
+        for (spec_in, t) in meta.inputs.iter().zip(inputs) {
+            if matches!(t, TensorIn::Pinned) {
+                let key = format!("{name}/{}", spec_in.name);
+                let p = self.pinned.get(&key).ok_or_else(|| {
+                    anyhow!("artifact {name} input {}: Pinned but never pin()ed", spec_in.name)
+                })?;
+                resolved.push(p);
+            } else {
+                resolved.push(t);
+            }
+        }
+        let out = execute(meta, &resolved).with_context(|| format!("native execution of {name}"))?;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+        Ok(out)
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.stats.clone()
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+    }
+
+    fn cache_dir(&self) -> PathBuf {
+        std::env::var("UNI_LORA_CACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| std::env::temp_dir().join("uni_lora_native_cache"))
+    }
+}
+
+// ------------------------------------------------------------------
+// dispatch
+
+fn execute(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
+    match meta.kind.as_str() {
+        "cls_train" => cls_train(meta, ins),
+        "cls_eval" => cls_eval(meta, ins),
+        "lm_train" => lm_train(meta, ins),
+        "lm_logits" => lm_logits(meta, ins),
+        "pretrain_lm" => pretrain_lm(meta, ins),
+        "full_cls_train" => full_cls_train(meta, ins),
+        other => bail!("native backend: unsupported artifact kind {other:?}"),
+    }
+}
+
+/// Rebuild `Static` structs from the trailing statics inputs.
+fn parse_statics(meta: &ArtifactMeta, ins: &[&TensorIn], start: usize) -> Result<Vec<Static>> {
+    let mut out = Vec::with_capacity(meta.inputs.len() - start);
+    for (spec_in, t) in meta.inputs[start..].iter().zip(&ins[start..]) {
+        let data = match t {
+            TensorIn::F32(v) => StaticData::F32(v.clone()),
+            TensorIn::I32(v) => StaticData::I32(v.clone()),
+            _ => bail!("static input {} must be a full tensor", spec_in.name),
+        };
+        out.push(Static { name: spec_in.name.clone(), shape: spec_in.shape.clone(), data });
+    }
+    Ok(out)
+}
+
+/// Methods the native backend can train (i.e. has a reconstruct
+/// adjoint for). Single source of truth — consumed by
+/// `ensure_trainable` and by callers that want to skip untrainable
+/// rows up front (examples/paper_tables).
+pub const TRAINABLE_METHODS: [&str; 5] = ["uni", "local", "nonuniform", "lora", "none"];
+
+/// Whether the native backend can run the train artifact kinds for a
+/// method (eval/logits kinds work for every method).
+pub fn can_train(method: &str) -> bool {
+    TRAINABLE_METHODS.contains(&method)
+}
+
+fn ensure_trainable(cfg: &ModelCfg) -> Result<()> {
+    if can_train(cfg.method.as_str()) {
+        return Ok(());
+    }
+    bail!(
+        "native backend trains methods {}; method {:?} is eval/serve-only here — \
+         use `--features pjrt` with AOT artifacts to train it",
+        TRAINABLE_METHODS.join("/"),
+        cfg.method
+    )
+}
+
+/// Map per-module factor gradients back onto the trainable vector
+/// (the adjoint of each supported method's reconstruct map).
+fn theta_grad(
+    cfg: &ModelCfg,
+    theta_len: usize,
+    stats: &[Static],
+    grads: &model::Gradients,
+) -> Result<Vec<f32>> {
+    match cfg.method.as_str() {
+        "uni" | "local" | "nonuniform" => {
+            let mut g_flat = Vec::with_capacity(cfg.d_full());
+            for mg in &grads.modules {
+                g_flat.extend(&mg.a);
+                g_flat.extend(&mg.b);
+            }
+            Ok(uni::project_t(&g_flat, stats[0].as_i32(), stats[1].as_f32(), cfg.d))
+        }
+        "lora" => {
+            // theta IS the per-module (A, B) stack: identity adjoint
+            let mut g = Vec::with_capacity(theta_len);
+            for mg in &grads.modules {
+                g.extend(&mg.a);
+                g.extend(&mg.b);
+            }
+            anyhow::ensure!(g.len() == theta_len, "lora grad layout mismatch");
+            Ok(g)
+        }
+        "none" => Ok(vec![0f32; theta_len]),
+        other => bail!("no native gradient for method {other:?}"),
+    }
+}
+
+fn zero_deltas(cfg: &ModelCfg) -> Vec<ModuleDelta> {
+    let ar = cfg.hidden * cfg.rank;
+    (0..cfg.n_modules())
+        .map(|_| ModuleDelta::LowRank { a: vec![0.0; ar], b: vec![0.0; ar] })
+        .collect()
+}
+
+// ------------------------------------------------------------------
+// artifact kinds
+
+fn cls_train(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
+    let cfg = &meta.cfg;
+    ensure_trainable(cfg)?;
+    let mut theta = ins[0].as_f32()?.to_vec();
+    let mut m = ins[1].as_f32()?.to_vec();
+    let mut v = ins[2].as_f32()?.to_vec();
+    let mut head = ins[3].as_f32()?.to_vec();
+    let mut hm = ins[4].as_f32()?.to_vec();
+    let mut hv = ins[5].as_f32()?.to_vec();
+    let step = ins[6].scalar_i32()?;
+    let lr_t = ins[7].scalar_f32()?;
+    let lr_h = ins[8].scalar_f32()?;
+    let wd = ins[9].scalar_f32()?;
+    let w0 = ins[10].as_f32()?;
+    let tokens = ins[11].as_i32()?;
+    let attn_len = ins[12].as_i32()?;
+    let stats = parse_statics(meta, ins, 14)?;
+
+    let base = model::BaseMap::new(cfg, w0)?;
+    let deltas = reconstruct_with_statics(cfg, &stats, &theta)?;
+    let fc = model::forward(cfg, &base, &deltas, tokens)?;
+    let ch = model::cls_head_forward(cfg, &fc.hidden, &head, attn_len);
+    let c = cfg.n_classes.max(1);
+    let (loss, d_logits) = if cfg.n_classes == 1 {
+        model::mse_mean(&ch.logits, ins[13].as_f32()?, cfg.batch)
+    } else {
+        model::softmax_xent_mean(&ch.logits, ins[13].as_i32()?, cfg.batch, c)?
+    };
+    let (g_head, d_hidden) = model::cls_head_backward(cfg, &ch, &head, &d_logits);
+    let grads = model::backward(cfg, &base, &deltas, tokens, &fc, &d_hidden, false)?;
+    let g_theta = theta_grad(cfg, theta.len(), &stats, &grads)?;
+    model::adamw(&mut theta, &g_theta, &mut m, &mut v, step, lr_t, wd);
+    model::adamw(&mut head, &g_head, &mut hm, &mut hv, step, lr_h, 0.0);
+    Ok(vec![
+        TensorOut::F32(theta),
+        TensorOut::F32(m),
+        TensorOut::F32(v),
+        TensorOut::F32(head),
+        TensorOut::F32(hm),
+        TensorOut::F32(hv),
+        TensorOut::F32(vec![loss]),
+    ])
+}
+
+fn cls_eval(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
+    let cfg = &meta.cfg;
+    let theta = ins[0].as_f32()?;
+    let head = ins[1].as_f32()?;
+    let w0 = ins[2].as_f32()?;
+    let tokens = ins[3].as_i32()?;
+    let attn_len = ins[4].as_i32()?;
+    let stats = parse_statics(meta, ins, 5)?;
+    let base = model::BaseMap::new(cfg, w0)?;
+    let deltas = reconstruct_with_statics(cfg, &stats, theta)?;
+    let fc = model::forward(cfg, &base, &deltas, tokens)?;
+    let ch = model::cls_head_forward(cfg, &fc.hidden, head, attn_len);
+    Ok(vec![TensorOut::F32(ch.logits)])
+}
+
+fn lm_train(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
+    let cfg = &meta.cfg;
+    ensure_trainable(cfg)?;
+    let mut theta = ins[0].as_f32()?.to_vec();
+    let mut m = ins[1].as_f32()?.to_vec();
+    let mut v = ins[2].as_f32()?.to_vec();
+    let step = ins[3].scalar_i32()?;
+    let lr_t = ins[4].scalar_f32()?;
+    let wd = ins[5].scalar_f32()?;
+    let w0 = ins[6].as_f32()?;
+    let tokens = ins[7].as_i32()?;
+    let labels = ins[8].as_i32()?;
+    let stats = parse_statics(meta, ins, 9)?;
+    let bt = cfg.batch * cfg.seq;
+
+    let base = model::BaseMap::new(cfg, w0)?;
+    let deltas = reconstruct_with_statics(cfg, &stats, &theta)?;
+    let fc = model::forward(cfg, &base, &deltas, tokens)?;
+    let logits = model::lm_head_forward(cfg, &base, &fc.hidden);
+    let (loss, d_logits) = model::lm_xent_masked(&logits, labels, bt, cfg.vocab)?;
+    let mut d_hidden = vec![0f32; bt * cfg.hidden];
+    model::matmul_nt(&d_logits, base.seg("lm_head"), &mut d_hidden, bt, cfg.hidden, cfg.vocab, false);
+    let grads = model::backward(cfg, &base, &deltas, tokens, &fc, &d_hidden, false)?;
+    let g_theta = theta_grad(cfg, theta.len(), &stats, &grads)?;
+    model::adamw(&mut theta, &g_theta, &mut m, &mut v, step, lr_t, wd);
+    Ok(vec![
+        TensorOut::F32(theta),
+        TensorOut::F32(m),
+        TensorOut::F32(v),
+        TensorOut::F32(vec![loss]),
+    ])
+}
+
+fn lm_logits(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
+    let cfg = &meta.cfg;
+    let theta = ins[0].as_f32()?;
+    let w0 = ins[1].as_f32()?;
+    let tokens = ins[2].as_i32()?;
+    let stats = parse_statics(meta, ins, 3)?;
+    let base = model::BaseMap::new(cfg, w0)?;
+    let deltas = reconstruct_with_statics(cfg, &stats, theta)?;
+    let fc = model::forward(cfg, &base, &deltas, tokens)?;
+    let logits = model::lm_head_forward(cfg, &base, &fc.hidden);
+    Ok(vec![TensorOut::F32(logits)])
+}
+
+fn pretrain_lm(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
+    let cfg = &meta.cfg;
+    let mut w0 = ins[0].as_f32()?.to_vec();
+    let mut m = ins[1].as_f32()?.to_vec();
+    let mut v = ins[2].as_f32()?.to_vec();
+    let step = ins[3].scalar_i32()?;
+    let lr = ins[4].scalar_f32()?;
+    let wd = ins[5].scalar_f32()?;
+    let tokens = ins[6].as_i32()?;
+    let labels = ins[7].as_i32()?;
+    let bt = cfg.batch * cfg.seq;
+    let deltas = zero_deltas(cfg);
+
+    let (loss, gw0) = {
+        let base = model::BaseMap::new(cfg, &w0)?;
+        let fc = model::forward(cfg, &base, &deltas, tokens)?;
+        let logits = model::lm_head_forward(cfg, &base, &fc.hidden);
+        let (loss, d_logits) = model::lm_xent_masked(&logits, labels, bt, cfg.vocab)?;
+        let mut d_hidden = vec![0f32; bt * cfg.hidden];
+        model::matmul_nt(
+            &d_logits,
+            base.seg("lm_head"),
+            &mut d_hidden,
+            bt,
+            cfg.hidden,
+            cfg.vocab,
+            false,
+        );
+        let grads = model::backward(cfg, &base, &deltas, tokens, &fc, &d_hidden, true)?;
+        let mut gw0 = grads.w0.expect("w0 gradients requested");
+        // lm_head is part of w0 but applied outside forward(); add here
+        let (o, n) = base.offset("lm_head");
+        model::matmul_tn(&fc.hidden, &d_logits, &mut gw0[o..o + n], bt, cfg.hidden, cfg.vocab);
+        (loss, gw0)
+    };
+    model::adamw(&mut w0, &gw0, &mut m, &mut v, step, lr, wd);
+    Ok(vec![
+        TensorOut::F32(w0),
+        TensorOut::F32(m),
+        TensorOut::F32(v),
+        TensorOut::F32(vec![loss]),
+    ])
+}
+
+fn full_cls_train(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
+    let cfg = &meta.cfg;
+    let mut w0 = ins[0].as_f32()?.to_vec();
+    let mut m = ins[1].as_f32()?.to_vec();
+    let mut v = ins[2].as_f32()?.to_vec();
+    let mut head = ins[3].as_f32()?.to_vec();
+    let mut hm = ins[4].as_f32()?.to_vec();
+    let mut hv = ins[5].as_f32()?.to_vec();
+    let step = ins[6].scalar_i32()?;
+    let lr_t = ins[7].scalar_f32()?;
+    let lr_h = ins[8].scalar_f32()?;
+    let wd = ins[9].scalar_f32()?;
+    let tokens = ins[10].as_i32()?;
+    let attn_len = ins[11].as_i32()?;
+    let deltas = zero_deltas(cfg);
+    let c = cfg.n_classes.max(1);
+
+    let (loss, gw0, g_head) = {
+        let base = model::BaseMap::new(cfg, &w0)?;
+        let fc = model::forward(cfg, &base, &deltas, tokens)?;
+        let ch = model::cls_head_forward(cfg, &fc.hidden, &head, attn_len);
+        let (loss, d_logits) = if cfg.n_classes == 1 {
+            model::mse_mean(&ch.logits, ins[12].as_f32()?, cfg.batch)
+        } else {
+            model::softmax_xent_mean(&ch.logits, ins[12].as_i32()?, cfg.batch, c)?
+        };
+        let (g_head, d_hidden) = model::cls_head_backward(cfg, &ch, &head, &d_logits);
+        let grads = model::backward(cfg, &base, &deltas, tokens, &fc, &d_hidden, true)?;
+        (loss, grads.w0.expect("w0 gradients requested"), g_head)
+    };
+    model::adamw(&mut w0, &gw0, &mut m, &mut v, step, lr_t, wd);
+    model::adamw(&mut head, &g_head, &mut hm, &mut hv, step, lr_h, 0.0);
+    Ok(vec![
+        TensorOut::F32(w0),
+        TensorOut::F32(m),
+        TensorOut::F32(v),
+        TensorOut::F32(head),
+        TensorOut::F32(hm),
+        TensorOut::F32(hv),
+        TensorOut::F32(vec![loss]),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::statics::{gen_statics, init_theta};
+    use crate::rng;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new().unwrap()
+    }
+
+    fn init_base_for(be: &NativeBackend, art: &str, seed: u64) -> Vec<f32> {
+        crate::coordinator::init_base(be.meta(art).unwrap(), seed)
+    }
+
+    #[test]
+    fn rejects_bad_input_counts_and_unknown_artifacts() {
+        let mut be = backend();
+        let err = be
+            .run("glue_base_uni_c2_cls_eval", &[TensorIn::F32(vec![0.0])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("inputs"), "{err}");
+        assert!(be.run("no_such_artifact", &[]).is_err());
+        assert!(be.meta("nope").is_err());
+        assert!(be.artifact_names().len() >= 100);
+    }
+
+    #[test]
+    fn cls_eval_produces_finite_logits() {
+        let mut be = backend();
+        let art = "glue_base_uni_c2_cls_eval";
+        let meta = be.meta(art).unwrap().clone();
+        let cfg = meta.cfg.clone();
+        let theta = init_theta(&cfg, 1).unwrap();
+        let head = vec![0f32; meta.head_params];
+        let w0 = init_base_for(&be, art, 1);
+        let stats = gen_statics(&cfg, 1).unwrap();
+        let tokens = rng::indices(3, cfg.batch * cfg.seq, cfg.vocab);
+        let attn_len = vec![cfg.seq as i32; cfg.batch];
+        let mut inputs = vec![
+            TensorIn::F32(theta),
+            TensorIn::F32(head),
+            TensorIn::F32(w0),
+            TensorIn::I32(tokens),
+            TensorIn::I32(attn_len),
+        ];
+        inputs.extend(stats.iter().map(TensorIn::from));
+        let out = be.run(art, &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let logits = out[0].as_f32().unwrap();
+        assert_eq!(logits.len(), cfg.batch * cfg.n_classes);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(be.stats().executions, 1);
+    }
+
+    #[test]
+    fn eval_works_for_every_method_train_gates_unsupported() {
+        let mut be = backend();
+        // vera is eval-only natively: eval runs, train bails clearly
+        let art = "glue_base_vera_c2_cls_eval";
+        let meta = be.meta(art).unwrap().clone();
+        let cfg = meta.cfg.clone();
+        let theta = init_theta(&cfg, 2).unwrap();
+        let stats = gen_statics(&cfg, 2).unwrap();
+        let w0 = init_base_for(&be, art, 2);
+        let mut inputs = vec![
+            TensorIn::F32(theta.clone()),
+            TensorIn::F32(vec![0f32; meta.head_params]),
+            TensorIn::F32(w0.clone()),
+            TensorIn::I32(rng::indices(5, cfg.batch * cfg.seq, cfg.vocab)),
+            TensorIn::I32(vec![cfg.seq as i32; cfg.batch]),
+        ];
+        inputs.extend(stats.iter().map(TensorIn::from));
+        assert!(be.run(art, &inputs).is_ok());
+
+        assert!(!can_train("vera") && can_train("uni"));
+        let train = "glue_base_vera_c2_cls_train";
+        let tmeta = be.meta(train).unwrap().clone();
+        let mut tin = vec![
+            TensorIn::F32(theta.clone()),
+            TensorIn::F32(vec![0f32; theta.len()]),
+            TensorIn::F32(vec![0f32; theta.len()]),
+            TensorIn::F32(vec![0f32; tmeta.head_params]),
+            TensorIn::F32(vec![0f32; tmeta.head_params]),
+            TensorIn::F32(vec![0f32; tmeta.head_params]),
+            TensorIn::ScalarI32(1),
+            TensorIn::ScalarF32(1e-3),
+            TensorIn::ScalarF32(1e-2),
+            TensorIn::ScalarF32(0.0),
+            TensorIn::F32(w0),
+            TensorIn::I32(rng::indices(5, cfg.batch * cfg.seq, cfg.vocab)),
+            TensorIn::I32(vec![cfg.seq as i32; cfg.batch]),
+            TensorIn::I32(vec![0; cfg.batch]),
+        ];
+        tin.extend(stats.iter().map(TensorIn::from));
+        let err = be.run(train, &tin).unwrap_err().to_string();
+        assert!(err.contains("eval/serve-only"), "{err}");
+    }
+
+    #[test]
+    fn pinning_validates_and_resolves() {
+        let mut be = backend();
+        let art = "glue_base_uni_c2_cls_train";
+        // wrong size rejected
+        assert!(be.pin(art, "w0", &TensorIn::F32(vec![0.0])).is_err());
+        // unknown input rejected
+        assert!(be.pin(art, "nope", &TensorIn::F32(vec![0.0])).is_err());
+        // Pinned without pin() rejected at run time
+        let meta = be.meta(art).unwrap().clone();
+        let cfg = meta.cfg.clone();
+        // right size, wrong dtype rejected (tokens is i32)
+        assert!(be
+            .pin(art, "tokens", &TensorIn::F32(vec![0.0; cfg.batch * cfg.seq]))
+            .is_err());
+        let theta = init_theta(&cfg, 1).unwrap();
+        let stats = gen_statics(&cfg, 1).unwrap();
+        let mut inputs = vec![
+            TensorIn::F32(theta.clone()),
+            TensorIn::F32(vec![0f32; theta.len()]),
+            TensorIn::F32(vec![0f32; theta.len()]),
+            TensorIn::F32(vec![0f32; meta.head_params]),
+            TensorIn::F32(vec![0f32; meta.head_params]),
+            TensorIn::F32(vec![0f32; meta.head_params]),
+            TensorIn::ScalarI32(1),
+            TensorIn::ScalarF32(5e-3),
+            TensorIn::ScalarF32(5e-2),
+            TensorIn::ScalarF32(0.0),
+            TensorIn::Pinned,
+            TensorIn::I32(rng::indices(7, cfg.batch * cfg.seq, cfg.vocab)),
+            TensorIn::I32(vec![cfg.seq as i32; cfg.batch]),
+            TensorIn::I32(vec![0; cfg.batch]),
+        ];
+        inputs.extend(stats.iter().map(TensorIn::from));
+        let err = be.run(art, &inputs).unwrap_err().to_string();
+        assert!(err.contains("pin"), "{err}");
+        // after pinning, the same call succeeds
+        let w0 = init_base_for(&be, art, 1);
+        be.pin(art, "w0", &TensorIn::F32(w0)).unwrap();
+        let out = be.run(art, &inputs).unwrap();
+        assert_eq!(out.len(), 7);
+        assert!(out[6].scalar_f32().unwrap().is_finite());
+        be.unpin_all();
+        assert!(be.run(art, &inputs).is_err());
+    }
+}

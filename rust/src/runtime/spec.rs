@@ -1,0 +1,410 @@
+//! Rust-side artifact specifications: the same registry, layouts and
+//! positional signatures that `python/compile/aot.py` lowers to HLO,
+//! declared natively so the pure-Rust backend needs neither Python nor
+//! an `artifacts/` directory. `python/compile/{model,methods,aot}.py`
+//! remain the executable documentation; the shapes here MUST stay in
+//! sync with them (the pjrt-gated manifest tests cross-check when
+//! artifacts are present).
+
+use super::artifact::{ArtifactMeta, DType, InputSpec, SegmentSpec};
+use crate::config::ModelCfg;
+use crate::projection::statics::{d_effective, fastfood_blocks, theta_segments};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Flat layout of the frozen backbone — mirror of model.base_segments.
+pub fn base_segments(cfg: &ModelCfg) -> Vec<SegmentSpec> {
+    let (h, f, v, t) = (cfg.hidden, cfg.ffn, cfg.vocab, cfg.seq);
+    let seg = |name: String, shape: Vec<usize>, init: &str| SegmentSpec {
+        name,
+        shape,
+        init: init.into(),
+    };
+    let mut out = vec![
+        seg("tok_emb".into(), vec![v, h], "normal:0.02"),
+        seg("pos_emb".into(), vec![t, h], "normal:0.02"),
+    ];
+    for l in 0..cfg.layers {
+        out.push(seg(format!("ln1_g{l}"), vec![h], "ones"));
+        out.push(seg(format!("ln1_b{l}"), vec![h], "zeros"));
+        out.push(seg(format!("wq{l}"), vec![h, h], "normal:0.02"));
+        out.push(seg(format!("wk{l}"), vec![h, h], "normal:0.02"));
+        out.push(seg(format!("wv{l}"), vec![h, h], "normal:0.02"));
+        out.push(seg(format!("wo{l}"), vec![h, h], "normal:0.02"));
+        out.push(seg(format!("ln2_g{l}"), vec![h], "ones"));
+        out.push(seg(format!("ln2_b{l}"), vec![h], "zeros"));
+        out.push(seg(format!("w1{l}"), vec![h, f], "normal:0.02"));
+        out.push(seg(format!("w2{l}"), vec![f, h], "normal:0.02"));
+    }
+    out.push(seg("lnf_g".into(), vec![h], "ones"));
+    out.push(seg("lnf_b".into(), vec![h], "zeros"));
+    out.push(seg("lm_head".into(), vec![h, v], "normal:0.02"));
+    out
+}
+
+/// Total frozen-backbone parameter count — mirror of model.base_param_count.
+pub fn base_param_count(cfg: &ModelCfg) -> usize {
+    base_segments(cfg).iter().map(|s| s.numel()).sum()
+}
+
+/// Classification head parameter count — mirror of model.head_param_count.
+pub fn head_param_count(cfg: &ModelCfg) -> usize {
+    let c = cfg.n_classes.max(1);
+    cfg.hidden * c + c
+}
+
+/// Frozen side-input signature — mirror of methods.statics_spec.
+pub fn statics_spec(cfg: &ModelCfg) -> Vec<InputSpec> {
+    let (h, r, nm, d, big_d) = (cfg.hidden, cfg.rank, cfg.n_modules(), cfg.d, cfg.d_full());
+    let f32s = |name: &str, shape: Vec<usize>| InputSpec {
+        name: name.into(),
+        dtype: DType::F32,
+        shape,
+    };
+    let i32s = |name: &str, shape: Vec<usize>| InputSpec {
+        name: name.into(),
+        dtype: DType::I32,
+        shape,
+    };
+    match cfg.method.as_str() {
+        "uni" | "local" | "nonuniform" => {
+            vec![i32s("idx", vec![big_d]), f32s("nrm", vec![big_d])]
+        }
+        "fastfood" => {
+            let nb = fastfood_blocks(cfg);
+            vec![
+                f32s("sgn_b", vec![nm, nb, d]),
+                f32s("gauss", vec![nm, nb, d]),
+                i32s("perm", vec![nm, nb, d]),
+                f32s("sgn_s", vec![nm, nb, d]),
+            ]
+        }
+        "vera" => vec![f32s("pa_t", vec![h, r]), f32s("pb_t", vec![r, h])],
+        "vb" => {
+            let n_sub = big_d / cfg.vb_b;
+            vec![i32s("top_idx", vec![n_sub, cfg.vb_k])]
+        }
+        "lora_xs" => vec![f32s("pa_t", vec![nm, h, r]), f32s("pb_t", vec![nm, r, h])],
+        "fourierft" => vec![i32s("freq", vec![nm, cfg.n_coef, 2])],
+        _ => vec![], // lora, tied, none
+    }
+}
+
+/// Positional input signature + output order — mirror of aot.signature.
+pub fn signature(cfg: &ModelCfg, kind: &str) -> Result<(Vec<InputSpec>, Vec<String>)> {
+    let d = d_effective(cfg);
+    let dh = head_param_count(cfg);
+    let p = base_param_count(cfg);
+    let (b, t) = (cfg.batch, cfg.seq);
+    let lab_dt = if cfg.n_classes == 1 { DType::F32 } else { DType::I32 };
+    let f32s = |name: &str, shape: Vec<usize>| InputSpec {
+        name: name.into(),
+        dtype: DType::F32,
+        shape,
+    };
+    let i32s = |name: &str, shape: Vec<usize>| InputSpec {
+        name: name.into(),
+        dtype: DType::I32,
+        shape,
+    };
+    let strs = |names: &[&str]| names.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    let stat = statics_spec(cfg);
+    Ok(match kind {
+        "cls_train" => {
+            let mut sig = vec![
+                f32s("theta", vec![d]),
+                f32s("m", vec![d]),
+                f32s("v", vec![d]),
+                f32s("head", vec![dh]),
+                f32s("hm", vec![dh]),
+                f32s("hv", vec![dh]),
+                i32s("step", vec![]),
+                f32s("lr_t", vec![]),
+                f32s("lr_h", vec![]),
+                f32s("wd", vec![]),
+                f32s("w0", vec![p]),
+                i32s("tokens", vec![b, t]),
+                i32s("attn_len", vec![b]),
+                InputSpec { name: "labels".into(), dtype: lab_dt, shape: vec![b] },
+            ];
+            sig.extend(stat);
+            (sig, strs(&["theta", "m", "v", "head", "hm", "hv", "loss"]))
+        }
+        "cls_eval" => {
+            let mut sig = vec![
+                f32s("theta", vec![d]),
+                f32s("head", vec![dh]),
+                f32s("w0", vec![p]),
+                i32s("tokens", vec![b, t]),
+                i32s("attn_len", vec![b]),
+            ];
+            sig.extend(stat);
+            (sig, strs(&["logits"]))
+        }
+        "lm_train" => {
+            let mut sig = vec![
+                f32s("theta", vec![d]),
+                f32s("m", vec![d]),
+                f32s("v", vec![d]),
+                i32s("step", vec![]),
+                f32s("lr_t", vec![]),
+                f32s("wd", vec![]),
+                f32s("w0", vec![p]),
+                i32s("tokens", vec![b, t]),
+                i32s("labels", vec![b, t]),
+            ];
+            sig.extend(stat);
+            (sig, strs(&["theta", "m", "v", "loss"]))
+        }
+        "lm_logits" => {
+            let mut sig = vec![
+                f32s("theta", vec![d]),
+                f32s("w0", vec![p]),
+                i32s("tokens", vec![b, t]),
+            ];
+            sig.extend(stat);
+            (sig, strs(&["logits"]))
+        }
+        "pretrain_lm" => (
+            vec![
+                f32s("w0", vec![p]),
+                f32s("m", vec![p]),
+                f32s("v", vec![p]),
+                i32s("step", vec![]),
+                f32s("lr", vec![]),
+                f32s("wd", vec![]),
+                i32s("tokens", vec![b, t]),
+                i32s("labels", vec![b, t]),
+            ],
+            strs(&["w0", "m", "v", "loss"]),
+        ),
+        "full_cls_train" => (
+            vec![
+                f32s("w0", vec![p]),
+                f32s("m", vec![p]),
+                f32s("v", vec![p]),
+                f32s("head", vec![dh]),
+                f32s("hm", vec![dh]),
+                f32s("hv", vec![dh]),
+                i32s("step", vec![]),
+                f32s("lr_t", vec![]),
+                f32s("lr_h", vec![]),
+                f32s("wd", vec![]),
+                i32s("tokens", vec![b, t]),
+                i32s("attn_len", vec![b]),
+                InputSpec { name: "labels".into(), dtype: lab_dt, shape: vec![b] },
+            ],
+            strs(&["w0", "m", "v", "head", "hm", "hv", "loss"]),
+        ),
+        other => bail!("unknown artifact kind {other:?}"),
+    })
+}
+
+/// Build the full metadata record for one (name, cfg, kind).
+pub fn artifact_meta(name: &str, cfg: &ModelCfg, kind: &str) -> Result<ArtifactMeta> {
+    cfg.validate()?;
+    let (inputs, outputs) = signature(cfg, kind)?;
+    let theta_segs = theta_segments(cfg)
+        .into_iter()
+        .map(|(n, shape, init)| SegmentSpec { name: n, shape, init })
+        .collect();
+    Ok(ArtifactMeta {
+        name: name.to_string(),
+        kind: kind.to_string(),
+        cfg: cfg.clone(),
+        d: d_effective(cfg),
+        big_d: cfg.d_full(),
+        base_params: base_param_count(cfg),
+        head_params: head_param_count(cfg),
+        theta_segments: theta_segs,
+        base_segments: base_segments(cfg),
+        inputs,
+        outputs,
+        hlo_path: PathBuf::from("native").join(format!("{name}.hlo.txt")),
+    })
+}
+
+/// Methods in the GLUE suite (Table 2) — mirror of aot.GLUE_METHODS.
+pub const GLUE_METHODS: [&str; 7] = ["lora", "vera", "tied", "vb", "lora_xs", "fourierft", "uni"];
+/// Table 6/7 ablations — mirror of aot.ABLATION_METHODS.
+pub const ABLATION_METHODS: [&str; 3] = ["local", "nonuniform", "fastfood"];
+/// LM fine-tuning methods (Tables 3/4/12) — mirror of aot.LM_METHODS.
+pub const LM_METHODS: [&str; 6] = ["lora", "vera", "vb", "lora_xs", "fourierft", "uni"];
+
+/// The full artifact registry — mirror of aot.registry().
+pub fn native_manifest() -> Result<BTreeMap<String, ArtifactMeta>> {
+    fn add(
+        arts: &mut BTreeMap<String, ArtifactMeta>,
+        name: &str,
+        cfg: &ModelCfg,
+        kinds: &[&str],
+    ) -> Result<()> {
+        for k in kinds {
+            let full = format!("{name}_{k}");
+            arts.insert(full.clone(), artifact_meta(&full, cfg, k)?);
+        }
+        Ok(())
+    }
+    let mut arts = BTreeMap::new();
+
+    // Table 2 (GLUE): 2 scales x 7 methods x {cls C=2, reg C=1}
+    for size in [ModelCfg::base(), ModelCfg::large()] {
+        for meth in GLUE_METHODS {
+            for c in [2usize, 1] {
+                let cfg = size.with_method(meth).with_classes(c);
+                add(
+                    &mut arts,
+                    &format!("glue_{}_{meth}_c{c}", size.name),
+                    &cfg,
+                    &["cls_train", "cls_eval"],
+                )?;
+            }
+        }
+    }
+
+    // Tables 6/7 ablations on the large backbone, classification head
+    for meth in ABLATION_METHODS {
+        let cfg = ModelCfg::large().with_method(meth).with_classes(2);
+        add(&mut arts, &format!("glue_large_{meth}_c2"), &cfg, &["cls_train", "cls_eval"])?;
+    }
+
+    // Figure 3: d-sweep (uni, base backbone)
+    for dv in [16usize, 64, 1024] {
+        let cfg = ModelCfg::base().with_method("uni").with_classes(2).with_d(dv);
+        add(&mut arts, &format!("fig3_base_uni_d{dv}"), &cfg, &["cls_train", "cls_eval"])?;
+    }
+
+    // Figure 4: rank sweep (uni, base backbone), d = 128 for all points
+    for rv in [1usize, 2, 4, 8] {
+        let cfg = ModelCfg::base().with_method("uni").with_classes(2).with_rank(rv).with_d(128);
+        add(&mut arts, &format!("fig4_base_uni_r{rv}"), &cfg, &["cls_train", "cls_eval"])?;
+    }
+
+    // Tables 3/4/12: LM fine-tuning (math reasoning + instruction tuning)
+    for meth in LM_METHODS {
+        let cfg = ModelCfg::lm().with_method(meth);
+        add(&mut arts, &format!("lm_{meth}"), &cfg, &["lm_train", "lm_logits"])?;
+    }
+    add(
+        &mut arts,
+        "lm_lora_r64",
+        &ModelCfg::lm().with_method("lora").with_rank(64),
+        &["lm_train", "lm_logits"],
+    )?;
+    for dv in [256usize, 4096] {
+        add(
+            &mut arts,
+            &format!("fig3_lm_uni_d{dv}"),
+            &ModelCfg::lm().with_method("uni").with_d(dv),
+            &["lm_train", "lm_logits"],
+        )?;
+    }
+
+    // Table 5 (vision): C=10 heads; LP = none, FF = full fine-tune
+    for size in [ModelCfg::base(), ModelCfg::large()] {
+        for meth in ["uni", "fourierft", "none"] {
+            let cfg = size.with_method(meth).with_classes(10);
+            add(&mut arts, &format!("vit_{}_{meth}", size.name), &cfg, &["cls_train", "cls_eval"])?;
+        }
+        let cfg = size.with_method("none").with_classes(10);
+        add(&mut arts, &format!("vit_{}_full", size.name), &cfg, &["full_cls_train"])?;
+    }
+
+    // Pretraining (the in-system "foundation models") + e2e driver
+    for size in [ModelCfg::base(), ModelCfg::large(), ModelCfg::lm(), ModelCfg::e2e()] {
+        let cfg = size.with_method("none").with_classes(0);
+        add(&mut arts, &format!("pretrain_{}", size.name), &cfg, &["pretrain_lm"])?;
+    }
+    add(&mut arts, "e2e_uni", &ModelCfg::e2e().with_method("uni"), &["lm_train", "lm_logits"])?;
+
+    Ok(arts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_mirrors_aot_families() {
+        let m = native_manifest().unwrap();
+        // the python registry lowers > 100 artifacts; ours must match
+        assert!(m.len() >= 100, "{}", m.len());
+        for name in [
+            "glue_base_uni_c2_cls_train",
+            "glue_base_uni_c2_cls_eval",
+            "glue_large_fastfood_c2_cls_train",
+            "fig3_base_uni_d16_cls_train",
+            "fig4_base_uni_r1_cls_eval",
+            "lm_uni_lm_train",
+            "lm_uni_lm_logits",
+            "lm_lora_r64_lm_train",
+            "vit_base_full_full_cls_train",
+            "pretrain_lm_pretrain_lm",
+            "e2e_uni_lm_train",
+        ] {
+            assert!(m.contains_key(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn cls_train_signature_layout() {
+        let m = native_manifest().unwrap();
+        let a = m.get("glue_base_uni_c2_cls_train").unwrap();
+        assert_eq!(a.cfg.method, "uni");
+        assert_eq!(a.d, a.cfg.d);
+        assert_eq!(a.big_d, a.cfg.d_full());
+        assert_eq!(a.input_index("theta").unwrap(), 0);
+        assert_eq!(a.input_index("w0").unwrap(), 10);
+        let ti = a.input_index("tokens").unwrap();
+        assert_eq!(a.inputs[ti].shape, vec![a.cfg.batch, a.cfg.seq]);
+        // the final statics inputs are idx + nrm for uni
+        let n = a.inputs.len();
+        assert_eq!(a.inputs[n - 2].name, "idx");
+        assert_eq!(a.inputs[n - 1].name, "nrm");
+        assert_eq!(a.outputs.last().unwrap(), "loss");
+        // theta segment total == d
+        let total: usize = a.theta_segments.iter().map(|s| s.numel()).sum();
+        assert_eq!(total.max(1), a.d);
+    }
+
+    #[test]
+    fn statics_specs_match_generated_statics() {
+        use crate::projection::statics::gen_statics;
+        for meth in ["uni", "local", "nonuniform", "fastfood", "vera", "vb",
+                     "lora_xs", "fourierft", "lora", "tied", "none"] {
+            let cfg = ModelCfg::test_base(meth);
+            let spec = statics_spec(&cfg);
+            let gen = gen_statics(&cfg, 1).unwrap();
+            assert_eq!(spec.len(), gen.len(), "{meth}");
+            for (s, g) in spec.iter().zip(&gen) {
+                assert_eq!(s.name, g.name, "{meth}");
+                assert_eq!(s.numel(), g.len(), "{meth}/{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn regression_label_dtype_is_f32() {
+        let m = native_manifest().unwrap();
+        let a = m.get("glue_base_uni_c1_cls_train").unwrap();
+        let li = a.input_index("labels").unwrap();
+        assert_eq!(a.inputs[li].dtype, DType::F32);
+        let b = m.get("glue_base_uni_c2_cls_train").unwrap();
+        let li = b.input_index("labels").unwrap();
+        assert_eq!(b.inputs[li].dtype, DType::I32);
+    }
+
+    #[test]
+    fn base_param_count_is_consistent() {
+        let cfg = ModelCfg::base();
+        let segs = base_segments(&cfg);
+        assert_eq!(segs[0].name, "tok_emb");
+        assert_eq!(segs.last().unwrap().name, "lm_head");
+        let total: usize = segs.iter().map(|s| s.numel()).sum();
+        assert_eq!(total, base_param_count(&cfg));
+        // head: hidden * C + C
+        assert_eq!(head_param_count(&cfg), 64 * 2 + 2);
+        assert_eq!(head_param_count(&ModelCfg::lm()), 128 + 1);
+    }
+}

@@ -1,0 +1,133 @@
+//! Backend-agnostic host tensors: the value types that cross the
+//! `Backend::run` boundary. Both the native CPU executor and the PJRT
+//! executor speak only these.
+
+use crate::projection::statics::{Static, StaticData};
+use anyhow::{bail, Result};
+
+/// Host-side input tensor (flat, row-major; shape from the artifact spec).
+#[derive(Debug, Clone)]
+pub enum TensorIn {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    ScalarF32(f32),
+    ScalarI32(i32),
+    /// Placeholder for an input previously uploaded via `Backend::pin`.
+    Pinned,
+}
+
+impl TensorIn {
+    pub fn numel(&self) -> usize {
+        match self {
+            TensorIn::F32(v) => v.len(),
+            TensorIn::I32(v) => v.len(),
+            _ => 1,
+        }
+    }
+
+    /// View as f32 data (scalars included).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorIn::F32(v) => Ok(v),
+            TensorIn::ScalarF32(x) => Ok(std::slice::from_ref(x)),
+            _ => bail!("expected f32 input"),
+        }
+    }
+
+    /// View as i32 data (scalars included).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorIn::I32(v) => Ok(v),
+            TensorIn::ScalarI32(x) => Ok(std::slice::from_ref(x)),
+            _ => bail!("expected i32 input"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            TensorIn::ScalarF32(x) => Ok(*x),
+            TensorIn::F32(v) if v.len() == 1 => Ok(v[0]),
+            _ => bail!("expected scalar f32 input"),
+        }
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        match self {
+            TensorIn::ScalarI32(x) => Ok(*x),
+            TensorIn::I32(v) if v.len() == 1 => Ok(v[0]),
+            _ => bail!("expected scalar i32 input"),
+        }
+    }
+}
+
+impl From<&Static> for TensorIn {
+    fn from(s: &Static) -> TensorIn {
+        match &s.data {
+            StaticData::F32(v) => TensorIn::F32(v.clone()),
+            StaticData::I32(v) => TensorIn::I32(v.clone()),
+        }
+    }
+}
+
+/// Host-side output tensor.
+#[derive(Debug, Clone)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn f32(self) -> Result<Vec<f32>> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            _ => bail!("expected f32 output"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            TensorOut::F32(v) if !v.is_empty() => Ok(v[0]),
+            _ => bail!("expected non-empty f32 output"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            _ => bail!("expected f32 output"),
+        }
+    }
+}
+
+/// Cumulative execution statistics (perf accounting, EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+    pub transfer_secs: f64,
+    pub executions: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_in_views() {
+        assert_eq!(TensorIn::F32(vec![1.0, 2.0]).numel(), 2);
+        assert_eq!(TensorIn::ScalarI32(7).numel(), 1);
+        assert_eq!(TensorIn::ScalarF32(0.5).scalar_f32().unwrap(), 0.5);
+        assert_eq!(TensorIn::ScalarI32(3).scalar_i32().unwrap(), 3);
+        assert!(TensorIn::I32(vec![1, 2]).as_f32().is_err());
+        assert_eq!(TensorIn::I32(vec![1, 2]).as_i32().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn tensor_out_views() {
+        let t = TensorOut::F32(vec![4.0, 5.0]);
+        assert_eq!(t.scalar_f32().unwrap(), 4.0);
+        assert_eq!(t.as_f32().unwrap(), &[4.0, 5.0]);
+        assert_eq!(t.f32().unwrap(), vec![4.0, 5.0]);
+        assert!(TensorOut::I32(vec![1]).as_f32().is_err());
+    }
+}

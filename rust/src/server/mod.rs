@@ -8,8 +8,8 @@
 //!   client (JSON lines over TCP)
 //!     -> server::serve accept loop (thread per connection)
 //!     -> router::Router queue (adapter-aware batch former)
-//!     -> worker thread owning the Executor (PJRT) + backbone weights
-//!     -> greedy decode via the lm_logits artifact
+//!     -> worker thread owning the execution Backend + backbone weights
+//!     -> greedy decode via the lm_logits entry point
 
 pub mod protocol;
 pub mod router;

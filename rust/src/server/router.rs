@@ -8,7 +8,7 @@ use crate::adapters::Registry;
 use crate::config::ModelCfg;
 use crate::coordinator::trainer::decode_with;
 use crate::projection::statics::{gen_statics, Static};
-use crate::runtime::Executor;
+use crate::runtime::Backend;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -56,7 +56,7 @@ struct Shared {
     stopped: Mutex<bool>,
 }
 
-/// The router owns the queue; `worker_loop` owns the Executor.
+/// The router owns the queue; `worker_loop` owns the execution backend.
 pub struct Router {
     shared: Arc<Shared>,
     pub stats: Arc<Mutex<RouterStats>>,
@@ -127,12 +127,12 @@ impl Router {
         }
     }
 
-    /// Worker: runs until stop(). Owns the executor, backbone weights
+    /// Worker: runs until stop(). Owns the backend, backbone weights
     /// and the statics cache (statics are per-(method, seed), generated
     /// once per adapter and reused across batches).
     pub fn worker_loop(
         &self,
-        exec: &mut Executor,
+        exec: &mut dyn Backend,
         registry: &Registry,
         art_logits: &str,
         cfg: &ModelCfg,

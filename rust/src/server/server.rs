@@ -1,11 +1,11 @@
 //! TCP front end: JSON-lines protocol over std::net, one reader thread
-//! per connection, single PJRT worker behind the router.
+//! per connection, single execution worker behind the router.
 
 use super::protocol::{Request, Response};
 use super::router::Router;
 use crate::adapters::Registry;
 use crate::config::ModelCfg;
-use crate::runtime::Executor;
+use crate::runtime::Backend;
 use crate::util::json::{n, obj, Json};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -45,19 +45,13 @@ impl ServerHandle {
     }
 }
 
-/// The `xla` crate's client holds `Rc`/raw pointers, so `Executor` is
-/// not auto-Send. We move the *whole* executor into exactly one worker
-/// thread and never touch it from another, which makes the transfer
-/// sound: the non-Send internals are never aliased across threads.
-struct SendExecutor(Executor);
-// SAFETY: see above — single-owner move, no cross-thread aliasing.
-unsafe impl Send for SendExecutor {}
-
-/// Start the server; the Executor (and backbone weights) move into the
-/// worker thread. Returns once the socket is bound.
+/// Start the server; the backend (and backbone weights) move into the
+/// worker thread. Returns once the socket is bound. `Backend: Send` by
+/// construction (the PJRT backend wraps its non-Send client with a
+/// single-owner-move justification in runtime::executor).
 pub fn serve(
     cfg: ServerConfig,
-    exec: Executor,
+    backend: Box<dyn Backend>,
     registry: Arc<Registry>,
     model_cfg: ModelCfg,
     w0: Vec<f32>,
@@ -71,10 +65,9 @@ pub fn serve(
         let router = router.clone();
         let registry = registry.clone();
         let art = cfg.art_logits.clone();
-        let boxed = SendExecutor(exec);
+        let mut backend = backend;
         std::thread::spawn(move || {
-            let mut boxed = boxed;
-            router.worker_loop(&mut boxed.0, &registry, &art, &model_cfg, &w0);
+            router.worker_loop(backend.as_mut(), &registry, &art, &model_cfg, &w0);
         })
     };
 

@@ -1,0 +1,145 @@
+//! PJRT/artifact integration: real AOT HLO artifacts through the PJRT
+//! runtime. Only compiled with `--features pjrt`, and every test that
+//! touches an executable artifact is `#[ignore]`d because it needs
+//! `make artifacts` (Python + jax) and a real `xla` crate in place of
+//! the offline stub. Plain `cargo test` exercises the same pipeline on
+//! the native backend instead (tests/integration.rs).
+#![cfg(feature = "pjrt")]
+
+use uni_lora::projection::statics::{gen_statics, init_theta};
+use uni_lora::rng;
+use uni_lora::runtime::{Executor, Manifest, TensorIn};
+
+fn executor() -> Option<Executor> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Executor::new(Manifest::load(dir).unwrap()).unwrap())
+}
+
+/// Initialize the frozen backbone from the manifest's base segments.
+fn init_base(exec: &Executor, name: &str, seed: u64) -> Vec<f32> {
+    uni_lora::coordinator::init_base(exec.manifest.get(name).unwrap(), seed)
+}
+
+#[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a real xla crate in place of vendor/xla-stub"]
+fn cls_train_step_runs_and_learns() {
+    let Some(mut exec) = executor() else { return };
+    let name = "glue_base_uni_c2_cls_train";
+    let meta = exec.manifest.get(name).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let seed = 42u64;
+
+    let mut theta = init_theta(&cfg, seed).unwrap();
+    let mut m = vec![0f32; meta.d];
+    let mut v = vec![0f32; meta.d];
+    let mut head = vec![0f32; meta.head_params];
+    let mut hm = vec![0f32; meta.head_params];
+    let mut hv = vec![0f32; meta.head_params];
+    let w0 = init_base(&exec, name, seed);
+    let stats = gen_statics(&cfg, seed).unwrap();
+
+    // learnable toy batch: label = parity of first token
+    let (b, t) = (cfg.batch, cfg.seq);
+    let tokens = rng::indices(7, b * t, cfg.vocab);
+    let labels: Vec<i32> = (0..b).map(|i| tokens[i * t] % 2).collect();
+    let attn_len = vec![t as i32; b];
+
+    let mut losses = Vec::new();
+    for step in 1..=10 {
+        let mut inputs = vec![
+            TensorIn::F32(theta.clone()),
+            TensorIn::F32(m.clone()),
+            TensorIn::F32(v.clone()),
+            TensorIn::F32(head.clone()),
+            TensorIn::F32(hm.clone()),
+            TensorIn::F32(hv.clone()),
+            TensorIn::ScalarI32(step),
+            TensorIn::ScalarF32(5e-3),
+            TensorIn::ScalarF32(5e-2),
+            TensorIn::ScalarF32(0.0),
+            TensorIn::F32(w0.clone()),
+            TensorIn::I32(tokens.clone()),
+            TensorIn::I32(attn_len.clone()),
+            TensorIn::I32(labels.clone()),
+        ];
+        inputs.extend(stats.iter().map(TensorIn::from));
+        let out = exec.run(name, &inputs).unwrap();
+        theta = out[0].clone().f32().unwrap();
+        m = out[1].clone().f32().unwrap();
+        v = out[2].clone().f32().unwrap();
+        head = out[3].clone().f32().unwrap();
+        hm = out[4].clone().f32().unwrap();
+        hv = out[5].clone().f32().unwrap();
+        losses.push(out[6].scalar_f32().unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(losses[9] < losses[0], "loss did not decrease: {losses:?}");
+}
+
+#[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a real xla crate in place of vendor/xla-stub"]
+fn cls_eval_shapes() {
+    let Some(mut exec) = executor() else { return };
+    let name = "glue_base_uni_c2_cls_eval";
+    let meta = exec.manifest.get(name).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let theta = init_theta(&cfg, 1).unwrap();
+    let head = vec![0f32; meta.head_params];
+    let w0 = init_base(&exec, name, 1);
+    let stats = gen_statics(&cfg, 1).unwrap();
+    let tokens = rng::indices(3, cfg.batch * cfg.seq, cfg.vocab);
+    let attn_len = vec![cfg.seq as i32; cfg.batch];
+    let mut inputs = vec![
+        TensorIn::F32(theta),
+        TensorIn::F32(head),
+        TensorIn::F32(w0),
+        TensorIn::I32(tokens),
+        TensorIn::I32(attn_len),
+    ];
+    inputs.extend(stats.iter().map(TensorIn::from));
+    let out = exec.run(name, &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let logits = out[0].as_f32().unwrap();
+    assert_eq!(logits.len(), cfg.batch * cfg.n_classes);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a real xla crate in place of vendor/xla-stub"]
+fn executor_input_validation() {
+    let Some(mut exec) = executor() else { return };
+    let err = exec
+        .run("glue_base_uni_c2_cls_eval", &[TensorIn::F32(vec![0.0])])
+        .unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+    assert!(exec.run("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a real xla crate in place of vendor/xla-stub"]
+fn pjrt_manifest_matches_native_registry() {
+    // When artifacts exist, the Python-lowered manifest and the Rust
+    // native registry must agree on signatures — the cross-backend
+    // contract behind `dyn Backend`.
+    let Some(exec) = executor() else { return };
+    let native = uni_lora::runtime::NativeBackend::new().unwrap();
+    use uni_lora::runtime::Backend;
+    for (name, a) in &exec.manifest.artifacts {
+        let b = native.meta(name).expect("artifact missing from native registry");
+        assert_eq!(a.kind, b.kind, "{name}");
+        assert_eq!(a.d, b.d, "{name}");
+        assert_eq!(a.big_d, b.big_d, "{name}");
+        assert_eq!(a.base_params, b.base_params, "{name}");
+        assert_eq!(a.head_params, b.head_params, "{name}");
+        assert_eq!(a.inputs.len(), b.inputs.len(), "{name}");
+        for (x, y) in a.inputs.iter().zip(&b.inputs) {
+            assert_eq!(x.name, y.name, "{name}");
+            assert_eq!(x.shape, y.shape, "{name}/{}", x.name);
+        }
+        assert_eq!(a.outputs, b.outputs, "{name}");
+    }
+}

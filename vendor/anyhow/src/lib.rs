@@ -1,0 +1,147 @@
+//! Offline polyfill of the `anyhow` API surface this workspace uses.
+//!
+//! The build environment has no crates.io access, so the real crate
+//! cannot be fetched; this drop-in implements the subset the codebase
+//! relies on — `Error`, `Result`, `anyhow!`, `bail!`, `ensure!` and the
+//! `Context` extension trait for `Result`/`Option` — with identical
+//! calling conventions. Context is stored as a flattened `"ctx: cause"`
+//! message chain, so `{}` and `{:#}` render the same string.
+
+use std::fmt;
+
+/// A string-backed error with context chaining.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a pre-formatted message (used by the macros).
+    pub fn from_msg(msg: String) -> Error {
+        Error { msg }
+    }
+
+    /// `anyhow::Error::msg` compatibility constructor.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` prints the full chain in real anyhow; our chain is
+        // already flattened into one message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real crate: any std error converts via `?`. `Error` itself
+// deliberately does NOT implement `std::error::Error`, which keeps this
+// blanket impl coherent with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from_msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::from_msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::from_msg(f().to_string()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::from_msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let _ = std::fs::read("/no/such/file/anywhere")?;
+        Ok(())
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e: Error = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+        let r: Result<()> = Err(anyhow!("inner")).context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: inner");
+        let o: Result<i32> = None.with_context(|| format!("missing {}", "x"));
+        assert_eq!(o.unwrap_err().to_string(), "missing x");
+        assert!(fails_io().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+        assert!(f(11).is_err());
+    }
+}
