@@ -72,7 +72,7 @@ fn main() -> Result<()> {
     let cfg = exec.meta("lm_uni_lm_logits")?.cfg.clone();
     exec.prepare("lm_uni_lm_logits")?;
     let handle = serve(
-        ServerConfig { addr: "127.0.0.1:0".into(), art_logits: "lm_uni_lm_logits".into() },
+        ServerConfig::new("127.0.0.1:0", "lm_uni_lm_logits"),
         exec,
         Arc::new(registry),
         cfg,
@@ -113,8 +113,11 @@ fn main() -> Result<()> {
 
     let mut client = Client::connect(handle.addr)?;
     let stats = client.stats()?;
-    println!("[load] {n_requests} requests in {wall:.2}s ({:.1} req/s), {correct} arithmetically correct",
-        n_requests as f64 / wall);
+    println!(
+        "[load] {n_requests} requests in {wall:.2}s ({:.1} req/s), \
+         {correct} arithmetically correct",
+        n_requests as f64 / wall
+    );
     println!("[router] {}", stats.to_string());
     handle.shutdown();
     Ok(())

@@ -92,7 +92,7 @@ fn main() -> Result<()> {
     let cfg = exec.meta(&format!("{base}_lm_logits"))?.cfg.clone();
     let registry = Arc::new(Registry::load_dir(&dir)?);
     let handle = serve(
-        ServerConfig { addr: "127.0.0.1:0".into(), art_logits: format!("{base}_lm_logits") },
+        ServerConfig::new("127.0.0.1:0", format!("{base}_lm_logits")),
         exec,
         registry,
         cfg,

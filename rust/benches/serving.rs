@@ -1,20 +1,23 @@
 //! Serving bench: throughput/latency of the multi-adapter router under
 //! (a) single-adapter, (b) mixed-adapter workloads — quantifies the
-//! batch-coalescing win and the adapter-residency footprint.
+//! batch-coalescing win, the adapter-residency footprint, and the
+//! execution worker-pool scaling (workers = 1 vs N over cloned
+//! backends). Kernel threads are pinned to 1 so the comparison
+//! isolates worker-level parallelism from intra-op parallelism.
 //! Runs on the default backend (native unless UNI_LORA_BACKEND=pjrt).
 //! Run: cargo bench --bench serving
 
 use std::sync::Arc;
 use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::config::RuntimeOpts;
 use uni_lora::coordinator::init_base;
 use uni_lora::data::vocab;
 use uni_lora::projection::statics::init_theta;
 use uni_lora::runtime::Backend;
 use uni_lora::server::{serve, ServerConfig};
 
-fn main() -> anyhow::Result<()> {
+fn run_with_workers(workers: usize) -> anyhow::Result<()> {
     let mut exec = uni_lora::runtime::default_backend()?;
-    println!("backend: {}", exec.name());
     let art = "lm_uni_lm_logits";
     let meta = exec.meta(art)?.clone();
     let w0 = init_base(&meta, 42);
@@ -34,14 +37,17 @@ fn main() -> anyhow::Result<()> {
             },
         );
     }
-    println!(
-        "64 adapters resident in {} KiB total ({} KiB each)",
-        registry.resident_bytes() / 1024,
-        registry.resident_bytes() / 1024 / 64
-    );
+    if workers == 1 {
+        println!(
+            "backend: {} | 64 adapters resident in {} KiB total ({} KiB each)",
+            exec.name(),
+            registry.resident_bytes() / 1024,
+            registry.resident_bytes() / 1024 / 64
+        );
+    }
 
     let handle = serve(
-        ServerConfig { addr: "127.0.0.1:0".into(), art_logits: art.into() },
+        ServerConfig::new("127.0.0.1:0", art).with_workers(workers),
         exec,
         Arc::new(registry),
         meta.cfg.clone(),
@@ -72,7 +78,9 @@ fn main() -> anyhow::Result<()> {
         let wall = t0.elapsed().as_secs_f64();
         let st = handle.router.stats.lock().unwrap().clone();
         println!(
-            "{label:<20} {n} reqs in {wall:.2}s = {:.1} req/s | mean batch {:.2} | mean latency {:.0}ms",
+            "workers={} {label:<20} {n} reqs in {wall:.2}s = {:.1} req/s | \
+             mean batch {:.2} | mean latency {:.0}ms",
+            handle.workers,
             n as f64 / wall,
             st.mean_batch_size(),
             st.mean_latency_ms()
@@ -80,5 +88,19 @@ fn main() -> anyhow::Result<()> {
         *handle.router.stats.lock().unwrap() = Default::default();
     }
     handle.shutdown();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // workers scale across cores; kernel threads stay at 1 (see header)
+    uni_lora::kernels::set_threads(1);
+    let auto = RuntimeOpts::from_env().threads;
+    let mut sweep = vec![1usize];
+    if auto > 1 {
+        sweep.push(auto);
+    }
+    for &w in &sweep {
+        run_with_workers(w)?;
+    }
     Ok(())
 }

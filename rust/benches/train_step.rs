@@ -1,15 +1,46 @@
 //! End-to-end step latency (L2+L3 perf accounting): per-family
-//! train/eval step medians and the runtime's execute breakdown.
+//! train/eval step medians, the runtime's execute breakdown, and
+//! model-level GFLOP/s — swept at kernel threads = 1 vs N so the
+//! blocked/threaded GEMM layer's scaling is visible in one run.
 //! Runs on whatever backend `UNI_LORA_BACKEND` selects (default:
 //! native — no artifacts needed). Run: cargo bench --bench train_step
 
 use uni_lora::bench::{bench, fmt_time};
+use uni_lora::config::{ModelCfg, RuntimeOpts};
 use uni_lora::coordinator::{init_base, ClsTrainer, Hyper, LmTrainer};
 use uni_lora::data::batcher::{cls_batches, lm_batches};
 use uni_lora::data::{glue, math_tasks};
 use uni_lora::runtime::{Backend, TensorIn};
 
-fn main() -> anyhow::Result<()> {
+/// Forward-pass FLOPs for the transformer backbone (2 FLOPs per MAC;
+/// attention counts the causal half of the score/mix matrices).
+fn forward_flops(cfg: &ModelCfg) -> f64 {
+    let (b, t, h, f) = (cfg.batch as f64, cfg.seq as f64, cfg.hidden as f64, cfg.ffn as f64);
+    let nh = cfg.heads as f64;
+    let hd = h / nh;
+    let bt = b * t;
+    let proj = 4.0 * 2.0 * bt * h * h; // q/k/v/o projections
+    let attn = 2.0 * 2.0 * b * nh * (t * (t + 1.0) / 2.0) * hd; // qk^T + att@v
+    let ffn = 2.0 * 2.0 * bt * h * f;
+    cfg.layers as f64 * (proj + attn + ffn)
+}
+
+/// Training-step FLOPs, approximated as 3x forward (activation +
+/// weight gradients roughly double the forward work) plus the head.
+fn train_flops(cfg: &ModelCfg) -> f64 {
+    let head = if cfg.n_classes > 0 {
+        2.0 * cfg.batch as f64 * cfg.hidden as f64 * cfg.n_classes as f64
+    } else {
+        2.0 * (cfg.batch * cfg.seq) as f64 * cfg.hidden as f64 * cfg.vocab as f64
+    };
+    3.0 * (forward_flops(cfg) + head)
+}
+
+fn gflops_line(flops: f64, median_secs: f64) {
+    println!("   ~{:.2} GFLOP/s (est. {:.0} MFLOP/step)", flops / median_secs / 1e9, flops / 1e6);
+}
+
+fn run_all() -> anyhow::Result<()> {
     let mut exec = uni_lora::runtime::default_backend()?;
     println!("backend: {}", exec.name());
     let hp = Hyper::default();
@@ -22,9 +53,10 @@ fn main() -> anyhow::Result<()> {
         let batch = &cls_batches(&split.train, meta.cfg.batch, 42, 0)[0];
         exec.prepare(&format!("{family}_cls_train"))?;
         exec.reset_stats();
-        bench(&format!("{family}/train_step"), 3, 15, || {
+        let r = bench(&format!("{family}/train_step"), 3, 15, || {
             tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
+        gflops_line(train_flops(&meta.cfg), r.median_secs);
         let st = exec.stats();
         println!(
             "   breakdown: execute {} | transfer {} over {} executions",
@@ -51,9 +83,10 @@ fn main() -> anyhow::Result<()> {
         let (split, _) = math_tasks::generate(42, meta.cfg.seq, 64, 4);
         let batch = &lm_batches(&split.train, meta.cfg.batch, 42, 0)[0];
         exec.prepare(&format!("{family}_lm_train"))?;
-        bench(&format!("{family}/train_step"), 2, 9, || {
+        let r = bench(&format!("{family}/train_step"), 2, 9, || {
             tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
+        gflops_line(train_flops(&meta.cfg), r.median_secs);
         tr.pin_frozen(exec.as_mut())?;
         bench(&format!("{family}/train_step_pinned"), 2, 9, || {
             tr.train_step(exec.as_mut(), batch, &hp).unwrap();
@@ -78,7 +111,7 @@ fn main() -> anyhow::Result<()> {
         exec.prepare(art)?;
         let m = vec![0f32; meta.base_params];
         let v = vec![0f32; meta.base_params];
-        bench("pretrain_lm/step", 1, 5, || {
+        let r = bench("pretrain_lm/step", 1, 5, || {
             exec.run(
                 art,
                 &[
@@ -94,6 +127,21 @@ fn main() -> anyhow::Result<()> {
             )
             .unwrap();
         });
+        gflops_line(train_flops(&meta.cfg), r.median_secs);
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let auto = RuntimeOpts::from_env().threads;
+    let mut counts = vec![1usize];
+    if auto > 1 {
+        counts.push(auto);
+    }
+    for &tc in &counts {
+        uni_lora::kernels::set_threads(tc);
+        println!("\n=== kernel threads = {tc} (of {auto} available) ===");
+        run_all()?;
     }
     Ok(())
 }

@@ -186,6 +186,33 @@ impl ModelCfg {
     }
 }
 
+// ------------------------------------------------------------------
+// runtime knobs
+
+/// Execution-runtime knobs, deliberately separate from `ModelCfg`:
+/// these never change numerics or the artifact contract, only how the
+/// work is scheduled on the host.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeOpts {
+    /// Kernel-pool width and default serving-worker count
+    /// (`UNI_LORA_THREADS`; default = available parallelism).
+    pub threads: usize,
+}
+
+impl RuntimeOpts {
+    pub fn from_env() -> RuntimeOpts {
+        RuntimeOpts { threads: parse_threads(std::env::var("UNI_LORA_THREADS").ok().as_deref()) }
+    }
+}
+
+/// `UNI_LORA_THREADS` parsing: a positive integer wins; anything else
+/// (unset, garbage, 0) falls back to available parallelism.
+pub fn parse_threads(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +251,18 @@ mod tests {
         let mut lora = ModelCfg::test_base("lora");
         lora.d = lora.d_full() + 1;
         assert!(lora.validate().is_ok());
+    }
+
+    #[test]
+    fn threads_knob_parses_and_defaults() {
+        assert_eq!(parse_threads(Some("3")), 3);
+        assert_eq!(parse_threads(Some(" 8 ")), 8);
+        let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(parse_threads(None), auto);
+        assert_eq!(parse_threads(Some("0")), auto);
+        assert_eq!(parse_threads(Some("lots")), auto);
+        // from_env never yields 0 (tests must not mutate the env)
+        assert!(RuntimeOpts::from_env().threads >= 1);
     }
 
     #[test]

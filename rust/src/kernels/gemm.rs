@@ -1,0 +1,340 @@
+//! Cache-blocked, multi-threaded GEMM microkernels over flat row-major
+//! `&[f32]` buffers — the compute layer every dense matmul in the
+//! native backend routes through (`gemm_nn` forward products, `gemm_tn`
+//! weight gradients, `gemm_nt` input gradients).
+//!
+//! Parallel strategy: output row panels. Each task owns a disjoint
+//! panel of output rows and accumulates every contribution to its rows
+//! in the exact order of the retained naive reference (k ascending for
+//! nn/tn, one sequential dot per element for nt), so results are
+//! bitwise identical across runs, across thread counts, AND to the
+//! pre-kernels loop nests — only wall-clock changes. Blocking keeps
+//! the streamed operand (the k-panel of `w`, the i-panel of `b`)
+//! resident in cache across the rows of a panel; `gemm_tn` additionally
+//! packs the strided column block of `a` into a contiguous scratch
+//! tile before the accumulation sweep.
+//!
+//! Preconditions are validated up front with clear messages (the old
+//! free `matmul*` functions only had `debug_assert`s and relied on
+//! indexing panics mid-write in release builds).
+
+use super::pool::{self, SendPtr};
+use super::PAR_MIN_WORK;
+
+/// k-block height for `gemm_nn`: the w panel (KC x m) stays cache-hot
+/// while a row panel of x sweeps over it.
+const NN_KC: usize = 128;
+
+/// p-block height for `gemm_nt`: the b panel (PB x m) is reused by
+/// every row of the task's output panel.
+const NT_PB: usize = 64;
+
+/// i-block height for `gemm_tn`: rows of a/b consumed per packed tile.
+const TN_IC: usize = 32;
+
+/// out[n,m] (+)= x[n,k] @ w[k,m]
+pub fn gemm_nn(x: &[f32], w: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
+    assert!(x.len() == n * k, "gemm_nn: x.len() = {}, want n*k = {}*{}", x.len(), n, k);
+    assert!(w.len() == k * m, "gemm_nn: w.len() = {}, want k*m = {}*{}", w.len(), k, m);
+    assert!(out.len() == n * m, "gemm_nn: out.len() = {}, want n*m = {}*{}", out.len(), n, m);
+    if !acc {
+        out.fill(0.0);
+    }
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    par_row_panels(out, n, m, n * k * m, |i0, i1, panel| nn_panel(x, w, panel, i0, i1, k, m));
+}
+
+/// out[k,m] (+)= a[n,k]^T @ b[n,m]   (weight-gradient shape)
+pub fn gemm_tn(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
+    assert!(a.len() == n * k, "gemm_tn: a.len() = {}, want n*k = {}*{}", a.len(), n, k);
+    assert!(b.len() == n * m, "gemm_tn: b.len() = {}, want n*m = {}*{}", b.len(), n, m);
+    assert!(out.len() == k * m, "gemm_tn: out.len() = {}, want k*m = {}*{}", out.len(), k, m);
+    if !acc {
+        out.fill(0.0);
+    }
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    par_row_panels(out, k, m, n * k * m, |p0, p1, panel| tn_panel(a, b, panel, p0, p1, n, k, m));
+}
+
+/// out[n,k] (+)= a[n,m] @ b[k,m]^T   (input-gradient shape)
+pub fn gemm_nt(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
+    assert!(a.len() == n * m, "gemm_nt: a.len() = {}, want n*m = {}*{}", a.len(), n, m);
+    assert!(b.len() == k * m, "gemm_nt: b.len() = {}, want k*m = {}*{}", b.len(), k, m);
+    assert!(out.len() == n * k, "gemm_nt: out.len() = {}, want n*k = {}*{}", out.len(), n, k);
+    if !acc {
+        out.fill(0.0);
+    }
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    par_row_panels(out, n, k, n * k * m, |i0, i1, panel| nt_panel(a, b, panel, i0, i1, k, m));
+}
+
+// ------------------------------------------------------------------
+// parallel driver
+
+/// Split `out` ([rows, cols] row-major) into disjoint row panels and
+/// run `body(row0, row1, panel)` for each across the pool. Row
+/// ownership is exclusive, so any schedule produces the same bits.
+fn par_row_panels<F>(out: &mut [f32], rows: usize, cols: usize, macs: usize, body: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let p = pool::pool();
+    if p.threads() == 1 || macs < PAR_MIN_WORK || rows == 1 {
+        body(0, rows, out);
+        return;
+    }
+    let tasks = (p.threads() * 4).min(rows);
+    let chunk = (rows + tasks - 1) / tasks;
+    let ptr = SendPtr::new(out);
+    p.parallel_for(tasks, &|t| {
+        let i0 = t * chunk;
+        if i0 >= rows {
+            return;
+        }
+        let i1 = (i0 + chunk).min(rows);
+        // SAFETY: tasks own disjoint half-open row ranges of `out`.
+        let panel = unsafe { ptr.slice(i0 * cols, (i1 - i0) * cols) };
+        body(i0, i1, panel);
+    });
+}
+
+// ------------------------------------------------------------------
+// panel kernels (single-threaded, fixed accumulation order)
+
+#[inline]
+fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product in strict sequential order — the exact reduction order
+/// of the legacy `matmul_nt`, so every gemm kernel is bitwise-identical
+/// to the pre-kernels code (training losses reproduce at any thread
+/// count). Reassociating for SIMD width belongs to a future SIMD
+/// kernel variant behind the same API, where the parity story can be
+/// renegotiated explicitly.
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for (a, b) in x.iter().zip(y.iter()) {
+        s += a * b;
+    }
+    s
+}
+
+fn nn_panel(x: &[f32], w: &[f32], panel: &mut [f32], i0: usize, i1: usize, k: usize, m: usize) {
+    let mut kb = 0;
+    while kb < k {
+        let ke = (kb + NN_KC).min(k);
+        for i in i0..i1 {
+            let xrow = &x[i * k + kb..i * k + ke];
+            let prow = &mut panel[(i - i0) * m..(i - i0) * m + m];
+            for (p, &a) in xrow.iter().enumerate() {
+                if a != 0.0 {
+                    axpy(prow, &w[(kb + p) * m..(kb + p) * m + m], a);
+                }
+            }
+        }
+        kb = ke;
+    }
+}
+
+fn nt_panel(a: &[f32], b: &[f32], panel: &mut [f32], i0: usize, i1: usize, k: usize, m: usize) {
+    let mut pb = 0;
+    while pb < k {
+        let pe = (pb + NT_PB).min(k);
+        for i in i0..i1 {
+            let arow = &a[i * m..i * m + m];
+            let prow = &mut panel[(i - i0) * k..(i - i0) * k + k];
+            for p in pb..pe {
+                prow[p] += dot(arow, &b[p * m..p * m + m]);
+            }
+        }
+        pb = pe;
+    }
+}
+
+fn tn_panel(
+    a: &[f32],
+    b: &[f32],
+    panel: &mut [f32],
+    p0: usize,
+    p1: usize,
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    let pw = p1 - p0;
+    let mut pack = vec![0f32; pw * TN_IC];
+    let mut ib = 0;
+    while ib < n {
+        let ie = (ib + TN_IC).min(n);
+        let iw = ie - ib;
+        // pack a[ib..ie, p0..p1] transposed: pack[(p - p0)*iw + (i - ib)]
+        for i in ib..ie {
+            let arow = &a[i * k + p0..i * k + p1];
+            for (pp, &av) in arow.iter().enumerate() {
+                pack[pp * iw + (i - ib)] = av;
+            }
+        }
+        for pp in 0..pw {
+            let prow = &mut panel[pp * m..pp * m + m];
+            let pcol = &pack[pp * iw..pp * iw + iw];
+            for (ii, &av) in pcol.iter().enumerate() {
+                if av != 0.0 {
+                    axpy(prow, &b[(ib + ii) * m..(ib + ii) * m + m], av);
+                }
+            }
+        }
+        ib = ie;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive::{gemm_nn_ref, gemm_nt_ref, gemm_tn_ref};
+    use super::*;
+    use crate::config::RuntimeOpts;
+    use crate::rng;
+
+    fn seeded(seed: u64, len: usize) -> Vec<f32> {
+        let mut v = rng::normals(seed, len);
+        // sprinkle exact zeros so the zero-skip paths are exercised
+        for (i, x) in v.iter_mut().enumerate() {
+            if i % 7 == 3 {
+                *x = 0.0;
+            }
+        }
+        v
+    }
+
+    /// Satellite: blocked/threaded kernels vs the retained naive
+    /// reference over odd shapes, acc on/off, threads in {1, 4};
+    /// bitwise-deterministic across runs and across thread counts.
+    #[test]
+    fn property_blocked_matches_naive_over_odd_shapes() {
+        let shapes = [1usize, 3, 17, 64, 129];
+        for &n in &shapes {
+            for &k in &shapes {
+                for &m in &shapes {
+                    for acc in [false, true] {
+                        check_one(n, k, m, acc);
+                    }
+                }
+            }
+        }
+        pool::set_threads(RuntimeOpts::from_env().threads);
+    }
+
+    fn check_one(n: usize, k: usize, m: usize, acc: bool) {
+        let seed = (n * 1_000_003 + k * 1009 + m) as u64;
+        let x_nn = seeded(seed, n * k);
+        let w_nn = seeded(seed + 1, k * m);
+        let a_tn = seeded(seed + 2, n * k);
+        let b_tn = seeded(seed + 3, n * m);
+        let a_nt = seeded(seed + 4, n * m);
+        let b_nt = seeded(seed + 5, k * m);
+        let init_nn = seeded(seed + 6, n * m);
+        let init_tn = seeded(seed + 7, k * m);
+        let init_nt = seeded(seed + 8, n * k);
+
+        let run = |f: &dyn Fn(&mut Vec<f32>), init: &[f32]| -> Vec<f32> {
+            let mut out = init.to_vec();
+            f(&mut out);
+            out
+        };
+
+        let want_nn = run(&|o: &mut Vec<f32>| gemm_nn_ref(&x_nn, &w_nn, o, n, k, m, acc), &init_nn);
+        let want_tn = run(&|o: &mut Vec<f32>| gemm_tn_ref(&a_tn, &b_tn, o, n, k, m, acc), &init_tn);
+        let want_nt = run(&|o: &mut Vec<f32>| gemm_nt_ref(&a_nt, &b_nt, o, n, k, m, acc), &init_nt);
+
+        let mut per_thread_count = Vec::new();
+        for threads in [1usize, 4] {
+            pool::set_threads(threads);
+            let nn = run(&|o: &mut Vec<f32>| gemm_nn(&x_nn, &w_nn, o, n, k, m, acc), &init_nn);
+            let tn = run(&|o: &mut Vec<f32>| gemm_tn(&a_tn, &b_tn, o, n, k, m, acc), &init_tn);
+            let nt = run(&|o: &mut Vec<f32>| gemm_nt(&a_nt, &b_nt, o, n, k, m, acc), &init_nt);
+            // bitwise-deterministic across runs at a fixed thread count
+            let nn2 = run(&|o: &mut Vec<f32>| gemm_nn(&x_nn, &w_nn, o, n, k, m, acc), &init_nn);
+            assert_eq!(nn, nn2, "gemm_nn not run-deterministic ({n},{k},{m},{acc},{threads})");
+            let nt2 = run(&|o: &mut Vec<f32>| gemm_nt(&a_nt, &b_nt, o, n, k, m, acc), &init_nt);
+            assert_eq!(nt, nt2, "gemm_nt not run-deterministic ({n},{k},{m},{acc},{threads})");
+            // all three keep the reference accumulation order exactly
+            assert_eq!(nn, want_nn, "gemm_nn != naive ({n},{k},{m},{acc},{threads})");
+            assert_eq!(tn, want_tn, "gemm_tn != naive ({n},{k},{m},{acc},{threads})");
+            assert_eq!(nt, want_nt, "gemm_nt != naive ({n},{k},{m},{acc},{threads})");
+            per_thread_count.push((nn, tn, nt));
+        }
+        // bitwise identical across thread counts
+        assert_eq!(per_thread_count[0], per_thread_count[1], "thread-count variant ({n},{k},{m})");
+    }
+
+    fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+        e.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default()
+    }
+
+    /// Satellite: slice-length preconditions fail fast with a clear
+    /// message instead of an indexing panic mid-write.
+    #[test]
+    fn preconditions_reject_bad_lengths_up_front() {
+        macro_rules! panics_with {
+            ($what:expr, $body:expr) => {{
+                let err = std::panic::catch_unwind(|| $body).expect_err("no panic");
+                let msg = panic_msg(err);
+                assert!(msg.contains($what), "panic message {msg:?} missing {:?}", $what);
+            }};
+        }
+        panics_with!("gemm_nn: x.len()", {
+            let mut out = vec![0f32; 4];
+            gemm_nn(&[0.0; 5], &[0.0; 6], &mut out, 2, 3, 2, false);
+        });
+        panics_with!("gemm_nn: w.len()", {
+            let mut out = vec![0f32; 4];
+            gemm_nn(&[0.0; 6], &[0.0; 5], &mut out, 2, 3, 2, false);
+        });
+        panics_with!("gemm_nn: out.len()", {
+            let mut out = vec![0f32; 3];
+            gemm_nn(&[0.0; 6], &[0.0; 6], &mut out, 2, 3, 2, false);
+        });
+        panics_with!("gemm_tn: a.len()", {
+            let mut out = vec![0f32; 6];
+            gemm_tn(&[0.0; 5], &[0.0; 4], &mut out, 2, 3, 2, false);
+        });
+        panics_with!("gemm_tn: b.len()", {
+            let mut out = vec![0f32; 6];
+            gemm_tn(&[0.0; 6], &[0.0; 5], &mut out, 2, 3, 2, false);
+        });
+        panics_with!("gemm_nt: a.len()", {
+            let mut out = vec![0f32; 6];
+            gemm_nt(&[0.0; 5], &[0.0; 6], &mut out, 2, 3, 2, false);
+        });
+        panics_with!("gemm_nt: out.len()", {
+            let mut out = vec![0f32; 5];
+            gemm_nt(&[0.0; 4], &[0.0; 6], &mut out, 2, 3, 2, false);
+        });
+    }
+
+    #[test]
+    fn zero_dims_are_noops() {
+        let mut out = vec![3.0f32; 0];
+        gemm_nn(&[], &[], &mut out, 0, 0, 0, false);
+        // k == 0 with acc=false still zeroes the output (empty sum)
+        let mut out = vec![3.0f32; 4];
+        gemm_nn(&[], &[], &mut out, 2, 0, 2, false);
+        assert_eq!(out, vec![0.0; 4]);
+        // and acc=true leaves it untouched
+        let mut out = vec![3.0f32; 4];
+        gemm_nn(&[], &[], &mut out, 2, 0, 2, true);
+        assert_eq!(out, vec![3.0; 4]);
+    }
+}

@@ -1,0 +1,91 @@
+//! The compute layer: cache-blocked multi-threaded GEMM microkernels
+//! plus a shared std-only thread pool, carved out of the native
+//! backend's inline loop nests (multi-layer refactor, ROADMAP perf
+//! item). Everything dense in `runtime/native` — forward products,
+//! weight/input gradients, attention drivers, elementwise maps — routes
+//! through this module, which makes it the single seam where future
+//! backends (SIMD microkernels, GPU offload) plug in without touching
+//! the model code above.
+//!
+//! Layout:
+//! - `pool`: shared worker pool (`UNI_LORA_THREADS` / `set_threads`),
+//!   caller-participating so nested fan-outs never deadlock, plus the
+//!   `SendPtr` disjoint-write escape hatch for parallel drivers.
+//! - `gemm`: `gemm_nn` / `gemm_tn` / `gemm_nt` with an `acc` flag and
+//!   validated preconditions; bitwise-deterministic across runs and
+//!   thread counts.
+//! - `naive`: the retained single-threaded reference kernels the
+//!   blocked ones are property-tested against.
+
+pub mod gemm;
+pub mod naive;
+pub mod pool;
+
+pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
+pub use pool::{pool, set_threads, threads, Pool, SendPtr};
+
+/// Below roughly this much work (MAC-scale units) a fan-out costs more
+/// than it saves; drivers run inline on the caller instead.
+pub const PAR_MIN_WORK: usize = 16 * 1024;
+
+/// Run `body(i)` for i in [0, tasks) across the global pool when
+/// `work` is large enough to amortize the fan-out, else inline.
+/// `work` must not depend on the thread count (results never do).
+pub fn parallel_for_work<F>(work: usize, tasks: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if tasks <= 1 || work < PAR_MIN_WORK {
+        for i in 0..tasks {
+            body(i);
+        }
+        return;
+    }
+    pool().parallel_for(tasks, &body);
+}
+
+/// Split [0, n) into fixed-size chunks of `grain` and run
+/// `body(start, end)` for each across the global pool. The partition
+/// depends only on (n, grain) — never on the thread count — so
+/// order-sensitive per-chunk reductions stay deterministic.
+pub fn parallel_chunks<F>(n: usize, grain: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let grain = grain.max(1);
+    let tasks = (n + grain - 1) / grain;
+    parallel_for_work(n, tasks, |t| {
+        let s = t * grain;
+        body(s, (s + grain).min(n));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_chunks_covers_range_with_fixed_grain() {
+        let hits: Vec<AtomicUsize> = (0..100_000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(hits.len(), 1024, |s, e| {
+            assert!(s < e && e <= hits.len());
+            assert_eq!(s % 1024, 0, "partition must be grain-aligned");
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn small_work_runs_inline_in_index_order() {
+        // work below PAR_MIN_WORK: body runs sequentially on the caller
+        let order = std::sync::Mutex::new(Vec::new());
+        parallel_for_work(8, 8, |i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,70 @@
+//! Naive reference GEMMs: the original single-threaded loop nests that
+//! used to live inline in `runtime/native/model.rs`. Retained as the
+//! ground truth the blocked/threaded kernels in `gemm.rs` are
+//! property-tested against — never called on a hot path.
+
+/// out[n,m] (+)= x[n,k] @ w[k,m]
+pub fn gemm_nn_ref(x: &[f32], w: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
+    assert_eq!(x.len(), n * k);
+    assert_eq!(w.len(), k * m);
+    assert_eq!(out.len(), n * m);
+    if !acc {
+        out.fill(0.0);
+    }
+    for i in 0..n {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (p, &a) in xrow.iter().enumerate() {
+            if a != 0.0 {
+                let wrow = &w[p * m..(p + 1) * m];
+                for j in 0..m {
+                    orow[j] += a * wrow[j];
+                }
+            }
+        }
+    }
+}
+
+/// out[k,m] (+)= a[n,k]^T @ b[n,m]   (weight-gradient shape)
+pub fn gemm_tn_ref(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(b.len(), n * m);
+    assert_eq!(out.len(), k * m);
+    if !acc {
+        out.fill(0.0);
+    }
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * m..(i + 1) * m];
+        for (p, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let orow = &mut out[p * m..(p + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// out[n,k] (+)= a[n,m] @ b[k,m]^T   (input-gradient shape)
+pub fn gemm_nt_ref(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
+    assert_eq!(a.len(), n * m);
+    assert_eq!(b.len(), k * m);
+    assert_eq!(out.len(), n * k);
+    if !acc {
+        out.fill(0.0);
+    }
+    for i in 0..n {
+        let arow = &a[i * m..(i + 1) * m];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for p in 0..k {
+            let brow = &b[p * m..(p + 1) * m];
+            let mut s = 0f32;
+            for j in 0..m {
+                s += arow[j] * brow[j];
+            }
+            orow[p] += s;
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! A small shared thread pool for data-parallel kernels. std-only (no
+//! rayon/crossbeam in the offline vendor set): long-lived workers park
+//! on a condvar and drain jobs from a shared queue, and the submitting
+//! thread always participates in its own job, so progress never depends
+//! on pool capacity (nested or concurrent `parallel_for` calls cannot
+//! deadlock — worst case they degrade to sequential execution on the
+//! caller).
+//!
+//! Determinism contract: a job is a set of independent index-addressed
+//! tasks. Which thread runs a task never changes what the task computes
+//! or where it writes, so results are bitwise identical across runs AND
+//! across thread counts; the pool only changes wall-clock time. The
+//! kernels built on top (gemm, attention drivers) preserve this by
+//! giving each task exclusive ownership of an output region and a fixed
+//! intra-task reduction order.
+//!
+//! Worker count comes from `config::RuntimeOpts` (`UNI_LORA_THREADS`,
+//! default = available parallelism); `set_threads` swaps the global
+//! pool at runtime (benches sweep threads=1 vs threads=N).
+
+use crate::config::RuntimeOpts;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::thread::JoinHandle;
+
+// ------------------------------------------------------------------
+// jobs
+
+/// One fan-out: an index space [0, total) and a lifetime-erased body.
+///
+/// `body` is a raw pointer (not a reference) because pool workers may
+/// legitimately hold the `Arc<Job>` after the submitting `parallel_for`
+/// frame — and the closure it points into — are gone; they only ever
+/// *dereference* it for a claimed task (`i < total`), and the submitter
+/// does not return (even on panic) until `done == total`, i.e. until
+/// every claimed task has finished executing.
+struct Job {
+    body: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    total: usize,
+    done: AtomicUsize,
+    panicked: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+// SAFETY: the raw `body` pointer is only dereferenced under the
+// claimed-task protocol documented on `Job`; everything else in the
+// struct is already Send + Sync.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run tasks until the index space is exhausted.
+    fn run(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                return;
+            }
+            // SAFETY: task i was claimed before the index space drained,
+            // so the submitter is still blocked in wait() and the
+            // pointee is alive for the duration of this call.
+            let body = unsafe { &*self.body };
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(i))).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+                // hold the lock while notifying so a waiter that just
+                // checked `done` cannot miss the wakeup
+                let _g = self.lock.lock().unwrap();
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Block until every task has finished (not merely been claimed).
+    fn wait(&self) {
+        let mut g = self.lock.lock().unwrap();
+        while self.done.load(Ordering::Acquire) < self.total {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    /// Drop a fully-claimed job from the queue (idempotent).
+    fn retire(&self, job: &Arc<Job>) {
+        let mut q = self.queue.lock().unwrap();
+        if let Some(pos) = q.iter().position(|j| Arc::ptr_eq(j, job)) {
+            q.remove(pos);
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(j) = q.front() {
+                    break Arc::clone(j);
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job.run();
+        shared.retire(&job);
+    }
+}
+
+// ------------------------------------------------------------------
+// pool
+
+pub struct Pool {
+    /// None when threads == 1: pure sequential fast path.
+    shared: Option<Arc<Shared>>,
+    threads: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// A pool that executes with `threads` total threads (the caller
+    /// counts as one, so `threads - 1` workers are spawned).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return Pool { shared: None, threads: 1, handles: Mutex::new(Vec::new()) };
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let sh = shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("uni-lora-kernel-{i}"))
+                .spawn(move || worker(sh))
+                .expect("spawning kernel pool worker");
+            handles.push(h);
+        }
+        Pool { shared: Some(shared), threads, handles: Mutex::new(handles) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `body(i)` for every i in [0, total), fanned across the pool.
+    /// Returns after ALL tasks have completed. Panics (after the whole
+    /// index space has drained) if any task panicked.
+    pub fn parallel_for(&self, total: usize, body: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        let shared = match &self.shared {
+            Some(s) if total > 1 => s,
+            _ => {
+                for i in 0..total {
+                    body(i);
+                }
+                return;
+            }
+        };
+        // The pointee outlives every dereference: this function only
+        // returns after `job.wait()` observes done == total, and tasks
+        // are claimed before being run — no thread can start a task
+        // after that point (see the SAFETY notes on `Job`).
+        let job = Arc::new(Job {
+            body: body as *const (dyn Fn(usize) + Sync),
+            next: AtomicUsize::new(0),
+            total,
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        shared.queue.lock().unwrap().push_back(job.clone());
+        shared.cv.notify_all();
+        job.run();
+        shared.retire(&job);
+        job.wait();
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("kernels::parallel_for: a task panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            {
+                // hold the condvar's mutex while flipping the flag so a
+                // worker between its stop-check and cv.wait cannot miss
+                // the wakeup (it holds this lock for that whole window)
+                let _q = shared.queue.lock().unwrap();
+                shared.stop.store(true, Ordering::Release);
+                shared.cv.notify_all();
+            }
+            for h in self.handles.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// global pool
+
+static GLOBAL: OnceLock<RwLock<Arc<Pool>>> = OnceLock::new();
+
+fn global() -> &'static RwLock<Arc<Pool>> {
+    GLOBAL.get_or_init(|| RwLock::new(Arc::new(Pool::new(RuntimeOpts::from_env().threads))))
+}
+
+/// The process-wide kernel pool (lazily built from `UNI_LORA_THREADS`).
+pub fn pool() -> Arc<Pool> {
+    global().read().unwrap().clone()
+}
+
+/// Replace the global pool with one of `threads` threads. In-flight
+/// `parallel_for` calls keep their own handle on the old pool and
+/// complete normally; the old workers shut down when the last handle
+/// drops. Results are thread-count invariant, so this only affects
+/// speed — benches use it to sweep threads=1 vs threads=N.
+pub fn set_threads(threads: usize) {
+    let next = Arc::new(Pool::new(threads.max(1)));
+    *global().write().unwrap() = next;
+}
+
+/// Current global pool width.
+pub fn threads() -> usize {
+    pool().threads()
+}
+
+// ------------------------------------------------------------------
+// disjoint-write escape hatch
+
+/// A raw, Send+Sync base pointer into a mutable buffer, for kernels
+/// whose tasks write to provably disjoint regions of one allocation
+/// (GEMM row panels, per-(batch, head) attention slabs). Rust's borrow
+/// checker cannot see that disjointness through a `Fn` task body, so
+/// the drivers carve per-task `&mut` views out of this instead.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(buf: &mut [T]) -> SendPtr<T> {
+        SendPtr(buf.as_mut_ptr())
+    }
+
+    /// Reborrow `buf[off..off + len]` as `&mut`.
+    ///
+    /// # Safety
+    /// `[off, off + len)` must lie inside the original buffer, and no
+    /// other live reference (from any thread) may overlap it.
+    pub unsafe fn slice<'a>(&self, off: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let p = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        p.parallel_for(1000, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sequential_pool_runs_inline() {
+        let p = Pool::new(1);
+        let mut seen = Vec::new();
+        // threads == 1 runs on the caller, so a non-Sync-hostile
+        // mutation through a RefCell-free pattern is fine via atomics
+        let n = AtomicUsize::new(0);
+        p.parallel_for(17, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        seen.push(n.load(Ordering::Relaxed));
+        assert_eq!(seen, vec![17]);
+    }
+
+    #[test]
+    fn nested_and_concurrent_jobs_complete() {
+        let p = Arc::new(Pool::new(3));
+        let outer = AtomicUsize::new(0);
+        let p2 = p.clone();
+        p.parallel_for(8, &|_| {
+            // nested fan-out from inside a task: caller participation
+            // guarantees progress even with all workers busy
+            let inner = AtomicUsize::new(0);
+            p2.parallel_for(8, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+            outer.fetch_add(inner.load(Ordering::Relaxed), Ordering::Relaxed);
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let p = Pool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.parallel_for(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // pool still functional afterwards
+        let n = AtomicUsize::new(0);
+        p.parallel_for(8, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn set_threads_swaps_global_pool() {
+        // NOTE: no assert on `threads()` — other tests (the gemm
+        // property suite) legitimately race on the global width, and
+        // results are width-invariant by contract anyway.
+        set_threads(2);
+        let n = AtomicUsize::new(0);
+        pool().parallel_for(32, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 32);
+        set_threads(RuntimeOpts::from_env().threads);
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn send_ptr_disjoint_writes() {
+        let p = Pool::new(4);
+        let mut buf = vec![0usize; 64];
+        let ptr = SendPtr::new(&mut buf);
+        p.parallel_for(8, &|t| {
+            // SAFETY: task t owns rows [t*8, t*8 + 8)
+            let chunk = unsafe { ptr.slice(t * 8, 8) };
+            for (j, c) in chunk.iter_mut().enumerate() {
+                *c = t * 8 + j;
+            }
+        });
+        assert_eq!(buf, (0..64).collect::<Vec<_>>());
+    }
+}

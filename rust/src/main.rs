@@ -5,6 +5,7 @@
 //!             [--seed S] [--epochs N] [--lr-theta X] [--lr-head X] [--out adapter.uni1]
 //!   eval      --adapter adapter.uni1 --task <task>
 //!   serve     --addr 127.0.0.1:7401 --adapters <dir> [--base lm_uni]
+//!             [--workers N (0 = auto)] [--queue-depth N]
 //!   inspect   --adapter adapter.uni1       (print metadata + expansion norms)
 //!   props     --method uni|vera|...        (Table-1 property analysis)
 //!   list      (artifacts in the active backend's registry)
@@ -63,6 +64,7 @@ const HELP: &str = "uni-lora — Uni-LoRA system reproduction
            [--epochs 2] [--lr-theta 5e-3] [--lr-head 5e-2] [--out a.uni1]
   eval     --adapter a.uni1 --task <task>
   serve    [--addr 127.0.0.1:7401] [--adapters dir] [--base lm_uni]
+           [--workers 0 (auto)] [--queue-depth 256]
   inspect  --adapter a.uni1
   props    [--method uni]
   list
@@ -239,13 +241,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         exec.name()
     );
     let handle = serve(
-        ServerConfig { addr: addr.clone(), art_logits: art },
+        ServerConfig::new(addr.clone(), art)
+            .with_workers(args.usize_or("workers", 0))
+            .with_queue_depth(
+                args.usize_or("queue-depth", uni_lora::server::router::DEFAULT_QUEUE_DEPTH),
+            ),
         exec,
         registry,
         cfg,
         w0,
     )?;
-    println!("listening on {}", handle.addr);
+    println!(
+        "listening on {} with {} execution worker(s), {} kernel thread(s)",
+        handle.addr,
+        handle.workers,
+        uni_lora::kernels::threads()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -30,6 +30,14 @@ pub trait Backend: Send {
         self.meta(artifact).map(|_| ())
     }
 
+    /// Clone this backend so another execution worker can own one (the
+    /// serving worker pool). Backends wrapping non-replicable resources
+    /// (e.g. a PJRT client) may refuse; callers must degrade to fewer
+    /// workers, not fail the serve path.
+    fn try_clone(&self) -> Result<Box<dyn Backend>> {
+        bail!("backend {:?} does not support cloning", self.name())
+    }
+
     /// Cache a frozen input so later `run` calls can pass
     /// `TensorIn::Pinned` instead of re-supplying the host vector.
     fn pin(&mut self, artifact: &str, input: &str, t: &TensorIn) -> Result<()>;

@@ -19,6 +19,7 @@ use super::backend::{check_inputs, Backend};
 use super::spec;
 use super::tensor::{ExecStats, TensorIn, TensorOut};
 use crate::config::ModelCfg;
+use crate::kernels;
 use crate::projection::reconstruct::{reconstruct_with_statics, ModuleDelta};
 use crate::projection::statics::{Static, StaticData};
 use crate::projection::uni;
@@ -46,6 +47,17 @@ impl NativeBackend {
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    /// Native state is a registry plus host vectors: cheap to
+    /// replicate, so the serving worker pool can give every worker its
+    /// own backend over shared `Arc` backbone weights.
+    fn try_clone(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend {
+            manifest: self.manifest.clone(),
+            pinned: self.pinned.clone(),
+            stats: ExecStats::default(),
+        }))
     }
 
     fn meta(&self, artifact: &str) -> Result<&ArtifactMeta> {
@@ -301,7 +313,8 @@ fn lm_train(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
     let logits = model::lm_head_forward(cfg, &base, &fc.hidden);
     let (loss, d_logits) = model::lm_xent_masked(&logits, labels, bt, cfg.vocab)?;
     let mut d_hidden = vec![0f32; bt * cfg.hidden];
-    model::matmul_nt(&d_logits, base.seg("lm_head"), &mut d_hidden, bt, cfg.hidden, cfg.vocab, false);
+    let (h, vc) = (cfg.hidden, cfg.vocab);
+    kernels::gemm_nt(&d_logits, base.seg("lm_head"), &mut d_hidden, bt, h, vc, false);
     let grads = model::backward(cfg, &base, &deltas, tokens, &fc, &d_hidden, false)?;
     let g_theta = theta_grad(cfg, theta.len(), &stats, &grads)?;
     model::adamw(&mut theta, &g_theta, &mut m, &mut v, step, lr_t, wd);
@@ -345,7 +358,7 @@ fn pretrain_lm(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>>
         let logits = model::lm_head_forward(cfg, &base, &fc.hidden);
         let (loss, d_logits) = model::lm_xent_masked(&logits, labels, bt, cfg.vocab)?;
         let mut d_hidden = vec![0f32; bt * cfg.hidden];
-        model::matmul_nt(
+        kernels::gemm_nt(
             &d_logits,
             base.seg("lm_head"),
             &mut d_hidden,
@@ -358,7 +371,8 @@ fn pretrain_lm(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>>
         let mut gw0 = grads.w0.expect("w0 gradients requested");
         // lm_head is part of w0 but applied outside forward(); add here
         let (o, n) = base.offset("lm_head");
-        model::matmul_tn(&fc.hidden, &d_logits, &mut gw0[o..o + n], bt, cfg.hidden, cfg.vocab);
+        let (h, vc) = (cfg.hidden, cfg.vocab);
+        kernels::gemm_tn(&fc.hidden, &d_logits, &mut gw0[o..o + n], bt, h, vc, true);
         (loss, gw0)
     };
     model::adamw(&mut w0, &gw0, &mut m, &mut v, step, lr, wd);
@@ -425,6 +439,16 @@ mod tests {
 
     fn init_base_for(be: &NativeBackend, art: &str, seed: u64) -> Vec<f32> {
         crate::coordinator::init_base(be.meta(art).unwrap(), seed)
+    }
+
+    #[test]
+    fn try_clone_yields_independent_working_backend() {
+        let be = backend();
+        let mut cl = be.try_clone().unwrap();
+        assert_eq!(cl.name(), "native");
+        assert_eq!(cl.artifact_names(), be.artifact_names());
+        assert_eq!(cl.stats().executions, 0);
+        assert!(cl.run("no_such_artifact", &[]).is_err());
     }
 
     #[test]

@@ -4,83 +4,21 @@
 //! the train/eval/logits artifact kinds with no Python, no HLO and no
 //! PJRT on the path.
 //!
-//! Everything operates on flat row-major `&[f32]` buffers at the sizes
-//! this reproduction uses (hidden <= 256), where straightforward loop
-//! nests are plenty fast on one core. Backward is hand-written
-//! (autodiff of the forward graph) and covered by finite-difference
-//! tests below.
+//! Everything operates on flat row-major `&[f32]` buffers. All dense
+//! math routes through the `crate::kernels` compute layer (blocked
+//! multi-threaded GEMMs plus parallel drivers for the attention and
+//! elementwise loops); nothing in this file owns a matmul loop nest
+//! anymore. Results are bitwise identical across runs and thread
+//! counts — see the determinism contract in `kernels::pool`. Backward
+//! is hand-written (autodiff of the forward graph) and covered by
+//! finite-difference tests below.
 
 use crate::config::ModelCfg;
+use crate::kernels::{gemm_nn, gemm_nt, gemm_tn, parallel_chunks, parallel_for_work, SendPtr};
 use crate::projection::reconstruct::ModuleDelta;
 use crate::runtime::spec;
 use anyhow::{ensure, Result};
 use std::collections::BTreeMap;
-
-// ------------------------------------------------------------------
-// flat-buffer linear algebra
-
-/// out[n,m] (+)= x[n,k] @ w[k,m]
-pub fn matmul(x: &[f32], w: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
-    debug_assert_eq!(x.len(), n * k);
-    debug_assert_eq!(w.len(), k * m);
-    debug_assert_eq!(out.len(), n * m);
-    if !acc {
-        out.fill(0.0);
-    }
-    for i in 0..n {
-        let xrow = &x[i * k..(i + 1) * k];
-        let orow = &mut out[i * m..(i + 1) * m];
-        for (p, &a) in xrow.iter().enumerate() {
-            if a != 0.0 {
-                let wrow = &w[p * m..(p + 1) * m];
-                for j in 0..m {
-                    orow[j] += a * wrow[j];
-                }
-            }
-        }
-    }
-}
-
-/// out[k,m] += a[n,k]^T @ b[n,m]   (weight-gradient shape)
-pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), n * m);
-    debug_assert_eq!(out.len(), k * m);
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * m..(i + 1) * m];
-        for (p, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                let orow = &mut out[p * m..(p + 1) * m];
-                for j in 0..m {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-    }
-}
-
-/// out[n,k] (+)= a[n,m] @ b[k,m]^T   (input-gradient shape)
-pub fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize, acc: bool) {
-    debug_assert_eq!(a.len(), n * m);
-    debug_assert_eq!(b.len(), k * m);
-    debug_assert_eq!(out.len(), n * k);
-    if !acc {
-        out.fill(0.0);
-    }
-    for i in 0..n {
-        let arow = &a[i * m..(i + 1) * m];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for p in 0..k {
-            let brow = &b[p * m..(p + 1) * m];
-            let mut s = 0f32;
-            for j in 0..m {
-                s += arow[j] * brow[j];
-            }
-            orow[p] += s;
-        }
-    }
-}
 
 // ------------------------------------------------------------------
 // frozen backbone layout
@@ -202,46 +140,55 @@ pub struct AttnCache {
 }
 
 /// Causal multi-head attention. q/k/v: [B*T, h] -> out [B*T, h].
+/// Parallelized over (batch, head) pairs on the kernel pool; each task
+/// owns a disjoint slab of `att` and column stripe of `out`, and runs
+/// the same per-query loop order as the single-threaded original, so
+/// results are thread-count invariant.
 fn attention(cfg: &ModelCfg, q: &[f32], k: &[f32], v: &[f32]) -> (Vec<f32>, AttnCache) {
     let (b, t, h, nh) = (cfg.batch, cfg.seq, cfg.hidden, cfg.heads);
     let hd = cfg.head_dim();
     let scale = 1.0 / (hd as f32).sqrt();
     let mut att = vec![0f32; b * nh * t * t];
     let mut out = vec![0f32; b * t * h];
-    let mut sc = vec![0f32; t];
-    for bi in 0..b {
-        for n in 0..nh {
-            for i in 0..t {
-                let qo = (bi * t + i) * h + n * hd;
-                let mut mx = f32::NEG_INFINITY;
-                for j in 0..=i {
-                    let ko = (bi * t + j) * h + n * hd;
-                    let mut dot = 0f32;
-                    for dd in 0..hd {
-                        dot += q[qo + dd] * k[ko + dd];
-                    }
-                    sc[j] = dot * scale;
-                    if sc[j] > mx {
-                        mx = sc[j];
-                    }
+    let att_ptr = SendPtr::new(&mut att);
+    let out_ptr = SendPtr::new(&mut out);
+    parallel_for_work(b * nh * t * t * hd, b * nh, |task| {
+        let (bi, n) = (task / nh, task % nh);
+        // SAFETY: task (bi, n) exclusively owns the (bi, n) slab of
+        // `att` and the [n*hd, (n+1)*hd) stripe of rows bi*t..(bi+1)*t
+        // of `out`; no two tasks overlap.
+        let att_bn = unsafe { att_ptr.slice((bi * nh + n) * t * t, t * t) };
+        let mut sc = vec![0f32; t];
+        for i in 0..t {
+            let qo = (bi * t + i) * h + n * hd;
+            let orow = unsafe { out_ptr.slice(qo, hd) };
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let ko = (bi * t + j) * h + n * hd;
+                let mut dot = 0f32;
+                for dd in 0..hd {
+                    dot += q[qo + dd] * k[ko + dd];
                 }
-                let mut denom = 0f32;
-                for j in 0..=i {
-                    sc[j] = (sc[j] - mx).exp();
-                    denom += sc[j];
+                sc[j] = dot * scale;
+                if sc[j] > mx {
+                    mx = sc[j];
                 }
-                let ao = ((bi * nh + n) * t + i) * t;
-                for j in 0..=i {
-                    let w = sc[j] / denom;
-                    att[ao + j] = w;
-                    let vo = (bi * t + j) * h + n * hd;
-                    for dd in 0..hd {
-                        out[qo + dd] += w * v[vo + dd];
-                    }
+            }
+            let mut denom = 0f32;
+            for j in 0..=i {
+                sc[j] = (sc[j] - mx).exp();
+                denom += sc[j];
+            }
+            for j in 0..=i {
+                let w = sc[j] / denom;
+                att_bn[i * t + j] = w;
+                let vo = (bi * t + j) * h + n * hd;
+                for dd in 0..hd {
+                    orow[dd] += w * v[vo + dd];
                 }
             }
         }
-    }
+    });
     (out, AttnCache { att })
 }
 
@@ -260,35 +207,44 @@ fn attention_backward(
     let mut dq = vec![0f32; b * t * h];
     let mut dk = vec![0f32; b * t * h];
     let mut dv = vec![0f32; b * t * h];
-    let mut datt = vec![0f32; t];
-    for bi in 0..b {
-        for n in 0..nh {
-            for i in 0..t {
-                let qo = (bi * t + i) * h + n * hd;
-                let ao = ((bi * nh + n) * t + i) * t;
-                let mut ssum = 0f32;
-                for j in 0..=i {
-                    let vo = (bi * t + j) * h + n * hd;
-                    let mut dot = 0f32;
-                    for dd in 0..hd {
-                        dot += d_out[qo + dd] * v[vo + dd];
-                    }
-                    datt[j] = dot;
-                    ssum += dot * cache.att[ao + j];
+    let dq_ptr = SendPtr::new(&mut dq);
+    let dk_ptr = SendPtr::new(&mut dk);
+    let dv_ptr = SendPtr::new(&mut dv);
+    parallel_for_work(b * nh * t * t * hd, b * nh, |task| {
+        let (bi, n) = (task / nh, task % nh);
+        let mut datt = vec![0f32; t];
+        for i in 0..t {
+            let qo = (bi * t + i) * h + n * hd;
+            let ao = ((bi * nh + n) * t + i) * t;
+            // SAFETY: dq/dk/dv writes stay inside the head-n stripe of
+            // batch bi's rows — exclusively owned by task (bi, n); the
+            // three buffers are separate allocations, so dqrow never
+            // aliases dkrow/dvrow even when j == i.
+            let dqrow = unsafe { dq_ptr.slice(qo, hd) };
+            let mut ssum = 0f32;
+            for j in 0..=i {
+                let vo = (bi * t + j) * h + n * hd;
+                let mut dot = 0f32;
+                for dd in 0..hd {
+                    dot += d_out[qo + dd] * v[vo + dd];
                 }
-                for j in 0..=i {
-                    let a = cache.att[ao + j];
-                    let ds = a * (datt[j] - ssum) * scale;
-                    let ko = (bi * t + j) * h + n * hd;
-                    for dd in 0..hd {
-                        dq[qo + dd] += ds * k[ko + dd];
-                        dk[ko + dd] += ds * q[qo + dd];
-                        dv[ko + dd] += a * d_out[qo + dd];
-                    }
+                datt[j] = dot;
+                ssum += dot * cache.att[ao + j];
+            }
+            for j in 0..=i {
+                let a = cache.att[ao + j];
+                let ds = a * (datt[j] - ssum) * scale;
+                let ko = (bi * t + j) * h + n * hd;
+                let dkrow = unsafe { dk_ptr.slice(ko, hd) };
+                let dvrow = unsafe { dv_ptr.slice(ko, hd) };
+                for dd in 0..hd {
+                    dqrow[dd] += ds * k[ko + dd];
+                    dkrow[dd] += ds * q[qo + dd];
+                    dvrow[dd] += a * d_out[qo + dd];
                 }
             }
         }
-    }
+    });
     (dq, dk, dv)
 }
 
@@ -297,18 +253,9 @@ fn effective_weight(w0: &[f32], delta: &ModuleDelta, h: usize, r: usize, scale: 
     let mut w = w0.to_vec();
     match delta {
         ModuleDelta::LowRank { a, b } => {
-            for i in 0..h {
-                for q in 0..r {
-                    let av = scale * a[i * r + q];
-                    if av != 0.0 {
-                        let brow = &b[q * h..(q + 1) * h];
-                        let wrow = &mut w[i * h..(i + 1) * h];
-                        for j in 0..h {
-                            wrow[j] += av * brow[j];
-                        }
-                    }
-                }
-            }
+            // (scale * A) @ B accumulated onto the W0 copy
+            let sa: Vec<f32> = a.iter().map(|&v| scale * v).collect();
+            gemm_nn(&sa, b, &mut w, h, r, h, true);
         }
         ModuleDelta::Dense(dw) => {
             for (wi, di) in w.iter_mut().zip(dw) {
@@ -391,12 +338,12 @@ pub fn forward(
         let mut q = vec![0f32; bt * h];
         let mut k = vec![0f32; bt * h];
         let mut v = vec![0f32; bt * h];
-        matmul(&x2, &weff_q, &mut q, bt, h, h, false);
-        matmul(&x2, base.seg(&format!("wk{l}")), &mut k, bt, h, h, false);
-        matmul(&x2, &weff_v, &mut v, bt, h, h, false);
+        gemm_nn(&x2, &weff_q, &mut q, bt, h, h, false);
+        gemm_nn(&x2, base.seg(&format!("wk{l}")), &mut k, bt, h, h, false);
+        gemm_nn(&x2, &weff_v, &mut v, bt, h, h, false);
         let (att_out, attn) = attention(cfg, &q, &k, &v);
         let mut x_mid = vec![0f32; bt * h];
-        matmul(&att_out, base.seg(&format!("wo{l}")), &mut x_mid, bt, h, h, false);
+        gemm_nn(&att_out, base.seg(&format!("wo{l}")), &mut x_mid, bt, h, h, false);
         for (xm, xi) in x_mid.iter_mut().zip(&x) {
             *xm += xi;
         }
@@ -408,10 +355,21 @@ pub fn forward(
             h,
         );
         let mut u = vec![0f32; bt * f];
-        matmul(&x3, base.seg(&format!("w1{l}")), &mut u, bt, h, f, false);
-        let gelu_v: Vec<f32> = u.iter().map(|&z| gelu(z)).collect();
+        gemm_nn(&x3, base.seg(&format!("w1{l}")), &mut u, bt, h, f, false);
+        let mut gelu_v = vec![0f32; bt * f];
+        {
+            let dst = SendPtr::new(&mut gelu_v);
+            let src = &u;
+            parallel_chunks(bt * f, 4096, |s, e| {
+                // SAFETY: chunks are disjoint
+                let d = unsafe { dst.slice(s, e - s) };
+                for (dv, &z) in d.iter_mut().zip(&src[s..e]) {
+                    *dv = gelu(z);
+                }
+            });
+        }
         let mut x_next = vec![0f32; bt * h];
-        matmul(&gelu_v, base.seg(&format!("w2{l}")), &mut x_next, bt, f, h, false);
+        gemm_nn(&gelu_v, base.seg(&format!("w2{l}")), &mut x_next, bt, f, h, false);
         for (xn, xm) in x_next.iter_mut().zip(&x_mid) {
             *xn += xm;
         }
@@ -465,14 +423,14 @@ fn module_grad(
         ModuleDelta::LowRank { a, b } => {
             // da = sc * x2^T @ (dy @ b^T)    [h, r]
             let mut t1 = vec![0f32; bt * r];
-            matmul_nt(dy, b, &mut t1, bt, r, h, false);
+            gemm_nt(dy, b, &mut t1, bt, r, h, false);
             let mut da = vec![0f32; h * r];
-            matmul_tn(x2, &t1, &mut da, bt, h, r);
+            gemm_tn(x2, &t1, &mut da, bt, h, r, false);
             // db = sc * (x2 @ a)^T @ dy      [r, h]
             let mut t2 = vec![0f32; bt * r];
-            matmul(x2, a, &mut t2, bt, h, r, false);
+            gemm_nn(x2, a, &mut t2, bt, h, r, false);
             let mut db = vec![0f32; r * h];
-            matmul_tn(&t2, dy, &mut db, bt, r, h);
+            gemm_tn(&t2, dy, &mut db, bt, r, h, false);
             for g in da.iter_mut() {
                 *g *= sc;
             }
@@ -529,20 +487,28 @@ pub fn backward(
 
         // ---- FFN branch: x_out = x_mid + gelu(x3 @ w1) @ w2 ----
         let mut d_gelu = vec![0f32; bt * f];
-        matmul_nt(&d, base.seg(&format!("w2{l}")), &mut d_gelu, bt, f, h, false);
+        gemm_nt(&d, base.seg(&format!("w2{l}")), &mut d_gelu, bt, f, h, false);
         if let Some(buf) = &mut w0g {
             let (o, n) = base.offset(&format!("w2{l}"));
-            matmul_tn(&lc.gelu, &d, &mut buf[o..o + n], bt, f, h);
+            gemm_tn(&lc.gelu, &d, &mut buf[o..o + n], bt, f, h, true);
         }
         let mut d_u = d_gelu;
-        for (g, &z) in d_u.iter_mut().zip(&lc.u) {
-            *g *= gelu_grad(z);
+        {
+            let dst = SendPtr::new(&mut d_u);
+            let src = &lc.u;
+            parallel_chunks(bt * f, 4096, |s, e| {
+                // SAFETY: chunks are disjoint
+                let dd = unsafe { dst.slice(s, e - s) };
+                for (g, &z) in dd.iter_mut().zip(&src[s..e]) {
+                    *g *= gelu_grad(z);
+                }
+            });
         }
         let mut d_x3 = vec![0f32; bt * h];
-        matmul_nt(&d_u, base.seg(&format!("w1{l}")), &mut d_x3, bt, h, f, false);
+        gemm_nt(&d_u, base.seg(&format!("w1{l}")), &mut d_x3, bt, h, f, false);
         if let Some(buf) = &mut w0g {
             let (o, n) = base.offset(&format!("w1{l}"));
-            matmul_tn(&lc.x3, &d_u, &mut buf[o..o + n], bt, h, f);
+            gemm_tn(&lc.x3, &d_u, &mut buf[o..o + n], bt, h, f, true);
         }
         let (d_ln2_in, dg2, db2) =
             layer_norm_backward(&d_x3, base.seg(&format!("ln2_g{l}")), &lc.ln2, bt, h);
@@ -554,10 +520,10 @@ pub fn backward(
 
         // ---- attention branch: x_mid = x_in + att_out @ wo ----
         let mut d_attout = vec![0f32; bt * h];
-        matmul_nt(&d_mid, base.seg(&format!("wo{l}")), &mut d_attout, bt, h, h, false);
+        gemm_nt(&d_mid, base.seg(&format!("wo{l}")), &mut d_attout, bt, h, h, false);
         if let Some(buf) = &mut w0g {
             let (o, n) = base.offset(&format!("wo{l}"));
-            matmul_tn(&lc.att_out, &d_mid, &mut buf[o..o + n], bt, h, h);
+            gemm_tn(&lc.att_out, &d_mid, &mut buf[o..o + n], bt, h, h, true);
         }
         let (dq, dk, dv) = attention_backward(cfg, &d_attout, &lc.q, &lc.k, &lc.v, &lc.attn);
 
@@ -567,16 +533,16 @@ pub fn backward(
 
         // gradient into x2 through the three projections
         let mut d_x2 = vec![0f32; bt * h];
-        matmul_nt(&dq, &lc.weff_q, &mut d_x2, bt, h, h, false);
-        matmul_nt(&dk, base.seg(&format!("wk{l}")), &mut d_x2, bt, h, h, true);
-        matmul_nt(&dv, &lc.weff_v, &mut d_x2, bt, h, h, true);
+        gemm_nt(&dq, &lc.weff_q, &mut d_x2, bt, h, h, false);
+        gemm_nt(&dk, base.seg(&format!("wk{l}")), &mut d_x2, bt, h, h, true);
+        gemm_nt(&dv, &lc.weff_v, &mut d_x2, bt, h, h, true);
         if let Some(buf) = &mut w0g {
             let (o, n) = base.offset(&format!("wq{l}"));
-            matmul_tn(&lc.x2, &dq, &mut buf[o..o + n], bt, h, h);
+            gemm_tn(&lc.x2, &dq, &mut buf[o..o + n], bt, h, h, true);
             let (o, n) = base.offset(&format!("wk{l}"));
-            matmul_tn(&lc.x2, &dk, &mut buf[o..o + n], bt, h, h);
+            gemm_tn(&lc.x2, &dk, &mut buf[o..o + n], bt, h, h, true);
             let (o, n) = base.offset(&format!("wv{l}"));
-            matmul_tn(&lc.x2, &dv, &mut buf[o..o + n], bt, h, h);
+            gemm_tn(&lc.x2, &dv, &mut buf[o..o + n], bt, h, h, true);
         }
         let (d_ln1_in, dg1, db1) =
             layer_norm_backward(&d_x2, base.seg(&format!("ln1_g{l}")), &lc.ln1, bt, h);
@@ -653,7 +619,7 @@ pub fn cls_head_forward(cfg: &ModelCfg, hidden: &[f32], head: &[f32], attn_len: 
     let wh = &head[..h * c];
     let bh = &head[h * c..];
     let mut logits = vec![0f32; b * c];
-    matmul(&pooled, wh, &mut logits, b, h, c, false);
+    gemm_nn(&pooled, wh, &mut logits, b, h, c, false);
     for bi in 0..b {
         for j in 0..c {
             logits[bi * c + j] += bh[j];
@@ -673,14 +639,14 @@ pub fn cls_head_backward(
     let c = cfg.n_classes.max(1);
     let wh = &head[..h * c];
     let mut d_head = vec![0f32; h * c + c];
-    matmul_tn(&ch.pooled, d_logits, &mut d_head[..h * c], b, h, c);
+    gemm_tn(&ch.pooled, d_logits, &mut d_head[..h * c], b, h, c, false);
     for bi in 0..b {
         for j in 0..c {
             d_head[h * c + j] += d_logits[bi * c + j];
         }
     }
     let mut d_pooled = vec![0f32; b * h];
-    matmul_nt(d_logits, wh, &mut d_pooled, b, h, c, false);
+    gemm_nt(d_logits, wh, &mut d_pooled, b, h, c, false);
     let mut d_hidden = vec![0f32; b * t * h];
     for bi in 0..b {
         let prow = &d_pooled[bi * h..(bi + 1) * h];
@@ -741,39 +707,61 @@ pub fn mse_mean(logits: &[f32], targets: &[f32], rows: usize) -> (f32, Vec<f32>)
 pub fn lm_head_forward(cfg: &ModelCfg, base: &BaseMap, hidden: &[f32]) -> Vec<f32> {
     let bt = cfg.batch * cfg.seq;
     let mut logits = vec![0f32; bt * cfg.vocab];
-    matmul(hidden, base.seg("lm_head"), &mut logits, bt, cfg.hidden, cfg.vocab, false);
+    gemm_nn(hidden, base.seg("lm_head"), &mut logits, bt, cfg.hidden, cfg.vocab, false);
     logits
 }
 
 /// Masked next-token CE (labels < 0 masked); returns (loss, d_logits).
+/// The per-row softmax (the [B*T, V] hot loop of the LM paths) fans out
+/// over the kernel pool; the final loss reduction is a sequential sum
+/// in row order, so the result is thread-count invariant.
 pub fn lm_xent_masked(
     logits: &[f32],
     labels: &[i32],
     rows: usize,
     vocab: usize,
 ) -> Result<(f32, Vec<f32>)> {
+    ensure!(logits.len() == rows * vocab, "lm_xent: logits size mismatch");
+    ensure!(labels.len() == rows, "lm_xent: labels size mismatch");
+    // validate up front so the parallel sweep is infallible
+    for &lab in labels {
+        ensure!(lab < vocab as i32, "label {lab} out of range for vocab {vocab}");
+    }
     let msum = labels.iter().filter(|&&l| l >= 0).count().max(1) as f64;
     let mut d = vec![0f32; rows * vocab];
-    let mut loss = 0f64;
-    for i in 0..rows {
-        let lab = labels[i];
-        if lab < 0 {
-            continue;
-        }
-        ensure!((lab as usize) < vocab, "label {lab} out of range for vocab {vocab}");
-        let row = &logits[i * vocab..(i + 1) * vocab];
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0f64;
-        for &x in row {
-            denom += ((x - mx) as f64).exp();
-        }
-        loss -= (row[lab as usize] - mx) as f64 - denom.ln();
-        for j in 0..vocab {
-            let p = (((row[j] - mx) as f64).exp() / denom) as f32;
-            let onehot = if j == lab as usize { 1.0 } else { 0.0 };
-            d[i * vocab + j] = ((p - onehot) as f64 / msum) as f32;
-        }
+    let mut row_loss = vec![0f64; rows];
+    {
+        let dptr = SendPtr::new(&mut d);
+        let lptr = SendPtr::new(&mut row_loss);
+        const GRAIN: usize = 16;
+        let tasks = (rows + GRAIN - 1) / GRAIN;
+        parallel_for_work(rows * vocab, tasks, |tsk| {
+            let r0 = tsk * GRAIN;
+            let r1 = (r0 + GRAIN).min(rows);
+            for i in r0..r1 {
+                let lab = labels[i];
+                if lab < 0 {
+                    continue;
+                }
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                // SAFETY: row i of `d`/`row_loss` belongs to this task only
+                let drow = unsafe { dptr.slice(i * vocab, vocab) };
+                let lrow = unsafe { lptr.slice(i, 1) };
+                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut denom = 0f64;
+                for &x in row {
+                    denom += ((x - mx) as f64).exp();
+                }
+                lrow[0] = -((row[lab as usize] - mx) as f64 - denom.ln());
+                for j in 0..vocab {
+                    let p = (((row[j] - mx) as f64).exp() / denom) as f32;
+                    let onehot = if j == lab as usize { 1.0 } else { 0.0 };
+                    drow[j] = ((p - onehot) as f64 / msum) as f32;
+                }
+            }
+        });
     }
+    let loss: f64 = row_loss.iter().sum();
     Ok(((loss / msum) as f32, d))
 }
 
@@ -833,39 +821,6 @@ mod tests {
 
     fn tokens_for(cfg: &ModelCfg, seed: u64) -> Vec<i32> {
         rng::indices(seed, cfg.batch * cfg.seq, cfg.vocab)
-    }
-
-    #[test]
-    fn matmul_kernels_agree_with_naive() {
-        let (n, k, m) = (3, 4, 5);
-        let a = rng::normals(1, n * k);
-        let b = rng::normals(2, k * m);
-        let mut out = vec![0f32; n * m];
-        matmul(&a, &b, &mut out, n, k, m, false);
-        for i in 0..n {
-            for j in 0..m {
-                let want: f32 = (0..k).map(|p| a[i * k + p] * b[p * m + j]).sum();
-                assert!((out[i * m + j] - want).abs() < 1e-5);
-            }
-        }
-        // a^T @ c where c = a @ b
-        let mut tn = vec![0f32; k * m];
-        matmul_tn(&a, &out, &mut tn, n, k, m);
-        for p in 0..k {
-            for j in 0..m {
-                let want: f32 = (0..n).map(|i| a[i * k + p] * out[i * m + j]).sum();
-                assert!((tn[p * m + j] - want).abs() < 1e-5);
-            }
-        }
-        // c @ b^T recovers rows in the a-shape
-        let mut nt = vec![0f32; n * k];
-        matmul_nt(&out, &b, &mut nt, n, k, m, false);
-        for i in 0..n {
-            for p in 0..k {
-                let want: f32 = (0..m).map(|j| out[i * m + j] * b[p * m + j]).sum();
-                assert!((nt[i * k + p] - want).abs() < 1e-5);
-            }
-        }
     }
 
     #[test]
@@ -1078,12 +1033,12 @@ mod tests {
         let logits = lm_head_forward(&cfg, &base, &fc.hidden);
         let (_, d_logits) = lm_xent_masked(&logits, &labels, bt, cfg.vocab).unwrap();
         let mut d_hidden = vec![0f32; bt * cfg.hidden];
-        matmul_nt(&d_logits, base.seg("lm_head"), &mut d_hidden, bt, cfg.hidden, cfg.vocab, false);
+        gemm_nt(&d_logits, base.seg("lm_head"), &mut d_hidden, bt, cfg.hidden, cfg.vocab, false);
         let grads = backward(&cfg, &base, &deltas, &tokens, &fc, &d_hidden, true).unwrap();
         let mut gw0 = grads.w0.unwrap();
         // lm_head gradient is accumulated outside backward()
         let (o, n) = base.offset("lm_head");
-        matmul_tn(&fc.hidden, &d_logits, &mut gw0[o..o + n], bt, cfg.hidden, cfg.vocab);
+        gemm_tn(&fc.hidden, &d_logits, &mut gw0[o..o + n], bt, cfg.hidden, cfg.vocab, true);
 
         let eps = 1e-2f32;
         let mut probe = Vec::new();

@@ -7,8 +7,10 @@
 //! in the offline vendor set):
 //!   client (JSON lines over TCP)
 //!     -> server::serve accept loop (thread per connection)
-//!     -> router::Router queue (adapter-aware batch former)
-//!     -> worker thread owning the execution Backend + backbone weights
+//!     -> router::Router bounded queue (adapter-aware batch former,
+//!        "busy" rejection past the depth cap)
+//!     -> N worker threads, each owning a Backend clone over shared
+//!        Arc backbone weights (ServerConfig::workers, default = cores)
 //!     -> greedy decode via the lm_logits entry point
 
 pub mod protocol;

@@ -3,6 +3,13 @@
 //! per-batch theta vector. The batching policy is greedy same-adapter
 //! coalescing up to the artifact batch size — the policy knob the
 //! serving bench sweeps.
+//!
+//! The queue is bounded: past `capacity` pending requests, `submit`
+//! rejects immediately and `generate` surfaces a protocol-level
+//! "busy: ..." error instead of letting the backlog (and client
+//! latency) grow without limit. Any number of worker threads may drain
+//! the queue concurrently (`server::serve` runs one `worker_loop` per
+//! execution worker, each owning a backend clone).
 
 use crate::adapters::Registry;
 use crate::config::ModelCfg;
@@ -15,6 +22,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+#[derive(Debug)]
 pub struct PendingReq {
     pub adapter: String,
     pub prompt: Vec<i32>,
@@ -28,6 +36,8 @@ pub struct RouterStats {
     pub requests: u64,
     pub batches: u64,
     pub batched_requests: u64,
+    /// requests rejected at submit time because the queue was full
+    pub rejected: u64,
     pub total_latency_secs: f64,
     pub total_queue_secs: f64,
 }
@@ -54,52 +64,102 @@ struct Shared {
     queue: Mutex<VecDeque<PendingReq>>,
     cv: Condvar,
     stopped: Mutex<bool>,
+    capacity: usize,
 }
 
-/// The router owns the queue; `worker_loop` owns the execution backend.
+/// Default pending-request cap (`Router::new`); servers override it via
+/// `ServerConfig::with_queue_depth`.
+pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+
+/// The router owns the queue; each `worker_loop` owns one execution
+/// backend. The statics cache is shared across all workers (statics
+/// are per-(method, seed): generating and holding them once per
+/// adapter, not once per adapter per worker, keeps the multi-adapter
+/// residency footprint independent of the pool width).
 pub struct Router {
     shared: Arc<Shared>,
     pub stats: Arc<Mutex<RouterStats>>,
+    statics: Arc<Mutex<HashMap<String, Arc<Vec<Static>>>>>,
 }
 
 impl Clone for Router {
     fn clone(&self) -> Router {
-        Router { shared: self.shared.clone(), stats: self.stats.clone() }
+        Router {
+            shared: self.shared.clone(),
+            stats: self.stats.clone(),
+            statics: self.statics.clone(),
+        }
     }
 }
 
 impl Router {
     pub fn new() -> Router {
+        Router::with_capacity(DEFAULT_QUEUE_DEPTH)
+    }
+
+    /// A router whose queue holds at most `capacity` pending requests.
+    pub fn with_capacity(capacity: usize) -> Router {
         Router {
             shared: Arc::new(Shared {
                 queue: Mutex::new(VecDeque::new()),
                 cv: Condvar::new(),
                 stopped: Mutex::new(false),
+                capacity: capacity.max(1),
             }),
             stats: Arc::new(Mutex::new(RouterStats::default())),
+            statics: Arc::new(Mutex::new(HashMap::new())),
         }
     }
 
-    pub fn submit(&self, req: PendingReq) {
-        self.shared.queue.lock().unwrap().push_back(req);
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    /// Enqueue a request. When the queue is at capacity the request is
+    /// handed back unchanged (backpressure: the caller replies "busy"
+    /// instead of the backlog growing without bound).
+    pub fn submit(&self, req: PendingReq) -> Result<(), PendingReq> {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.shared.capacity {
+                drop(q);
+                self.stats.lock().unwrap().rejected += 1;
+                return Err(req);
+            }
+            q.push_back(req);
+        }
         self.shared.cv.notify_one();
+        Ok(())
     }
 
     /// Synchronous convenience: submit and wait for the generation.
-    pub fn generate(&self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>, String> {
+    pub fn generate(
+        &self,
+        adapter: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Result<Vec<i32>, String> {
         let (tx, rx) = mpsc::channel();
-        self.submit(PendingReq {
+        let req = PendingReq {
             adapter: adapter.to_string(),
             prompt,
             max_new,
             enqueued: Instant::now(),
             reply: tx,
-        });
+        };
+        if self.submit(req).is_err() {
+            return Err(format!("busy: request queue full (depth {})", self.shared.capacity));
+        }
         rx.recv().map_err(|e| e.to_string())?
     }
 
     pub fn stop(&self) {
         *self.shared.stopped.lock().unwrap() = true;
+        // hold the condvar's mutex while notifying: a worker between its
+        // stopped-check and cv.wait holds this lock for that whole
+        // window, so it cannot miss the wakeup (with N workers a missed
+        // wakeup would hang shutdown's join)
+        let _q = self.shared.queue.lock().unwrap();
         self.shared.cv.notify_all();
     }
 
@@ -127,9 +187,27 @@ impl Router {
         }
     }
 
-    /// Worker: runs until stop(). Owns the backend, backbone weights
-    /// and the statics cache (statics are per-(method, seed), generated
-    /// once per adapter and reused across batches).
+    /// Get-or-generate the statics for an adapter from the cache all
+    /// workers share. Generation runs OUTSIDE the cache lock so a
+    /// first-touch adapter never stalls workers serving cached ones;
+    /// racing workers may generate the same statics once each, and the
+    /// first insert wins (gen_statics is deterministic per seed).
+    fn statics_for(
+        &self,
+        name: &str,
+        cfg: &ModelCfg,
+        seed: u64,
+    ) -> Result<Arc<Vec<Static>>, String> {
+        if let Some(s) = self.statics.lock().unwrap().get(name) {
+            return Ok(s.clone());
+        }
+        let fresh = Arc::new(gen_statics(cfg, seed).map_err(|e| e.to_string())?);
+        let mut cache = self.statics.lock().unwrap();
+        Ok(cache.entry(name.to_string()).or_insert(fresh).clone())
+    }
+
+    /// Worker: runs until stop(). Owns one execution backend; shares
+    /// the backbone weights and statics cache with the other workers.
     pub fn worker_loop(
         &self,
         exec: &mut dyn Backend,
@@ -138,7 +216,6 @@ impl Router {
         cfg: &ModelCfg,
         w0: &[f32],
     ) {
-        let mut statics_cache: HashMap<String, Vec<Static>> = HashMap::new();
         while let Some(batch) = self.next_batch(cfg.batch) {
             let adapter_name = batch[0].adapter.clone();
             let queue_wait: f64 = batch
@@ -149,12 +226,10 @@ impl Router {
                 let ckpt = registry
                     .get(&adapter_name)
                     .ok_or_else(|| format!("unknown adapter {adapter_name:?}"))?;
-                let stats = statics_cache
-                    .entry(adapter_name.clone())
-                    .or_insert_with(|| gen_statics(cfg, ckpt.seed).expect("statics"));
+                let stats = self.statics_for(&adapter_name, cfg, ckpt.seed)?;
                 let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
                 let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
-                decode_with(exec, art_logits, cfg, &ckpt.theta, w0, stats, &prompts, max_new)
+                decode_with(exec, art_logits, cfg, &ckpt.theta, w0, &stats, &prompts, max_new)
                     .map_err(|e| e.to_string())
             })();
             let mut st = self.stats.lock().unwrap();
@@ -184,18 +259,22 @@ impl Default for Router {
 mod tests {
     use super::*;
 
+    fn req(adapter: &str, tx: &mpsc::Sender<Result<Vec<i32>, String>>) -> PendingReq {
+        PendingReq {
+            adapter: adapter.into(),
+            prompt: vec![1],
+            max_new: 1,
+            enqueued: Instant::now(),
+            reply: tx.clone(),
+        }
+    }
+
     #[test]
     fn batches_coalesce_same_adapter() {
         let r = Router::new();
         let (tx, _rx) = mpsc::channel();
         for a in ["x", "y", "x", "x", "y"] {
-            r.submit(PendingReq {
-                adapter: a.into(),
-                prompt: vec![1],
-                max_new: 1,
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            });
+            r.submit(req(a, &tx)).unwrap();
         }
         let b1 = r.next_batch(8).unwrap();
         assert_eq!(b1.len(), 3);
@@ -210,17 +289,32 @@ mod tests {
         let r = Router::new();
         let (tx, _rx) = mpsc::channel();
         for _ in 0..10 {
-            r.submit(PendingReq {
-                adapter: "x".into(),
-                prompt: vec![1],
-                max_new: 1,
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            });
+            r.submit(req("x", &tx)).unwrap();
         }
         assert_eq!(r.next_batch(4).unwrap().len(), 4);
         assert_eq!(r.next_batch(4).unwrap().len(), 4);
         assert_eq!(r.next_batch(4).unwrap().len(), 2);
+    }
+
+    /// Satellite: saturate the bounded queue — submits past capacity
+    /// are rejected with a protocol-visible "busy" error and counted.
+    #[test]
+    fn bounded_queue_rejects_when_saturated() {
+        let r = Router::with_capacity(2);
+        assert_eq!(r.capacity(), 2);
+        let (tx, _rx) = mpsc::channel();
+        assert!(r.submit(req("x", &tx)).is_ok());
+        assert!(r.submit(req("x", &tx)).is_ok());
+        // full: the request comes back unchanged
+        let back = r.submit(req("y", &tx)).unwrap_err();
+        assert_eq!(back.adapter, "y");
+        // the sync API maps the rejection to a "busy" error string
+        let err = r.generate("z", vec![1], 1).unwrap_err();
+        assert!(err.starts_with("busy"), "{err}");
+        assert_eq!(r.stats.lock().unwrap().rejected, 2);
+        // draining the queue frees capacity again
+        assert_eq!(r.next_batch(8).unwrap().len(), 2);
+        assert!(r.submit(req("x", &tx)).is_ok());
     }
 
     #[test]

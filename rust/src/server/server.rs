@@ -1,10 +1,12 @@
 //! TCP front end: JSON-lines protocol over std::net, one reader thread
-//! per connection, single execution worker behind the router.
+//! per connection, N execution workers behind the router (each owning
+//! a backend clone over shared `Arc` backbone weights), so serve
+//! throughput scales with cores.
 
 use super::protocol::{Request, Response};
-use super::router::Router;
+use super::router::{DEFAULT_QUEUE_DEPTH, Router};
 use crate::adapters::Registry;
-use crate::config::ModelCfg;
+use crate::config::{ModelCfg, RuntimeOpts};
 use crate::runtime::Backend;
 use crate::util::json::{n, obj, Json};
 use anyhow::{Context, Result};
@@ -18,16 +20,45 @@ use std::thread::JoinHandle;
 pub struct ServerConfig {
     /// bind address, e.g. "127.0.0.1:0" (0 = ephemeral port for tests)
     pub addr: String,
-    /// lm_logits artifact the worker decodes with
+    /// lm_logits artifact the workers decode with
     pub art_logits: String,
+    /// execution workers; 0 = auto (`UNI_LORA_THREADS` / available
+    /// parallelism). Clamped down if the backend refuses `try_clone`.
+    pub workers: usize,
+    /// pending-request cap before "busy" rejection (router backpressure)
+    pub queue_depth: usize,
+}
+
+impl ServerConfig {
+    pub fn new(addr: impl Into<String>, art_logits: impl Into<String>) -> ServerConfig {
+        ServerConfig {
+            addr: addr.into(),
+            art_logits: art_logits.into(),
+            workers: 0,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+        }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> ServerConfig {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> ServerConfig {
+        self.queue_depth = depth;
+        self
+    }
 }
 
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     pub router: Router,
+    /// execution workers actually running (can be fewer than requested
+    /// when the backend refuses to clone)
+    pub workers: usize,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
-    worker_thread: Option<JoinHandle<()>>,
+    worker_threads: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -39,16 +70,22 @@ impl ServerHandle {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.worker_thread.take() {
+        for t in self.worker_threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
 /// Start the server; the backend (and backbone weights) move into the
-/// worker thread. Returns once the socket is bound. `Backend: Send` by
+/// worker pool. Returns once the socket is bound. `Backend: Send` by
 /// construction (the PJRT backend wraps its non-Send client with a
 /// single-owner-move justification in runtime::executor).
+///
+/// Worker pool: `cfg.workers` (0 = auto) backends drain the router
+/// queue concurrently — the moved-in backend plus `try_clone`s of it.
+/// A backend that refuses to clone (PJRT) degrades to one worker
+/// rather than failing the serve path; every worker shares one `Arc`d
+/// copy of the backbone weights.
 pub fn serve(
     cfg: ServerConfig,
     backend: Box<dyn Backend>,
@@ -58,18 +95,39 @@ pub fn serve(
 ) -> Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr).context("binding server socket")?;
     let addr = listener.local_addr()?;
-    let router = Router::new();
+    let router = Router::with_capacity(cfg.queue_depth);
     let stop = Arc::new(AtomicBool::new(false));
+    let w0 = Arc::new(w0);
 
-    let worker = {
-        let router = router.clone();
-        let registry = registry.clone();
-        let art = cfg.art_logits.clone();
-        let mut backend = backend;
-        std::thread::spawn(move || {
-            router.worker_loop(backend.as_mut(), &registry, &art, &model_cfg, &w0);
+    let wanted = if cfg.workers == 0 { RuntimeOpts::from_env().threads } else { cfg.workers };
+    let mut backends: Vec<Box<dyn Backend>> = vec![backend];
+    for _ in 1..wanted.max(1) {
+        match backends[0].try_clone() {
+            Ok(b) => backends.push(b),
+            Err(e) => {
+                eprintln!(
+                    "serve: backend does not clone ({e}); running {} worker(s)",
+                    backends.len()
+                );
+                break;
+            }
+        }
+    }
+    let workers = backends.len();
+
+    let worker_threads: Vec<JoinHandle<()>> = backends
+        .into_iter()
+        .map(|mut be| {
+            let router = router.clone();
+            let registry = registry.clone();
+            let art = cfg.art_logits.clone();
+            let model_cfg = model_cfg.clone();
+            let w0 = w0.clone();
+            std::thread::spawn(move || {
+                router.worker_loop(be.as_mut(), &registry, &art, &model_cfg, &w0);
+            })
         })
-    };
+        .collect();
 
     let accept = {
         let router = router.clone();
@@ -83,7 +141,7 @@ pub fn serve(
                 let Ok(stream) = stream else { continue };
                 let router = router.clone();
                 let registry = registry.clone();
-                std::thread::spawn(move || handle_conn(stream, router, registry));
+                std::thread::spawn(move || handle_conn(stream, router, registry, workers));
             }
         })
     };
@@ -91,13 +149,14 @@ pub fn serve(
     Ok(ServerHandle {
         addr,
         router,
+        workers,
         stop,
         accept_thread: Some(accept),
-        worker_thread: Some(worker),
+        worker_threads,
     })
 }
 
-fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>) {
+fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, workers: usize) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -116,6 +175,8 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>) {
                 Response::Stats(obj(vec![
                     ("requests", n(st.requests as f64)),
                     ("batches", n(st.batches as f64)),
+                    ("rejected", n(st.rejected as f64)),
+                    ("workers", n(workers as f64)),
                     ("mean_batch_size", n(st.mean_batch_size())),
                     ("mean_latency_ms", n(st.mean_latency_ms())),
                 ]))
@@ -152,7 +213,12 @@ impl Client {
         Response::parse(&line)
     }
 
-    pub fn generate(&mut self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>> {
+    pub fn generate(
+        &mut self,
+        adapter: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Result<Vec<i32>> {
         match self.call(&Request::Generate { adapter: adapter.into(), prompt, max_new })? {
             Response::Tokens(t) => Ok(t),
             Response::Error(e) => anyhow::bail!("server error: {e}"),

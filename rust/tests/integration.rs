@@ -70,6 +70,37 @@ fn native_training_is_deterministic() {
     assert_eq!(t1, t2);
 }
 
+/// The kernels-layer determinism contract, end to end: training is
+/// bitwise identical at threads=1 and threads=4 (GEMM row panels and
+/// attention tasks own disjoint output regions with a fixed
+/// accumulation order), so the parallel kernels reproduce the
+/// single-threaded losses exactly.
+#[test]
+fn native_training_is_thread_count_invariant() {
+    let run = || {
+        let mut exec = backend();
+        let family = "glue_base_uni_c2";
+        let meta = exec.meta(&format!("{family}_cls_train")).unwrap().clone();
+        let w0 = init_base(&meta, 13);
+        let mut tr = ClsTrainer::new(exec.as_ref(), family, 13, w0).unwrap();
+        let split = glue::generate("sst2", 13, meta.cfg.seq, meta.cfg.vocab);
+        let batch = &cls_batches(&split.train, meta.cfg.batch, 13, 0)[0];
+        let hp = Hyper::default();
+        let mut losses = Vec::new();
+        for _ in 0..2 {
+            losses.push(tr.train_step(exec.as_mut(), batch, &hp).unwrap());
+        }
+        (losses, tr.theta)
+    };
+    uni_lora::kernels::set_threads(1);
+    let (l1, t1) = run();
+    uni_lora::kernels::set_threads(4);
+    let (l4, t4) = run();
+    uni_lora::kernels::set_threads(uni_lora::config::RuntimeOpts::from_env().threads);
+    assert_eq!(l1, l4, "losses must not depend on the thread count");
+    assert_eq!(t1, t4, "trained theta must not depend on the thread count");
+}
+
 /// The acceptance-criteria smoke test: train a tiny `uni` config for
 /// >= 2 steps on the native backend with decreasing loss, then serve a
 /// decode request for the trained adapter through ServerHandle over TCP.
@@ -104,7 +135,7 @@ fn native_train_then_serve_end_to_end() {
         },
     );
     let handle = serve(
-        ServerConfig { addr: "127.0.0.1:0".into(), art_logits: format!("{base}_lm_logits") },
+        ServerConfig::new("127.0.0.1:0", format!("{base}_lm_logits")),
         exec,
         Arc::new(registry),
         meta.cfg.clone(),
@@ -142,7 +173,7 @@ fn native_server_roundtrip_and_batching() {
         );
     }
     let handle = serve(
-        ServerConfig { addr: "127.0.0.1:0".into(), art_logits: art.into() },
+        ServerConfig::new("127.0.0.1:0", art).with_workers(2),
         exec,
         Arc::new(registry),
         meta.cfg.clone(),
