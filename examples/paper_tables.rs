@@ -33,6 +33,9 @@ use uni_lora::util::{fmt_params, peak_rss_mib};
 
 /// Whether the active backend can train a table row's method. "full"
 /// is full fine-tuning (full_cls_train, method "none" under the hood).
+/// Since the ProjectionOp registry redesign, `can_train` is true for
+/// every registered method on the native backend — this now only
+/// filters rows whose method string the registry doesn't know.
 fn trainable_here(backend: &str, method: &str) -> bool {
     backend != "native"
         || method == "full"

@@ -5,10 +5,50 @@
 //! plus the transpose (gradient) path. Run: cargo bench --bench projection
 
 use uni_lora::bench::{bench, black_box};
+use uni_lora::projection::op::{registry, ProjectionOp};
+use uni_lora::projection::reconstruct::ModuleDelta;
+use uni_lora::projection::statics::{gen_statics, init_theta};
 use uni_lora::projection::{fastfood, gaussian, uni};
 use uni_lora::rng;
 
+/// Reconstruct + pullback timings for one registered op. Taking
+/// `&dyn ProjectionOp` straight off `registry()` means this bench
+/// stops compiling if a method ever leaves the trait.
+fn bench_op(op: &'static dyn ProjectionOp) {
+    let m = op.method();
+    let cfg = uni_lora::config::ModelCfg::test_base(m);
+    let stats = gen_statics(&cfg, 1).unwrap();
+    // random nonzero theta: several methods zero-init (lora B, fourierft
+    // coef, ...) and their apply has zero-skip fast paths that would
+    // make an init-theta timing meaningless
+    let theta = rng::normals(7, init_theta(&cfg, 1).unwrap().len());
+    let deltas = op.apply(&cfg, &stats, &theta).unwrap();
+    // a cotangent with the apply output's geometry (contents arbitrary)
+    let cot: Vec<ModuleDelta> = deltas
+        .iter()
+        .enumerate()
+        .map(|(i, d)| match d {
+            ModuleDelta::LowRank { a, b } => ModuleDelta::LowRank {
+                a: rng::normals(50 + i as u64, a.len()),
+                b: rng::normals(90 + i as u64, b.len()),
+            },
+            ModuleDelta::Dense(dw) => ModuleDelta::Dense(rng::normals(130 + i as u64, dw.len())),
+        })
+        .collect();
+    bench(&format!("{m}/apply"), 1, 5, || {
+        black_box(op.apply(&cfg, &stats, &theta).unwrap());
+    });
+    bench(&format!("{m}/vjp"), 1, 5, || {
+        black_box(op.vjp(&cfg, &stats, &theta, &cot).unwrap());
+    });
+}
+
 fn main() {
+    println!("-- ProjectionOp registry: reconstruct (apply) + pullback (vjp) --");
+    for op in registry() {
+        bench_op(*op);
+    }
+    println!();
     let d = 4096usize;
     println!("-- projection forward: R^{d} -> R^D --");
     let theta = rng::normals(1, d);

@@ -4,7 +4,7 @@
 //! complexity enables.
 
 use super::checkpoint::AdapterCheckpoint;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::RwLock;
@@ -20,20 +20,33 @@ impl Registry {
     }
 
     /// Load every *.uni1 file in a directory; adapter name = file stem.
+    ///
+    /// A missing directory yields an empty registry (serving with no
+    /// pre-loaded adapters is a normal deployment). Any OTHER I/O
+    /// failure — the path exists but is not a directory, permissions,
+    /// an entry that cannot be statted mid-iteration — propagates:
+    /// silently serving an empty registry from an unreadable directory
+    /// is how adapters "disappear" in production.
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref();
         let reg = Registry::new();
-        let rd = std::fs::read_dir(dir.as_ref());
-        if let Ok(rd) = rd {
-            for entry in rd.flatten() {
-                let p: PathBuf = entry.path();
-                if p.extension().map(|e| e == "uni1").unwrap_or(false) {
-                    let name = p
-                        .file_stem()
-                        .and_then(|s| s.to_str())
-                        .ok_or_else(|| anyhow!("bad adapter filename {p:?}"))?
-                        .to_string();
-                    reg.insert(name, AdapterCheckpoint::load(&p)?);
-                }
+        let rd = match std::fs::read_dir(dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(reg),
+            Err(e) => {
+                return Err(anyhow!("reading adapter dir {dir:?}: {e}"));
+            }
+        };
+        for entry in rd {
+            let entry = entry.with_context(|| format!("reading adapter dir {dir:?}"))?;
+            let p: PathBuf = entry.path();
+            if p.extension().map(|e| e == "uni1").unwrap_or(false) {
+                let name = p
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .ok_or_else(|| anyhow!("bad adapter filename {p:?}"))?
+                    .to_string();
+                reg.insert(name, AdapterCheckpoint::load(&p)?);
             }
         }
         Ok(reg)
@@ -109,5 +122,27 @@ mod tests {
     fn missing_dir_is_empty() {
         let r = Registry::load_dir("/no/such/dir/unilora").unwrap();
         assert!(r.is_empty());
+    }
+
+    /// Satellite regression: a path that exists but cannot be iterated
+    /// must ERROR, not silently yield an empty registry (the old
+    /// `if let Ok(rd)` swallowed everything but missing-dir).
+    #[test]
+    fn unreadable_dir_errors_instead_of_empty() {
+        let f = std::env::temp_dir().join("unilora_registry_not_a_dir");
+        std::fs::write(&f, b"i am a file, not a directory").unwrap();
+        let err = Registry::load_dir(&f).unwrap_err().to_string();
+        assert!(err.contains("adapter dir"), "{err}");
+        std::fs::remove_file(&f).ok();
+    }
+
+    /// A corrupt adapter file inside the directory also propagates.
+    #[test]
+    fn corrupt_adapter_file_errors() {
+        let dir = std::env::temp_dir().join("unilora_registry_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad.uni1"), b"not an adapter").unwrap();
+        assert!(Registry::load_dir(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
     }
 }

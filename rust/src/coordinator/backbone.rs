@@ -1,5 +1,5 @@
 //! In-system "foundation models": pretrain each backbone size once on
-//! the synthetic corpus (pretrain_<size> artifact) and cache the weights
+//! the synthetic corpus (`pretrain_<size>` artifact) and cache the weights
 //! under artifacts/backbones/. Every fine-tuning experiment then starts
 //! from the same pretrained checkpoint — the stand-in for downloading
 //! RoBERTa/Mistral (DESIGN.md §4).

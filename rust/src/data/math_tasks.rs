@@ -18,7 +18,7 @@ pub enum Difficulty {
 }
 
 /// Build one chained-arithmetic example:
-///   Q a1 OP b1 = c1 ; c1 OP b2 = c2 [; ...] A <answer> EOS
+/// `Q a1 OP b1 = c1 ; c1 OP b2 = c2 [; ...] A <answer> EOS`.
 /// The prompt ends right after A_MARKER; labels cover answer + EOS.
 pub fn example(s: &mut Stream, diff: Difficulty, seq: usize) -> LmExample {
     let (steps, max_op) = match diff {

@@ -1,17 +1,20 @@
 //! `uni-lora` — the L3 launcher. Subcommands:
 //!
-//!   pretrain  --size base|large|lm|e2e --steps N [--seed S]
-//!   finetune  --task sst2|...|math|instruct --method uni|lora|... [--size base|large]
-//!             [--seed S] [--epochs N] [--lr-theta X] [--lr-head X] [--out adapter.uni1]
-//!   eval      --adapter adapter.uni1 --task <task>
-//!   serve     --addr 127.0.0.1:7401 --adapters <dir> [--base lm_uni]
-//!             [--workers N (0 = auto)] [--queue-depth N]
-//!   inspect   --adapter adapter.uni1       (print metadata + expansion norms)
-//!   props     --method uni|vera|...        (Table-1 property analysis)
-//!   list      (artifacts in the active backend's registry)
+//! ```text
+//! pretrain  --size base|large|lm|e2e --steps N [--seed S]
+//! finetune  --task sst2|...|math|instruct --method uni|lora|... [--size base|large]
+//!           [--seed S] [--epochs N] [--lr-theta X] [--lr-head X] [--out adapter.uni1]
+//! eval      --adapter adapter.uni1 --task <task>
+//! serve     --addr 127.0.0.1:7401 --adapters <dir> [--base lm_uni]
+//!           [--workers N (0 = auto)] [--queue-depth N]
+//! inspect   --adapter adapter.uni1       (print metadata + expansion norms)
+//! props     --method uni|vera|...        (Table-1 property analysis)
+//! methods   (the ProjectionOp registry's method-support matrix)
+//! list      (artifacts in the active backend's registry)
+//! ```
 //!
 //! Every subcommand takes `--backend native|pjrt` (default: native, or
-//! $UNI_LORA_BACKEND). The native backend needs no artifacts and no
+//! `$UNI_LORA_BACKEND`). The native backend needs no artifacts and no
 //! Python; the PJRT backend requires `--features pjrt` + `make artifacts`.
 
 use anyhow::{bail, Context, Result};
@@ -50,6 +53,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "inspect" => cmd_inspect(args),
         "props" => cmd_props(args),
+        "methods" => cmd_methods(),
         "list" => cmd_list(args),
         _ => {
             println!("{}", HELP);
@@ -67,6 +71,7 @@ const HELP: &str = "uni-lora — Uni-LoRA system reproduction
            [--workers 0 (auto)] [--queue-depth 256]
   inspect  --adapter a.uni1
   props    [--method uni]
+  methods  (method-support matrix from the projection registry)
   list
 options: --backend native|pjrt (default native)
 tasks: sst2 mrpc cola qnli rte stsb | math | instruct";
@@ -297,6 +302,31 @@ fn cmd_props(args: &Args) -> Result<()> {
     cfg.n_coef = 12;
     let p = properties::analyze(&cfg, args.u64_or("seed", 42)).context("property analysis")?;
     println!("{p:#?}");
+    Ok(())
+}
+
+/// The method-support matrix, generated from the `ProjectionOp`
+/// registry (the same source README.md's table is produced from:
+/// `uni-lora methods`). Method names, learned-P and native-train come
+/// from the registry; native-eval and pjrt are uniform across all
+/// registered methods today (every method has eval/logits kinds and an
+/// AOT artifact family), so those two columns are constants here.
+fn cmd_methods() -> Result<()> {
+    println!(
+        "{:<12} {:<10} {:<13} {:<12} {}",
+        "method", "learned-P", "native-train", "native-eval", "pjrt"
+    );
+    for op in uni_lora::projection::op::registry() {
+        let m = op.method();
+        println!(
+            "{:<12} {:<10} {:<13} {:<12} {}",
+            m,
+            if op.learned_p() { "yes" } else { "no" },
+            if uni_lora::runtime::native::can_train(m) { "yes" } else { "no" },
+            "yes",
+            "train+eval (artifacts)",
+        );
+    }
     Ok(())
 }
 

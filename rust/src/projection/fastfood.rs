@@ -47,7 +47,7 @@ impl FastfoodBlock {
         }
     }
 
-    /// Apply the block: theta [d] -> out [d]. O(d log d).
+    /// Apply the block: theta `[d]` -> out `[d]`. O(d log d).
     pub fn apply(&self, theta: &[f32]) -> Vec<f32> {
         let d = theta.len();
         let norm: f32 = self.gauss.iter().map(|g| g * g).sum::<f32>().sqrt();
@@ -68,6 +68,30 @@ impl FastfoodBlock {
         }
         w
     }
+
+    /// Adjoint of [`FastfoodBlock::apply`]: cotangent g `[d]` ->
+    /// dtheta `[d]`. Every stage is linear — the sign/Gauss diagonals
+    /// are self-adjoint, the orthonormal FWHT is symmetric, and the
+    /// permutation gather transposes to a scatter — so the chain just
+    /// runs backwards. O(d log d), the gradient-path complexity the
+    /// paper's Table 6 row implies.
+    pub fn apply_t(&self, g: &[f32]) -> Vec<f32> {
+        let d = g.len();
+        let norm: f32 = self.gauss.iter().map(|g| g * g).sum::<f32>().sqrt();
+        let gscale = (d as f32).sqrt() / norm;
+        let mut w: Vec<f32> = g.iter().zip(&self.sgn_s).map(|(x, s)| x * s).collect();
+        fwht(&mut w);
+        let mut v = vec![0f32; d];
+        for i in 0..d {
+            // forward gathered v[perm[i]] into slot i; scatter back
+            v[self.perm[i] as usize] += w[i] * self.gauss[i] * gscale;
+        }
+        fwht(&mut v);
+        for i in 0..d {
+            v[i] *= self.sgn_b[i];
+        }
+        v
+    }
 }
 
 /// Full Fastfood projection R^d -> R^out_len: ceil(out_len/d) blocks.
@@ -80,6 +104,26 @@ pub fn project(blocks: &[FastfoodBlock], theta: &[f32], out_len: usize) -> Vec<f
         }
     }
     out.truncate(out_len);
+    out
+}
+
+/// Adjoint of [`project`]: cotangent g (`project`'s out_len entries)
+/// -> dtheta `[d]`, summed over blocks. The truncated tail of the last
+/// block is zero-padded — the transpose of `project`'s truncation.
+pub fn project_t(blocks: &[FastfoodBlock], g: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; d];
+    for (j, b) in blocks.iter().enumerate() {
+        let lo = j * d;
+        if lo >= g.len() {
+            break;
+        }
+        let hi = (lo + d).min(g.len());
+        let mut gb = vec![0f32; d];
+        gb[..hi - lo].copy_from_slice(&g[lo..hi]);
+        for (o, x) in out.iter_mut().zip(b.apply_t(&gb)) {
+            *o += x;
+        }
+    }
     out
 }
 
@@ -125,6 +169,35 @@ mod tests {
         let n1: f64 = y.iter().map(|a| (a * a) as f64).sum();
         let ratio = (n1 / n0).sqrt();
         assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    /// `<B x, y> == <x, B^T y>` per block, on random probes.
+    #[test]
+    fn apply_t_is_adjoint_of_apply() {
+        let d = 128;
+        for seed in 0..6u64 {
+            let b = FastfoodBlock::generate(seed, d);
+            let x = rng::normals(seed + 10, d);
+            let y = rng::normals(seed + 20, d);
+            let lhs: f64 = b.apply(&x).iter().zip(&y).map(|(a, c)| (a * c) as f64).sum();
+            let rhs: f64 = x.iter().zip(&b.apply_t(&y)).map(|(a, c)| (a * c) as f64).sum();
+            assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "seed {seed}: {lhs} {rhs}");
+        }
+    }
+
+    /// Adjoint identity through the truncating multi-block projection.
+    #[test]
+    fn project_t_is_adjoint_of_project() {
+        let d = 64;
+        let out_len = 130; // exercises the zero-padded truncated tail
+        let blocks: Vec<_> = (0..3).map(|i| FastfoodBlock::generate(i, d)).collect();
+        let x = rng::normals(31, d);
+        let y = rng::normals(32, out_len);
+        let px = project(&blocks, &x, out_len);
+        let pty = project_t(&blocks, &y, d);
+        let lhs: f64 = px.iter().zip(&y).map(|(a, c)| (a * c) as f64).sum();
+        let rhs: f64 = x.iter().zip(&pty).map(|(a, c)| (a * c) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
     }
 
     #[test]

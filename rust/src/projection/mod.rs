@@ -1,17 +1,25 @@
 //! The projection substrate: everything about P.
 //!
+//! - `op`         — the `ProjectionOp` trait + method registry: apply
+//!                  (theta_d -> factors), vjp (the reverse-mode
+//!                  pullback), statics/theta layouts — ONE projection
+//!                  API for every method, and the single dispatch
+//!                  point (`op::resolve`) the rest of the system uses
 //! - `uni`        — the paper's O(D) one-hot projection (gather/scatter,
 //!                  index generation for the uni/local/nonuniform variants)
-//! - `fastfood`   — the O(D log d) structured baseline (FWHT chain)
+//! - `fastfood`   — the O(D log d) structured baseline (FWHT chain,
+//!                  forward + adjoint)
 //! - `gaussian`   — the O(D d) dense Gaussian baseline
-//! - `statics`    — seed -> frozen method statics, bit-identical with
+//! - `statics`    — the `Static` container + validating wrappers over
+//!                  the registry, bit-identical with
 //!                  python/compile/methods.gen_statics
-//! - `reconstruct`— theta_d -> per-module LoRA factors for *every*
-//!                  method (adapter expansion, Table 1 Jacobians)
+//! - `reconstruct`— `ModuleDelta` + theta_d -> factors convenience
+//!                  wrappers (adapter expansion, Table 1 Jacobians)
 //! - `properties` — numeric globality/uniformity/isometry checks (Table 1)
 
 pub mod fastfood;
 pub mod gaussian;
+pub mod op;
 pub mod properties;
 pub mod reconstruct;
 pub mod statics;

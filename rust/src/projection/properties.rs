@@ -12,8 +12,9 @@
 //!   isometry    — ||P x|| == ||x|| on random probes
 
 use crate::config::ModelCfg;
-use crate::projection::reconstruct::{reconstruct, theta_big};
-use crate::projection::statics::{d_effective, init_theta};
+use crate::projection::op;
+use crate::projection::reconstruct::theta_big;
+use crate::projection::statics::{d_effective, gen_statics, init_theta};
 use crate::rng;
 use anyhow::Result;
 
@@ -34,23 +35,29 @@ pub struct Props {
     pub cross_module_frac: f64,
 }
 
-/// Whether P itself contains trainable parameters (paper Table 1 col 1).
+/// Whether P itself contains trainable parameters (paper Table 1 col 1)
+/// — the registry's `learned_p` flag; unknown methods report false.
 pub fn p_is_learned(method: &str) -> bool {
-    matches!(method, "tied" | "vb" | "lora")
+    op::resolve(method).map(|o| o.learned_p()).unwrap_or(false)
 }
 
-/// Build the explicit D x d Jacobian of reconstruct at init.
+/// Build the explicit D x d Jacobian of the projection at init, fully
+/// generically: push each basis direction of theta_d through the
+/// registry's `apply` and difference against the base point. No
+/// per-method dispatch — any registered method is analyzable.
 pub fn jacobian(cfg: &ModelCfg, seed: u64) -> Result<(Vec<Vec<f32>>, usize)> {
+    let proj = op::resolve(&cfg.method)?;
+    let stats = gen_statics(cfg, seed)?;
     let d = d_effective(cfg);
     let th0 = init_theta(cfg, seed)?;
-    let base = theta_big(cfg, &reconstruct(cfg, seed, &th0)?);
+    let base = theta_big(cfg, &proj.apply(cfg, &stats, &th0)?);
     let big_d = base.len();
     let eps = 1e-2f32;
     let mut cols: Vec<Vec<f32>> = Vec::with_capacity(d);
     for j in 0..d {
         let mut th = th0.clone();
         th[j] += eps;
-        let out = theta_big(cfg, &reconstruct(cfg, seed, &th)?);
+        let out = theta_big(cfg, &proj.apply(cfg, &stats, &th)?);
         cols.push(
             out.iter()
                 .zip(&base)
@@ -61,22 +68,16 @@ pub fn jacobian(cfg: &ModelCfg, seed: u64) -> Result<(Vec<Vec<f32>>, usize)> {
     Ok((cols, big_d))
 }
 
-/// Row index -> *layer* index, per the theta_D layout. Globality is a
-/// cross-layer sharing property (paper §3.3: "local with layer-wise
-/// projection"), so we bucket at layer granularity (2 modules/layer).
-fn row_layer(cfg: &ModelCfg, row: usize) -> usize {
-    let per_module = if cfg.method == "fourierft" {
-        cfg.hidden * cfg.hidden
-    } else {
-        cfg.module_len()
-    };
-    row / (2 * per_module)
-}
-
 pub fn analyze(cfg: &ModelCfg, seed: u64) -> Result<Props> {
     let (cols, big_d) = jacobian(cfg, seed)?;
     let d = cols.len();
     let tol = 1e-5f32;
+    // Row index -> *layer* index, per the theta_D layout. Globality is
+    // a cross-layer sharing property (paper §3.3: "local with
+    // layer-wise projection"), so bucket at layer granularity
+    // (2 modules/layer); the per-module row count comes from the
+    // registry (dense methods contribute h*h rows, low-rank 2hr).
+    let per_layer = 2 * op::resolve(&cfg.method)?.flat_module_len(cfg);
 
     // column loads + module support
     let mut loads = Vec::with_capacity(d);
@@ -92,7 +93,7 @@ pub fn analyze(cfg: &ModelCfg, seed: u64) -> Result<Props> {
         let mut layers = std::collections::HashSet::new();
         for (row, v) in col.iter().enumerate() {
             if v.abs() > tol {
-                layers.insert(row_layer(cfg, row));
+                layers.insert(row / per_layer);
             }
         }
         if layers.len() > 1 {

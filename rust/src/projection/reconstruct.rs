@@ -5,12 +5,17 @@
 //! without any artifact or Python — used for adapter export/merging
 //! (adapters::expand) and for the Table-1 projection analysis
 //! (properties.rs builds P as the Jacobian of this map).
+//!
+//! The per-method expansion logic itself lives on
+//! `projection::op::ProjectionOp::apply`; this module keeps the
+//! `ModuleDelta` factor type and the seed/statics convenience wrappers
+//! every caller goes through.
 
 use crate::config::ModelCfg;
-use crate::projection::fastfood::FastfoodBlock;
-use crate::projection::statics::{gen_statics, theta_segments, Static};
-use crate::projection::uni;
-use anyhow::{bail, Result};
+use crate::kernels;
+use crate::projection::op;
+use crate::projection::statics::{gen_statics, Static};
+use anyhow::Result;
 
 /// Per-module weight increment, before the alpha/r scale.
 #[derive(Debug, Clone)]
@@ -23,42 +28,20 @@ pub enum ModuleDelta {
 }
 
 impl ModuleDelta {
-    /// Materialize the dense [h, h] increment (row-major).
+    /// Materialize the dense [h, h] increment (row-major). The
+    /// low-rank product routes through the blocked `kernels::gemm_nn`
+    /// — this is the hot path of adapter export/merge and of the
+    /// Table-1 Jacobian probes.
     pub fn to_dense(&self, h: usize, r: usize) -> Vec<f32> {
         match self {
             ModuleDelta::Dense(dw) => dw.clone(),
             ModuleDelta::LowRank { a, b } => {
                 let mut dw = vec![0f32; h * h];
-                for i in 0..h {
-                    for k in 0..r {
-                        let aik = a[i * r + k];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        for j in 0..h {
-                            dw[i * h + j] += aik * b[k * h + j];
-                        }
-                    }
-                }
+                kernels::gemm_nn(a, b, &mut dw, h, r, h, false);
                 dw
             }
         }
     }
-}
-
-fn seg_slices<'t>(cfg: &ModelCfg, theta: &'t [f32]) -> Vec<(String, &'t [f32])> {
-    let mut out = Vec::new();
-    let mut off = 0;
-    for (name, shape, _init) in theta_segments(cfg) {
-        let n: usize = shape.iter().product();
-        out.push((name, &theta[off..off + n]));
-        off += n;
-    }
-    out
-}
-
-fn find<'a>(segs: &'a [(String, &'a [f32])], name: &str) -> &'a [f32] {
-    segs.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap()
 }
 
 /// Expand theta_d into the per-module weight increments, regenerating
@@ -70,176 +53,13 @@ pub fn reconstruct(cfg: &ModelCfg, seed: u64, theta: &[f32]) -> Result<Vec<Modul
 
 /// Expand theta_d given pre-generated statics (the form the runtime
 /// backends use: statics arrive as artifact inputs, no seed in sight).
+/// Pure registry dispatch: `resolve(method).apply(..)`.
 pub fn reconstruct_with_statics(
     cfg: &ModelCfg,
     stats: &[Static],
     theta: &[f32],
 ) -> Result<Vec<ModuleDelta>> {
-    let (h, r, nm) = (cfg.hidden, cfg.rank, cfg.n_modules());
-    let (ml, ar) = (cfg.module_len(), h * r);
-    let segs = seg_slices(cfg, theta);
-    let m = cfg.method.as_str();
-
-    let lowrank_from_flat = |flat: &[f32]| -> Vec<ModuleDelta> {
-        (0..nm)
-            .map(|i| {
-                let o = i * ml;
-                ModuleDelta::LowRank {
-                    a: flat[o..o + ar].to_vec(),
-                    b: flat[o + ar..o + ml].to_vec(),
-                }
-            })
-            .collect()
-    };
-
-    Ok(match m {
-        "none" => (0..nm)
-            .map(|_| ModuleDelta::LowRank { a: vec![0.0; ar], b: vec![0.0; ar] })
-            .collect(),
-        "lora" => (0..nm)
-            .map(|i| ModuleDelta::LowRank {
-                a: find(&segs, &format!("A{i}")).to_vec(),
-                b: find(&segs, &format!("B{i}")).to_vec(),
-            })
-            .collect(),
-        "uni" | "local" | "nonuniform" => {
-            let idx = stats[0].as_i32();
-            let nrm = stats[1].as_f32();
-            let th = find(&segs, "theta");
-            let mut flat = vec![0f32; idx.len()];
-            uni::project(th, idx, nrm, &mut flat);
-            lowrank_from_flat(&flat)
-        }
-        "fastfood" => {
-            let th = find(&segs, "theta");
-            let nb = (ml + cfg.d - 1) / cfg.d;
-            let d = cfg.d;
-            // statics arrays are [nm, nb, d] — slice out each block
-            let (sb, g, pm, ss) =
-                (stats[0].as_f32(), stats[1].as_f32(), stats[2].as_i32(), stats[3].as_f32());
-            // full-P isometry normalization (mirrors methods.apply)
-            let norm = 1.0 / ((nm * nb) as f32).sqrt();
-            let mut flat = Vec::with_capacity(nm * ml);
-            for i in 0..nm {
-                let blocks: Vec<FastfoodBlock> = (0..nb)
-                    .map(|j| {
-                        let o = (i * nb + j) * d;
-                        FastfoodBlock {
-                            sgn_b: sb[o..o + d].to_vec(),
-                            gauss: g[o..o + d].to_vec(),
-                            perm: pm[o..o + d].to_vec(),
-                            sgn_s: ss[o..o + d].to_vec(),
-                        }
-                    })
-                    .collect();
-                flat.extend(
-                    crate::projection::fastfood::project(&blocks, th, ml)
-                        .iter()
-                        .map(|x| x * norm),
-                );
-            }
-            lowrank_from_flat(&flat)
-        }
-        "vera" | "tied" => {
-            let (pa, pb) = if m == "tied" {
-                (find(&segs, "pa_t"), find(&segs, "pb_t"))
-            } else {
-                (stats[0].as_f32(), stats[1].as_f32())
-            };
-            let lamb_b = find(&segs, "lamb_b"); // [nm, h]
-            let lamb_d = find(&segs, "lamb_d"); // [nm, r]
-            (0..nm)
-                .map(|i| {
-                    let lb = &lamb_b[i * h..(i + 1) * h];
-                    let ld = &lamb_d[i * r..(i + 1) * r];
-                    // a[p, j] = pa[p, j] * ld[j]; b[j, k] = pb[j, k] * lb[k]
-                    let mut a = vec![0f32; h * r];
-                    for p in 0..h {
-                        for j in 0..r {
-                            a[p * r + j] = pa[p * r + j] * ld[j];
-                        }
-                    }
-                    let mut b = vec![0f32; r * h];
-                    for j in 0..r {
-                        for k in 0..h {
-                            b[j * h + k] = pb[j * h + k] * lb[k];
-                        }
-                    }
-                    ModuleDelta::LowRank { a, b }
-                })
-                .collect()
-        }
-        "vb" => {
-            let top_idx = stats[0].as_i32(); // [n_sub, K]
-            let bank = find(&segs, "bank"); // [h_bank, b]
-            let coef = find(&segs, "coef"); // [n_sub, K]
-            let (bb, kk) = (cfg.vb_b, cfg.vb_k);
-            let n_sub = cfg.d_full() / bb;
-            let mut flat = vec![0f32; cfg.d_full()];
-            for sv in 0..n_sub {
-                for k in 0..kk {
-                    let c = coef[sv * kk + k];
-                    let row = top_idx[sv * kk + k] as usize;
-                    for p in 0..bb {
-                        flat[sv * bb + p] += c * bank[row * bb + p];
-                    }
-                }
-            }
-            lowrank_from_flat(&flat)
-        }
-        "lora_xs" => {
-            let pa = stats[0].as_f32(); // [nm, h, r]
-            let pb = stats[1].as_f32(); // [nm, r, h]
-            (0..nm)
-                .map(|i| {
-                    let rr = find(&segs, &format!("R{i}")); // [r, r]
-                    let pai = &pa[i * h * r..(i + 1) * h * r];
-                    let pbi = &pb[i * r * h..(i + 1) * r * h];
-                    // effective A' = pa_t @ R^T: a[p, j] = sum_q pa[p, q] R[j, q]
-                    let mut a = vec![0f32; h * r];
-                    for p in 0..h {
-                        for j in 0..r {
-                            let mut acc = 0f32;
-                            for q in 0..r {
-                                acc += pai[p * r + q] * rr[j * r + q];
-                            }
-                            a[p * r + j] = acc;
-                        }
-                    }
-                    ModuleDelta::LowRank { a, b: pbi.to_vec() }
-                })
-                .collect()
-        }
-        "fourierft" => {
-            let freq = stats[0].as_i32(); // [nm, n_coef, 2]
-            let coef = find(&segs, "coef"); // [nm, n_coef]
-            let nc = cfg.n_coef;
-            let norm = 1.0 / (nc as f32).sqrt();
-            (0..nm)
-                .map(|mi| {
-                    let mut dw = vec![0f32; h * h];
-                    for k in 0..nc {
-                        let c = coef[mi * nc + k];
-                        if c == 0.0 {
-                            continue;
-                        }
-                        let f1 = freq[(mi * nc + k) * 2] as f32;
-                        let f2 = freq[(mi * nc + k) * 2 + 1] as f32;
-                        for i in 0..h {
-                            let a1 = 2.0 * std::f32::consts::PI * f1 * i as f32 / h as f32;
-                            for j in 0..h {
-                                let a2 =
-                                    2.0 * std::f32::consts::PI * f2 * j as f32 / h as f32;
-                                dw[i * h + j] += c * (a1 + a2).cos() * norm;
-                            }
-                        }
-                    }
-                    ModuleDelta::Dense(dw)
-                })
-                .collect()
-        }
-        other => bail!("unknown method {other:?}"),
-    })
+    op::resolve(&cfg.method)?.apply(cfg, stats, theta)
 }
 
 /// Flatten the reconstruction into the paper's theta_D vector:
@@ -362,5 +182,25 @@ mod tests {
                 assert!((2.0 * x - y).abs() < 1e-4, "{m}: {x} {y}");
             }
         }
+    }
+
+    #[test]
+    fn to_dense_matches_reference_triple_loop() {
+        // the gemm-routed low-rank expansion must equal the naive
+        // i-k-j accumulation bit for bit (kernels determinism contract)
+        let (h, r) = (16, 2);
+        let a = crate::rng::normals(1, h * r);
+        let b = crate::rng::normals(2, r * h);
+        let d = ModuleDelta::LowRank { a: a.clone(), b: b.clone() };
+        let got = d.to_dense(h, r);
+        let mut want = vec![0f32; h * h];
+        for i in 0..h {
+            for k in 0..r {
+                for j in 0..h {
+                    want[i * h + j] += a[i * r + k] * b[k * h + j];
+                }
+            }
+        }
+        assert_eq!(got, want);
     }
 }

@@ -2,12 +2,16 @@
 //! method, regenerated on the Rust side so that artifacts (and adapter
 //! checkpoints) never need to store it.
 //!
+//! The per-method generation/layout logic lives on each
+//! `projection::op::ProjectionOp`; this module keeps the `Static`
+//! container plus the validating wrappers every caller goes through
+//! (`gen_statics`, `theta_segments`, `init_theta`, `d_effective`).
 //! MUST stay bit-identical with python/compile/methods.gen_statics —
 //! same child streams, same ordering. Cross-language goldens live in
 //! rust/tests/cross_parity.rs.
 
 use crate::config::ModelCfg;
-use crate::projection::uni::{counts_to_nrm, gen_indices, Variant};
+use crate::projection::op;
 use crate::rng;
 use anyhow::{bail, Result};
 
@@ -25,12 +29,12 @@ pub struct Static {
 }
 
 impl Static {
-    fn f32(name: &str, shape: Vec<usize>, data: Vec<f32>) -> Static {
+    pub(crate) fn f32(name: &str, shape: Vec<usize>, data: Vec<f32>) -> Static {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Static { name: name.into(), shape, data: StaticData::F32(data) }
     }
 
-    fn i32(name: &str, shape: Vec<usize>, data: Vec<i32>) -> Static {
+    pub(crate) fn i32(name: &str, shape: Vec<usize>, data: Vec<i32>) -> Static {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Static { name: name.into(), shape, data: StaticData::I32(data) }
     }
@@ -57,32 +61,6 @@ impl Static {
     }
 }
 
-/// Modified Gram-Schmidt column orthonormalization of a row-major
-/// [h, r] matrix (float64 accumulation — mirrors methods._mgs_columns).
-fn mgs_columns(a_f32: &[f32], h: usize, r: usize) -> Vec<f32> {
-    let mut a: Vec<f64> = a_f32.iter().map(|&x| x as f64).collect();
-    for j in 0..r {
-        for i in 0..j {
-            let mut dot = 0f64;
-            for k in 0..h {
-                dot += a[k * r + i] * a[k * r + j];
-            }
-            for k in 0..h {
-                a[k * r + j] -= dot * a[k * r + i];
-            }
-        }
-        let mut nrm = 0f64;
-        for k in 0..h {
-            nrm += a[k * r + j] * a[k * r + j];
-        }
-        let nrm = nrm.sqrt();
-        for k in 0..h {
-            a[k * r + j] /= nrm;
-        }
-    }
-    a.iter().map(|&x| x as f32).collect()
-}
-
 /// Blocks per module for the fastfood method.
 pub fn fastfood_blocks(cfg: &ModelCfg) -> usize {
     (cfg.module_len() + cfg.d - 1) / cfg.d
@@ -100,140 +78,18 @@ pub fn fastfood_block_seed(seed: u64, module: usize, block: usize) -> u64 {
 }
 
 /// Generate the frozen statics for `cfg.method`, in the same order as
-/// python's statics_spec (which is the artifact input order).
+/// python's statics_spec (which is the artifact input order). Validates
+/// the cfg, then dispatches through the `projection::op` registry.
 pub fn gen_statics(cfg: &ModelCfg, seed: u64) -> Result<Vec<Static>> {
     cfg.validate()?;
-    let (h, r, nm, d, big_d) =
-        (cfg.hidden, cfg.rank, cfg.n_modules(), cfg.d, cfg.d_full());
-    let m = cfg.method.as_str();
-    if let Some(variant) = Variant::from_method(m) {
-        let idx = gen_indices(cfg, seed, variant);
-        let nrm = counts_to_nrm(&idx, d);
-        return Ok(vec![
-            Static::i32("idx", vec![big_d], idx),
-            Static::f32("nrm", vec![big_d], nrm),
-        ]);
-    }
-    Ok(match m {
-        "fastfood" => {
-            let nb = fastfood_blocks(cfg);
-            let (mut sb, mut g, mut pm, mut ss) =
-                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-            for i in 0..nm {
-                for j in 0..nb {
-                    let base = fastfood_block_seed(seed, i, j);
-                    sb.extend(rng::signs(rng::child_seed(base, 1), d));
-                    g.extend(rng::normals(rng::child_seed(base, 2), d));
-                    pm.extend(rng::permutation(rng::child_seed(base, 3), d));
-                    ss.extend(rng::signs(rng::child_seed(base, 4), d));
-                }
-            }
-            vec![
-                Static::f32("sgn_b", vec![nm, nb, d], sb),
-                Static::f32("gauss", vec![nm, nb, d], g),
-                Static::i32("perm", vec![nm, nb, d], pm),
-                Static::f32("sgn_s", vec![nm, nb, d], ss),
-            ]
-        }
-        "vera" => {
-            let s = 1.0 / (h as f32).sqrt();
-            let pa: Vec<f32> = rng::normals(rng::child_seed(seed, rng::STREAM_VERA_PA), h * r)
-                .iter().map(|x| x * s).collect();
-            let pb: Vec<f32> = rng::normals(rng::child_seed(seed, rng::STREAM_VERA_PB), r * h)
-                .iter().map(|x| x * s).collect();
-            vec![
-                Static::f32("pa_t", vec![h, r], pa),
-                Static::f32("pb_t", vec![r, h], pb),
-            ]
-        }
-        "vb" => {
-            let n_sub = big_d / cfg.vb_b;
-            let s = rng::child_seed(seed, rng::STREAM_VB_TOPIDX);
-            vec![Static::i32(
-                "top_idx",
-                vec![n_sub, cfg.vb_k],
-                rng::indices(s, n_sub * cfg.vb_k, cfg.vb_bank),
-            )]
-        }
-        "lora_xs" => {
-            // Orthonormal frozen bases (SVD stand-in — orthonormality is
-            // what makes LoRA-XS isometric in Table 1). Mirrors the
-            // float64 modified Gram-Schmidt in methods.gen_statics.
-            let (mut pa, mut pb) = (Vec::new(), Vec::new());
-            for i in 0..nm {
-                let base = rng::child_seed(seed, rng::STREAM_XS_BASES + i as u64);
-                let ra = rng::normals(rng::child_seed(base, 1), h * r);
-                let rb = rng::normals(rng::child_seed(base, 2), r * h);
-                pa.extend(mgs_columns(&ra, h, r));
-                // pb rows orthonormal = columns of its transpose
-                let rb_t: Vec<f32> = (0..h * r)
-                    .map(|k| rb[(k % r) * h + k / r]) // [r,h] -> [h,r] transpose
-                    .collect();
-                let qt = mgs_columns(&rb_t, h, r); // [h, r] orthonormal cols
-                // transpose back to [r, h]
-                pb.extend((0..r * h).map(|k| qt[(k % h) * r + k / h]));
-            }
-            vec![
-                Static::f32("pa_t", vec![nm, h, r], pa),
-                Static::f32("pb_t", vec![nm, r, h], pb),
-            ]
-        }
-        "fourierft" => {
-            let mut f = Vec::with_capacity(nm * cfg.n_coef * 2);
-            for i in 0..nm {
-                let base = rng::child_seed(seed, rng::STREAM_FOURIER_FREQ + i as u64);
-                let f0 = rng::indices(rng::child_seed(base, 1), cfg.n_coef, h);
-                let f1 = rng::indices(rng::child_seed(base, 2), cfg.n_coef, h);
-                for k in 0..cfg.n_coef {
-                    f.push(f0[k]);
-                    f.push(f1[k]);
-                }
-            }
-            vec![Static::i32("freq", vec![nm, cfg.n_coef, 2], f)]
-        }
-        "lora" | "tied" | "none" => vec![],
-        other => bail!("unknown method {other:?}"),
-    })
+    op::resolve(&cfg.method)?.gen_statics(cfg, seed)
 }
 
-/// Theta layout mirror of methods.theta_segments (init specs included).
+/// Theta layout mirror of methods.theta_segments (init specs
+/// included), from the registry; unknown methods have no trainable
+/// segments (matching the historical fall-through).
 pub fn theta_segments(cfg: &ModelCfg) -> Vec<(String, Vec<usize>, String)> {
-    let (h, r, nm, d) = (cfg.hidden, cfg.rank, cfg.n_modules(), cfg.d);
-    match cfg.method.as_str() {
-        "lora" => {
-            let mut v = Vec::new();
-            for i in 0..nm {
-                v.push((format!("A{i}"), vec![h, r], "normal:0.02".into()));
-                v.push((format!("B{i}"), vec![r, h], "zeros".into()));
-            }
-            v
-        }
-        "uni" | "local" | "nonuniform" | "fastfood" => {
-            vec![("theta".into(), vec![d], "uniform:0.02".into())]
-        }
-        "vera" => vec![
-            ("lamb_b".into(), vec![nm, h], "zeros".into()),
-            ("lamb_d".into(), vec![nm, r], "const:0.1".into()),
-        ],
-        "tied" => vec![
-            ("pa_t".into(), vec![h, r], "normal:0.02".into()),
-            ("pb_t".into(), vec![r, h], "normal:0.02".into()),
-            ("lamb_b".into(), vec![nm, h], "zeros".into()),
-            ("lamb_d".into(), vec![nm, r], "const:0.1".into()),
-        ],
-        "vb" => {
-            let n_sub = cfg.d_full() / cfg.vb_b;
-            vec![
-                ("bank".into(), vec![cfg.vb_bank, cfg.vb_b], "uniform:0.02".into()),
-                ("coef".into(), vec![n_sub, cfg.vb_k], "const:0.5".into()),
-            ]
-        }
-        "lora_xs" => (0..nm)
-            .map(|i| (format!("R{i}"), vec![r, r], "zeros".into()))
-            .collect(),
-        "fourierft" => vec![("coef".into(), vec![nm, cfg.n_coef], "zeros".into())],
-        _ => vec![],
-    }
+    op::resolve(&cfg.method).map(|o| o.theta_segments(cfg)).unwrap_or_default()
 }
 
 /// Materialize an init spec string — mirror of methods.init_array.

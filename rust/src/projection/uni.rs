@@ -139,7 +139,7 @@ pub fn column_counts(idx: &[i32], d: usize) -> Vec<u32> {
     cnt
 }
 
-/// nrm[k] = 1/sqrt(n_{idx[k]}) — the column normalization of Theorem 1.
+/// `nrm[k] = 1/sqrt(n_{idx[k]})` — the column normalization of Theorem 1.
 pub fn counts_to_nrm(idx: &[i32], d: usize) -> Vec<f32> {
     let cnt = column_counts(idx, d);
     idx.iter()

@@ -5,12 +5,13 @@
 //! the serving router, benches and examples run end-to-end with zero
 //! external dependencies (no Python, no HLO artifacts, no PJRT).
 //!
-//! Method support: forward/eval paths work for every PEFT method (the
-//! delta expansion reuses `projection::reconstruct`). Training is
-//! implemented for the methods with a native adjoint — the uni family
-//! (via the O(D) scatter `uni::project_t`), plain LoRA (identity) and
-//! "none"/full fine-tuning. Training the remaining baselines natively
-//! is an open item (ROADMAP); they bail with a clear message.
+//! Method support: every registered PEFT method runs end to end here,
+//! both eval AND train. The delta expansion is
+//! `projection::op::ProjectionOp::apply` (via `reconstruct`), and the
+//! gradient route back onto the trainable vector is the matching
+//! `vjp` — one projection API for all ten methods, resolved through
+//! `projection::op::resolve`. No per-method dispatch lives in this
+//! file anymore.
 
 pub mod model;
 
@@ -20,9 +21,9 @@ use super::spec;
 use super::tensor::{ExecStats, TensorIn, TensorOut};
 use crate::config::ModelCfg;
 use crate::kernels;
+use crate::projection::op as projop;
 use crate::projection::reconstruct::{reconstruct_with_statics, ModuleDelta};
 use crate::projection::statics::{Static, StaticData};
-use crate::projection::uni;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
@@ -167,60 +168,36 @@ fn parse_statics(meta: &ArtifactMeta, ins: &[&TensorIn], start: usize) -> Result
     Ok(out)
 }
 
-/// Methods the native backend can train (i.e. has a reconstruct
-/// adjoint for). Single source of truth — consumed by
-/// `ensure_trainable` and by callers that want to skip untrainable
-/// rows up front (examples/paper_tables).
-pub const TRAINABLE_METHODS: [&str; 5] = ["uni", "local", "nonuniform", "lora", "none"];
-
 /// Whether the native backend can run the train artifact kinds for a
-/// method (eval/logits kinds work for every method).
+/// method. Derived from the `projection::op` registry — every
+/// registered method carries its own `vjp`, so ALL of them train
+/// natively; only unknown method strings are rejected.
 pub fn can_train(method: &str) -> bool {
-    TRAINABLE_METHODS.contains(&method)
+    projop::resolve(method).is_ok()
+}
+
+/// Registered method names, for callers enumerating the training
+/// surface (README matrix, examples/paper_tables).
+pub fn trainable_methods() -> Vec<&'static str> {
+    projop::method_names()
 }
 
 fn ensure_trainable(cfg: &ModelCfg) -> Result<()> {
-    if can_train(cfg.method.as_str()) {
-        return Ok(());
-    }
-    bail!(
-        "native backend trains methods {}; method {:?} is eval/serve-only here — \
-         use `--features pjrt` with AOT artifacts to train it",
-        TRAINABLE_METHODS.join("/"),
-        cfg.method
-    )
+    projop::resolve(&cfg.method).map(|_| ())
 }
 
-/// Map per-module factor gradients back onto the trainable vector
-/// (the adjoint of each supported method's reconstruct map).
+/// Map per-module factor cotangents back onto the trainable vector —
+/// the registry op's reverse-mode pullback at theta (exact for linear
+/// methods and for the bilinear tied/vb maps).
 fn theta_grad(
     cfg: &ModelCfg,
-    theta_len: usize,
     stats: &[Static],
+    theta: &[f32],
     grads: &model::Gradients,
 ) -> Result<Vec<f32>> {
-    match cfg.method.as_str() {
-        "uni" | "local" | "nonuniform" => {
-            let mut g_flat = Vec::with_capacity(cfg.d_full());
-            for mg in &grads.modules {
-                g_flat.extend(&mg.a);
-                g_flat.extend(&mg.b);
-            }
-            Ok(uni::project_t(&g_flat, stats[0].as_i32(), stats[1].as_f32(), cfg.d))
-        }
-        "lora" => {
-            // theta IS the per-module (A, B) stack: identity adjoint
-            let mut g = Vec::with_capacity(theta_len);
-            for mg in &grads.modules {
-                g.extend(&mg.a);
-                g.extend(&mg.b);
-            }
-            anyhow::ensure!(g.len() == theta_len, "lora grad layout mismatch");
-            Ok(g)
-        }
-        "none" => Ok(vec![0f32; theta_len]),
-        other => bail!("no native gradient for method {other:?}"),
-    }
+    projop::resolve(&cfg.method)?
+        .vjp(cfg, stats, theta, &grads.modules)
+        .with_context(|| format!("theta pullback for method {:?}", cfg.method))
 }
 
 fn zero_deltas(cfg: &ModelCfg) -> Vec<ModuleDelta> {
@@ -263,7 +240,7 @@ fn cls_train(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
     };
     let (g_head, d_hidden) = model::cls_head_backward(cfg, &ch, &head, &d_logits);
     let grads = model::backward(cfg, &base, &deltas, tokens, &fc, &d_hidden, false)?;
-    let g_theta = theta_grad(cfg, theta.len(), &stats, &grads)?;
+    let g_theta = theta_grad(cfg, &stats, &theta, &grads)?;
     model::adamw(&mut theta, &g_theta, &mut m, &mut v, step, lr_t, wd);
     model::adamw(&mut head, &g_head, &mut hm, &mut hv, step, lr_h, 0.0);
     Ok(vec![
@@ -316,7 +293,7 @@ fn lm_train(meta: &ArtifactMeta, ins: &[&TensorIn]) -> Result<Vec<TensorOut>> {
     let (h, vc) = (cfg.hidden, cfg.vocab);
     kernels::gemm_nt(&d_logits, base.seg("lm_head"), &mut d_hidden, bt, h, vc, false);
     let grads = model::backward(cfg, &base, &deltas, tokens, &fc, &d_hidden, false)?;
-    let g_theta = theta_grad(cfg, theta.len(), &stats, &grads)?;
+    let g_theta = theta_grad(cfg, &stats, &theta, &grads)?;
     model::adamw(&mut theta, &g_theta, &mut m, &mut v, step, lr_t, wd);
     Ok(vec![
         TensorOut::F32(theta),
@@ -492,10 +469,18 @@ mod tests {
         assert_eq!(be.stats().executions, 1);
     }
 
+    /// The registry closes the old trainability gap: methods that used
+    /// to be eval/serve-only here (vera, the bilinear vb, the dense
+    /// fourierft, ...) now run their train artifact kinds natively.
     #[test]
-    fn eval_works_for_every_method_train_gates_unsupported() {
+    fn every_registered_method_is_trainable_and_vera_trains() {
+        assert!(crate::projection::op::registry()
+            .iter()
+            .all(|op| can_train(op.method())));
+        assert_eq!(trainable_methods(), crate::projection::op::method_names());
+        assert!(!can_train("nope"));
+
         let mut be = backend();
-        // vera is eval-only natively: eval runs, train bails clearly
         let art = "glue_base_vera_c2_cls_eval";
         let meta = be.meta(art).unwrap().clone();
         let cfg = meta.cfg.clone();
@@ -512,14 +497,18 @@ mod tests {
         inputs.extend(stats.iter().map(TensorIn::from));
         assert!(be.run(art, &inputs).is_ok());
 
-        assert!(!can_train("vera") && can_train("uni"));
+        // the formerly-bailing train kind now executes and returns the
+        // full (theta, m, v, head, hm, hv, loss) update
         let train = "glue_base_vera_c2_cls_train";
         let tmeta = be.meta(train).unwrap().clone();
+        // nonzero head so gradient reaches the adapted modules at step 1
+        let head: Vec<f32> =
+            rng::normals(77, tmeta.head_params).iter().map(|v| 0.1 * v).collect();
         let mut tin = vec![
             TensorIn::F32(theta.clone()),
             TensorIn::F32(vec![0f32; theta.len()]),
             TensorIn::F32(vec![0f32; theta.len()]),
-            TensorIn::F32(vec![0f32; tmeta.head_params]),
+            TensorIn::F32(head),
             TensorIn::F32(vec![0f32; tmeta.head_params]),
             TensorIn::F32(vec![0f32; tmeta.head_params]),
             TensorIn::ScalarI32(1),
@@ -532,8 +521,14 @@ mod tests {
             TensorIn::I32(vec![0; cfg.batch]),
         ];
         tin.extend(stats.iter().map(TensorIn::from));
-        let err = be.run(train, &tin).unwrap_err().to_string();
-        assert!(err.contains("eval/serve-only"), "{err}");
+        let out = be.run(train, &tin).unwrap();
+        assert_eq!(out.len(), 7);
+        assert!(out[6].scalar_f32().unwrap().is_finite());
+        let new_theta = out[0].as_f32().unwrap();
+        assert_eq!(new_theta.len(), theta.len());
+        // lamb_b receives gradient through b = pb * lamb_b's bilinear
+        // partner, so at least part of theta must have moved
+        assert!(new_theta.iter().zip(&theta).any(|(a, b)| a != b));
     }
 
     #[test]

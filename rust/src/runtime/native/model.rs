@@ -398,15 +398,13 @@ pub fn forward(
 // ------------------------------------------------------------------
 // backward
 
-/// Gradient of one adapted module's LoRA factors (scale included).
-pub struct ModuleGrad {
-    pub a: Vec<f32>, // [h, r]
-    pub b: Vec<f32>, // [r, h]
-}
-
 pub struct Gradients {
-    /// per adapted module, in module order (q0, v0, q1, v1, ...)
-    pub modules: Vec<ModuleGrad>,
+    /// Per adapted module, in module order (q0, v0, q1, v1, ...) —
+    /// factor cotangents in the SAME geometry as the deltas themselves
+    /// (`LowRank` da/db for factored methods, `Dense` d(DeltaW) for
+    /// FourierFT), scale included. This is exactly the shape
+    /// `projection::op::ProjectionOp::vjp` pulls back onto theta.
+    pub modules: Vec<ModuleDelta>,
     /// gradient of the flat frozen-backbone vector, when requested
     pub w0: Option<Vec<f32>>,
 }
@@ -417,7 +415,7 @@ fn module_grad(
     dy: &[f32],
     delta: &ModuleDelta,
     bt: usize,
-) -> ModuleGrad {
+) -> ModuleDelta {
     let (h, r, sc) = (cfg.hidden, cfg.rank, cfg.scale);
     match delta {
         ModuleDelta::LowRank { a, b } => {
@@ -437,11 +435,17 @@ fn module_grad(
             for g in db.iter_mut() {
                 *g *= sc;
             }
-            ModuleGrad { a: da, b: db }
+            ModuleDelta::LowRank { a: da, b: db }
         }
-        // Dense deltas (FourierFT) are forward/eval-only on the native
-        // backend; training bails before reaching backward.
-        ModuleDelta::Dense(_) => ModuleGrad { a: Vec::new(), b: Vec::new() },
+        ModuleDelta::Dense(_) => {
+            // forward adds sc * DeltaW onto W0: d(DeltaW) = sc * x2^T @ dy
+            let mut ddw = vec![0f32; h * h];
+            gemm_tn(x2, dy, &mut ddw, bt, h, h, false);
+            for g in ddw.iter_mut() {
+                *g *= sc;
+            }
+            ModuleDelta::Dense(ddw)
+        }
     }
 }
 
@@ -468,7 +472,7 @@ pub fn backward(
     let bt = b * t;
     ensure!(d_hidden.len() == bt * h, "d_hidden size mismatch");
     let mut w0g = if want_w0 { Some(vec![0f32; base.total()]) } else { None };
-    let mut modules: Vec<Option<ModuleGrad>> = (0..cfg.n_modules()).map(|_| None).collect();
+    let mut modules: Vec<Option<ModuleDelta>> = (0..cfg.n_modules()).map(|_| None).collect();
 
     let seg_add = |w0g: &mut Option<Vec<f32>>, name: &str, g: &[f32]| {
         if let Some(buf) = w0g {
@@ -785,7 +789,6 @@ mod tests {
     use super::*;
     use crate::projection::reconstruct::reconstruct_with_statics;
     use crate::projection::statics::{gen_statics, init_array, init_theta, Static};
-    use crate::projection::uni;
     use crate::rng;
 
     fn tiny_cfg() -> ModelCfg {
@@ -933,15 +936,75 @@ mod tests {
         let (_, d_logits) = softmax_xent_mean(&ch.logits, &labels, cfg.batch, c).unwrap();
         let (_, d_hidden) = cls_head_backward(&cfg, &ch, &head, &d_logits);
         let grads = backward(&cfg, &base, &deltas, &tokens, &fc, &d_hidden, false).unwrap();
-        let mut g_flat = Vec::with_capacity(cfg.d_full());
-        for mg in &grads.modules {
-            g_flat.extend(&mg.a);
-            g_flat.extend(&mg.b);
-        }
-        let g_theta = uni::project_t(&g_flat, stats[0].as_i32(), stats[1].as_f32(), cfg.d);
+        // pull the factor cotangents back onto theta through the
+        // registry op — the exact path the native train kinds use
+        let g_theta = crate::projection::op::resolve(&cfg.method)
+            .unwrap()
+            .vjp(&cfg, &stats, &theta, &grads.modules)
+            .unwrap();
 
         let eps = 3e-3f32;
         for j in 0..cfg.d {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let num = (loss_of(&tp) - loss_of(&tm)) / (2.0 * eps);
+            assert!(
+                (num - g_theta[j]).abs() < 5e-2 * g_theta[j].abs().max(0.02),
+                "g_theta[{j}]: fd {num} vs analytic {}",
+                g_theta[j]
+            );
+        }
+    }
+
+    /// Same end-to-end check through a DENSE delta (FourierFT): the
+    /// d(DeltaW) = sc * x2^T @ dy path in module_grad, pulled back
+    /// through the spectral vjp.
+    #[test]
+    fn fourierft_theta_gradient_matches_finite_difference() {
+        let cfg = {
+            let mut c = tiny_cfg();
+            c.method = "fourierft".into();
+            c
+        };
+        let seed = 17;
+        let w0 = init_w0(&cfg, seed);
+        let base = BaseMap::new(&cfg, &w0).unwrap();
+        let stats = gen_statics(&cfg, seed).unwrap();
+        let d = crate::projection::statics::d_effective(&cfg);
+        let theta: Vec<f32> = rng::normals(19, d).iter().map(|v| 0.1 * v).collect();
+        let head: Vec<f32> = rng::normals(20, spec::head_param_count(&cfg))
+            .iter()
+            .map(|v| 0.1 * v)
+            .collect();
+        let tokens = tokens_for(&cfg, 21);
+        let attn_len = vec![cfg.seq as i32; cfg.batch];
+        let labels: Vec<i32> = (0..cfg.batch as i32).map(|i| i % 2).collect();
+        let c = cfg.n_classes;
+
+        let loss_of = |th: &[f32]| -> f32 {
+            let deltas = reconstruct_with_statics(&cfg, &stats, th).unwrap();
+            let fc = forward(&cfg, &base, &deltas, &tokens).unwrap();
+            let ch = cls_head_forward(&cfg, &fc.hidden, &head, &attn_len);
+            softmax_xent_mean(&ch.logits, &labels, cfg.batch, c).unwrap().0
+        };
+
+        let deltas = reconstruct_with_statics(&cfg, &stats, &theta).unwrap();
+        assert!(matches!(deltas[0], ModuleDelta::Dense(_)));
+        let fc = forward(&cfg, &base, &deltas, &tokens).unwrap();
+        let ch = cls_head_forward(&cfg, &fc.hidden, &head, &attn_len);
+        let (_, d_logits) = softmax_xent_mean(&ch.logits, &labels, cfg.batch, c).unwrap();
+        let (_, d_hidden) = cls_head_backward(&cfg, &ch, &head, &d_logits);
+        let grads = backward(&cfg, &base, &deltas, &tokens, &fc, &d_hidden, false).unwrap();
+        assert!(grads.modules.iter().all(|g| matches!(g, ModuleDelta::Dense(_))));
+        let g_theta = crate::projection::op::resolve(&cfg.method)
+            .unwrap()
+            .vjp(&cfg, &stats, &theta, &grads.modules)
+            .unwrap();
+
+        let eps = 3e-3f32;
+        for j in 0..d {
             let mut tp = theta.clone();
             tp[j] += eps;
             let mut tm = theta.clone();

@@ -8,7 +8,8 @@
 
 use super::artifact::{ArtifactMeta, DType, InputSpec, SegmentSpec};
 use crate::config::ModelCfg;
-use crate::projection::statics::{d_effective, fastfood_blocks, theta_segments};
+use crate::projection::op;
+use crate::projection::statics::{d_effective, theta_segments};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -54,40 +55,23 @@ pub fn head_param_count(cfg: &ModelCfg) -> usize {
     cfg.hidden * c + c
 }
 
-/// Frozen side-input signature — mirror of methods.statics_spec.
+/// Frozen side-input signature — mirror of methods.statics_spec,
+/// mapped from the `projection::op` registry's declared statics layout
+/// (unknown methods have no statics, matching the historical
+/// fall-through; `artifact_meta` rejects them via `cfg.validate` +
+/// statics generation anyway).
 pub fn statics_spec(cfg: &ModelCfg) -> Vec<InputSpec> {
-    let (h, r, nm, d, big_d) = (cfg.hidden, cfg.rank, cfg.n_modules(), cfg.d, cfg.d_full());
-    let f32s = |name: &str, shape: Vec<usize>| InputSpec {
-        name: name.into(),
-        dtype: DType::F32,
-        shape,
-    };
-    let i32s = |name: &str, shape: Vec<usize>| InputSpec {
-        name: name.into(),
-        dtype: DType::I32,
-        shape,
-    };
-    match cfg.method.as_str() {
-        "uni" | "local" | "nonuniform" => {
-            vec![i32s("idx", vec![big_d]), f32s("nrm", vec![big_d])]
-        }
-        "fastfood" => {
-            let nb = fastfood_blocks(cfg);
-            vec![
-                f32s("sgn_b", vec![nm, nb, d]),
-                f32s("gauss", vec![nm, nb, d]),
-                i32s("perm", vec![nm, nb, d]),
-                f32s("sgn_s", vec![nm, nb, d]),
-            ]
-        }
-        "vera" => vec![f32s("pa_t", vec![h, r]), f32s("pb_t", vec![r, h])],
-        "vb" => {
-            let n_sub = big_d / cfg.vb_b;
-            vec![i32s("top_idx", vec![n_sub, cfg.vb_k])]
-        }
-        "lora_xs" => vec![f32s("pa_t", vec![nm, h, r]), f32s("pb_t", vec![nm, r, h])],
-        "fourierft" => vec![i32s("freq", vec![nm, cfg.n_coef, 2])],
-        _ => vec![], // lora, tied, none
+    match op::resolve(&cfg.method) {
+        Ok(proj) => proj
+            .statics_spec(cfg)
+            .into_iter()
+            .map(|s| InputSpec {
+                name: s.name.to_string(),
+                dtype: if s.is_i32 { DType::I32 } else { DType::F32 },
+                shape: s.shape,
+            })
+            .collect(),
+        Err(_) => Vec::new(),
     }
 }
 

@@ -1,14 +1,21 @@
 //! Wire protocol: one JSON object per line.
 //!
 //! Requests:
-//!   {"op":"generate","adapter":"<name>","prompt":[ids],"max_new":N}
-//!   {"op":"adapters"}
-//!   {"op":"stats"}
+//!
+//! ```text
+//! {"op":"generate","adapter":"<name>","prompt":[ids],"max_new":N}
+//! {"op":"adapters"}
+//! {"op":"stats"}
+//! ```
+//!
 //! Responses:
-//!   {"ok":true,"tokens":[ids]}
-//!   {"ok":true,"adapters":[names]}
-//!   {"ok":true,"stats":{...}}
-//!   {"ok":false,"error":"..."}
+//!
+//! ```text
+//! {"ok":true,"tokens":[ids]}
+//! {"ok":true,"adapters":[names]}
+//! {"ok":true,"stats":{...}}
+//! {"ok":false,"error":"..."}
+//! ```
 
 use crate::util::json::{n, obj, s, Json};
 use anyhow::{anyhow, Result};

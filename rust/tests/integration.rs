@@ -101,6 +101,40 @@ fn native_training_is_thread_count_invariant() {
     assert_eq!(t1, t4, "trained theta must not depend on the thread count");
 }
 
+/// The `ProjectionOp` redesign's acceptance test: baselines that used
+/// to bail with "eval/serve-only" on the native backend (vera's
+/// diagonal scalings, fastfood's FWHT chain) now train end to end
+/// through the registry vjp — >= 2 steps each with decreasing loss.
+#[test]
+fn native_trains_formerly_eval_only_baselines() {
+    for (family, method) in [("glue_base_vera_c2", "vera"), ("glue_large_fastfood_c2", "fastfood")]
+    {
+        let mut exec = backend();
+        let meta = exec.meta(&format!("{family}_cls_train")).unwrap().clone();
+        assert_eq!(meta.cfg.method, method);
+        let w0 = init_base(&meta, 21);
+        let mut tr = ClsTrainer::new(exec.as_ref(), family, 21, w0).unwrap();
+        let split = glue::generate("sst2", 21, meta.cfg.seq, meta.cfg.vocab);
+        let batch = &cls_batches(&split.train, meta.cfg.batch, 21, 0)[0];
+        let hp = Hyper { lr_theta: 5e-3, lr_head: 5e-2, wd: 0.0, epochs: 1 };
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            losses.push(tr.train_step(exec.as_mut(), batch, &hp).unwrap());
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{method}: {losses:?}");
+        assert!(
+            losses.last().unwrap() < &losses[0],
+            "{method}: loss did not decrease on repeated batch: {losses:?}"
+        );
+        // the trainable vector itself moved (not just the cls head)
+        let theta0 = uni_lora::projection::statics::init_theta(&meta.cfg, 21).unwrap();
+        assert!(
+            tr.theta.iter().zip(&theta0).any(|(a, b)| a != b),
+            "{method}: theta untouched after 8 steps"
+        );
+    }
+}
+
 /// The acceptance-criteria smoke test: train a tiny `uni` config for
 /// >= 2 steps on the native backend with decreasing loss, then serve a
 /// decode request for the trained adapter through ServerHandle over TCP.
