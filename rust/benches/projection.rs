@@ -2,14 +2,20 @@
 //!   Uni-LoRA gather      O(D)
 //!   Fastfood (FWHT)      O(D log d)
 //!   Dense Gaussian       O(D d)
-//! plus the transpose (gradient) path. Run: cargo bench --bench projection
+//! plus the transpose (gradient) path and the kernel-tier comparison
+//! for the FWHT butterfly hot loop (scalar vs simd vtable). With
+//! `UNI_LORA_BENCH_JSON=1` the tier comparison is serialized into
+//! `BENCH_kernels.json` at the repo root (merged with train_step's
+//! entries). Run: cargo bench --bench projection
 
-use uni_lora::bench::{bench, black_box};
+use uni_lora::bench::{bench, black_box, write_json_report, BenchResult};
+use uni_lora::kernels::dispatch;
 use uni_lora::projection::op::{registry, ProjectionOp};
 use uni_lora::projection::reconstruct::ModuleDelta;
 use uni_lora::projection::statics::{gen_statics, init_theta};
 use uni_lora::projection::{fastfood, gaussian, uni};
 use uni_lora::rng;
+use uni_lora::util::json::{self, Json};
 
 /// Reconstruct + pullback timings for one registered op. Taking
 /// `&dyn ProjectionOp` straight off `registry()` means this bench
@@ -43,7 +49,59 @@ fn bench_op(op: &'static dyn ProjectionOp) {
     });
 }
 
+/// One trajectory entry: the timed result's own serialization
+/// (`BenchResult::to_json`) plus shape / tier / op-rate context.
+fn fwht_entry(r: &BenchResult, d: usize, vname: &str, path: &str, gflops: f64) -> Json {
+    let mut j = r.to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert("bench".into(), json::s("fwht"));
+        map.insert("shape".into(), json::s(&format!("d={d}")));
+        map.insert("n".into(), json::n(d as f64));
+        map.insert("variant".into(), json::s(vname));
+        map.insert("path".into(), json::s(path));
+        map.insert("gflops".into(), json::n(gflops));
+    }
+    j
+}
+
+/// Scalar vs simd for the FWHT butterfly chain (the projection layer's
+/// vtable-routed hot loop) — per-shape op/s, serialized into the perf
+/// trajectory. The tiers are bit-identical here by contract; only the
+/// wall clock may differ.
+fn fwht_tier_sweep() -> Vec<Json> {
+    println!("-- FWHT butterflies: kernel tiers (scalar vs simd vtable) --");
+    let mut entries = Vec::new();
+    let tiers: [(fn(&mut [f32]), &str, &str); 2] = [
+        (dispatch::SCALAR.fwht, "scalar", dispatch::SCALAR.path),
+        (dispatch::simd_ops().fwht, "simd", dispatch::simd_ops().path),
+    ];
+    for logd in [10usize, 12, 14] {
+        let d = 1usize << logd;
+        // ops per transform: logd butterfly stages of d add/subs + the
+        // final d-scale pass
+        let flops = (d * logd + d) as f64;
+        let x = rng::normals(7, d);
+        for (f, vname, path) in tiers {
+            let mut v = x.clone();
+            let r = bench(&format!("fwht/d={d}/{vname}"), 2, 9, || {
+                v.copy_from_slice(&x);
+                f(&mut v);
+                black_box(v[0]);
+            });
+            let gflops = flops / r.median_secs / 1e9;
+            println!("   ~{gflops:.2} Gop/s");
+            entries.push(fwht_entry(&r, d, vname, path, gflops));
+        }
+    }
+    entries
+}
+
 fn main() {
+    let entries = fwht_tier_sweep();
+    if let Some(p) = write_json_report("projection", entries).unwrap() {
+        println!("perf trajectory written to {}\n", p.display());
+    }
+
     println!("-- ProjectionOp registry: reconstruct (apply) + pullback (vjp) --");
     for op in registry() {
         bench_op(*op);

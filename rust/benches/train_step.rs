@@ -1,16 +1,24 @@
 //! End-to-end step latency (L2+L3 perf accounting): per-family
 //! train/eval step medians, the runtime's execute breakdown, and
-//! model-level GFLOP/s — swept at kernel threads = 1 vs N so the
-//! blocked/threaded GEMM layer's scaling is visible in one run.
+//! model-level GFLOP/s — swept over kernel variant (scalar vs simd,
+//! via `kernels::set_choice`) x kernel threads (1 vs N) so both the
+//! SIMD tier's per-core win and the pool's scaling are visible in one
+//! run. A per-shape kernel microbench (gemm_nn/tn/nt GFLOP/s at
+//! threads = 1 for each tier) leads the run: that is the recorded perf
+//! trajectory — with `UNI_LORA_BENCH_JSON=1` every entry is serialized
+//! into `BENCH_kernels.json` at the repo root.
 //! Runs on whatever backend `UNI_LORA_BACKEND` selects (default:
 //! native — no artifacts needed). Run: cargo bench --bench train_step
 
-use uni_lora::bench::{bench, fmt_time};
-use uni_lora::config::{ModelCfg, RuntimeOpts};
+use uni_lora::bench::{bench, black_box, fmt_time, write_json_report, BenchResult};
+use uni_lora::config::{KernelChoice, ModelCfg, RuntimeOpts};
 use uni_lora::coordinator::{init_base, ClsTrainer, Hyper, LmTrainer};
 use uni_lora::data::batcher::{cls_batches, lm_batches};
 use uni_lora::data::{glue, math_tasks};
+use uni_lora::kernels::{self, dispatch, KernelOps};
+use uni_lora::rng;
 use uni_lora::runtime::{Backend, TensorIn};
+use uni_lora::util::json::{self, Json};
 
 /// Forward-pass FLOPs for the transformer backbone (2 FLOPs per MAC;
 /// attention counts the causal half of the score/mix matrices).
@@ -36,14 +44,115 @@ fn train_flops(cfg: &ModelCfg) -> f64 {
     3.0 * (forward_flops(cfg) + head)
 }
 
-fn gflops_line(flops: f64, median_secs: f64) {
-    println!("   ~{:.2} GFLOP/s (est. {:.0} MFLOP/step)", flops / median_secs / 1e9, flops / 1e6);
+fn gflops_line(flops: f64, median_secs: f64) -> f64 {
+    let gflops = flops / median_secs / 1e9;
+    println!("   ~{:.2} GFLOP/s (est. {:.0} MFLOP/step)", gflops, flops / 1e6);
+    gflops
 }
 
-fn run_all() -> anyhow::Result<()> {
+/// One JSON trajectory entry: the timed result's own serialization
+/// (`BenchResult::to_json`: name/median/min/max/iters) plus the
+/// shape / variant / GFLOP/s context of the measurement.
+#[allow(clippy::too_many_arguments)]
+fn entry(
+    r: &BenchResult,
+    bench_name: &str,
+    shape: &str,
+    n: usize,
+    k: usize,
+    m: usize,
+    variant: &str,
+    path: &str,
+    threads: usize,
+    gflops: f64,
+) -> Json {
+    let mut j = r.to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert("bench".into(), json::s(bench_name));
+        map.insert("shape".into(), json::s(shape));
+        map.insert("n".into(), json::n(n as f64));
+        map.insert("k".into(), json::n(k as f64));
+        map.insert("m".into(), json::n(m as f64));
+        map.insert("variant".into(), json::s(variant));
+        map.insert("path".into(), json::s(path));
+        map.insert("threads".into(), json::n(threads as f64));
+        map.insert("gflops".into(), json::n(gflops));
+    }
+    j
+}
+
+/// Per-shape kernel GFLOP/s, scalar vs simd, at threads = 1 — the
+/// microkernel comparison the acceptance criterion reads (the simd
+/// tier should clear 2x scalar on an AVX2 host).
+fn kernel_sweep(entries: &mut Vec<Json>) {
+    kernels::set_threads(1);
+    println!("=== kernel microbench: per-shape GFLOP/s, scalar vs simd (threads = 1) ===");
+    let f = dispatch::detect();
+    println!("cpu features: avx2 = {}, fma = {}", f.avx2, f.fma);
+    let shapes: [(&str, usize, usize, usize); 3] = [
+        ("base-qkv", 1024, 64, 64),     // glue base: bt x h x h projection
+        ("lm-ffn", 1024, 128, 256),     // lm cfg: bt x h x ffn
+        ("e2e-lmhead", 512, 256, 2048), // e2e cfg: bt x h x vocab
+    ];
+    let tiers: [(&'static KernelOps, &str); 2] =
+        [(&dispatch::SCALAR, "scalar"), (dispatch::simd_ops(), "simd")];
+    for (label, n, k, m) in shapes {
+        let x = rng::normals(1, n * k);
+        let w = rng::normals(2, k * m);
+        let a_tn = rng::normals(3, n * k);
+        let b_tn = rng::normals(4, n * m);
+        let a_nt = rng::normals(5, n * m);
+        let b_nt = rng::normals(6, k * m);
+        let flops = 2.0 * (n * k * m) as f64;
+        for (ops, vname) in tiers {
+            let mut out = vec![0f32; n * m];
+            let r = bench(&format!("kernel/gemm_nn/{label}/{vname}"), 2, 9, || {
+                kernels::gemm_nn_with(ops, &x, &w, &mut out, n, k, m, false);
+                black_box(out[0]);
+            });
+            let g = gflops_line(flops, r.median_secs);
+            entries.push(entry(&r, "gemm_nn", label, n, k, m, vname, ops.path, 1, g));
+
+            let mut out = vec![0f32; k * m];
+            let r = bench(&format!("kernel/gemm_tn/{label}/{vname}"), 2, 9, || {
+                kernels::gemm_tn_with(ops, &a_tn, &b_tn, &mut out, n, k, m, false);
+                black_box(out[0]);
+            });
+            let g = gflops_line(flops, r.median_secs);
+            entries.push(entry(&r, "gemm_tn", label, n, k, m, vname, ops.path, 1, g));
+
+            let mut out = vec![0f32; n * k];
+            let r = bench(&format!("kernel/gemm_nt/{label}/{vname}"), 2, 9, || {
+                kernels::gemm_nt_with(ops, &a_nt, &b_nt, &mut out, n, k, m, false);
+                black_box(out[0]);
+            });
+            let g = gflops_line(flops, r.median_secs);
+            entries.push(entry(&r, "gemm_nt", label, n, k, m, vname, ops.path, 1, g));
+        }
+    }
+}
+
+fn run_all(entries: &mut Vec<Json>) -> anyhow::Result<()> {
     let mut exec = uni_lora::runtime::default_backend()?;
     println!("backend: {}", exec.name());
     let hp = Hyper::default();
+    let variant = dispatch::variant().name();
+    let path = dispatch::path();
+    let threads = kernels::threads();
+    let record = |entries: &mut Vec<Json>, r: &BenchResult, name: &str, cfg: &ModelCfg, gflops| {
+        entries.push(entry(
+            r,
+            name,
+            &cfg.name,
+            cfg.batch * cfg.seq,
+            cfg.hidden,
+            cfg.ffn,
+            variant,
+            path,
+            threads,
+            gflops,
+        ));
+    };
 
     for family in ["glue_base_uni_c2", "glue_large_uni_c2"] {
         let meta = exec.meta(&format!("{family}_cls_train"))?.clone();
@@ -56,7 +165,8 @@ fn run_all() -> anyhow::Result<()> {
         let r = bench(&format!("{family}/train_step"), 3, 15, || {
             tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
-        gflops_line(train_flops(&meta.cfg), r.median_secs);
+        let g = gflops_line(train_flops(&meta.cfg), r.median_secs);
+        record(entries, &r, &format!("{family}/train_step"), &meta.cfg, g);
         let st = exec.stats();
         println!(
             "   breakdown: execute {} | transfer {} over {} executions",
@@ -86,7 +196,8 @@ fn run_all() -> anyhow::Result<()> {
         let r = bench(&format!("{family}/train_step"), 2, 9, || {
             tr.train_step(exec.as_mut(), batch, &hp).unwrap();
         });
-        gflops_line(train_flops(&meta.cfg), r.median_secs);
+        let g = gflops_line(train_flops(&meta.cfg), r.median_secs);
+        record(entries, &r, &format!("{family}/train_step"), &meta.cfg, g);
         tr.pin_frozen(exec.as_mut())?;
         bench(&format!("{family}/train_step_pinned"), 2, 9, || {
             tr.train_step(exec.as_mut(), batch, &hp).unwrap();
@@ -127,21 +238,37 @@ fn run_all() -> anyhow::Result<()> {
             )
             .unwrap();
         });
-        gflops_line(train_flops(&meta.cfg), r.median_secs);
+        let g = gflops_line(train_flops(&meta.cfg), r.median_secs);
+        record(entries, &r, "pretrain_lm/step", &meta.cfg, g);
     }
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
+    let mut entries = Vec::new();
+    kernel_sweep(&mut entries);
+
     let auto = RuntimeOpts::from_env().threads;
     let mut counts = vec![1usize];
     if auto > 1 {
         counts.push(auto);
     }
-    for &tc in &counts {
-        uni_lora::kernels::set_threads(tc);
-        println!("\n=== kernel threads = {tc} (of {auto} available) ===");
-        run_all()?;
+    for choice in [KernelChoice::Scalar, KernelChoice::Simd] {
+        kernels::set_choice(choice);
+        for &tc in &counts {
+            kernels::set_threads(tc);
+            println!(
+                "\n=== kernels = {} | kernel threads = {tc} (of {auto} available) ===",
+                dispatch::path()
+            );
+            run_all(&mut entries)?;
+        }
+    }
+    kernels::set_choice(RuntimeOpts::from_env().kernels);
+    kernels::set_threads(auto);
+
+    if let Some(p) = write_json_report("train_step", entries)? {
+        println!("\nperf trajectory written to {}", p.display());
     }
     Ok(())
 }

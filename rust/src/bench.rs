@@ -1,7 +1,17 @@
 //! Hand-rolled micro-bench harness (criterion is unavailable in the
 //! offline vendor set). Median-of-runs with warmup; prints
 //! criterion-style lines so `cargo bench` output stays readable.
+//!
+//! Perf trajectory: with `UNI_LORA_BENCH_JSON=1`, benches serialize
+//! their results (per-shape GFLOP/s for the scalar vs simd kernel
+//! tiers, see `benches/train_step.rs` and `benches/projection.rs`)
+//! into a machine-readable `BENCH_kernels.json` at the repo root, each
+//! bench merging its own top-level key so the file accumulates one
+//! recorded trajectory across benches.
 
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -28,6 +38,73 @@ impl BenchResult {
     pub fn per_sec(&self, items: f64) -> f64 {
         items / self.median_secs
     }
+
+    /// Machine-readable form for the `BENCH_kernels.json` trajectory.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("median_secs", json::n(self.median_secs)),
+            ("min_secs", json::n(self.min_secs)),
+            ("max_secs", json::n(self.max_secs)),
+            ("iters", json::n(self.iters as f64)),
+        ])
+    }
+}
+
+/// Whether the bench run should serialize results: exactly
+/// `UNI_LORA_BENCH_JSON=1` enables; anything else (unset, `0`,
+/// garbage) degrades to off — the same forgiving-parse convention as
+/// the `config` knobs, and no surprise file writes on a typo.
+pub fn json_report_enabled() -> bool {
+    match std::env::var("UNI_LORA_BENCH_JSON") {
+        Ok(v) => v.trim() == "1",
+        Err(_) => false,
+    }
+}
+
+/// The trajectory file: `BENCH_kernels.json` at the repo root (one
+/// level above the crate manifest).
+pub fn bench_json_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_kernels.json")
+}
+
+/// Merge `entries` into the JSON report at `path` under the top-level
+/// key `source`, preserving every other bench's key (so train_step and
+/// projection accumulate into one file). A missing file starts fresh
+/// and a corrupt one is rebuilt from scratch, but a real read error
+/// (permissions, I/O) propagates instead of silently clobbering the
+/// accumulated trajectory — the same NotFound-vs-error split
+/// `adapters::Registry::load_dir` uses. The write itself goes through
+/// a temp file + rename, so a bench run killed mid-write can never
+/// leave a truncated file that would wipe the trajectory on the next
+/// run.
+pub fn write_json_report_at(path: &Path, source: &str, entries: Vec<Json>) -> anyhow::Result<()> {
+    let mut root: BTreeMap<String, Json> = match std::fs::read_to_string(path) {
+        Ok(s) => match Json::parse(&s) {
+            Ok(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => BTreeMap::new(),
+        Err(e) => return Err(anyhow::anyhow!("reading {}: {e}", path.display())),
+    };
+    root.insert(source.to_string(), Json::Arr(entries));
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, Json::Obj(root).to_string())
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("renaming {} into place: {e}", tmp.display()))?;
+    Ok(())
+}
+
+/// Env-gated convenience over [`write_json_report_at`]: no-op unless
+/// `UNI_LORA_BENCH_JSON=1`; returns the path written, if any.
+pub fn write_json_report(source: &str, entries: Vec<Json>) -> anyhow::Result<Option<PathBuf>> {
+    if !json_report_enabled() {
+        return Ok(None);
+    }
+    let path = bench_json_path();
+    write_json_report_at(&path, source, entries)?;
+    Ok(Some(path))
 }
 
 pub fn fmt_time(s: f64) -> String {
@@ -94,5 +171,48 @@ mod tests {
         assert!(fmt_time(2.5e-5).ends_with("µs"));
         assert!(fmt_time(2.5e-2).ends_with("ms"));
         assert!(fmt_time(2.5).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_result_serializes() {
+        let r = BenchResult {
+            name: "gemm_nn/128x128x128".into(),
+            median_secs: 1.5e-4,
+            min_secs: 1.0e-4,
+            max_secs: 2.0e-4,
+            iters: 9,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "gemm_nn/128x128x128");
+        assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 9);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert!((back.get("median_secs").unwrap().as_f64().unwrap() - 1.5e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_merges_sources_and_survives_garbage() {
+        let dir = std::env::temp_dir()
+            .join(format!("uni_lora_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_kernels.json");
+        // fresh file
+        write_json_report_at(&path, "train_step", vec![json::obj(vec![("a", json::n(1.0))])])
+            .unwrap();
+        // second source merges, first survives
+        write_json_report_at(&path, "projection", vec![json::obj(vec![("b", json::n(2.0))])])
+            .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("train_step").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("projection").unwrap().as_arr().unwrap().len(), 1);
+        // re-writing a source replaces only that key
+        write_json_report_at(&path, "train_step", vec![]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("train_step").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(j.get("projection").unwrap().as_arr().unwrap().len(), 1);
+        // corrupt file starts fresh instead of erroring
+        std::fs::write(&path, "not json").unwrap();
+        write_json_report_at(&path, "x", vec![]).unwrap();
+        assert!(Json::parse(&std::fs::read_to_string(&path).unwrap()).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -189,19 +189,43 @@ impl ModelCfg {
 // ------------------------------------------------------------------
 // runtime knobs
 
+/// Which kernel tier the compute layer should run (`UNI_LORA_KERNELS`).
+///
+/// `Scalar` is the retained golden-reference tier (bit-identical to the
+/// pre-kernels loop nests); `Simd` is the register-tiled,
+/// lane-reassociated tier (AVX2+FMA intrinsics where the CPU has them,
+/// a portable fixed-lane path otherwise); `Auto` picks `Simd` when the
+/// CPU feature probe succeeds and falls back to `Scalar` when it
+/// doesn't. Resolution lives in `kernels::dispatch::resolve`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    Scalar,
+    Simd,
+    Auto,
+}
+
 /// Execution-runtime knobs, deliberately separate from `ModelCfg`:
-/// these never change numerics or the artifact contract, only how the
-/// work is scheduled on the host.
+/// these never change the artifact contract, only how the work is
+/// scheduled on the host. (`threads` never changes numerics at all;
+/// `kernels` keeps every variant run- and thread-count-deterministic,
+/// but the simd tier is only tolerance-equal to scalar — see
+/// `kernels::dispatch` for the contract.)
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RuntimeOpts {
     /// Kernel-pool width and default serving-worker count
     /// (`UNI_LORA_THREADS`; default = available parallelism).
     pub threads: usize,
+    /// Kernel-tier selection (`UNI_LORA_KERNELS=scalar|simd|auto`;
+    /// default auto).
+    pub kernels: KernelChoice,
 }
 
 impl RuntimeOpts {
     pub fn from_env() -> RuntimeOpts {
-        RuntimeOpts { threads: parse_threads(std::env::var("UNI_LORA_THREADS").ok().as_deref()) }
+        RuntimeOpts {
+            threads: parse_threads(std::env::var("UNI_LORA_THREADS").ok().as_deref()),
+            kernels: parse_kernels(std::env::var("UNI_LORA_KERNELS").ok().as_deref()),
+        }
     }
 }
 
@@ -211,6 +235,27 @@ pub fn parse_threads(raw: Option<&str>) -> usize {
     raw.and_then(|s| s.trim().parse::<usize>().ok())
         .filter(|&t| t >= 1)
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// `UNI_LORA_KERNELS` parsing: `scalar` and `simd` are explicit pins,
+/// unset or `auto` is `Auto`. UNLIKE `parse_threads`, an unrecognized
+/// value does NOT fall through to the probed default: this knob
+/// changes numerics, and a typo'd `scalar` pin silently resolving to
+/// the simd tier would diverge results at ULP level with no signal.
+/// Garbage pins the fail-safe golden tier (`Scalar`) and warns.
+pub fn parse_kernels(raw: Option<&str>) -> KernelChoice {
+    match raw.map(|s| s.trim().to_ascii_lowercase()).as_deref() {
+        Some("scalar") => KernelChoice::Scalar,
+        Some("simd") => KernelChoice::Simd,
+        None | Some("auto") | Some("") => KernelChoice::Auto,
+        Some(other) => {
+            eprintln!(
+                "warning: UNI_LORA_KERNELS={other:?} not recognized \
+                 (want scalar|simd|auto); pinning the scalar tier"
+            );
+            KernelChoice::Scalar
+        }
+    }
 }
 
 #[cfg(test)]
@@ -263,6 +308,19 @@ mod tests {
         assert_eq!(parse_threads(Some("lots")), auto);
         // from_env never yields 0 (tests must not mutate the env)
         assert!(RuntimeOpts::from_env().threads >= 1);
+    }
+
+    #[test]
+    fn kernels_knob_parses_and_defaults() {
+        assert_eq!(parse_kernels(Some("scalar")), KernelChoice::Scalar);
+        assert_eq!(parse_kernels(Some(" SIMD ")), KernelChoice::Simd);
+        assert_eq!(parse_kernels(Some("auto")), KernelChoice::Auto);
+        assert_eq!(parse_kernels(Some("")), KernelChoice::Auto);
+        assert_eq!(parse_kernels(None), KernelChoice::Auto);
+        // a numerics-affecting knob must not let a typo silently pick
+        // a different tier: garbage pins the golden scalar tier
+        assert_eq!(parse_kernels(Some("turbo")), KernelChoice::Scalar);
+        assert_eq!(parse_kernels(Some("sclar")), KernelChoice::Scalar);
     }
 
     #[test]

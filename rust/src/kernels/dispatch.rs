@@ -1,0 +1,389 @@
+//! Kernel-variant dispatch: `UNI_LORA_KERNELS=scalar|simd|auto`
+//! (`config::RuntimeOpts::kernels`) is resolved ONCE — against the
+//! runtime CPU feature probe — into a variant vtable ([`KernelOps`])
+//! that the GEMM entry points, the native runtime's parallel drivers
+//! and the projection hot loops all consume. Three tiers exist:
+//!
+//! | tier            | selected when                              |
+//! |-----------------|--------------------------------------------|
+//! | `scalar`        | `UNI_LORA_KERNELS=scalar`, or `auto` and the avx2+fma probe fails |
+//! | `simd-portable` | `UNI_LORA_KERNELS=simd` on a host without avx2+fma |
+//! | `simd-avx2`     | `UNI_LORA_KERNELS=simd` or `auto` on a host with avx2+fma |
+//!
+//! Determinism contract, renegotiated explicitly from the scalar-only
+//! days (`gemm.rs` used to promise bit-equality with the legacy loop
+//! nests and defer lane reassociation "to a future SIMD kernel
+//! variant"; this module is that variant):
+//!
+//! - **Per variant**: bitwise-deterministic across runs AND thread
+//!   counts. Lane width is fixed per tier, the feature probe is fixed
+//!   per process, and per-element accumulation order never depends on
+//!   the panel split or the schedule.
+//! - **Scalar tier**: additionally bit-identical to the retained naive
+//!   reference kernels (`naive.rs`) and therefore to the pre-kernels
+//!   loop nests — the golden tier. Its property tests keep running
+//!   untouched, pinned to this vtable.
+//! - **Across tiers**: only tolerance-equal (reassociated reductions,
+//!   fused multiply-adds, no zero-skip). The cross-variant property
+//!   suite in `gemm.rs` bounds the divergence.
+//!
+//! The elementwise maps shared here (GELU forward/grad, LM-softmax row
+//! max, fastfood FWHT butterflies) keep identical per-element
+//! expressions in every tier, so they are bit-identical across tiers;
+//! all cross-tier divergence comes from the GEMM panels and dots.
+
+use super::{gemm, simd};
+use crate::config::{KernelChoice, RuntimeOpts};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The resolved kernel tier family (the avx2/portable split within
+/// `Simd` is a host property, not a contract difference).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Scalar,
+    Simd,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Scalar => "scalar",
+            Variant::Simd => "simd",
+        }
+    }
+}
+
+/// Result of the runtime CPU feature probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuFeatures {
+    pub avx2: bool,
+    pub fma: bool,
+}
+
+impl CpuFeatures {
+    /// Can the avx2+fma intrinsic path run here?
+    pub fn simd_capable(self) -> bool {
+        self.avx2 && self.fma
+    }
+}
+
+/// Probe the CPU. On non-x86_64 targets both flags are false (the
+/// portable lane tier still works there; only `auto` cares).
+pub fn detect() -> CpuFeatures {
+    #[cfg(target_arch = "x86_64")]
+    {
+        CpuFeatures {
+            avx2: is_x86_feature_detected!("avx2"),
+            fma: is_x86_feature_detected!("fma"),
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        CpuFeatures { avx2: false, fma: false }
+    }
+}
+
+/// Pure resolution rule (unit-tested against fake probes): explicit
+/// pins win; `auto` takes the simd tier only when the intrinsic path's
+/// feature probe succeeds, and falls back to scalar otherwise.
+pub fn resolve(choice: KernelChoice, feats: CpuFeatures) -> Variant {
+    match choice {
+        KernelChoice::Scalar => Variant::Scalar,
+        KernelChoice::Simd => Variant::Simd,
+        KernelChoice::Auto => {
+            if feats.simd_capable() {
+                Variant::Simd
+            } else {
+                Variant::Scalar
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// the vtable
+
+/// One kernel tier: GEMM panel bodies consumed by the parallel panel
+/// driver in `gemm.rs`, plus the shared hot maps the native runtime
+/// and the projection layer route through. All entries are plain `fn`
+/// pointers so a tier is one `static` and dispatch is one atomic load.
+///
+/// Deliberately NO per-element primitives (`axpy`/`dot`) in this
+/// table: dispatch happens at panel / whole-map granularity, where an
+/// indirect call amortizes over thousands of FLOPs. The tiny head-dim
+/// loops in attention stay inlined in the model, and each tier's
+/// panel bodies call their own lane primitives (`simd::dot8`,
+/// `gemm::dot`) directly.
+pub struct KernelOps {
+    pub variant: Variant,
+    /// Human-readable tier name: `scalar`, `simd-portable`, `simd-avx2`.
+    pub path: &'static str,
+    /// `out[n,m] (+)= x[n,k] @ w[k,m]` panel body: `(x, w, panel, i0, i1, k, m)`.
+    pub nn_panel: fn(&[f32], &[f32], &mut [f32], usize, usize, usize, usize),
+    /// `out[k,m] (+)= a[n,k]^T @ b[n,m]` panel body: `(a, b, panel, p0, p1, n, k, m)`.
+    pub tn_panel: fn(&[f32], &[f32], &mut [f32], usize, usize, usize, usize, usize),
+    /// `out[n,k] (+)= a[n,m] @ b[k,m]^T` panel body: `(a, b, panel, i0, i1, k, m)`.
+    pub nt_panel: fn(&[f32], &[f32], &mut [f32], usize, usize, usize, usize),
+    /// `dst = gelu(src)` — bit-identical across tiers.
+    pub gelu_map: fn(&mut [f32], &[f32]),
+    /// `g *= gelu'(src)` — bit-identical across tiers.
+    pub gelu_grad_mul: fn(&mut [f32], &[f32]),
+    /// Row maximum (the LM-softmax hot reduction) — bit-identical
+    /// across tiers for non-NaN inputs.
+    pub row_max: fn(&[f32]) -> f32,
+    /// In-place orthonormal fast Walsh-Hadamard transform —
+    /// bit-identical across tiers.
+    pub fwht: fn(&mut [f32]),
+}
+
+/// The retained golden-reference tier.
+pub static SCALAR: KernelOps = KernelOps {
+    variant: Variant::Scalar,
+    path: "scalar",
+    nn_panel: gemm::nn_panel,
+    tn_panel: gemm::tn_panel,
+    nt_panel: gemm::nt_panel,
+    gelu_map: gelu_map_scalar,
+    gelu_grad_mul: gelu_grad_mul_scalar,
+    row_max: row_max_scalar,
+    fwht: fwht_scalar,
+};
+
+/// The stable-Rust lane tier (autovectorized fixed-width blocks).
+pub static SIMD_PORTABLE: KernelOps = KernelOps {
+    variant: Variant::Simd,
+    path: "simd-portable",
+    nn_panel: simd::nn_panel,
+    tn_panel: simd::tn_panel,
+    nt_panel: simd::nt_panel,
+    gelu_map: simd::gelu_map8,
+    gelu_grad_mul: simd::gelu_grad_mul8,
+    row_max: simd::row_max8,
+    fwht: simd::fwht8,
+};
+
+/// The avx2+fma intrinsic tier. Crate-private on purpose: its panel
+/// bodies execute AVX2/FMA instructions behind safe wrappers, so the
+/// only paths to it are `ops()`/`simd_ops()`/`set_choice`, all of
+/// which gate on the runtime feature probe (see the safety note in
+/// `simd::avx2`) — no safe public route can run the intrinsics on a
+/// host without the features. The elementwise maps reuse the portable
+/// lane bodies, which are already bit-identical across tiers.
+#[cfg(target_arch = "x86_64")]
+pub(crate) static SIMD_AVX2: KernelOps = KernelOps {
+    variant: Variant::Simd,
+    path: "simd-avx2",
+    nn_panel: simd::avx2::nn_panel,
+    tn_panel: simd::avx2::tn_panel,
+    nt_panel: simd::avx2::nt_panel,
+    gelu_map: simd::gelu_map8,
+    gelu_grad_mul: simd::gelu_grad_mul8,
+    row_max: simd::row_max8,
+    fwht: simd::fwht8,
+};
+
+// ------------------------------------------------------------------
+// the active tier
+
+const IDX_SCALAR: u8 = 0;
+const IDX_SIMD_PORTABLE: u8 = 1;
+#[cfg(target_arch = "x86_64")]
+const IDX_SIMD_AVX2: u8 = 2;
+const IDX_UNSET: u8 = 0xff;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(IDX_UNSET);
+
+/// Index of the tier `Variant::Simd` resolves to on this host.
+fn simd_tier_index() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if detect().simd_capable() {
+            return IDX_SIMD_AVX2;
+        }
+    }
+    IDX_SIMD_PORTABLE
+}
+
+fn tier_index(choice: KernelChoice) -> u8 {
+    match resolve(choice, detect()) {
+        Variant::Scalar => IDX_SCALAR,
+        Variant::Simd => simd_tier_index(),
+    }
+}
+
+fn by_index(i: u8) -> &'static KernelOps {
+    match i {
+        IDX_SCALAR => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        IDX_SIMD_AVX2 => &SIMD_AVX2,
+        _ => &SIMD_PORTABLE,
+    }
+}
+
+/// The active tier, resolved once from `UNI_LORA_KERNELS` + the CPU
+/// probe on first use (racing first uses compute the same index, so
+/// the relaxed init is benign).
+pub fn ops() -> &'static KernelOps {
+    let mut i = ACTIVE.load(Ordering::Relaxed);
+    if i == IDX_UNSET {
+        i = tier_index(RuntimeOpts::from_env().kernels);
+        ACTIVE.store(i, Ordering::Relaxed);
+    }
+    by_index(i)
+}
+
+/// The tier an explicit `simd` choice resolves to on this host —
+/// benches and the cross-variant property suite compare this against
+/// [`SCALAR`] without touching the process-wide active tier.
+pub fn simd_ops() -> &'static KernelOps {
+    by_index(simd_tier_index())
+}
+
+/// Re-resolve the active tier. NUMERICS-AFFECTING for subsequent
+/// kernel calls: intended for single-flow callers (benches sweeping
+/// scalar vs simd, the CLI) — concurrent tests must pass an explicit
+/// vtable to `gemm_*_with` instead of flipping the process-wide tier.
+pub fn set_choice(choice: KernelChoice) {
+    ACTIVE.store(tier_index(choice), Ordering::Relaxed);
+}
+
+/// Active tier family.
+pub fn variant() -> Variant {
+    ops().variant
+}
+
+/// Active tier name (`scalar` / `simd-portable` / `simd-avx2`).
+pub fn path() -> &'static str {
+    ops().path
+}
+
+// ------------------------------------------------------------------
+// scalar elementwise bodies (shared hot loops, golden tier)
+
+pub(crate) const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+pub(crate) const GELU_A: f32 = 0.044_715;
+
+/// Tanh-approximation GELU (the model's activation; moved here from
+/// the native model so every tier shares one definition).
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
+}
+
+/// Derivative of [`gelu`].
+pub fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+fn gelu_map_scalar(dst: &mut [f32], src: &[f32]) {
+    for (d, &z) in dst.iter_mut().zip(src) {
+        *d = gelu(z);
+    }
+}
+
+fn gelu_grad_mul_scalar(g: &mut [f32], src: &[f32]) {
+    for (gi, &z) in g.iter_mut().zip(src) {
+        *gi *= gelu_grad(z);
+    }
+}
+
+fn row_max_scalar(x: &[f32]) -> f32 {
+    x.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// In-place orthonormal fast Walsh-Hadamard transform (len a power of
+/// two) — the scalar butterfly chain, moved verbatim from
+/// `projection::fastfood` so the lane tier can renegotiate only the
+/// chunking, never the arithmetic.
+pub(crate) fn fwht_scalar(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let (a, b) = (v[j], v[j + h]);
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for x in v.iter_mut() {
+        *x *= scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_pins_and_probes() {
+        let none = CpuFeatures { avx2: false, fma: false };
+        let some = CpuFeatures { avx2: true, fma: false };
+        let full = CpuFeatures { avx2: true, fma: true };
+        // explicit pins ignore the probe
+        for f in [none, some, full] {
+            assert_eq!(resolve(KernelChoice::Scalar, f), Variant::Scalar);
+            assert_eq!(resolve(KernelChoice::Simd, f), Variant::Simd);
+        }
+        // auto needs the FULL probe; any missing feature falls back to
+        // scalar (the dispatch satellite's acceptance case)
+        assert_eq!(resolve(KernelChoice::Auto, full), Variant::Simd);
+        assert_eq!(resolve(KernelChoice::Auto, some), Variant::Scalar);
+        assert_eq!(resolve(KernelChoice::Auto, none), Variant::Scalar);
+    }
+
+    #[test]
+    fn vtables_are_coherent() {
+        assert_eq!(SCALAR.variant, Variant::Scalar);
+        assert_eq!(SCALAR.path, "scalar");
+        assert_eq!(SIMD_PORTABLE.variant, Variant::Simd);
+        // the host's simd tier is some simd vtable
+        let s = simd_ops();
+        assert_eq!(s.variant, Variant::Simd);
+        assert!(s.path.starts_with("simd-"), "{}", s.path);
+        // the active tier is consistent with the env choice
+        let active = ops();
+        match RuntimeOpts::from_env().kernels {
+            KernelChoice::Scalar => assert_eq!(active.variant, Variant::Scalar),
+            KernelChoice::Simd => assert_eq!(active.variant, Variant::Simd),
+            KernelChoice::Auto => {
+                let want =
+                    if detect().simd_capable() { Variant::Simd } else { Variant::Scalar };
+                assert_eq!(active.variant, want);
+            }
+        }
+        assert_eq!(variant(), active.variant);
+        assert_eq!(path(), active.path);
+    }
+
+    #[test]
+    fn detect_is_stable_within_process() {
+        assert_eq!(detect(), detect());
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3;
+            let num = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((num - gelu_grad(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn fwht_scalar_matches_dense_hadamard_small() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        fwht_scalar(&mut v);
+        let want = [10.0, -2.0, -4.0, 0.0].map(|x: f32| x / 2.0);
+        for (a, b) in v.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

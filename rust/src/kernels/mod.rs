@@ -1,28 +1,38 @@
-//! The compute layer: cache-blocked multi-threaded GEMM microkernels
-//! plus a shared std-only thread pool, carved out of the native
-//! backend's inline loop nests (multi-layer refactor, ROADMAP perf
-//! item). Everything dense in `runtime/native` — forward products,
-//! weight/input gradients, attention drivers, elementwise maps — routes
-//! through this module, which makes it the single seam where future
-//! backends (SIMD microkernels, GPU offload) plug in without touching
-//! the model code above.
+//! The compute layer: cache-blocked multi-threaded GEMM kernels in two
+//! tiers behind one API, plus a shared std-only thread pool. Everything
+//! dense in `runtime/native` — forward products, weight/input
+//! gradients, attention drivers, elementwise maps — routes through
+//! this module, which makes it the single seam where kernel tiers
+//! (and, eventually, GPU offload) plug in without touching the model
+//! code above.
 //!
 //! Layout:
-//! - `pool`: shared worker pool (`UNI_LORA_THREADS` / `set_threads`),
-//!   caller-participating so nested fan-outs never deadlock, plus the
-//!   `SendPtr` disjoint-write escape hatch for parallel drivers.
-//! - `gemm`: `gemm_nn` / `gemm_tn` / `gemm_nt` with an `acc` flag and
-//!   validated preconditions; bitwise-deterministic across runs and
-//!   thread counts.
+//! - `pool`: shared worker pool (`UNI_LORA_THREADS` / `set_threads` /
+//!   `ThreadsGuard`), caller-participating so nested fan-outs never
+//!   deadlock, plus the `SendPtr` disjoint-write escape hatch for
+//!   parallel drivers.
+//! - `dispatch`: the kernel-variant vtable (`UNI_LORA_KERNELS=
+//!   scalar|simd|auto` resolved once against the CPU feature probe)
+//!   and the scalar bodies of the shared hot loops (GELU maps,
+//!   LM-softmax row max, FWHT).
+//! - `gemm`: `gemm_nn` / `gemm_tn` / `gemm_nt` entry points (acc flag,
+//!   validated preconditions, `_with` variants taking an explicit
+//!   vtable) and the scalar golden-reference panel bodies; every tier
+//!   is bitwise-deterministic across runs and thread counts.
+//! - `simd`: the register-tiled lane tier — portable fixed-width
+//!   accumulator blocks plus an AVX2+FMA intrinsic path.
 //! - `naive`: the retained single-threaded reference kernels the
-//!   blocked ones are property-tested against.
+//!   scalar tier is property-tested bit-equal against.
 
+pub mod dispatch;
 pub mod gemm;
 pub mod naive;
 pub mod pool;
+pub mod simd;
 
-pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
-pub use pool::{pool, set_threads, threads, Pool, SendPtr};
+pub use dispatch::{ops, set_choice, variant, KernelOps, Variant};
+pub use gemm::{gemm_nn, gemm_nn_with, gemm_nt, gemm_nt_with, gemm_tn, gemm_tn_with};
+pub use pool::{pool, set_threads, threads, Pool, SendPtr, ThreadsGuard};
 
 /// Below roughly this much work (MAC-scale units) a fan-out costs more
 /// than it saves; drivers run inline on the caller instead.

@@ -245,6 +245,41 @@ pub fn threads() -> usize {
     pool().threads()
 }
 
+/// RAII reset for tests and benches that sweep `set_threads`: on drop
+/// — success OR panic — the global pool is restored to the env-derived
+/// default width, so a failing assert mid-sweep can't leave a pinned
+/// width applied to every later test in the process. (Width only
+/// affects wall-clock, never results, so a racing guard in another
+/// test is benign.)
+#[must_use = "the guard restores the pool width when dropped"]
+pub struct ThreadsGuard(());
+
+impl ThreadsGuard {
+    /// Start a guarded section; callers then `set_threads` freely.
+    pub fn new() -> ThreadsGuard {
+        ThreadsGuard(())
+    }
+
+    /// Convenience: guard AND pin the width in one call.
+    pub fn pin(threads: usize) -> ThreadsGuard {
+        let g = ThreadsGuard::new();
+        set_threads(threads);
+        g
+    }
+}
+
+impl Default for ThreadsGuard {
+    fn default() -> ThreadsGuard {
+        ThreadsGuard::new()
+    }
+}
+
+impl Drop for ThreadsGuard {
+    fn drop(&mut self) {
+        set_threads(RuntimeOpts::from_env().threads);
+    }
+}
+
 // ------------------------------------------------------------------
 // disjoint-write escape hatch
 
@@ -351,6 +386,28 @@ mod tests {
         assert_eq!(n.load(Ordering::Relaxed), 32);
         set_threads(RuntimeOpts::from_env().threads);
         assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn threads_guard_restores_on_panic() {
+        // a panicking guarded section must restore the env width —
+        // the old pattern (restore as the last statement of the test)
+        // poisoned every later test in the process on failure.
+        // NOTE: no exact-width assert — sibling tests legitimately
+        // race the global width (see set_threads_swaps_global_pool);
+        // we assert the guard's Drop ran through the unwind and the
+        // pool is functional afterwards.
+        let r = std::panic::catch_unwind(|| {
+            let _g = ThreadsGuard::pin(2);
+            panic!("boom");
+        });
+        assert!(r.is_err());
+        assert!(threads() >= 1);
+        let n = AtomicUsize::new(0);
+        pool().parallel_for(8, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
     }
 
     #[test]

@@ -1,0 +1,811 @@
+//! The SIMD kernel tier: register-tiled, lane-reassociated panel
+//! bodies behind the same `gemm_nn/tn/nt` panel API as the scalar
+//! tier, plus lane-width variants of the shared hot loops (`axpy8` /
+//! `dot8`, the GELU maps, the LM-softmax row max, the fastfood FWHT
+//! butterflies).
+//!
+//! Two sub-paths, selected once by `dispatch::resolve`:
+//! - **portable**: fixed-width `LANES`-chunk accumulator blocks on
+//!   stable Rust — no intrinsics, no `unsafe`; the chunked loop bodies
+//!   are shaped so LLVM's autovectorizer turns them into vector code
+//!   on any target.
+//! - **avx2**: the same tiling with explicit AVX2+FMA intrinsics
+//!   (`_mm256_fmadd_ps` microkernels), gated at dispatch time on
+//!   `is_x86_feature_detected!`.
+//!
+//! Determinism contract (renegotiated from the scalar tier, see
+//! `dispatch`): every function here is bitwise-deterministic across
+//! runs AND thread counts — per-element accumulation order is a pure
+//! function of the problem shape (k ascending for nn/tn, a fixed lane
+//! partial + reduction tree for dots), never of panel boundaries or
+//! the schedule — but results are only tolerance-equal to the scalar
+//! tier: dense panels drop the per-element `a != 0.0` zero-skip branch
+//! in favour of packed operand tiles, dot products reassociate into
+//! `LANES` partial sums, and the avx2 path fuses multiply-adds.
+//! The elementwise maps (GELU, row max, FWHT) keep the scalar
+//! per-element expressions exactly and are bit-identical across tiers.
+
+use super::dispatch::{gelu, gelu_grad};
+
+/// Fixed lane width of the portable tier (f32 lanes of one AVX2
+/// register). Part of the determinism contract: baked in, never probed.
+pub const LANES: usize = 8;
+
+/// Output rows per register tile in the nn/tn microkernels.
+const MR: usize = 4;
+
+/// k-block height: one packed `MR x KC` operand tile is swept over the
+/// output tile per block; accumulators round-trip through the panel
+/// between blocks, which preserves the exact k-ascending per-element
+/// order (store + reload does not change the value).
+const KC: usize = 256;
+
+/// i-block height for the tn panel's packed transposed tile.
+const TN_IC: usize = 32;
+
+/// p-block height for the nt panel (mirrors the scalar tier).
+const NT_PB: usize = 64;
+
+// ------------------------------------------------------------------
+// lane-width shared hot loops (portable)
+
+/// `y += a * x`, chunked by `LANES` so the body autovectorizes.
+/// Element-wise (no reassociation), so it is bit-identical to the
+/// scalar `axpy` and safe to call from ANY tier — the native model's
+/// residual/gradient accumulates (`add_into`, `a = 1.0`) use it
+/// directly rather than through the vtable.
+pub fn axpy8(y: &mut [f32], x: &[f32], a: f32) {
+    let n = y.len().min(x.len());
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let ys = &mut y[c * LANES..(c + 1) * LANES];
+        let xs = &x[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            ys[l] += a * xs[l];
+        }
+    }
+    for i in chunks * LANES..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Dot product with `LANES` partial sums and a fixed reduction tree —
+/// the lane-reassociated variant of the scalar strictly-sequential
+/// `dot`. The partial-sum assignment and the tree depend only on the
+/// length, so the result is bitwise-deterministic.
+pub fn dot8(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let chunks = n / LANES;
+    let mut acc = [0f32; LANES];
+    for c in 0..chunks {
+        let xs = &x[c * LANES..(c + 1) * LANES];
+        let ys = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    for l in 0..n - chunks * LANES {
+        acc[l] += x[chunks * LANES + l] * y[chunks * LANES + l];
+    }
+    let s01 = acc[0] + acc[1];
+    let s23 = acc[2] + acc[3];
+    let s45 = acc[4] + acc[5];
+    let s67 = acc[6] + acc[7];
+    (s01 + s23) + (s45 + s67)
+}
+
+/// `dst = gelu(src)`, staged per chunk (polynomial / tanh / combine)
+/// so the non-transcendental stages autovectorize. Per-element
+/// expressions match the scalar `gelu` token for token, so the output
+/// is bit-identical to the scalar tier.
+pub(crate) fn gelu_map8(dst: &mut [f32], src: &[f32]) {
+    use super::dispatch::{GELU_A, GELU_C};
+    let n = dst.len().min(src.len());
+    let chunks = n / LANES;
+    let mut u = [0f32; LANES];
+    for c in 0..chunks {
+        let xs = &src[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            u[l] = GELU_C * (xs[l] + GELU_A * xs[l] * xs[l] * xs[l]);
+        }
+        for ul in u.iter_mut() {
+            *ul = ul.tanh();
+        }
+        let ds = &mut dst[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            ds[l] = 0.5 * xs[l] * (1.0 + u[l]);
+        }
+    }
+    for i in chunks * LANES..n {
+        dst[i] = gelu(src[i]);
+    }
+}
+
+/// `g *= gelu'(u)`, staged like [`gelu_map8`]; bit-identical to the
+/// scalar `gelu_grad` per element.
+pub(crate) fn gelu_grad_mul8(g: &mut [f32], src: &[f32]) {
+    use super::dispatch::{GELU_A, GELU_C};
+    let n = g.len().min(src.len());
+    let chunks = n / LANES;
+    let mut u = [0f32; LANES];
+    for c in 0..chunks {
+        let xs = &src[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            u[l] = GELU_C * (xs[l] + GELU_A * xs[l] * xs[l] * xs[l]);
+        }
+        for ul in u.iter_mut() {
+            *ul = ul.tanh();
+        }
+        let gs = &mut g[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            let t = u[l];
+            let x = xs[l];
+            gs[l] *= 0.5 * (1.0 + t)
+                + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x);
+        }
+    }
+    for i in chunks * LANES..n {
+        g[i] *= gelu_grad(src[i]);
+    }
+}
+
+/// Row max with `LANES` running maxima and a fixed tree. `max` is
+/// associative and commutative for non-NaN floats, so this is
+/// bit-identical to the scalar sequential fold on real inputs.
+pub(crate) fn row_max8(x: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    for c in 0..chunks {
+        let xs = &x[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] = acc[l].max(xs[l]);
+        }
+    }
+    for l in 0..n - chunks * LANES {
+        acc[l] = acc[l].max(x[chunks * LANES + l]);
+    }
+    let m01 = acc[0].max(acc[1]);
+    let m23 = acc[2].max(acc[3]);
+    let m45 = acc[4].max(acc[5]);
+    let m67 = acc[6].max(acc[7]);
+    m01.max(m23).max(m45.max(m67))
+}
+
+/// Orthonormal FWHT with `LANES`-chunked butterflies for stage widths
+/// `h >= LANES` (the `(a + b, a - b)` pair update is element-wise, so
+/// chunking only helps the vectorizer — bits match the scalar tier).
+pub(crate) fn fwht8(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            let (top, bot) = v[i..i + 2 * h].split_at_mut(h);
+            if h >= LANES {
+                for c in 0..h / LANES {
+                    let ts = &mut top[c * LANES..(c + 1) * LANES];
+                    let bs = &mut bot[c * LANES..(c + 1) * LANES];
+                    for l in 0..LANES {
+                        let (a, b) = (ts[l], bs[l]);
+                        ts[l] = a + b;
+                        bs[l] = a - b;
+                    }
+                }
+            } else {
+                for l in 0..h {
+                    let (a, b) = (top[l], bot[l]);
+                    top[l] = a + b;
+                    bot[l] = a - b;
+                }
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for x in v.iter_mut() {
+        *x *= scale;
+    }
+}
+
+// ------------------------------------------------------------------
+// portable GEMM panels
+
+/// Pack `mr` rows of `x` (columns `kb..kb + kc`) interleaved:
+/// `apack[kk * mr + rr]` — the packed operand tile that replaces the
+/// scalar tier's per-element zero-skip branch with stride-1 loads.
+fn pack_a(x: &[f32], apack: &mut [f32], row0: usize, mr: usize, k: usize, kb: usize, kc: usize) {
+    for rr in 0..mr {
+        let xrow = &x[(row0 + rr) * k + kb..(row0 + rr) * k + kb + kc];
+        for (kk, &v) in xrow.iter().enumerate() {
+            apack[kk * mr + rr] = v;
+        }
+    }
+}
+
+// The outer blocking loops are shared between the portable and avx2
+// sub-paths (ONE copy of the k-block / i-block / MR-tile logic and of
+// the accumulation-order contract); only the register microkernel a
+// tier plugs in differs. The indirect `micro` call is per TILE — it
+// amortizes over `kc * m` FLOPs.
+
+/// Shared nn outer blocking: k-blocks x `MR`-row packed operand tiles;
+/// `micro(mr, apack, sub, kb, kc)` runs one register tile.
+fn nn_drive(
+    x: &[f32],
+    panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    m: usize,
+    micro: &dyn Fn(usize, &[f32], &mut [f32], usize, usize),
+) {
+    let rows = i1 - i0;
+    let mut apack = vec![0f32; MR * KC];
+    let mut kb = 0usize;
+    while kb < k {
+        let ke = (kb + KC).min(k);
+        let kc = ke - kb;
+        let mut r = 0usize;
+        while r < rows {
+            let mr = (rows - r).min(MR);
+            pack_a(x, &mut apack, i0 + r, mr, k, kb, kc);
+            micro(mr, &apack, &mut panel[r * m..], kb, kc);
+            r += mr;
+        }
+        kb = ke;
+    }
+}
+
+/// Shared tn outer blocking: global `TN_IC` i-blocks with a row-major
+/// packed transposed tile, `MR`-row output tiles;
+/// `micro(mp, pack, sub, pt, pw, ib, iw)` runs one register tile.
+#[allow(clippy::too_many_arguments)]
+fn tn_drive(
+    a: &[f32],
+    panel: &mut [f32],
+    p0: usize,
+    p1: usize,
+    n: usize,
+    k: usize,
+    m: usize,
+    micro: &dyn Fn(usize, &[f32], &mut [f32], usize, usize, usize, usize),
+) {
+    let pw = p1 - p0;
+    let mut pack = vec![0f32; TN_IC * pw];
+    let mut ib = 0usize;
+    while ib < n {
+        let ie = (ib + TN_IC).min(n);
+        let iw = ie - ib;
+        for ii in 0..iw {
+            pack[ii * pw..ii * pw + pw].copy_from_slice(&a[(ib + ii) * k + p0..(ib + ii) * k + p1]);
+        }
+        let mut pt = 0usize;
+        while pt < pw {
+            let mp = (pw - pt).min(MR);
+            micro(mp, &pack, &mut panel[pt * m..], pt, pw, ib, iw);
+            pt += mp;
+        }
+        ib = ie;
+    }
+}
+
+/// Shared nt outer blocking: the scalar tier's p-blocked sweep with a
+/// pluggable whole-row dot (the indirect call amortizes over `m`
+/// FLOPs).
+#[allow(clippy::too_many_arguments)]
+fn nt_drive(
+    a: &[f32],
+    b: &[f32],
+    panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    m: usize,
+    dot: &dyn Fn(&[f32], &[f32]) -> f32,
+) {
+    let mut pb = 0usize;
+    while pb < k {
+        let pe = (pb + NT_PB).min(k);
+        for i in i0..i1 {
+            let arow = &a[i * m..i * m + m];
+            let prow = &mut panel[(i - i0) * k..(i - i0) * k + k];
+            for p in pb..pe {
+                prow[p] += dot(arow, &b[p * m..p * m + m]);
+            }
+        }
+        pb = pe;
+    }
+}
+
+/// `MR_` output rows of `panel` (row stride `m`) x all `m` columns,
+/// accumulating the k-block `[kb, kb + kc)` from the packed tile.
+/// Register-tiled: one `[f32; LANES]` accumulator per row per column
+/// chunk; the per-element sum stays k-ascending (same order as the
+/// scalar tier), so tile membership — which depends on the panel split
+/// — never changes the bits.
+fn nn_micro<const MR_: usize>(
+    apack: &[f32],
+    w: &[f32],
+    panel: &mut [f32],
+    kb: usize,
+    kc: usize,
+    m: usize,
+) {
+    let mut j = 0usize;
+    while j + LANES <= m {
+        let mut acc = [[0f32; LANES]; MR_];
+        for rr in 0..MR_ {
+            acc[rr].copy_from_slice(&panel[rr * m + j..rr * m + j + LANES]);
+        }
+        for kk in 0..kc {
+            let wrow = &w[(kb + kk) * m + j..(kb + kk) * m + j + LANES];
+            for rr in 0..MR_ {
+                let a = apack[kk * MR_ + rr];
+                for l in 0..LANES {
+                    acc[rr][l] += a * wrow[l];
+                }
+            }
+        }
+        for rr in 0..MR_ {
+            panel[rr * m + j..rr * m + j + LANES].copy_from_slice(&acc[rr]);
+        }
+        j += LANES;
+    }
+    while j < m {
+        let mut acc = [0f32; MR_];
+        for rr in 0..MR_ {
+            acc[rr] = panel[rr * m + j];
+        }
+        for kk in 0..kc {
+            let wv = w[(kb + kk) * m + j];
+            for rr in 0..MR_ {
+                acc[rr] += apack[kk * MR_ + rr] * wv;
+            }
+        }
+        for rr in 0..MR_ {
+            panel[rr * m + j] = acc[rr];
+        }
+        j += 1;
+    }
+}
+
+/// Portable simd `out[n,m] (+)= x[n,k] @ w[k,m]` panel body (rows
+/// `i0..i1`, panel row 0 = global row `i0`).
+pub(crate) fn nn_panel(
+    x: &[f32],
+    w: &[f32],
+    panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    m: usize,
+) {
+    nn_drive(x, panel, i0, i1, k, m, &|mr, apack, sub, kb, kc| match mr {
+        4 => nn_micro::<4>(apack, w, sub, kb, kc, m),
+        3 => nn_micro::<3>(apack, w, sub, kb, kc, m),
+        2 => nn_micro::<2>(apack, w, sub, kb, kc, m),
+        _ => nn_micro::<1>(apack, w, sub, kb, kc, m),
+    });
+}
+
+/// `MP_` rows of the tn output tile x all `m` columns, accumulating
+/// rows `0..iw` of the packed `a` tile (`pack[ii * pw + pp]`) against
+/// `b` rows `ib..ib + iw`. Accumulation is i-ascending per element —
+/// the scalar tier's order.
+fn tn_micro<const MP_: usize>(
+    pack: &[f32],
+    b: &[f32],
+    panel: &mut [f32],
+    pt: usize,
+    pw: usize,
+    ib: usize,
+    iw: usize,
+    m: usize,
+) {
+    let mut j = 0usize;
+    while j + LANES <= m {
+        let mut acc = [[0f32; LANES]; MP_];
+        for rr in 0..MP_ {
+            acc[rr].copy_from_slice(&panel[rr * m + j..rr * m + j + LANES]);
+        }
+        for ii in 0..iw {
+            let brow = &b[(ib + ii) * m + j..(ib + ii) * m + j + LANES];
+            for rr in 0..MP_ {
+                let av = pack[ii * pw + pt + rr];
+                for l in 0..LANES {
+                    acc[rr][l] += av * brow[l];
+                }
+            }
+        }
+        for rr in 0..MP_ {
+            panel[rr * m + j..rr * m + j + LANES].copy_from_slice(&acc[rr]);
+        }
+        j += LANES;
+    }
+    while j < m {
+        let mut acc = [0f32; MP_];
+        for rr in 0..MP_ {
+            acc[rr] = panel[rr * m + j];
+        }
+        for ii in 0..iw {
+            let bv = b[(ib + ii) * m + j];
+            for rr in 0..MP_ {
+                acc[rr] += pack[ii * pw + pt + rr] * bv;
+            }
+        }
+        for rr in 0..MP_ {
+            panel[rr * m + j] = acc[rr];
+        }
+        j += 1;
+    }
+}
+
+/// Portable simd `out[k,m] (+)= a[n,k]^T @ b[n,m]` panel body (output
+/// rows `p0..p1`). The strided column block of `a` is packed row-major
+/// per i-block; i-blocks start at multiples of `TN_IC` regardless of
+/// the panel split, so the per-element i-ascending order is schedule-
+/// independent.
+pub(crate) fn tn_panel(
+    a: &[f32],
+    b: &[f32],
+    panel: &mut [f32],
+    p0: usize,
+    p1: usize,
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    tn_drive(a, panel, p0, p1, n, k, m, &|mp, pack, sub, pt, pw, ib, iw| match mp {
+        4 => tn_micro::<4>(pack, b, sub, pt, pw, ib, iw, m),
+        3 => tn_micro::<3>(pack, b, sub, pt, pw, ib, iw, m),
+        2 => tn_micro::<2>(pack, b, sub, pt, pw, ib, iw, m),
+        _ => tn_micro::<1>(pack, b, sub, pt, pw, ib, iw, m),
+    });
+}
+
+/// Portable simd `out[n,k] (+)= a[n,m] @ b[k,m]^T` panel body: the
+/// scalar tier's p-blocked sweep with the lane-reassociated [`dot8`].
+pub(crate) fn nt_panel(
+    a: &[f32],
+    b: &[f32],
+    panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    m: usize,
+) {
+    nt_drive(a, b, panel, i0, i1, k, m, &dot8);
+}
+
+// ------------------------------------------------------------------
+// AVX2+FMA intrinsic path (x86_64 only; installed by dispatch only
+// after the runtime feature probe succeeds)
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::{nn_drive, nt_drive, tn_drive, LANES};
+    use std::arch::x86_64::*;
+
+    // SAFETY (whole module): every `unsafe fn` below requires AVX2 and
+    // FMA. The safe wrappers are only ever installed in the dispatch
+    // vtable after `is_x86_feature_detected!("avx2") && ("fma")`
+    // succeeded (`dispatch::simd_tier_index`; the vtable static is
+    // crate-private so no safe public path can bypass the probe), and
+    // the debug assertions re-check that invariant.
+
+    fn check_features() {
+        debug_assert!(
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+            "avx2 kernel tier selected without avx2+fma support"
+        );
+    }
+
+    pub(crate) fn nn_panel(
+        x: &[f32],
+        w: &[f32],
+        panel: &mut [f32],
+        i0: usize,
+        i1: usize,
+        k: usize,
+        m: usize,
+    ) {
+        check_features();
+        // SAFETY: avx2+fma guaranteed by the dispatch install
+        // invariant (debug-checked above); same for the tn/nt panels.
+        nn_drive(x, panel, i0, i1, k, m, &|mr, apack, sub, kb, kc| match mr {
+            4 => unsafe { nn_micro::<4>(apack, w, sub, kb, kc, m) },
+            3 => unsafe { nn_micro::<3>(apack, w, sub, kb, kc, m) },
+            2 => unsafe { nn_micro::<2>(apack, w, sub, kb, kc, m) },
+            _ => unsafe { nn_micro::<1>(apack, w, sub, kb, kc, m) },
+        });
+    }
+
+    pub(crate) fn tn_panel(
+        a: &[f32],
+        b: &[f32],
+        panel: &mut [f32],
+        p0: usize,
+        p1: usize,
+        n: usize,
+        k: usize,
+        m: usize,
+    ) {
+        check_features();
+        tn_drive(a, panel, p0, p1, n, k, m, &|mp, pack, sub, pt, pw, ib, iw| match mp {
+            4 => unsafe { tn_micro::<4>(pack, b, sub, pt, pw, ib, iw, m) },
+            3 => unsafe { tn_micro::<3>(pack, b, sub, pt, pw, ib, iw, m) },
+            2 => unsafe { tn_micro::<2>(pack, b, sub, pt, pw, ib, iw, m) },
+            _ => unsafe { tn_micro::<1>(pack, b, sub, pt, pw, ib, iw, m) },
+        });
+    }
+
+    pub(crate) fn nt_panel(
+        a: &[f32],
+        b: &[f32],
+        panel: &mut [f32],
+        i0: usize,
+        i1: usize,
+        k: usize,
+        m: usize,
+    ) {
+        check_features();
+        nt_drive(a, b, panel, i0, i1, k, m, &|x, y| unsafe { dot_impl(x, y) });
+    }
+
+    /// Test-only safe wrappers: the vtable dispatches at panel
+    /// granularity, so these exist purely for the avx2-vs-portable
+    /// helper comparison in the test module.
+    #[cfg(test)]
+    pub(crate) fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+        check_features();
+        unsafe { axpy_impl(y, x, a) }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn dot(x: &[f32], y: &[f32]) -> f32 {
+        check_features();
+        unsafe { dot_impl(x, y) }
+    }
+
+    /// Fixed-order horizontal sum of one 8-lane register (lo half +
+    /// hi half, then a 4-to-1 shuffle tree).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<0x1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[cfg(test)]
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn axpy_impl(y: &mut [f32], x: &[f32], a: f32) {
+        let n = y.len().min(x.len());
+        let chunks = n / LANES;
+        let av = _mm256_set1_ps(a);
+        for c in 0..chunks {
+            let yv = _mm256_loadu_ps(y.as_ptr().add(c * LANES));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+            _mm256_storeu_ps(y.as_mut_ptr().add(c * LANES), _mm256_fmadd_ps(av, xv, yv));
+        }
+        for i in chunks * LANES..n {
+            y[i] = a.mul_add(x[i], y[i]);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn dot_impl(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        let chunks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(c * LANES));
+            acc = _mm256_fmadd_ps(xv, yv, acc);
+        }
+        let mut s = hsum256(acc);
+        for i in chunks * LANES..n {
+            s = x[i].mul_add(y[i], s);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn nn_micro<const MR_: usize>(
+        apack: &[f32],
+        w: &[f32],
+        panel: &mut [f32],
+        kb: usize,
+        kc: usize,
+        m: usize,
+    ) {
+        let mut j = 0usize;
+        while j + LANES <= m {
+            let mut acc = [_mm256_setzero_ps(); MR_];
+            for rr in 0..MR_ {
+                acc[rr] = _mm256_loadu_ps(panel.as_ptr().add(rr * m + j));
+            }
+            for kk in 0..kc {
+                let wv = _mm256_loadu_ps(w.as_ptr().add((kb + kk) * m + j));
+                for rr in 0..MR_ {
+                    let av = _mm256_set1_ps(apack[kk * MR_ + rr]);
+                    acc[rr] = _mm256_fmadd_ps(av, wv, acc[rr]);
+                }
+            }
+            for rr in 0..MR_ {
+                _mm256_storeu_ps(panel.as_mut_ptr().add(rr * m + j), acc[rr]);
+            }
+            j += LANES;
+        }
+        while j < m {
+            for rr in 0..MR_ {
+                let mut s = panel[rr * m + j];
+                for kk in 0..kc {
+                    s = apack[kk * MR_ + rr].mul_add(w[(kb + kk) * m + j], s);
+                }
+                panel[rr * m + j] = s;
+            }
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn tn_micro<const MP_: usize>(
+        pack: &[f32],
+        b: &[f32],
+        panel: &mut [f32],
+        pt: usize,
+        pw: usize,
+        ib: usize,
+        iw: usize,
+        m: usize,
+    ) {
+        let mut j = 0usize;
+        while j + LANES <= m {
+            let mut acc = [_mm256_setzero_ps(); MP_];
+            for rr in 0..MP_ {
+                acc[rr] = _mm256_loadu_ps(panel.as_ptr().add(rr * m + j));
+            }
+            for ii in 0..iw {
+                let bv = _mm256_loadu_ps(b.as_ptr().add((ib + ii) * m + j));
+                for rr in 0..MP_ {
+                    let av = _mm256_set1_ps(pack[ii * pw + pt + rr]);
+                    acc[rr] = _mm256_fmadd_ps(av, bv, acc[rr]);
+                }
+            }
+            for rr in 0..MP_ {
+                _mm256_storeu_ps(panel.as_mut_ptr().add(rr * m + j), acc[rr]);
+            }
+            j += LANES;
+        }
+        while j < m {
+            for rr in 0..MP_ {
+                let mut s = panel[rr * m + j];
+                for ii in 0..iw {
+                    s = pack[ii * pw + pt + rr].mul_add(b[(ib + ii) * m + j], s);
+                }
+                panel[rr * m + j] = s;
+            }
+            j += 1;
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng;
+
+    #[test]
+    fn axpy8_matches_scalar_axpy_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 64, 129] {
+            let x = rng::normals(1, n);
+            let y0 = rng::normals(2, n);
+            let mut y_lane = y0.clone();
+            axpy8(&mut y_lane, &x, 0.37);
+            let mut y_scalar = y0.clone();
+            for (yi, &xi) in y_scalar.iter_mut().zip(&x) {
+                *yi += 0.37 * xi;
+            }
+            assert_eq!(y_lane, y_scalar, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn dot8_close_to_sequential_dot_and_deterministic() {
+        for n in [0usize, 1, 7, 8, 9, 64, 129, 1000] {
+            let x = rng::normals(3, n);
+            let y = rng::normals(4, n);
+            let lane = dot8(&x, &y);
+            assert_eq!(lane, dot8(&x, &y), "dot8 not run-deterministic (n = {n})");
+            let seq: f64 = x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            // scale the bound by the term mass, not the (possibly
+            // cancelled) sum — f32 accumulation error grows with
+            // sum of magnitudes, while an indexing bug shows up at the
+            // magnitude scale itself
+            let mass: f64 =
+                x.iter().zip(&y).map(|(a, b)| ((*a as f64) * (*b as f64)).abs()).sum();
+            assert!(
+                (lane as f64 - seq).abs() <= 1e-5 * mass.max(1.0),
+                "n = {n}: lane {lane} vs f64 {seq}"
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_maps_are_bit_identical_to_scalar() {
+        let x = rng::normals(5, 1003);
+        let mut lane = vec![0f32; x.len()];
+        gelu_map8(&mut lane, &x);
+        let scalar: Vec<f32> = x.iter().map(|&v| gelu(v)).collect();
+        assert_eq!(lane, scalar);
+
+        let g0 = rng::normals(6, x.len());
+        let mut g_lane = g0.clone();
+        gelu_grad_mul8(&mut g_lane, &x);
+        let g_scalar: Vec<f32> = g0.iter().zip(&x).map(|(g, &v)| g * gelu_grad(v)).collect();
+        assert_eq!(g_lane, g_scalar);
+    }
+
+    #[test]
+    fn row_max8_matches_sequential_fold() {
+        for n in [1usize, 7, 8, 9, 100, 513] {
+            let x = rng::normals(7, n);
+            let want = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(row_max8(&x), want, "n = {n}");
+        }
+        assert_eq!(row_max8(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn fwht8_is_bit_identical_to_scalar_fwht() {
+        for logn in [0usize, 1, 2, 3, 4, 7] {
+            let n = 1usize << logn;
+            let x = rng::normals(8, n);
+            let mut lane = x.clone();
+            fwht8(&mut lane);
+            let mut scalar = x.clone();
+            crate::kernels::dispatch::fwht_scalar(&mut scalar);
+            assert_eq!(lane, scalar, "n = {n}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_helpers_match_portable_within_tolerance() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            return; // nothing to check on this host
+        }
+        for n in [1usize, 8, 9, 129, 1000] {
+            let x = rng::normals(9, n);
+            let y = rng::normals(10, n);
+            let d_avx = avx2::dot(&x, &y);
+            assert_eq!(d_avx, avx2::dot(&x, &y), "avx2 dot not run-deterministic");
+            let seq: f64 = x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let mass: f64 =
+                x.iter().zip(&y).map(|(a, b)| ((*a as f64) * (*b as f64)).abs()).sum();
+            assert!(
+                (d_avx as f64 - seq).abs() <= 1e-5 * mass.max(1.0),
+                "n = {n}: avx2 {d_avx} vs f64 {seq}"
+            );
+            let mut y_avx = y.clone();
+            avx2::axpy(&mut y_avx, &x, 0.37);
+            let mut y_lane = y.clone();
+            axpy8(&mut y_lane, &x, 0.37);
+            for (a, b) in y_avx.iter().zip(&y_lane) {
+                assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+            }
+        }
+    }
+}

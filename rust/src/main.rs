@@ -10,6 +10,7 @@
 //! inspect   --adapter adapter.uni1       (print metadata + expansion norms)
 //! props     --method uni|vera|...        (Table-1 property analysis)
 //! methods   (the ProjectionOp registry's method-support matrix)
+//! kernels   (detected CPU features + the resolved kernel variant)
 //! list      (artifacts in the active backend's registry)
 //! ```
 //!
@@ -54,6 +55,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "inspect" => cmd_inspect(args),
         "props" => cmd_props(args),
         "methods" => cmd_methods(),
+        "kernels" => cmd_kernels(),
         "list" => cmd_list(args),
         _ => {
             println!("{}", HELP);
@@ -72,6 +74,7 @@ const HELP: &str = "uni-lora — Uni-LoRA system reproduction
   inspect  --adapter a.uni1
   props    [--method uni]
   methods  (method-support matrix from the projection registry)
+  kernels  (detected CPU features + resolved kernel variant)
   list
 options: --backend native|pjrt (default native)
 tasks: sst2 mrpc cola qnli rte stsb | math | instruct";
@@ -327,6 +330,45 @@ fn cmd_methods() -> Result<()> {
             "train+eval (artifacts)",
         );
     }
+    Ok(())
+}
+
+/// The kernel-variant matrix, mirroring `uni-lora methods`: detected
+/// CPU features, the `UNI_LORA_KERNELS` choice, and the variant the
+/// dispatch layer resolved it to (the same table README.md documents).
+fn cmd_kernels() -> Result<()> {
+    use uni_lora::config::KernelChoice;
+    use uni_lora::kernels::dispatch;
+    let feats = dispatch::detect();
+    println!("cpu features: avx2 = {}, fma = {}", feats.avx2, feats.fma);
+    let choice = uni_lora::config::RuntimeOpts::from_env().kernels;
+    let choice_str = match choice {
+        KernelChoice::Scalar => "scalar",
+        KernelChoice::Simd => "simd",
+        KernelChoice::Auto => "auto",
+    };
+    println!(
+        "UNI_LORA_KERNELS = {choice_str} -> variant {} (tier {})",
+        dispatch::resolve(choice, feats).name(),
+        dispatch::path()
+    );
+    println!("threads = {} (UNI_LORA_THREADS)", uni_lora::kernels::threads());
+    println!();
+    println!("{:<9} {:<34} {}", "variant", "selected when", "determinism");
+    println!(
+        "{:<9} {:<34} {}",
+        "scalar",
+        "UNI_LORA_KERNELS=scalar, or auto",
+        "bitwise: runs, thread counts, naive reference"
+    );
+    println!("{:<9} {:<34} {}", "", "  without avx2+fma", "");
+    println!(
+        "{:<9} {:<34} {}",
+        "simd",
+        "UNI_LORA_KERNELS=simd, or auto",
+        "bitwise: runs, thread counts; ULP-tolerance vs scalar"
+    );
+    println!("{:<9} {:<34} {}", "", "  with avx2+fma", "");
     Ok(())
 }
 

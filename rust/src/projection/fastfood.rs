@@ -4,26 +4,15 @@
 use crate::rng;
 
 /// In-place orthonormal fast Walsh-Hadamard transform (len power of 2).
+///
+/// The butterfly chain is a kernel-layer hot loop: the body comes from
+/// the active kernel-variant vtable (`kernels::dispatch`). Every tier
+/// keeps the identical per-element `(a + b, a - b)` arithmetic — the
+/// lane tier only chunks the stage sweep for the vectorizer — so the
+/// transform is bit-identical across tiers and the fastfood statics /
+/// reconstruction goldens never depend on `UNI_LORA_KERNELS`.
 pub fn fwht(v: &mut [f32]) {
-    let n = v.len();
-    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
-    let mut h = 1;
-    while h < n {
-        let mut i = 0;
-        while i < n {
-            for j in i..i + h {
-                let (a, b) = (v[j], v[j + h]);
-                v[j] = a + b;
-                v[j + h] = a - b;
-            }
-            i += 2 * h;
-        }
-        h *= 2;
-    }
-    let scale = 1.0 / (n as f32).sqrt();
-    for x in v.iter_mut() {
-        *x *= scale;
-    }
+    (crate::kernels::dispatch::ops().fwht)(v)
 }
 
 /// Frozen per-block statics for one Fastfood block.

@@ -12,6 +12,13 @@
 //! `vjp` — one projection API for all ten methods, resolved through
 //! `projection::op::resolve`. No per-method dispatch lives in this
 //! file anymore.
+//!
+//! Compute tier: all dense math below this file runs on the kernel
+//! variant `kernels::dispatch` resolved from `UNI_LORA_KERNELS`
+//! (scalar golden reference, or the register-tiled simd tier). Every
+//! tier is bitwise-deterministic across runs and thread counts, so the
+//! backend's reproducibility guarantees hold for each tier; switching
+//! tiers changes results only within the documented ULP tolerance.
 
 pub mod model;
 

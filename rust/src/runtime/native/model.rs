@@ -8,12 +8,17 @@
 //! math routes through the `crate::kernels` compute layer (blocked
 //! multi-threaded GEMMs plus parallel drivers for the attention and
 //! elementwise loops); nothing in this file owns a matmul loop nest
-//! anymore. Results are bitwise identical across runs and thread
-//! counts — see the determinism contract in `kernels::pool`. Backward
-//! is hand-written (autodiff of the forward graph) and covered by
-//! finite-difference tests below.
+//! anymore, and the shared hot maps (GELU forward/grad, the LM-softmax
+//! row max) come from the kernel-variant vtable (`kernels::dispatch`),
+//! so `UNI_LORA_KERNELS` swaps the whole tier under this file without
+//! touching it. Results are bitwise identical across runs and thread
+//! counts for every tier — see the determinism contracts in
+//! `kernels::pool` and `kernels::dispatch`. Backward is hand-written
+//! (autodiff of the forward graph) and covered by finite-difference
+//! tests below.
 
 use crate::config::ModelCfg;
+use crate::kernels::dispatch;
 use crate::kernels::{gemm_nn, gemm_nt, gemm_tn, parallel_chunks, parallel_for_work, SendPtr};
 use crate::projection::reconstruct::ModuleDelta;
 use crate::runtime::spec;
@@ -121,19 +126,6 @@ fn layer_norm_backward(
     (dx, dgamma, dbeta)
 }
 
-const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
-const GELU_A: f32 = 0.044_715;
-
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
-}
-
-fn gelu_grad(x: f32) -> f32 {
-    let u = GELU_C * (x + GELU_A * x * x * x);
-    let t = u.tanh();
-    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
-}
-
 pub struct AttnCache {
     /// softmax probabilities [B, nh, T, T], zero above the diagonal
     att: Vec<f32>,
@@ -143,7 +135,10 @@ pub struct AttnCache {
 /// Parallelized over (batch, head) pairs on the kernel pool; each task
 /// owns a disjoint slab of `att` and column stripe of `out`, and runs
 /// the same per-query loop order as the single-threaded original, so
-/// results are thread-count invariant.
+/// results are thread-count invariant. The tiny head-dim dots stay
+/// inlined (NOT vtable-dispatched): an indirect call per (query, key)
+/// pair would dominate a ~16-64 FLOP loop, and keeping the legacy
+/// expressions preserves the scalar tier's bit-parity here.
 fn attention(cfg: &ModelCfg, q: &[f32], k: &[f32], v: &[f32]) -> (Vec<f32>, AttnCache) {
     let (b, t, h, nh) = (cfg.batch, cfg.seq, cfg.hidden, cfg.heads);
     let hd = cfg.head_dim();
@@ -302,6 +297,7 @@ pub fn forward(
 ) -> Result<ForwardCache> {
     let (b, t, h, f, r) = (cfg.batch, cfg.seq, cfg.hidden, cfg.ffn, cfg.rank);
     let bt = b * t;
+    let kops = dispatch::ops();
     ensure!(tokens.len() == bt, "tokens: got {}, want {}", tokens.len(), bt);
     ensure!(
         deltas.len() == cfg.n_modules(),
@@ -363,9 +359,7 @@ pub fn forward(
             parallel_chunks(bt * f, 4096, |s, e| {
                 // SAFETY: chunks are disjoint
                 let d = unsafe { dst.slice(s, e - s) };
-                for (dv, &z) in d.iter_mut().zip(&src[s..e]) {
-                    *dv = gelu(z);
-                }
+                (kops.gelu_map)(d, &src[s..e]);
             });
         }
         let mut x_next = vec![0f32; bt * h];
@@ -449,11 +443,13 @@ fn module_grad(
     }
 }
 
+/// `dst += src` — the residual / gradient accumulate. Routed through
+/// the lane-chunked `axpy8` with `a = 1.0`: `1.0 * x == x` exactly and
+/// the update is element-wise, so this is bit-identical to the plain
+/// add loop on every tier while vectorizing cleanly.
 fn add_into(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
-    for (d, s) in dst.iter_mut().zip(src) {
-        *d += s;
-    }
+    crate::kernels::simd::axpy8(dst, src, 1.0);
 }
 
 /// Backprop from `d_hidden` (gradient at the final layer-norm output)
@@ -470,6 +466,7 @@ pub fn backward(
 ) -> Result<Gradients> {
     let (b, t, h, f) = (cfg.batch, cfg.seq, cfg.hidden, cfg.ffn);
     let bt = b * t;
+    let kops = dispatch::ops();
     ensure!(d_hidden.len() == bt * h, "d_hidden size mismatch");
     let mut w0g = if want_w0 { Some(vec![0f32; base.total()]) } else { None };
     let mut modules: Vec<Option<ModuleDelta>> = (0..cfg.n_modules()).map(|_| None).collect();
@@ -503,9 +500,7 @@ pub fn backward(
             parallel_chunks(bt * f, 4096, |s, e| {
                 // SAFETY: chunks are disjoint
                 let dd = unsafe { dst.slice(s, e - s) };
-                for (g, &z) in dd.iter_mut().zip(&src[s..e]) {
-                    *g *= gelu_grad(z);
-                }
+                (kops.gelu_grad_mul)(dd, &src[s..e]);
             });
         }
         let mut d_x3 = vec![0f32; bt * h];
@@ -674,13 +669,14 @@ pub fn softmax_xent_mean(
     rows: usize,
     c: usize,
 ) -> Result<(f32, Vec<f32>)> {
+    let kops = dispatch::ops();
     let mut d = vec![0f32; rows * c];
     let mut loss = 0f64;
     for i in 0..rows {
         let row = &logits[i * c..(i + 1) * c];
         let lab = labels[i];
         ensure!(lab >= 0 && (lab as usize) < c, "label {lab} out of range for C = {c}");
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mx = (kops.row_max)(row);
         let mut denom = 0f64;
         for &x in row {
             denom += ((x - mx) as f64).exp();
@@ -731,6 +727,7 @@ pub fn lm_xent_masked(
     for &lab in labels {
         ensure!(lab < vocab as i32, "label {lab} out of range for vocab {vocab}");
     }
+    let kops = dispatch::ops();
     let msum = labels.iter().filter(|&&l| l >= 0).count().max(1) as f64;
     let mut d = vec![0f32; rows * vocab];
     let mut row_loss = vec![0f64; rows];
@@ -751,7 +748,7 @@ pub fn lm_xent_masked(
                 // SAFETY: row i of `d`/`row_loss` belongs to this task only
                 let drow = unsafe { dptr.slice(i * vocab, vocab) };
                 let lrow = unsafe { lptr.slice(i, 1) };
-                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mx = (kops.row_max)(row);
                 let mut denom = 0f64;
                 for &x in row {
                     denom += ((x - mx) as f64).exp();
@@ -851,15 +848,6 @@ mod tests {
                 "dx[{i}]: fd {num} vs analytic {}",
                 dx[i]
             );
-        }
-    }
-
-    #[test]
-    fn gelu_grad_matches_finite_difference() {
-        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
-            let eps = 1e-3;
-            let num = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
-            assert!((num - gelu_grad(x)).abs() < 1e-3, "x={x}");
         }
     }
 

@@ -92,11 +92,14 @@ fn native_training_is_thread_count_invariant() {
         }
         (losses, tr.theta)
     };
+    // RAII guard: the env-derived width comes back even if an assert
+    // (or the run itself) panics mid-sweep, so a red run can't leave
+    // the pinned width applied to every later test in the process
+    let _threads = uni_lora::kernels::ThreadsGuard::new();
     uni_lora::kernels::set_threads(1);
     let (l1, t1) = run();
     uni_lora::kernels::set_threads(4);
     let (l4, t4) = run();
-    uni_lora::kernels::set_threads(uni_lora::config::RuntimeOpts::from_env().threads);
     assert_eq!(l1, l4, "losses must not depend on the thread count");
     assert_eq!(t1, t4, "trained theta must not depend on the thread count");
 }
