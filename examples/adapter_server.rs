@@ -1,7 +1,8 @@
 //! Multi-adapter serving demo: train several one-vector adapters
 //! (math + instruction variants), register them, start the server, and
 //! fire a mixed workload from concurrent clients — then print router
-//! stats showing same-adapter batch coalescing.
+//! stats showing the continuous-batching serving metrics (tokens/s,
+//! TTFT, reconstruction-cache hit rate, decode-slot occupancy).
 //!
 //!   cargo run --release --example adapter_server -- [--requests 48]
 //!

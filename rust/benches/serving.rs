@@ -1,27 +1,150 @@
-//! Serving bench: throughput/latency of the multi-adapter router under
-//! (a) single-adapter, (b) mixed-adapter workloads — quantifies the
-//! batch-coalescing win, the adapter-residency footprint, and the
-//! execution worker-pool scaling (workers = 1 vs N over cloned
-//! backends). Kernel threads are pinned to 1 so the comparison
-//! isolates worker-level parallelism from intra-op parallelism.
+//! Serving bench: (a) session decode vs the legacy full-forward decode
+//! — tokens/s and time-to-first-token, the PR-5 acceptance numbers —
+//! and (b) router throughput under single- and mixed-adapter workloads
+//! across worker-pool widths. Kernel threads are pinned to 1 so the
+//! comparisons isolate the decode algorithm and worker-level
+//! parallelism from intra-op parallelism.
+//!
+//! With `UNI_LORA_BENCH_JSON=1` the decode comparison lands in
+//! `BENCH_serving.json` at the repo root (`scripts/bench_snapshot.sh`
+//! archives it per commit).
+//!
 //! Runs on the default backend (native unless UNI_LORA_BACKEND=pjrt).
 //! Run: cargo bench --bench serving
 
 use std::sync::Arc;
+use std::time::Instant;
 use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::bench;
 use uni_lora::config::RuntimeOpts;
 use uni_lora::coordinator::init_base;
 use uni_lora::data::vocab;
-use uni_lora::projection::statics::init_theta;
+use uni_lora::projection::statics::{gen_statics, init_theta};
 use uni_lora::runtime::Backend;
 use uni_lora::server::{serve, ServerConfig};
+use uni_lora::session::{DecodeSession, FallbackSession, SeqRequest, SessionOpts};
+use uni_lora::util::json::{n, obj, s, Json};
+
+const ART: &str = "lm_uni_lm_logits";
+
+fn bench_prompt() -> Vec<i32> {
+    vec![
+        vocab::BOS,
+        vocab::Q_MARKER,
+        vocab::digit(3),
+        vocab::PLUS,
+        vocab::digit(4),
+        vocab::EQUALS,
+        vocab::A_MARKER,
+    ]
+}
+
+/// Drive `n_seqs` same-adapter sequences through a session, measuring
+/// wall time, generated tokens and mean time-to-first-token.
+fn drive_session(
+    sess: &mut dyn DecodeSession,
+    exec: &mut dyn Backend,
+    theta: &Arc<Vec<f32>>,
+    statics: &Arc<Vec<uni_lora::projection::statics::Static>>,
+    n_seqs: usize,
+    max_new: usize,
+) -> (f64, u64, f64) {
+    let prompt = bench_prompt();
+    let t0 = Instant::now();
+    let mut admitted = 0usize;
+    let mut first_tok_at: Vec<Option<f64>> = vec![None; n_seqs];
+    let mut owner: Vec<Option<usize>> = vec![None; sess.slots()];
+    let mut generated = 0u64;
+    while admitted < n_seqs || sess.active() > 0 {
+        while sess.free_slots() > 0 && admitted < n_seqs {
+            let slot = sess
+                .admit(SeqRequest {
+                    adapter: "bench".into(),
+                    theta: theta.clone(),
+                    statics: statics.clone(),
+                    prompt: prompt.clone(),
+                    max_new,
+                })
+                .expect("admit");
+            owner[slot] = Some(admitted);
+            admitted += 1;
+        }
+        if sess.active() == 0 {
+            break;
+        }
+        for ev in sess.step(exec).expect("step") {
+            let si = owner[ev.slot].expect("owned slot");
+            if ev.token.is_some() {
+                generated += 1;
+                if first_tok_at[si].is_none() {
+                    first_tok_at[si] = Some(t0.elapsed().as_secs_f64());
+                }
+            }
+            if ev.done {
+                owner[ev.slot] = None;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let ttfts: Vec<f64> = first_tok_at.into_iter().flatten().collect();
+    let mean_ttft =
+        if ttfts.is_empty() { 0.0 } else { ttfts.iter().sum::<f64>() / ttfts.len() as f64 };
+    (wall, generated, mean_ttft)
+}
+
+/// Acceptance comparison: incremental session decode vs the legacy
+/// full-forward loop, same adapter, same prompts, `max_new = 16`.
+fn decode_comparison() -> anyhow::Result<Vec<Json>> {
+    let mut exec = uni_lora::runtime::default_backend()?;
+    let meta = exec.meta(ART)?.clone();
+    let w0 = Arc::new(init_base(&meta, 42));
+    let theta = Arc::new(init_theta(&meta.cfg, 7)?);
+    let statics = Arc::new(gen_statics(&meta.cfg, 7)?);
+    let (n_seqs, max_new) = (16usize, 16usize);
+
+    let mut entries = Vec::new();
+    let mut recorded = Vec::new();
+    for (label, full_forward) in [("full-forward", true), ("session", false)] {
+        let mut sess: Box<dyn DecodeSession> = if full_forward {
+            Box::new(FallbackSession::new(meta.clone(), w0.clone(), &SessionOpts::from_env())?)
+        } else {
+            exec.begin_decode(ART, w0.clone(), &SessionOpts::from_env())?
+        };
+        // warmup (reconstruction cache, allocators)
+        drive_session(sess.as_mut(), exec.as_mut(), &theta, &statics, 2, 4);
+        let (wall, generated, ttft) =
+            drive_session(sess.as_mut(), exec.as_mut(), &theta, &statics, n_seqs, max_new);
+        sess.finish();
+        let tps = generated as f64 / wall.max(1e-9);
+        println!(
+            "decode {label:<13} {n_seqs} seqs x max_new={max_new}: {generated} tokens \
+             in {wall:.2}s = {tps:.1} tok/s | mean ttft {:.1}ms",
+            1000.0 * ttft
+        );
+        recorded.push(tps);
+        entries.push(obj(vec![
+            ("name", s(&format!("decode/{label}/seqs{n_seqs}/new{max_new}"))),
+            ("tokens_per_sec", n(tps)),
+            ("mean_ttft_ms", n(1000.0 * ttft)),
+            ("generated", n(generated as f64)),
+            ("wall_secs", n(wall)),
+        ]));
+    }
+    if recorded.len() == 2 {
+        println!(
+            "decode speedup: session is {:.1}x the full-forward tokens/s \
+             (acceptance floor: 3x)",
+            recorded[1] / recorded[0].max(1e-9)
+        );
+    }
+    Ok(entries)
+}
 
 fn run_with_workers(workers: usize) -> anyhow::Result<()> {
     let mut exec = uni_lora::runtime::default_backend()?;
-    let art = "lm_uni_lm_logits";
-    let meta = exec.meta(art)?.clone();
+    let meta = exec.meta(ART)?.clone();
     let w0 = init_base(&meta, 42);
-    exec.prepare(art)?;
+    exec.prepare(ART)?;
 
     // 64 resident adapters (untrained — latency is what matters here)
     let registry = Registry::new();
@@ -31,7 +154,7 @@ fn run_with_workers(workers: usize) -> anyhow::Result<()> {
             AdapterCheckpoint {
                 seed: i,
                 method: "uni".into(),
-                artifact: art.into(),
+                artifact: ART.into(),
                 theta: init_theta(&meta.cfg, i).unwrap(),
                 head: vec![],
             },
@@ -47,16 +170,15 @@ fn run_with_workers(workers: usize) -> anyhow::Result<()> {
     }
 
     let handle = serve(
-        ServerConfig::new("127.0.0.1:0", art).with_workers(workers),
+        ServerConfig::new("127.0.0.1:0", ART).with_workers(workers),
         exec,
         Arc::new(registry),
         meta.cfg.clone(),
         w0,
     )?;
 
-    let prompt = vec![vocab::BOS, vocab::Q_MARKER, vocab::digit(3), vocab::PLUS,
-                      vocab::digit(4), vocab::EQUALS, vocab::A_MARKER];
-    let n = 32;
+    let prompt = bench_prompt();
+    let n_reqs = 32;
 
     for (label, n_adapters) in [("single-adapter", 1usize), ("mixed-16-adapters", 16)] {
         // concurrent submissions through the router's sync API
@@ -66,7 +188,7 @@ fn run_with_workers(workers: usize) -> anyhow::Result<()> {
             let router = handle.router.clone();
             let prompt = prompt.clone();
             joins.push(std::thread::spawn(move || {
-                for i in 0..n / 4 {
+                for i in 0..n_reqs / 4 {
                     let a = format!("a{}", (c * 7 + i) % n_adapters);
                     router.generate(&a, prompt.clone(), 4).unwrap();
                 }
@@ -78,12 +200,14 @@ fn run_with_workers(workers: usize) -> anyhow::Result<()> {
         let wall = t0.elapsed().as_secs_f64();
         let st = handle.router.stats.lock().unwrap().clone();
         println!(
-            "workers={} {label:<20} {n} reqs in {wall:.2}s = {:.1} req/s | \
-             mean batch {:.2} | mean latency {:.0}ms",
+            "workers={} {label:<20} {n_reqs} reqs in {wall:.2}s = {:.1} req/s | \
+             {:.0} tok/s | ttft {:.0}ms | occ {:.2} slots | recon hit {:.0}%",
             handle.workers,
-            n as f64 / wall,
-            st.mean_batch_size(),
-            st.mean_latency_ms()
+            n_reqs as f64 / wall,
+            st.tokens_per_sec(),
+            st.mean_ttft_ms(),
+            st.mean_occupied_slots(),
+            100.0 * st.recon_hit_rate(),
         );
         *handle.router.stats.lock().unwrap() = Default::default();
     }
@@ -94,6 +218,12 @@ fn run_with_workers(workers: usize) -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     // workers scale across cores; kernel threads stay at 1 (see header)
     uni_lora::kernels::set_threads(1);
+
+    let entries = decode_comparison()?;
+    if let Some(path) = bench::write_named_json_report("serving", "decode", entries)? {
+        println!("recorded decode trajectory -> {}", path.display());
+    }
+
     let auto = RuntimeOpts::from_env().threads;
     let mut sweep = vec![1usize];
     if auto > 1 {

@@ -65,7 +65,31 @@ pub fn json_report_enabled() -> bool {
 /// The trajectory file: `BENCH_kernels.json` at the repo root (one
 /// level above the crate manifest).
 pub fn bench_json_path() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_kernels.json")
+    named_json_path("kernels")
+}
+
+/// A named trajectory file — `BENCH_<name>.json` at the repo root
+/// (`BENCH_kernels.json` for the compute tiers, `BENCH_serving.json`
+/// for the decode/session numbers; `scripts/bench_snapshot.sh`
+/// archives them per commit).
+pub fn named_json_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(format!("BENCH_{name}.json"))
+}
+
+/// Env-gated write into a named trajectory file (see
+/// [`write_json_report`], which this generalizes): no-op unless
+/// `UNI_LORA_BENCH_JSON=1`; returns the path written, if any.
+pub fn write_named_json_report(
+    file: &str,
+    source: &str,
+    entries: Vec<Json>,
+) -> anyhow::Result<Option<PathBuf>> {
+    if !json_report_enabled() {
+        return Ok(None);
+    }
+    let path = named_json_path(file);
+    write_json_report_at(&path, source, entries)?;
+    Ok(Some(path))
 }
 
 /// Merge `entries` into the JSON report at `path` under the top-level
@@ -163,6 +187,12 @@ mod tests {
         });
         assert!(r.median_secs >= 0.0);
         assert!(r.min_secs <= r.median_secs && r.median_secs <= r.max_secs);
+    }
+
+    #[test]
+    fn named_paths_follow_convention() {
+        assert!(named_json_path("serving").ends_with("BENCH_serving.json"));
+        assert_eq!(bench_json_path(), named_json_path("kernels"));
     }
 
     #[test]

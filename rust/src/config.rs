@@ -218,13 +218,29 @@ pub struct RuntimeOpts {
     /// Kernel-tier selection (`UNI_LORA_KERNELS=scalar|simd|auto`;
     /// default auto).
     pub kernels: KernelChoice,
+    /// Decode slots (concurrent sequences) per serving session
+    /// (`UNI_LORA_DECODE_SLOTS`; 0 = auto: the artifact batch size).
+    pub decode_slots: usize,
+    /// Adapter-reconstruction cache capacity, in resident adapters
+    /// (`UNI_LORA_RECON_CACHE`; default [`DEFAULT_RECON_CACHE`]).
+    pub recon_cache: usize,
 }
+
+/// Default adapter-reconstruction cache capacity. Reconstructions are
+/// `2 * layers * hidden^2` floats each (~512 KiB on the `lm` shape),
+/// so 64 residents ≈ 32 MiB — small next to the backbone, large
+/// enough that a steady multi-tenant mix rarely misses.
+pub const DEFAULT_RECON_CACHE: usize = 64;
 
 impl RuntimeOpts {
     pub fn from_env() -> RuntimeOpts {
         RuntimeOpts {
             threads: parse_threads(std::env::var("UNI_LORA_THREADS").ok().as_deref()),
             kernels: parse_kernels(std::env::var("UNI_LORA_KERNELS").ok().as_deref()),
+            decode_slots: parse_decode_slots(
+                std::env::var("UNI_LORA_DECODE_SLOTS").ok().as_deref(),
+            ),
+            recon_cache: parse_recon_cache(std::env::var("UNI_LORA_RECON_CACHE").ok().as_deref()),
         }
     }
 }
@@ -256,6 +272,24 @@ pub fn parse_kernels(raw: Option<&str>) -> KernelChoice {
             KernelChoice::Scalar
         }
     }
+}
+
+/// `UNI_LORA_DECODE_SLOTS` parsing: a positive integer wins; anything
+/// else (unset, garbage, 0) is 0 = auto — sessions fall back to the
+/// artifact batch size. Scheduling-only (like `threads`): the knob
+/// never changes what any sequence generates, only how many decode
+/// concurrently.
+pub fn parse_decode_slots(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(0)
+}
+
+/// `UNI_LORA_RECON_CACHE` parsing: a positive integer wins; anything
+/// else (unset, garbage, 0 — an adapter cache of zero would thrash
+/// every admission) falls back to [`DEFAULT_RECON_CACHE`].
+pub fn parse_recon_cache(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_RECON_CACHE)
 }
 
 #[cfg(test)]
@@ -321,6 +355,22 @@ mod tests {
         // a different tier: garbage pins the golden scalar tier
         assert_eq!(parse_kernels(Some("turbo")), KernelChoice::Scalar);
         assert_eq!(parse_kernels(Some("sclar")), KernelChoice::Scalar);
+    }
+
+    #[test]
+    fn session_knobs_parse_and_default() {
+        assert_eq!(parse_decode_slots(Some("8")), 8);
+        assert_eq!(parse_decode_slots(Some(" 2 ")), 2);
+        assert_eq!(parse_decode_slots(Some("0")), 0);
+        assert_eq!(parse_decode_slots(Some("many")), 0);
+        assert_eq!(parse_decode_slots(None), 0);
+        assert_eq!(parse_recon_cache(Some("16")), 16);
+        assert_eq!(parse_recon_cache(Some("0")), DEFAULT_RECON_CACHE);
+        assert_eq!(parse_recon_cache(Some("big")), DEFAULT_RECON_CACHE);
+        assert_eq!(parse_recon_cache(None), DEFAULT_RECON_CACHE);
+        // from_env stays total (tests must not mutate the env)
+        let o = RuntimeOpts::from_env();
+        assert!(o.recon_cache >= 1);
     }
 
     #[test]

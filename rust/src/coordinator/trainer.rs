@@ -7,6 +7,7 @@ use crate::data::{ClsExample, LmExample};
 use crate::projection::statics::{gen_statics, init_theta, Static};
 use crate::runtime::{Backend, TensorIn};
 use anyhow::{Context, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Hyperparameters for one run (paper Appendix A.2 analogues).
@@ -317,8 +318,12 @@ pub struct LmTrainer {
     pub theta: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
-    pub w0: Vec<f32>,
-    stats: Vec<Static>,
+    /// Frozen backbone, Arc'd: decode sessions share it by refcount
+    /// (stable identity keeps the reconstruction cache warm across
+    /// `greedy_decode` calls) and the unpinned train path stops
+    /// re-copying it every step.
+    pub w0: Arc<Vec<f32>>,
+    stats: Arc<Vec<Static>>,
     step: i32,
     pinned: bool,
 }
@@ -340,8 +345,8 @@ impl LmTrainer {
             m: vec![0f32; theta.len()],
             v: vec![0f32; theta.len()],
             theta,
-            w0,
-            stats,
+            w0: Arc::new(w0),
+            stats: Arc::new(stats),
             step: 0,
             pinned: false,
             cfg,
@@ -351,8 +356,8 @@ impl LmTrainer {
     /// §Perf: see ClsTrainer::pin_frozen.
     pub fn pin_frozen(&mut self, exec: &mut dyn Backend) -> Result<()> {
         exec.prepare(&self.art_train)?;
-        exec.pin(&self.art_train, "w0", &TensorIn::F32(self.w0.clone()))?;
-        for s in &self.stats {
+        exec.pin(&self.art_train, "w0", &TensorIn::SharedF32(self.w0.clone()))?;
+        for s in self.stats.iter() {
             exec.pin(&self.art_train, &s.name, &TensorIn::from(s))?;
         }
         self.pinned = true;
@@ -368,7 +373,7 @@ impl LmTrainer {
             TensorIn::ScalarI32(self.step),
             TensorIn::ScalarF32(hp.lr_theta),
             TensorIn::ScalarF32(hp.wd),
-            if self.pinned { TensorIn::Pinned } else { TensorIn::F32(self.w0.clone()) },
+            if self.pinned { TensorIn::Pinned } else { TensorIn::SharedF32(self.w0.clone()) },
             TensorIn::I32(b.tokens.clone()),
             TensorIn::I32(b.labels.clone()),
         ];
@@ -403,26 +408,35 @@ impl LmTrainer {
 
     /// Batched greedy decoding: prompts (token prefixes) -> generations
     /// of up to `max_new` tokens (stopping per-sequence at EOS).
+    /// Routed through the decode-session subsystem: on the native
+    /// backend this runs KV-cache incremental steps (O(model) per
+    /// token); other backends fall back to full forwards via
+    /// `Backend::run`. Token streams match the legacy full-forward
+    /// loop exactly (`tests/decode_parity.rs`).
     pub fn greedy_decode(
         &mut self,
         exec: &mut dyn Backend,
         prompts: &[Vec<i32>],
         max_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        decode_with(
+        crate::session::decode_greedy(
             exec,
             &self.art_logits,
-            &self.cfg,
-            &self.theta,
-            &self.w0,
-            &self.stats,
+            &format!("{}#seed{}", self.art_logits, self.seed),
+            Arc::new(self.theta.clone()),
+            self.w0.clone(),
+            self.stats.clone(),
             prompts,
             max_new,
+            &crate::session::SessionOpts::from_env(),
         )
     }
 }
 
-/// Greedy decode helper shared by the trainer and the serving router.
+/// Greedy decode via one full `[B, T]` forward per token — the legacy
+/// pre-session loop, retained as the golden reference the parity suite
+/// (`tests/decode_parity.rs`) holds the session implementations to,
+/// and as the measured baseline in `benches/serving.rs`.
 #[allow(clippy::too_many_arguments)]
 pub fn decode_with(
     exec: &mut dyn Backend,
@@ -437,6 +451,13 @@ pub fn decode_with(
     use crate::data::vocab;
     let (bsz, t, vocab_n) = (cfg.batch, cfg.seq, cfg.vocab);
     let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    // §Perf: the frozen inputs are wrapped as shared tensors ONCE —
+    // the per-step `clone()` below bumps refcounts instead of
+    // re-copying theta, the whole backbone and the statics for every
+    // generated token (the old `to_vec()`-per-step allocation bug).
+    let theta_in = TensorIn::SharedF32(Arc::new(theta.to_vec()));
+    let w0_in = TensorIn::SharedF32(Arc::new(w0.to_vec()));
+    let stat_ins: Vec<TensorIn> = stats.iter().map(TensorIn::shared_from).collect();
     for group in (0..prompts.len()).collect::<Vec<_>>().chunks(bsz) {
         let mut toks = vec![vocab::PAD; bsz * t];
         let mut lens = vec![0usize; bsz];
@@ -451,12 +472,8 @@ pub fn decode_with(
             if done.iter().all(|&d| d) {
                 break;
             }
-            let mut inputs = vec![
-                TensorIn::F32(theta.to_vec()),
-                TensorIn::F32(w0.to_vec()),
-                TensorIn::I32(toks.clone()),
-            ];
-            inputs.extend(stats.iter().map(TensorIn::from));
+            let mut inputs = vec![theta_in.clone(), w0_in.clone(), TensorIn::I32(toks.clone())];
+            inputs.extend(stat_ins.iter().cloned());
             let out = exec.run(art_logits, &inputs)?;
             let logits = out[0].as_f32()?; // [B, T, V]
             for (row, &pi) in group.iter().enumerate() {

@@ -20,4 +20,5 @@ pub mod projection;
 pub mod rng;
 pub mod runtime;
 pub mod server;
+pub mod session;
 pub mod util;

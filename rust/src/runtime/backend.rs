@@ -12,8 +12,10 @@
 
 use super::artifact::{ArtifactMeta, DType};
 use super::tensor::{ExecStats, TensorIn, TensorOut};
+use crate::session::{DecodeSession, FallbackSession, SessionOpts};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 pub trait Backend: Send {
     /// Short backend identifier ("native" | "pjrt").
@@ -48,6 +50,23 @@ pub trait Backend: Send {
     /// Execute an artifact with positional inputs; returns the outputs
     /// in the artifact's declared order.
     fn run(&mut self, artifact: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>>;
+
+    /// Begin a stateful decode session over an `lm_logits`-kind
+    /// artifact (see `crate::session` for the lifecycle:
+    /// `begin_decode` → `admit`/`step` per token → `finish`). The
+    /// default implementation is the full-forward fallback — it drives
+    /// ordinary `run` calls and therefore works on ANY backend (PJRT
+    /// keeps working with zero extra code); backends with real
+    /// incremental state (native K/V caches) override it.
+    fn begin_decode(
+        &mut self,
+        artifact: &str,
+        w0: Arc<Vec<f32>>,
+        opts: &SessionOpts,
+    ) -> Result<Box<dyn DecodeSession>> {
+        let meta = self.meta(artifact)?.clone();
+        Ok(Box::new(FallbackSession::new(meta, w0, opts)?))
+    }
 
     /// Cumulative execution statistics.
     fn stats(&self) -> ExecStats;
@@ -85,8 +104,8 @@ pub fn check_inputs(meta: &ArtifactMeta, inputs: &[TensorIn]) -> Result<()> {
             );
         }
         match (&spec.dtype, t) {
-            (DType::F32, TensorIn::F32(_) | TensorIn::ScalarF32(_)) => {}
-            (DType::I32, TensorIn::I32(_) | TensorIn::ScalarI32(_)) => {}
+            (DType::F32, TensorIn::F32(_) | TensorIn::SharedF32(_) | TensorIn::ScalarF32(_)) => {}
+            (DType::I32, TensorIn::I32(_) | TensorIn::SharedI32(_) | TensorIn::ScalarI32(_)) => {}
             _ => bail!("artifact {} input {}: dtype mismatch", meta.name, spec.name),
         }
     }

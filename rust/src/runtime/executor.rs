@@ -85,6 +85,8 @@ impl Executor {
         Ok(match t {
             TensorIn::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
             TensorIn::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            TensorIn::SharedF32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+            TensorIn::SharedI32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
             TensorIn::ScalarF32(x) => xla::Literal::scalar(*x),
             TensorIn::ScalarI32(x) => xla::Literal::scalar(*x),
             TensorIn::Pinned => bail!("Pinned tensor has no literal form"),
@@ -126,8 +128,14 @@ impl Executor {
                 );
             }
             match (&spec.dtype, t) {
-                (DType::F32, TensorIn::F32(_) | TensorIn::ScalarF32(_)) => {}
-                (DType::I32, TensorIn::I32(_) | TensorIn::ScalarI32(_)) => {}
+                (
+                    DType::F32,
+                    TensorIn::F32(_) | TensorIn::SharedF32(_) | TensorIn::ScalarF32(_),
+                ) => {}
+                (
+                    DType::I32,
+                    TensorIn::I32(_) | TensorIn::SharedI32(_) | TensorIn::ScalarI32(_),
+                ) => {}
                 _ => bail!("artifact {name} input {}: dtype mismatch", spec.name),
             }
             pinned_slots.push(None);

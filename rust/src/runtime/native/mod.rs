@@ -26,20 +26,27 @@ use super::artifact::ArtifactMeta;
 use super::backend::{check_inputs, Backend};
 use super::spec;
 use super::tensor::{ExecStats, TensorIn, TensorOut};
-use crate::config::ModelCfg;
+use crate::config::{ModelCfg, RuntimeOpts};
 use crate::kernels;
 use crate::projection::op as projop;
 use crate::projection::reconstruct::{reconstruct_with_statics, ModuleDelta};
 use crate::projection::statics::{Static, StaticData};
+use crate::session::{DecodeSession, NativeDecodeSession, ReconCache, SessionOpts};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub struct NativeBackend {
     manifest: BTreeMap<String, ArtifactMeta>,
     pinned: HashMap<String, TensorIn>,
     stats: ExecStats,
+    /// Adapter-reconstruction cache for decode sessions — shared with
+    /// every `try_clone` of this backend, so the serving worker pool
+    /// reconstructs each adapter once per FLEET, not once per worker
+    /// (the same Arc pattern as the router's statics cache).
+    recon: Arc<ReconCache>,
 }
 
 impl NativeBackend {
@@ -48,7 +55,14 @@ impl NativeBackend {
             manifest: spec::native_manifest()?,
             pinned: HashMap::new(),
             stats: ExecStats::default(),
+            recon: Arc::new(ReconCache::new(RuntimeOpts::from_env().recon_cache)),
         })
+    }
+
+    /// The shared adapter-reconstruction cache (stats surface for the
+    /// server and tests).
+    pub fn recon_cache(&self) -> Arc<ReconCache> {
+        self.recon.clone()
     }
 }
 
@@ -65,7 +79,22 @@ impl Backend for NativeBackend {
             manifest: self.manifest.clone(),
             pinned: self.pinned.clone(),
             stats: ExecStats::default(),
+            recon: self.recon.clone(),
         }))
+    }
+
+    /// Native sessions run true incremental decoding: per-layer K/V
+    /// caches (`model::incr_forward`) + the shared reconstruction
+    /// cache — O(model) per token instead of the fallback's
+    /// O(seq · model).
+    fn begin_decode(
+        &mut self,
+        artifact: &str,
+        w0: Arc<Vec<f32>>,
+        opts: &SessionOpts,
+    ) -> Result<Box<dyn DecodeSession>> {
+        let meta = self.meta(artifact)?;
+        Ok(Box::new(NativeDecodeSession::new(meta, w0, self.recon.clone(), opts)?))
     }
 
     fn meta(&self, artifact: &str) -> Result<&ArtifactMeta> {
@@ -94,8 +123,8 @@ impl Backend for NativeBackend {
             t.numel()
         );
         match (&dtype, t) {
-            (DType::F32, TensorIn::F32(_) | TensorIn::ScalarF32(_)) => {}
-            (DType::I32, TensorIn::I32(_) | TensorIn::ScalarI32(_)) => {}
+            (DType::F32, TensorIn::F32(_) | TensorIn::SharedF32(_) | TensorIn::ScalarF32(_)) => {}
+            (DType::I32, TensorIn::I32(_) | TensorIn::SharedI32(_) | TensorIn::ScalarI32(_)) => {}
             _ => bail!("pin {artifact}/{input}: dtype mismatch"),
         }
         self.pinned.insert(format!("{artifact}/{input}"), t.clone());

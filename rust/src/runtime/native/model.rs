@@ -24,19 +24,24 @@ use crate::projection::reconstruct::ModuleDelta;
 use crate::runtime::spec;
 use anyhow::{ensure, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 // ------------------------------------------------------------------
 // frozen backbone layout
 
-/// Named views into the flat w0 vector (layout = spec::base_segments).
-pub struct BaseMap<'a> {
-    w0: &'a [f32],
-    offs: BTreeMap<String, (usize, usize)>,
+/// Backbone layout table (segment name -> (offset, len)) decoupled
+/// from any particular `w0` borrow: long-lived holders (the decode
+/// session) build it once and `bind` it to the weights each step,
+/// instead of re-deriving the per-segment name strings for every
+/// generated token.
+#[derive(Clone)]
+pub struct BaseLayout {
+    offs: Arc<BTreeMap<String, (usize, usize)>>,
     total: usize,
 }
 
-impl<'a> BaseMap<'a> {
-    pub fn new(cfg: &ModelCfg, w0: &'a [f32]) -> Result<BaseMap<'a>> {
+impl BaseLayout {
+    pub fn new(cfg: &ModelCfg) -> BaseLayout {
         let mut offs = BTreeMap::new();
         let mut off = 0usize;
         for s in spec::base_segments(cfg) {
@@ -44,12 +49,31 @@ impl<'a> BaseMap<'a> {
             offs.insert(s.name.clone(), (off, n));
             off += n;
         }
+        BaseLayout { offs: Arc::new(offs), total: off }
+    }
+
+    /// View `w0` through this layout (validating the length).
+    pub fn bind<'a>(&self, w0: &'a [f32]) -> Result<BaseMap<'a>> {
         ensure!(
-            w0.len() == off,
-            "w0 has {} params, backbone layout needs {off}",
-            w0.len()
+            w0.len() == self.total,
+            "w0 has {} params, backbone layout needs {}",
+            w0.len(),
+            self.total
         );
-        Ok(BaseMap { w0, offs, total: off })
+        Ok(BaseMap { w0, offs: self.offs.clone(), total: self.total })
+    }
+}
+
+/// Named views into the flat w0 vector (layout = spec::base_segments).
+pub struct BaseMap<'a> {
+    w0: &'a [f32],
+    offs: Arc<BTreeMap<String, (usize, usize)>>,
+    total: usize,
+}
+
+impl<'a> BaseMap<'a> {
+    pub fn new(cfg: &ModelCfg, w0: &'a [f32]) -> Result<BaseMap<'a>> {
+        BaseLayout::new(cfg).bind(w0)
     }
 
     pub fn seg(&self, name: &str) -> &'a [f32] {
@@ -387,6 +411,227 @@ pub fn forward(
 
     let (hidden, lnf) = layer_norm(&x, base.seg("lnf_g"), base.seg("lnf_b"), bt, h);
     Ok(ForwardCache { layers, lnf, hidden })
+}
+
+// ------------------------------------------------------------------
+// incremental decoding (the session subsystem's compute layer)
+
+/// Dense adapted q/v projections for every layer — `W0 + scale*DeltaW`
+/// materialized by the SAME `effective_weight` accumulation `forward`
+/// uses (hence bit-identical to what a full forward would build), but
+/// once per adapter instead of once per forward call. This is the
+/// value `session::ReconCache` holds: an adapter checkpoint is one
+/// tiny vector, its reconstruction is `2 * layers * h^2` floats.
+pub struct AdaptedWeights {
+    /// per layer: adapted q projection `[h, h]`
+    pub wq: Vec<Vec<f32>>,
+    /// per layer: adapted v projection `[h, h]`
+    pub wv: Vec<Vec<f32>>,
+}
+
+impl AdaptedWeights {
+    /// Resident bytes (reconstruction-cache footprint accounting).
+    pub fn byte_size(&self) -> usize {
+        let n: usize = self.wq.iter().chain(&self.wv).map(|w| w.len()).sum();
+        n * std::mem::size_of::<f32>()
+    }
+}
+
+/// Build the per-layer adapted weights from reconstructed deltas.
+pub fn adapted_weights(
+    cfg: &ModelCfg,
+    base: &BaseMap,
+    deltas: &[ModuleDelta],
+) -> Result<AdaptedWeights> {
+    ensure!(
+        deltas.len() == cfg.n_modules(),
+        "deltas: got {}, want {}",
+        deltas.len(),
+        cfg.n_modules()
+    );
+    let (h, r) = (cfg.hidden, cfg.rank);
+    let mut wq = Vec::with_capacity(cfg.layers);
+    let mut wv = Vec::with_capacity(cfg.layers);
+    for l in 0..cfg.layers {
+        wq.push(effective_weight(base.seg(&format!("wq{l}")), &deltas[2 * l], h, r, cfg.scale));
+        wv.push(effective_weight(base.seg(&format!("wv{l}")), &deltas[2 * l + 1], h, r, cfg.scale));
+    }
+    Ok(AdaptedWeights { wq, wv })
+}
+
+/// Per-sequence decode state: one K and one V buffer per layer, laid
+/// out `[seq, h]` row-major; positions `0..len` hold processed
+/// keys/values.
+pub struct KvCache {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// positions already processed
+    pub len: usize,
+    cap: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelCfg) -> KvCache {
+        let n = cfg.seq * cfg.hidden;
+        KvCache {
+            k: (0..cfg.layers).map(|_| vec![0f32; n]).collect(),
+            v: (0..cfg.layers).map(|_| vec![0f32; n]).collect(),
+            len: 0,
+            cap: cfg.seq,
+        }
+    }
+
+    /// Resident bytes (per-slot footprint accounting).
+    pub fn byte_size(&self) -> usize {
+        let n: usize = self.k.iter().chain(&self.v).map(|b| b.len()).sum();
+        n * std::mem::size_of::<f32>()
+    }
+}
+
+/// Incremental backbone forward for ONE sequence: process `toks` at
+/// absolute positions `kv.len .. kv.len + toks.len()`, append their
+/// keys/values to the cache, and return the final-layer-norm hidden
+/// row of the LAST new position (`[h]`). With an empty cache and the
+/// whole prompt in `toks` this is the prefill pass; with one token it
+/// is a single decode step — per-token cost O(model) instead of the
+/// full forward's O(seq * model).
+///
+/// Parity contract: causal attention makes position p depend only on
+/// tokens `0..=p`, and every op here is per-row (LN, GELU, GEMM rows
+/// with per-element k-ascending accumulation, the attention
+/// expressions copied from `attention` verbatim), so the returned row
+/// is bit-identical to the `[B, T]` `forward`'s row at the same
+/// position — on every kernel tier.
+pub fn incr_forward(
+    cfg: &ModelCfg,
+    base: &BaseMap,
+    w: &AdaptedWeights,
+    kv: &mut KvCache,
+    toks: &[i32],
+) -> Result<Vec<f32>> {
+    let (h, f, nh) = (cfg.hidden, cfg.ffn, cfg.heads);
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let kops = dispatch::ops();
+    let start = kv.len;
+    let n = toks.len();
+    ensure!(n > 0, "incr_forward: empty token slice");
+    ensure!(kv.k.len() == cfg.layers, "kv cache has {} layers, want {}", kv.k.len(), cfg.layers);
+    ensure!(
+        start + n <= kv.cap,
+        "kv cache overflow: {start} processed + {n} new > window {}",
+        kv.cap
+    );
+    ensure!(w.wq.len() == cfg.layers, "adapted weights have {} layers", w.wq.len());
+
+    // embeddings at the absolute positions
+    let tok_emb = base.seg("tok_emb");
+    let pos_emb = base.seg("pos_emb");
+    let mut x = vec![0f32; n * h];
+    for i in 0..n {
+        let tok = toks[i];
+        ensure!(
+            tok >= 0 && (tok as usize) < cfg.vocab,
+            "token id {tok} out of range for vocab {}",
+            cfg.vocab
+        );
+        let te = &tok_emb[(tok as usize) * h..(tok as usize + 1) * h];
+        let pe = &pos_emb[(start + i) * h..(start + i + 1) * h];
+        let xr = &mut x[i * h..(i + 1) * h];
+        for j in 0..h {
+            xr[j] = te[j] + pe[j];
+        }
+    }
+
+    for l in 0..cfg.layers {
+        let (x2, _) =
+            layer_norm(&x, base.seg(&format!("ln1_g{l}")), base.seg(&format!("ln1_b{l}")), n, h);
+        let mut q = vec![0f32; n * h];
+        gemm_nn(&x2, &w.wq[l], &mut q, n, h, h, false);
+        // new keys/values land directly in the cache rows
+        {
+            let mut knew = vec![0f32; n * h];
+            gemm_nn(&x2, base.seg(&format!("wk{l}")), &mut knew, n, h, h, false);
+            kv.k[l][start * h..(start + n) * h].copy_from_slice(&knew);
+            let mut vnew = vec![0f32; n * h];
+            gemm_nn(&x2, &w.wv[l], &mut vnew, n, h, h, false);
+            kv.v[l][start * h..(start + n) * h].copy_from_slice(&vnew);
+        }
+        let kbuf = &kv.k[l];
+        let vbuf = &kv.v[l];
+        // causal attention: query at absolute position start+i over
+        // cached keys 0..=start+i — the same expression order as
+        // `attention` (running max, exp pass, weighted accumulate)
+        let mut att_out = vec![0f32; n * h];
+        let mut sc = vec![0f32; kv.cap];
+        for head in 0..nh {
+            for i in 0..n {
+                let p = start + i;
+                let qo = i * h + head * hd;
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..=p {
+                    let ko = j * h + head * hd;
+                    let mut dot = 0f32;
+                    for dd in 0..hd {
+                        dot += q[qo + dd] * kbuf[ko + dd];
+                    }
+                    sc[j] = dot * scale;
+                    if sc[j] > mx {
+                        mx = sc[j];
+                    }
+                }
+                let mut denom = 0f32;
+                for j in 0..=p {
+                    sc[j] = (sc[j] - mx).exp();
+                    denom += sc[j];
+                }
+                let orow = &mut att_out[qo..qo + hd];
+                for j in 0..=p {
+                    let wj = sc[j] / denom;
+                    let vo = j * h + head * hd;
+                    for dd in 0..hd {
+                        orow[dd] += wj * vbuf[vo + dd];
+                    }
+                }
+            }
+        }
+        let mut x_mid = vec![0f32; n * h];
+        gemm_nn(&att_out, base.seg(&format!("wo{l}")), &mut x_mid, n, h, h, false);
+        for (xm, xi) in x_mid.iter_mut().zip(&x) {
+            *xm += xi;
+        }
+        let (x3, _) = layer_norm(
+            &x_mid,
+            base.seg(&format!("ln2_g{l}")),
+            base.seg(&format!("ln2_b{l}")),
+            n,
+            h,
+        );
+        let mut u = vec![0f32; n * f];
+        gemm_nn(&x3, base.seg(&format!("w1{l}")), &mut u, n, h, f, false);
+        let mut gelu_v = vec![0f32; n * f];
+        (kops.gelu_map)(&mut gelu_v, &u);
+        let mut x_next = vec![0f32; n * h];
+        gemm_nn(&gelu_v, base.seg(&format!("w2{l}")), &mut x_next, n, f, h, false);
+        for (xn, xm) in x_next.iter_mut().zip(&x_mid) {
+            *xn += xm;
+        }
+        x = x_next;
+    }
+    kv.len = start + n;
+
+    // final layer norm on the LAST row only (LN is per-row)
+    let last = &x[(n - 1) * h..n * h];
+    let (hidden, _) = layer_norm(last, base.seg("lnf_g"), base.seg("lnf_b"), 1, h);
+    Ok(hidden)
+}
+
+/// Next-token logits for one hidden row: `[vocab] = row @ lm_head` —
+/// the incremental replacement for the full `[B*T, vocab]` lm head.
+pub fn lm_logits_row(cfg: &ModelCfg, base: &BaseMap, hidden_row: &[f32]) -> Vec<f32> {
+    let mut logits = vec![0f32; cfg.vocab];
+    gemm_nn(hidden_row, base.seg("lm_head"), &mut logits, 1, cfg.hidden, cfg.vocab, false);
+    logits
 }
 
 // ------------------------------------------------------------------
@@ -1132,6 +1377,67 @@ mod tests {
         let mut v2 = vec![0f32];
         adamw(&mut p2, &[0.0], &mut m2, &mut v2, 1, 0.1, 0.5);
         assert!(p2[0] < 1.0 && p2[0] > 0.9, "{}", p2[0]);
+    }
+
+    /// Incremental (KV-cache) forward == batch forward at the same
+    /// positions: a prefill over a prefix followed by single-token
+    /// steps must reproduce the `[B, T]` forward's per-position hidden
+    /// rows — bit-exact on the scalar tier, tolerance + lm-argmax
+    /// agreement on whatever tier is active.
+    #[test]
+    fn incremental_forward_matches_full_forward() {
+        let cfg = tiny_cfg();
+        let w0 = init_w0(&cfg, 2);
+        let base = BaseMap::new(&cfg, &w0).unwrap();
+        let stats = gen_statics(&cfg, 2).unwrap();
+        // nonzero theta so the adapted-weight path is active
+        let theta: Vec<f32> = rng::normals(9, cfg.d).iter().map(|v| 0.1 * v).collect();
+        let deltas = reconstruct_with_statics(&cfg, &stats, &theta).unwrap();
+        let w = adapted_weights(&cfg, &base, &deltas).unwrap();
+        let tokens = tokens_for(&cfg, 4);
+        let fc = forward(&cfg, &base, &deltas, &tokens).unwrap();
+
+        for row in 0..cfg.batch {
+            let seq = &tokens[row * cfg.seq..(row + 1) * cfg.seq];
+            let mut kv = KvCache::new(&cfg);
+            assert!(kv.byte_size() > 0);
+            // prefill the first two positions, then step one at a time
+            let mut rows = vec![incr_forward(&cfg, &base, &w, &mut kv, &seq[..2]).unwrap()];
+            for p in 2..cfg.seq {
+                rows.push(incr_forward(&cfg, &base, &w, &mut kv, &seq[p..p + 1]).unwrap());
+            }
+            assert_eq!(kv.len, cfg.seq);
+            let full_logits = lm_head_forward(&cfg, &base, &fc.hidden);
+            for (step, pos) in (1..cfg.seq).enumerate() {
+                let o = (row * cfg.seq + pos) * cfg.hidden;
+                let want = &fc.hidden[o..o + cfg.hidden];
+                let got = &rows[step];
+                if crate::kernels::dispatch::path() == "scalar" {
+                    assert_eq!(got.as_slice(), want, "row {row} pos {pos}");
+                } else {
+                    for (g, wv) in got.iter().zip(want) {
+                        assert!(
+                            (g - wv).abs() <= 1e-4 * wv.abs().max(1.0),
+                            "row {row} pos {pos}: {g} vs {wv}"
+                        );
+                    }
+                }
+                // the decision that matters: identical next-token argmax
+                let fo = (row * cfg.seq + pos) * cfg.vocab;
+                let incr_logits = lm_logits_row(&cfg, &base, got);
+                assert_eq!(
+                    crate::metrics::argmax(&incr_logits),
+                    crate::metrics::argmax(&full_logits[fo..fo + cfg.vocab]),
+                    "row {row} pos {pos}"
+                );
+            }
+        }
+        // cache overflow and bad tokens are rejected
+        let mut kv = KvCache::new(&cfg);
+        let too_long = vec![1i32; cfg.seq + 1];
+        assert!(incr_forward(&cfg, &base, &w, &mut kv, &too_long).is_err());
+        assert!(incr_forward(&cfg, &base, &w, &mut kv, &[]).is_err());
+        assert!(incr_forward(&cfg, &base, &w, &mut kv, &[cfg.vocab as i32]).is_err());
     }
 
     #[test]

@@ -4,12 +4,20 @@
 
 use crate::projection::statics::{Static, StaticData};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Host-side input tensor (flat, row-major; shape from the artifact spec).
 #[derive(Debug, Clone)]
 pub enum TensorIn {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// Shared (refcounted) f32 tensor: hoists a frozen host vector —
+    /// theta, w0, f32 statics — out of per-step `run` calls. Cloning is
+    /// an `Arc` bump, not a buffer copy (the decode hot loop used to
+    /// re-clone theta and the whole backbone every generated token).
+    SharedF32(Arc<Vec<f32>>),
+    /// Shared i32 tensor (the integer statics, e.g. uni's `idx`).
+    SharedI32(Arc<Vec<i32>>),
     ScalarF32(f32),
     ScalarI32(i32),
     /// Placeholder for an input previously uploaded via `Backend::pin`.
@@ -21,6 +29,8 @@ impl TensorIn {
         match self {
             TensorIn::F32(v) => v.len(),
             TensorIn::I32(v) => v.len(),
+            TensorIn::SharedF32(v) => v.len(),
+            TensorIn::SharedI32(v) => v.len(),
             _ => 1,
         }
     }
@@ -29,6 +39,7 @@ impl TensorIn {
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             TensorIn::F32(v) => Ok(v),
+            TensorIn::SharedF32(v) => Ok(v),
             TensorIn::ScalarF32(x) => Ok(std::slice::from_ref(x)),
             _ => bail!("expected f32 input"),
         }
@@ -38,8 +49,20 @@ impl TensorIn {
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             TensorIn::I32(v) => Ok(v),
+            TensorIn::SharedI32(v) => Ok(v),
             TensorIn::ScalarI32(x) => Ok(std::slice::from_ref(x)),
             _ => bail!("expected i32 input"),
+        }
+    }
+
+    /// A shared (Arc-backed) copy of a frozen `Static`: the data is
+    /// copied ONCE here; every later `clone()` of the result is a
+    /// refcount bump. Decode paths build these per batch/admission
+    /// instead of deep-cloning statics every step.
+    pub fn shared_from(s: &Static) -> TensorIn {
+        match &s.data {
+            StaticData::F32(v) => TensorIn::SharedF32(Arc::new(v.clone())),
+            StaticData::I32(v) => TensorIn::SharedI32(Arc::new(v.clone())),
         }
     }
 
@@ -120,6 +143,27 @@ mod tests {
         assert_eq!(TensorIn::ScalarI32(3).scalar_i32().unwrap(), 3);
         assert!(TensorIn::I32(vec![1, 2]).as_f32().is_err());
         assert_eq!(TensorIn::I32(vec![1, 2]).as_i32().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn shared_tensors_view_like_owned_and_clone_by_refcount() {
+        let f = TensorIn::SharedF32(Arc::new(vec![1.0, 2.0, 3.0]));
+        assert_eq!(f.numel(), 3);
+        assert_eq!(f.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(f.as_i32().is_err());
+        let i = TensorIn::SharedI32(Arc::new(vec![4, 5]));
+        assert_eq!(i.numel(), 2);
+        assert_eq!(i.as_i32().unwrap(), &[4, 5]);
+        // clone shares the allocation (no deep copy)
+        if let (TensorIn::SharedF32(a), TensorIn::SharedF32(b)) = (&f, &f.clone()) {
+            assert!(Arc::ptr_eq(a, b));
+        } else {
+            panic!("clone changed variant");
+        }
+        // statics convert to the shared variants
+        use crate::projection::statics::{Static, StaticData};
+        let s = Static { name: "idx".into(), shape: vec![2], data: StaticData::I32(vec![7, 9]) };
+        assert_eq!(TensorIn::shared_from(&s).as_i32().unwrap(), &[7, 9]);
     }
 
     #[test]

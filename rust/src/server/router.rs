@@ -1,21 +1,27 @@
-//! Adapter-aware request router: forms batches of requests that share an
-//! adapter (so one decode pass serves the whole batch), hot-swapping the
-//! per-batch theta vector. The batching policy is greedy same-adapter
-//! coalescing up to the artifact batch size — the policy knob the
-//! serving bench sweeps.
+//! Adapter-aware request router with **continuous batching**: each
+//! worker owns a decode session (`Backend::begin_decode`) and admits
+//! queued requests into free decode slots at step boundaries, retiring
+//! finished sequences per step — no request waits for a whole greedy
+//! batch to drain, and slots can hold a heterogeneous mix of adapters
+//! (the native session decodes each slot with its own reconstructed
+//! weights from the shared reconstruction cache).
 //!
 //! The queue is bounded: past `capacity` pending requests, `submit`
 //! rejects immediately and `generate` surfaces a protocol-level
 //! "busy: ..." error instead of letting the backlog (and client
 //! latency) grow without limit. Any number of worker threads may drain
 //! the queue concurrently (`server::serve` runs one `worker_loop` per
-//! execution worker, each owning a backend clone).
+//! execution worker, each owning a backend clone and its own session).
+//!
+//! Serving-quality accounting lives in [`RouterStats`]: tokens/s,
+//! time-to-first-token, reconstruction-cache hit rate and decode-slot
+//! occupancy, all surfaced through the protocol `stats` op.
 
 use crate::adapters::Registry;
 use crate::config::ModelCfg;
-use crate::coordinator::trainer::decode_with;
 use crate::projection::statics::{gen_statics, Static};
 use crate::runtime::Backend;
+use crate::session::{DecodeSession, SeqRequest, SessionOpts};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -31,23 +37,86 @@ pub struct PendingReq {
     pub reply: mpsc::Sender<Result<Vec<i32>, String>>,
 }
 
+/// Serving-quality counters, aggregated across all workers.
 #[derive(Debug, Default, Clone)]
 pub struct RouterStats {
+    /// requests completed (replied to), success or error
     pub requests: u64,
-    pub batches: u64,
-    pub batched_requests: u64,
     /// requests rejected at submit time because the queue was full
     pub rejected: u64,
+    /// decode step boundaries executed
+    pub steps: u64,
+    /// sum of occupied slots over steps (the occupancy integral)
+    pub slot_steps: u64,
+    /// tokens emitted across all sequences
+    pub generated_tokens: u64,
+    /// cumulative time inside `DecodeSession::step`, summed across
+    /// workers (per-worker decode effort; NOT wall time)
+    pub decode_secs: f64,
+    /// wall-clock span of decode activity (first step start .. last
+    /// step end, across all workers) — the denominator of
+    /// [`RouterStats::tokens_per_sec`], so concurrent workers add
+    /// throughput instead of dividing it away
+    first_step: Option<Instant>,
+    last_step: Option<Instant>,
+    /// enqueue → first emitted token, summed over `ttft_count` requests
+    pub ttft_secs: f64,
+    pub ttft_count: u64,
+    /// adapter-reconstruction cache hits/misses (native sessions)
+    pub recon_hits: u64,
+    pub recon_misses: u64,
     pub total_latency_secs: f64,
     pub total_queue_secs: f64,
 }
 
 impl RouterStats {
-    pub fn mean_batch_size(&self) -> f64 {
-        if self.batches == 0 {
+    /// Mean decode slots occupied per step — how full the continuous
+    /// batch runs.
+    pub fn mean_occupied_slots(&self) -> f64 {
+        if self.steps == 0 {
             0.0
         } else {
-            self.batched_requests as f64 / self.batches as f64
+            self.slot_steps as f64 / self.steps as f64
+        }
+    }
+
+    /// Record one decode step for throughput accounting.
+    pub fn note_decode(&mut self, started: Instant, secs: f64) {
+        self.decode_secs += secs;
+        let end = started + std::time::Duration::from_secs_f64(secs.max(0.0));
+        if self.first_step.map_or(true, |f| started < f) {
+            self.first_step = Some(started);
+        }
+        if self.last_step.map_or(true, |l| end > l) {
+            self.last_step = Some(end);
+        }
+    }
+
+    /// Generated tokens per second of wall-clock decode activity
+    /// (first step start to last step end, across all workers).
+    pub fn tokens_per_sec(&self) -> f64 {
+        match (self.first_step, self.last_step) {
+            (Some(a), Some(b)) if b > a => self.generated_tokens as f64 / (b - a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Mean time-to-first-token, milliseconds.
+    pub fn mean_ttft_ms(&self) -> f64 {
+        if self.ttft_count == 0 {
+            0.0
+        } else {
+            1000.0 * self.ttft_secs / self.ttft_count as f64
+        }
+    }
+
+    /// Reconstruction-cache hit rate in [0, 1] (0 when unused).
+    pub fn recon_hit_rate(&self) -> f64 {
+        let total = self.recon_hits + self.recon_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.recon_hits as f64 / total as f64
         }
     }
 
@@ -72,14 +141,20 @@ struct Shared {
 pub const DEFAULT_QUEUE_DEPTH: usize = 256;
 
 /// The router owns the queue; each `worker_loop` owns one execution
-/// backend. The statics cache is shared across all workers (statics
-/// are per-(method, seed): generating and holding them once per
-/// adapter, not once per adapter per worker, keeps the multi-adapter
-/// residency footprint independent of the pool width).
+/// backend plus one decode session. The statics cache is shared across
+/// all workers (statics are per-(method, seed): generating and holding
+/// them once per adapter, not once per adapter per worker, keeps the
+/// multi-adapter residency footprint independent of the pool width) —
+/// as is, on the native backend, the adapter-reconstruction cache
+/// inside the cloned backends.
 pub struct Router {
     shared: Arc<Shared>,
     pub stats: Arc<Mutex<RouterStats>>,
-    statics: Arc<Mutex<HashMap<String, Arc<Vec<Static>>>>>,
+    /// statics keyed by (adapter name, seed): a re-registered adapter
+    /// with a new seed generates fresh statics instead of silently
+    /// reusing the old seed's (the same staleness class the
+    /// reconstruction cache's theta fingerprint guards against)
+    statics: Arc<Mutex<HashMap<(String, u64), Arc<Vec<Static>>>>>,
 }
 
 impl Clone for Router {
@@ -90,6 +165,13 @@ impl Clone for Router {
             statics: self.statics.clone(),
         }
     }
+}
+
+/// Per-slot bookkeeping a worker keeps alongside its session.
+struct SlotBook {
+    req: PendingReq,
+    tokens: Vec<i32>,
+    got_first: bool,
 }
 
 impl Router {
@@ -163,25 +245,22 @@ impl Router {
         self.shared.cv.notify_all();
     }
 
-    /// Pop the next same-adapter batch (blocks; None on stop).
-    fn next_batch(&self, max_batch: usize) -> Option<Vec<PendingReq>> {
+    /// Non-blocking pop — admission at a step boundary while the
+    /// session is busy.
+    fn try_pop(&self) -> Option<PendingReq> {
+        self.shared.queue.lock().unwrap().pop_front()
+    }
+
+    /// Blocking pop for an idle worker: waits until a request arrives,
+    /// or returns None once the router is stopped AND drained.
+    fn pop_blocking(&self) -> Option<PendingReq> {
         let mut q = self.shared.queue.lock().unwrap();
         loop {
-            if *self.shared.stopped.lock().unwrap() && q.is_empty() {
-                return None;
+            if let Some(r) = q.pop_front() {
+                return Some(r);
             }
-            if let Some(first) = q.front() {
-                let adapter = first.adapter.clone();
-                let mut batch = vec![q.pop_front().unwrap()];
-                let mut i = 0;
-                while i < q.len() && batch.len() < max_batch {
-                    if q[i].adapter == adapter {
-                        batch.push(q.remove(i).unwrap());
-                    } else {
-                        i += 1;
-                    }
-                }
-                return Some(batch);
+            if *self.shared.stopped.lock().unwrap() {
+                return None;
             }
             q = self.shared.cv.wait(q).unwrap();
         }
@@ -198,54 +277,171 @@ impl Router {
         cfg: &ModelCfg,
         seed: u64,
     ) -> Result<Arc<Vec<Static>>, String> {
-        if let Some(s) = self.statics.lock().unwrap().get(name) {
+        let key = (name.to_string(), seed);
+        if let Some(s) = self.statics.lock().unwrap().get(&key) {
             return Ok(s.clone());
         }
         let fresh = Arc::new(gen_statics(cfg, seed).map_err(|e| e.to_string())?);
         let mut cache = self.statics.lock().unwrap();
-        Ok(cache.entry(name.to_string()).or_insert(fresh).clone())
+        Ok(cache.entry(key).or_insert(fresh).clone())
     }
 
-    /// Worker: runs until stop(). Owns one execution backend; shares
-    /// the backbone weights and statics cache with the other workers.
+    /// Terminal drain: when a worker cannot decode at all (no session
+    /// at startup, or recovery after a poisoned step also fails), it
+    /// keeps answering the queue with errors until stop() — exiting
+    /// silently would leave queued clients blocked on replies forever.
+    fn drain_with_errors(&self, msg: &str) {
+        while let Some(req) = self.pop_blocking() {
+            let mut st = self.stats.lock().unwrap();
+            st.requests += 1;
+            st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+            let _ = req.reply.send(Err(msg.to_string()));
+        }
+    }
+
+    /// Resolve one queued request against the registry and admit it
+    /// into a session slot. Failures (unknown adapter, empty prompt,
+    /// reconstruction error) reply immediately — they never occupy a
+    /// slot or poison the session.
+    fn admit_req(
+        &self,
+        sess: &mut dyn DecodeSession,
+        books: &mut HashMap<usize, SlotBook>,
+        registry: &Registry,
+        cfg: &ModelCfg,
+        req: PendingReq,
+    ) {
+        let queue_wait = req.enqueued.elapsed().as_secs_f64();
+        let outcome = (|| -> Result<usize, String> {
+            let ckpt = registry
+                .get(&req.adapter)
+                .ok_or_else(|| format!("unknown adapter {:?}", req.adapter))?;
+            let statics = self.statics_for(&req.adapter, cfg, ckpt.seed)?;
+            sess.admit(SeqRequest {
+                adapter: req.adapter.clone(),
+                theta: Arc::new(ckpt.theta),
+                statics,
+                prompt: req.prompt.clone(),
+                max_new: req.max_new,
+            })
+            .map_err(|e| e.to_string())
+        })();
+        let mut st = self.stats.lock().unwrap();
+        st.total_queue_secs += queue_wait;
+        match outcome {
+            Ok(slot) => {
+                books.insert(slot, SlotBook { req, tokens: Vec::new(), got_first: false });
+            }
+            Err(e) => {
+                st.requests += 1;
+                st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+                let _ = req.reply.send(Err(e));
+            }
+        }
+    }
+
+    /// Worker: runs until stop() with the queue drained and no active
+    /// sequences. Owns one execution backend and one decode session;
+    /// shares the backbone weights, the statics cache and (native) the
+    /// reconstruction cache with the other workers.
     pub fn worker_loop(
         &self,
         exec: &mut dyn Backend,
         registry: &Registry,
         art_logits: &str,
         cfg: &ModelCfg,
-        w0: &[f32],
+        w0: &Arc<Vec<f32>>,
     ) {
-        while let Some(batch) = self.next_batch(cfg.batch) {
-            let adapter_name = batch[0].adapter.clone();
-            let queue_wait: f64 = batch
-                .iter()
-                .map(|r| r.enqueued.elapsed().as_secs_f64())
-                .sum();
-            let result = (|| -> Result<Vec<Vec<i32>>, String> {
-                let ckpt = registry
-                    .get(&adapter_name)
-                    .ok_or_else(|| format!("unknown adapter {adapter_name:?}"))?;
-                let stats = self.statics_for(&adapter_name, cfg, ckpt.seed)?;
-                let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-                let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
-                decode_with(exec, art_logits, cfg, &ckpt.theta, w0, &stats, &prompts, max_new)
-                    .map_err(|e| e.to_string())
-            })();
+        let opts = SessionOpts::from_env();
+        let mut sess = match exec.begin_decode(art_logits, w0.clone(), &opts) {
+            Ok(s) => s,
+            Err(e) => {
+                self.drain_with_errors(&format!("decode session unavailable: {e}"));
+                return;
+            }
+        };
+        let mut books: HashMap<usize, SlotBook> = HashMap::new();
+        let mut last = sess.stats();
+        loop {
+            // admission at the step boundary: fill free slots from the
+            // queue, blocking only when the session is idle
+            if sess.active() == 0 {
+                match self.pop_blocking() {
+                    None => break, // stopped and drained
+                    Some(req) => self.admit_req(sess.as_mut(), &mut books, registry, cfg, req),
+                }
+            }
+            while sess.free_slots() > 0 {
+                match self.try_pop() {
+                    Some(req) => self.admit_req(sess.as_mut(), &mut books, registry, cfg, req),
+                    None => break,
+                }
+            }
+            if sess.active() == 0 {
+                continue; // every admission this round failed
+            }
+            let occupied = sess.active() as u64;
+            let t0 = Instant::now();
+            let events = match sess.step(exec) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    // fail every in-flight sequence, then restart with
+                    // a fresh session — one poisoned step must not
+                    // take the worker down
+                    let msg = format!("decode step failed: {e}");
+                    {
+                        let mut st = self.stats.lock().unwrap();
+                        for (_, book) in books.drain() {
+                            st.requests += 1;
+                            st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
+                            let _ = book.req.reply.send(Err(msg.clone()));
+                        }
+                    }
+                    sess.finish();
+                    match exec.begin_decode(art_logits, w0.clone(), &opts) {
+                        Ok(s) => {
+                            sess = s;
+                            last = sess.stats();
+                            continue;
+                        }
+                        Err(e) => {
+                            // recovery failed too: keep serving errors
+                            // rather than abandoning queued clients
+                            self.drain_with_errors(&format!("decode session unavailable: {e}"));
+                            return;
+                        }
+                    }
+                }
+            };
+            let step_secs = t0.elapsed().as_secs_f64();
+            let snow = sess.stats();
             let mut st = self.stats.lock().unwrap();
-            st.batches += 1;
-            st.batched_requests += batch.len() as u64;
-            st.requests += batch.len() as u64;
-            st.total_queue_secs += queue_wait;
-            for (k, req) in batch.into_iter().enumerate() {
-                st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
-                let reply = match &result {
-                    Ok(gens) => Ok(gens[k].clone()),
-                    Err(e) => Err(e.clone()),
-                };
-                let _ = req.reply.send(reply);
+            st.steps += 1;
+            st.slot_steps += occupied;
+            st.note_decode(t0, step_secs);
+            st.recon_hits += snow.recon_hits - last.recon_hits;
+            st.recon_misses += snow.recon_misses - last.recon_misses;
+            last = snow;
+            for ev in events {
+                let Some(book) = books.get_mut(&ev.slot) else { continue };
+                if let Some(tok) = ev.token {
+                    if !book.got_first {
+                        book.got_first = true;
+                        st.ttft_secs += book.req.enqueued.elapsed().as_secs_f64();
+                        st.ttft_count += 1;
+                    }
+                    book.tokens.push(tok);
+                    st.generated_tokens += 1;
+                }
+                if ev.done {
+                    let book = books.remove(&ev.slot).expect("book exists for finished slot");
+                    st.requests += 1;
+                    st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
+                    let _ = book.req.reply.send(Ok(book.tokens));
+                }
             }
         }
+        sess.finish();
     }
 }
 
@@ -270,30 +466,17 @@ mod tests {
     }
 
     #[test]
-    fn batches_coalesce_same_adapter() {
+    fn queue_pops_fifo_across_adapters() {
         let r = Router::new();
         let (tx, _rx) = mpsc::channel();
-        for a in ["x", "y", "x", "x", "y"] {
+        for a in ["x", "y", "x", "z"] {
             r.submit(req(a, &tx)).unwrap();
         }
-        let b1 = r.next_batch(8).unwrap();
-        assert_eq!(b1.len(), 3);
-        assert!(b1.iter().all(|q| q.adapter == "x"));
-        let b2 = r.next_batch(8).unwrap();
-        assert_eq!(b2.len(), 2);
-        assert!(b2.iter().all(|q| q.adapter == "y"));
-    }
-
-    #[test]
-    fn batch_size_cap() {
-        let r = Router::new();
-        let (tx, _rx) = mpsc::channel();
-        for _ in 0..10 {
-            r.submit(req("x", &tx)).unwrap();
-        }
-        assert_eq!(r.next_batch(4).unwrap().len(), 4);
-        assert_eq!(r.next_batch(4).unwrap().len(), 4);
-        assert_eq!(r.next_batch(4).unwrap().len(), 2);
+        // continuous batching admits strictly FIFO — no adapter
+        // coalescing reordering (slots hold heterogeneous adapters)
+        let order: Vec<String> = (0..4).map(|_| r.try_pop().unwrap().adapter).collect();
+        assert_eq!(order, ["x", "y", "x", "z"]);
+        assert!(r.try_pop().is_none());
     }
 
     /// Satellite: saturate the bounded queue — submits past capacity
@@ -313,17 +496,74 @@ mod tests {
         assert!(err.starts_with("busy"), "{err}");
         assert_eq!(r.stats.lock().unwrap().rejected, 2);
         // draining the queue frees capacity again
-        assert_eq!(r.next_batch(8).unwrap().len(), 2);
+        assert!(r.try_pop().is_some());
+        assert!(r.try_pop().is_some());
         assert!(r.submit(req("x", &tx)).is_ok());
     }
 
     #[test]
-    fn stop_unblocks() {
+    fn stop_unblocks_idle_workers() {
         let r = Router::new();
         let r2 = r.clone();
-        let h = std::thread::spawn(move || r2.next_batch(4));
+        let h = std::thread::spawn(move || r2.pop_blocking());
         std::thread::sleep(std::time::Duration::from_millis(30));
         r.stop();
         assert!(h.join().unwrap().is_none());
+    }
+
+    /// A re-registered adapter (same name, new seed) must get fresh
+    /// statics — the cache validates the seed, not just the name.
+    #[test]
+    fn statics_cache_keys_on_seed() {
+        let r = Router::new();
+        let cfg = ModelCfg::test_base("uni");
+        let s1 = r.statics_for("a", &cfg, 1).unwrap();
+        let s1b = r.statics_for("a", &cfg, 1).unwrap();
+        assert!(Arc::ptr_eq(&s1, &s1b), "same (name, seed) must share");
+        let s2 = r.statics_for("a", &cfg, 2).unwrap();
+        assert!(!Arc::ptr_eq(&s1, &s2), "new seed must regenerate");
+    }
+
+    #[test]
+    fn pop_blocking_drains_before_stopping() {
+        let r = Router::new();
+        let (tx, _rx) = mpsc::channel();
+        r.submit(req("x", &tx)).unwrap();
+        r.stop();
+        // a queued request still comes out after stop; then None
+        assert!(r.pop_blocking().is_some());
+        assert!(r.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn stats_derived_metrics() {
+        let mut st = RouterStats::default();
+        // zero denominators are all defined
+        assert_eq!(st.mean_occupied_slots(), 0.0);
+        assert_eq!(st.tokens_per_sec(), 0.0);
+        assert_eq!(st.mean_ttft_ms(), 0.0);
+        assert_eq!(st.recon_hit_rate(), 0.0);
+        assert_eq!(st.mean_latency_ms(), 0.0);
+        st.steps = 4;
+        st.slot_steps = 10;
+        st.generated_tokens = 50;
+        st.ttft_count = 2;
+        st.ttft_secs = 0.5;
+        st.recon_hits = 3;
+        st.recon_misses = 1;
+        st.requests = 5;
+        st.total_latency_secs = 1.0;
+        assert!((st.mean_occupied_slots() - 2.5).abs() < 1e-12);
+        assert!((st.mean_ttft_ms() - 250.0).abs() < 1e-12);
+        assert!((st.recon_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((st.mean_latency_ms() - 200.0).abs() < 1e-12);
+        // throughput uses the WALL span of decode activity, so two
+        // workers decoding concurrently (overlapping steps) add
+        // throughput instead of halving it
+        let t0 = Instant::now();
+        st.note_decode(t0, 2.0); // worker A: [0, 2]
+        st.note_decode(t0, 2.0); // worker B: [0, 2], concurrent
+        assert!((st.decode_secs - 4.0).abs() < 1e-9, "summed effort");
+        assert!((st.tokens_per_sec() - 25.0).abs() < 1e-6, "50 tok over a 2s wall span");
     }
 }

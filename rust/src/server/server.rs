@@ -1,7 +1,8 @@
 //! TCP front end: JSON-lines protocol over std::net, one reader thread
 //! per connection, N execution workers behind the router (each owning
-//! a backend clone over shared `Arc` backbone weights), so serve
-//! throughput scales with cores.
+//! a backend clone over shared `Arc` backbone weights and one decode
+//! session doing continuous batching — see `server::router` and
+//! `crate::session`), so serve throughput scales with cores.
 
 use super::protocol::{Request, Response};
 use super::router::{DEFAULT_QUEUE_DEPTH, Router};
@@ -174,10 +175,14 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, worke
                 let st = router.stats.lock().unwrap().clone();
                 Response::Stats(obj(vec![
                     ("requests", n(st.requests as f64)),
-                    ("batches", n(st.batches as f64)),
                     ("rejected", n(st.rejected as f64)),
                     ("workers", n(workers as f64)),
-                    ("mean_batch_size", n(st.mean_batch_size())),
+                    ("steps", n(st.steps as f64)),
+                    ("generated_tokens", n(st.generated_tokens as f64)),
+                    ("tokens_per_sec", n(st.tokens_per_sec())),
+                    ("mean_ttft_ms", n(st.mean_ttft_ms())),
+                    ("recon_hit_rate", n(st.recon_hit_rate())),
+                    ("mean_occupied_slots", n(st.mean_occupied_slots())),
                     ("mean_latency_ms", n(st.mean_latency_ms())),
                 ]))
             }

@@ -1,0 +1,203 @@
+//! LRU adapter-reconstruction cache, shared by every worker's decode
+//! sessions (the same `Arc` pattern as the router's statics cache).
+//!
+//! An adapter checkpoint is one tiny vector; its reconstruction — the
+//! dense per-layer adapted q/v weights `W0 + scale*ΔW` — is
+//! `2 * layers * h^2` floats. The legacy decode loop rebuilt that for
+//! every generated token; a cache entry rebuilds it once per adapter
+//! and every session on every worker shares the result.
+//!
+//! Entries are validated, not trusted: each remembers WHICH backbone
+//! (`Weak` identity of the `Arc`'d w0) and WHICH theta (bit
+//! fingerprint) it was reconstructed from, so a re-registered adapter
+//! under the same name, or a session over a different backbone, misses
+//! and rebuilds instead of serving stale weights.
+
+use crate::config::ModelCfg;
+use crate::projection::reconstruct::reconstruct_with_statics;
+use crate::projection::statics::Static;
+use crate::runtime::native::model::{adapted_weights, AdaptedWeights, BaseMap};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+struct Entry {
+    eff: Arc<AdaptedWeights>,
+    /// identity of the backbone the reconstruction was merged against
+    w0: Weak<Vec<f32>>,
+    theta_fp: u64,
+    /// last-touch tick (LRU ordering)
+    tick: u64,
+}
+
+/// Capacity-bounded, least-recently-used map from adapter name to its
+/// reconstructed [`AdaptedWeights`]. All methods take `&self`; one
+/// instance is shared across workers behind an `Arc`.
+pub struct ReconCache {
+    cap: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inner: Mutex<HashMap<String, Entry>>,
+}
+
+impl ReconCache {
+    /// `cap` = resident adapters (clamped to >= 1); see
+    /// `config::parse_recon_cache` for the `UNI_LORA_RECON_CACHE` knob.
+    pub fn new(cap: usize) -> ReconCache {
+        ReconCache {
+            cap: cap.max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Get the reconstruction for `name`, rebuilding on miss (unknown
+    /// name, different theta, different backbone). Returns
+    /// `(weights, hit)`. Reconstruction runs OUTSIDE the lock so a
+    /// first-touch adapter never stalls workers serving cached ones;
+    /// racing workers may rebuild the same entry once each — the
+    /// results are deterministic duplicates and the last insert wins.
+    pub fn get_or_build(
+        &self,
+        name: &str,
+        cfg: &ModelCfg,
+        w0: &Arc<Vec<f32>>,
+        theta: &[f32],
+        statics: &[Static],
+    ) -> Result<(Arc<AdaptedWeights>, bool)> {
+        let fp = super::theta_fingerprint(theta);
+        {
+            let mut m = self.inner.lock().unwrap();
+            if let Some(e) = m.get_mut(name) {
+                let same_w0 = e.w0.upgrade().map(|a| Arc::ptr_eq(&a, w0)).unwrap_or(false);
+                if same_w0 && e.theta_fp == fp {
+                    e.tick = self.tick.fetch_add(1, Ordering::Relaxed);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((e.eff.clone(), true));
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let base = BaseMap::new(cfg, w0.as_slice())?;
+        let deltas = reconstruct_with_statics(cfg, statics, theta)?;
+        let eff = Arc::new(adapted_weights(cfg, &base, &deltas)?);
+        let mut m = self.inner.lock().unwrap();
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed);
+        m.insert(
+            name.to_string(),
+            Entry { eff: eff.clone(), w0: Arc::downgrade(w0), theta_fp: fp, tick },
+        );
+        while m.len() > self.cap {
+            let oldest = m.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    m.remove(&k);
+                }
+                None => break,
+            }
+        }
+        Ok((eff, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::statics::{d_effective, gen_statics, init_theta};
+    use crate::rng;
+
+    fn small_cfg() -> ModelCfg {
+        let mut c = ModelCfg::test_base("uni");
+        c.hidden = 16;
+        c.layers = 2;
+        c.rank = 2;
+        c.d = 32;
+        c
+    }
+
+    fn w0_for(cfg: &ModelCfg, seed: u64) -> Arc<Vec<f32>> {
+        let mut w0 = Vec::new();
+        for (i, s) in crate::runtime::spec::base_segments(cfg).iter().enumerate() {
+            let sd = rng::child_seed(seed, rng::STREAM_BASE_INIT + 1000 * i as u64);
+            w0.extend(crate::projection::statics::init_array(&s.init, s.numel(), sd).unwrap());
+        }
+        Arc::new(w0)
+    }
+
+    #[test]
+    fn hit_on_same_identity_miss_on_changed_theta_or_backbone() {
+        let cfg = small_cfg();
+        let cache = ReconCache::new(8);
+        let w0 = w0_for(&cfg, 1);
+        let stats = gen_statics(&cfg, 1).unwrap();
+        let theta: Vec<f32> = rng::normals(3, d_effective(&cfg)).iter().map(|v| 0.1 * v).collect();
+
+        let (a, hit) = cache.get_or_build("x", &cfg, &w0, &theta, &stats).unwrap();
+        assert!(!hit);
+        let (b, hit) = cache.get_or_build("x", &cfg, &w0, &theta, &stats).unwrap();
+        assert!(hit, "same name/theta/backbone must hit");
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached reconstruction");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+
+        // re-registered adapter (same name, new theta) must rebuild
+        let theta2: Vec<f32> = theta.iter().map(|v| v + 1.0).collect();
+        let (_, hit) = cache.get_or_build("x", &cfg, &w0, &theta2, &stats).unwrap();
+        assert!(!hit, "changed theta must miss");
+
+        // a different backbone identity must rebuild too
+        let w0b = Arc::new(w0.as_ref().clone());
+        let (_, hit) = cache.get_or_build("x", &cfg, &w0b, &theta2, &stats).unwrap();
+        assert!(!hit, "changed backbone must miss");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_past_capacity() {
+        let cfg = small_cfg();
+        let cache = ReconCache::new(2);
+        let w0 = w0_for(&cfg, 1);
+        let stats = gen_statics(&cfg, 1).unwrap();
+        let theta = init_theta(&cfg, 2).unwrap();
+        cache.get_or_build("a", &cfg, &w0, &theta, &stats).unwrap();
+        cache.get_or_build("b", &cfg, &w0, &theta, &stats).unwrap();
+        // touch "a" so "b" is the LRU entry
+        assert!(cache.get_or_build("a", &cfg, &w0, &theta, &stats).unwrap().1);
+        cache.get_or_build("c", &cfg, &w0, &theta, &stats).unwrap();
+        assert_eq!(cache.len(), 2);
+        // "a" survived, "b" was evicted
+        assert!(cache.get_or_build("a", &cfg, &w0, &theta, &stats).unwrap().1);
+        assert!(!cache.get_or_build("b", &cfg, &w0, &theta, &stats).unwrap().1);
+    }
+
+    #[test]
+    fn fingerprint_separates_values_and_lengths() {
+        use crate::session::theta_fingerprint as fp;
+        assert_ne!(fp(&[1.0, 2.0]), fp(&[1.0, 2.5]));
+        assert_ne!(fp(&[0.0]), fp(&[0.0, 0.0]));
+        assert_eq!(fp(&[1.5; 7]), fp(&[1.5; 7]));
+    }
+}

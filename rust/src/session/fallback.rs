@@ -1,0 +1,185 @@
+//! Full-forward fallback session: drives ordinary `Backend::run`
+//! `lm_logits` executions, so ANY backend — PJRT included — supports
+//! the session lifecycle with zero backend code. Per-token cost stays
+//! O(seq · model) (this is exactly the legacy decode loop, slot-ified),
+//! but the frozen inputs are hoisted: theta, w0 and the statics are
+//! wrapped as shared tensors once per admission, so each step clones
+//! refcounts instead of re-copying the backbone.
+//!
+//! Slots sharing an adapter are coalesced into one `[B, T]` forward
+//! per step (the same same-adapter batching the legacy router did);
+//! heterogeneous slots cost one forward per adapter group.
+
+use super::{DecodeSession, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats};
+use crate::data::vocab;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::{Backend, TensorIn};
+use anyhow::{anyhow, ensure, Result};
+use std::sync::Arc;
+
+struct Slot {
+    /// adapter name — half of the grouping key
+    key: String,
+    /// theta content fingerprint — the other half: slots batch into
+    /// one forward only when name AND weights agree, so a
+    /// re-registered adapter mid-flight can never decode another
+    /// request's sequence with its theta
+    theta_fp: u64,
+    theta: TensorIn,
+    statics: Vec<TensorIn>,
+    /// `[seq]` context window, PAD-filled past `state.placed`
+    toks: Vec<i32>,
+    state: SeqState,
+    fresh: bool,
+}
+
+pub struct FallbackSession {
+    meta: ArtifactMeta,
+    w0: TensorIn,
+    slots: Vec<Option<Slot>>,
+    active: usize,
+    stats: SessionStats,
+}
+
+impl FallbackSession {
+    pub fn new(
+        meta: ArtifactMeta,
+        w0: Arc<Vec<f32>>,
+        opts: &SessionOpts,
+    ) -> Result<FallbackSession> {
+        ensure!(
+            meta.kind == "lm_logits",
+            "decode sessions need an lm_logits artifact; {} has kind {:?}",
+            meta.name,
+            meta.kind
+        );
+        ensure!(
+            w0.len() == meta.base_params,
+            "w0 size mismatch: got {}, artifact wants {}",
+            w0.len(),
+            meta.base_params
+        );
+        let n = opts.resolve_slots(meta.cfg.batch);
+        Ok(FallbackSession {
+            w0: TensorIn::SharedF32(w0),
+            slots: (0..n).map(|_| None).collect(),
+            active: 0,
+            stats: SessionStats::default(),
+            meta,
+        })
+    }
+}
+
+impl DecodeSession for FallbackSession {
+    fn admit(&mut self, req: SeqRequest) -> Result<usize> {
+        ensure!(!req.prompt.is_empty(), "empty prompt");
+        let si = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free decode slot"))?;
+        let t = self.meta.cfg.seq;
+        let mut toks = vec![vocab::PAD; t];
+        let l = req.prompt.len().min(t);
+        toks[..l].copy_from_slice(&req.prompt[..l]);
+        let statics: Vec<TensorIn> = req.statics.iter().map(TensorIn::shared_from).collect();
+        self.slots[si] = Some(Slot {
+            key: req.adapter,
+            theta_fp: super::theta_fingerprint(&req.theta),
+            theta: TensorIn::SharedF32(req.theta),
+            statics,
+            toks,
+            state: SeqState::new(l, req.max_new, t),
+            fresh: true,
+        });
+        self.active += 1;
+        self.stats.admitted += 1;
+        Ok(si)
+    }
+
+    fn step(&mut self, exec: &mut dyn Backend) -> Result<Vec<SeqEvent>> {
+        let (b, t, vocab_n) = (self.meta.cfg.batch, self.meta.cfg.seq, self.meta.cfg.vocab);
+        let art = self.meta.name.clone();
+        let mut events = Vec::new();
+
+        // retire stillborn fresh slots first: they never run a forward
+        for si in 0..self.slots.len() {
+            if let Some(s) = &self.slots[si] {
+                if s.fresh && s.state.stillborn() {
+                    events.push(SeqEvent { slot: si, token: None, done: true });
+                    self.slots[si] = None;
+                    self.active -= 1;
+                }
+            }
+        }
+
+        // group the active slots by (adapter, theta fingerprint),
+        // preserving slot order
+        let mut groups: Vec<((String, u64), Vec<usize>)> = Vec::new();
+        for si in 0..self.slots.len() {
+            if let Some(s) = &self.slots[si] {
+                match groups.iter_mut().find(|(k, _)| k.0 == s.key && k.1 == s.theta_fp) {
+                    Some((_, v)) => v.push(si),
+                    None => groups.push(((s.key.clone(), s.theta_fp), vec![si])),
+                }
+            }
+        }
+
+        for (_, members) in &groups {
+            for chunk in members.chunks(b) {
+                let mut toks = vec![vocab::PAD; b * t];
+                for (row, &si) in chunk.iter().enumerate() {
+                    let s = self.slots[si].as_ref().expect("grouped slot is live");
+                    toks[row * t..(row + 1) * t].copy_from_slice(&s.toks);
+                }
+                let inputs = {
+                    let first = self.slots[chunk[0]].as_ref().expect("grouped slot is live");
+                    let mut v = vec![first.theta.clone(), self.w0.clone(), TensorIn::I32(toks)];
+                    v.extend(first.statics.iter().cloned());
+                    v
+                };
+                let out = exec.run(&art, &inputs)?;
+                let logits = out[0].as_f32()?; // [B, T, V]
+                for (row, &si) in chunk.iter().enumerate() {
+                    let s = self.slots[si].as_mut().expect("grouped slot is live");
+                    s.fresh = false;
+                    let pos = s.state.placed - 1;
+                    let rowl = &logits[(row * t + pos) * vocab_n..(row * t + pos + 1) * vocab_n];
+                    let (token, done) = s.state.emit(rowl);
+                    if let Some(tok) = token {
+                        // emit() advanced `placed`; the token lands at
+                        // the previous position
+                        s.toks[s.state.placed - 1] = tok;
+                        self.stats.generated += 1;
+                    }
+                    events.push(SeqEvent { slot: si, token, done });
+                    if done {
+                        self.slots[si] = None;
+                        self.active -= 1;
+                    }
+                }
+            }
+        }
+        self.stats.steps += 1;
+        Ok(events)
+    }
+
+    fn finish(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.active = 0;
+    }
+
+    fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn active(&self) -> usize {
+        self.active
+    }
+
+    fn stats(&self) -> SessionStats {
+        self.stats
+    }
+}

@@ -1,0 +1,312 @@
+//! Decode-session subsystem: the stateful serving lifecycle between
+//! the runtime and the server.
+//!
+//! The legacy serving hot path re-ran a full `[B, T]` forward — and
+//! re-reconstructed θ → ΔW — for EVERY generated token, making
+//! per-token cost O(seq · model). A `DecodeSession` owns what that
+//! loop recomputed: per-sequence K/V caches (one prefill over the
+//! prompt, then single-position incremental steps) and, through the
+//! shared [`ReconCache`], the per-adapter reconstructed weights
+//! (adapters are one tiny vector; reconstructions are not — build them
+//! once per adapter, not once per token).
+//!
+//! Lifecycle: [`crate::runtime::Backend::begin_decode`] → [`DecodeSession::admit`]
+//! (occupy a free slot) / [`DecodeSession::step`] (advance EVERY active
+//! sequence by one iteration, retiring finished ones) →
+//! [`DecodeSession::finish`]. Slots progress independently — each has
+//! its own adapter, prompt and budget — which is what lets the server
+//! router run *continuous batching*: new requests are admitted into
+//! free slots at step boundaries instead of waiting for a whole greedy
+//! batch to drain.
+//!
+//! Two implementations:
+//! - [`NativeDecodeSession`]: per-layer K/V caches over
+//!   `runtime::native::model::incr_forward` — O(model) per token.
+//! - [`FallbackSession`]: drives ordinary `Backend::run` full forwards,
+//!   so ANY backend (PJRT included) keeps working with zero extra
+//!   code; it is the `Backend::begin_decode` default.
+//!
+//! Emission semantics are shared through the crate-internal
+//! `SeqState`, which replays the legacy `decode_with` loop row-for-row
+//! (same EOS / context-window / budget rules in the same order) —
+//! incremental and full-forward decode produce identical greedy token
+//! streams by construction, and the parity suite in
+//! `tests/decode_parity.rs` holds both implementations to that.
+
+pub mod cache;
+pub mod fallback;
+pub mod native;
+
+pub use cache::ReconCache;
+pub use fallback::FallbackSession;
+pub use native::NativeDecodeSession;
+
+use crate::config;
+use crate::projection::statics::Static;
+use crate::runtime::Backend;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Session scheduling knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionOpts {
+    /// Decode slots (concurrent sequences) per session; 0 = auto
+    /// (`UNI_LORA_DECODE_SLOTS`, else the artifact batch size).
+    pub slots: usize,
+}
+
+impl SessionOpts {
+    /// Knobs from the environment (`UNI_LORA_DECODE_SLOTS`).
+    pub fn from_env() -> SessionOpts {
+        SessionOpts { slots: config::RuntimeOpts::from_env().decode_slots }
+    }
+
+    /// An explicit slot count (tests, benches).
+    pub fn with_slots(slots: usize) -> SessionOpts {
+        SessionOpts { slots }
+    }
+
+    /// Resolve the slot count against the artifact's batch size.
+    pub fn resolve_slots(&self, artifact_batch: usize) -> usize {
+        if self.slots > 0 {
+            self.slots
+        } else {
+            artifact_batch.max(1)
+        }
+    }
+}
+
+/// One sequence to decode: the adapter identity plus everything the
+/// session needs to reconstruct and run it.
+#[derive(Debug, Clone)]
+pub struct SeqRequest {
+    /// Reconstruction-cache key (adapter name). The cache additionally
+    /// fingerprints theta, so a re-registered adapter under the same
+    /// name can never serve a stale reconstruction.
+    pub adapter: String,
+    pub theta: Arc<Vec<f32>>,
+    pub statics: Arc<Vec<Static>>,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// What one sequence did during a [`DecodeSession::step`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqEvent {
+    pub slot: usize,
+    /// Token emitted this step (`None`: the step ended the sequence
+    /// without emitting — EOS, exhausted context window, zero budget).
+    pub token: Option<i32>,
+    /// The sequence finished; its slot is free again.
+    pub done: bool,
+}
+
+/// Cumulative session counters (the router folds these into its
+/// serving-quality stats).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SessionStats {
+    pub admitted: u64,
+    pub steps: u64,
+    pub generated: u64,
+    pub recon_hits: u64,
+    pub recon_misses: u64,
+}
+
+/// A stateful decoding session over one `lm_logits`-kind artifact.
+pub trait DecodeSession: Send {
+    /// Admit a sequence into a free slot; errors when none is free
+    /// (callers check [`DecodeSession::free_slots`] first) or the
+    /// request is malformed (empty prompt, unknown reconstruction).
+    fn admit(&mut self, req: SeqRequest) -> Result<usize>;
+
+    /// Advance every active sequence by one greedy iteration (newly
+    /// admitted slots run their prefill first). Finished sequences are
+    /// retired and their slots freed before this returns.
+    fn step(&mut self, exec: &mut dyn Backend) -> Result<Vec<SeqEvent>>;
+
+    /// Release all slots (in-flight sequences are abandoned).
+    fn finish(&mut self);
+
+    fn slots(&self) -> usize;
+
+    fn active(&self) -> usize;
+
+    fn free_slots(&self) -> usize {
+        self.slots() - self.active()
+    }
+
+    fn stats(&self) -> SessionStats;
+}
+
+/// FNV-1a over the raw f32 bits of a theta vector — cheap (one pass
+/// over a d-sized vector, once per admission, not per token). The
+/// reconstruction cache uses it to reject stale entries, and the
+/// fallback session uses it to group slots: two slots batch into one
+/// forward only when name AND weights agree, so a re-registered
+/// adapter can never decode with another request's theta.
+pub(crate) fn theta_fingerprint(theta: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &x in theta {
+        let b = x.to_bits();
+        for shift in [0, 8, 16, 24] {
+            h ^= ((b >> shift) & 0xff) as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h ^ (theta.len() as u64)
+}
+
+/// Per-slot greedy emission state shared by every session
+/// implementation — one instance replays exactly one row of the legacy
+/// full-forward decode loop (`coordinator::trainer::decode_with`):
+/// same EOS, context-window and budget rules, applied in the same
+/// order, so every implementation emits identical streams by
+/// construction.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SeqState {
+    /// tokens placed in the context window (prompt + emitted)
+    pub placed: usize,
+    /// remaining decode iterations (the max_new budget)
+    pub budget: usize,
+    /// context-window length (cfg.seq)
+    pub limit: usize,
+}
+
+impl SeqState {
+    pub fn new(prompt_len: usize, max_new: usize, limit: usize) -> SeqState {
+        SeqState { placed: prompt_len.min(limit), budget: max_new, limit }
+    }
+
+    /// A sequence that can never emit: the prompt already fills the
+    /// context window, or the budget is zero — the legacy loop's
+    /// `lens >= t` / `max_new == 0` rows, which generate nothing.
+    pub fn stillborn(&self) -> bool {
+        self.placed >= self.limit || self.budget == 0
+    }
+
+    /// Apply one greedy emission given this iteration's logits row
+    /// (the row at position `placed - 1`). Returns `(token, done)`.
+    pub fn emit(&mut self, logits: &[f32]) -> (Option<i32>, bool) {
+        let next = crate::metrics::argmax(logits) as i32;
+        self.budget -= 1;
+        if next == crate::data::vocab::EOS {
+            return (None, true);
+        }
+        self.placed += 1;
+        let done = self.placed >= self.limit || self.budget == 0;
+        (Some(next), done)
+    }
+}
+
+/// Drive a complete greedy decode of `prompts` through a session the
+/// backend picks — the session-subsystem replacement for the legacy
+/// `decode_with` helper. All prompts share one adapter (trainer-style
+/// decoding); the serving router admits heterogeneous adapters itself.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_greedy(
+    exec: &mut dyn Backend,
+    art_logits: &str,
+    adapter: &str,
+    theta: Arc<Vec<f32>>,
+    w0: Arc<Vec<f32>>,
+    statics: Arc<Vec<Static>>,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    opts: &SessionOpts,
+) -> Result<Vec<Vec<i32>>> {
+    let mut sess = exec.begin_decode(art_logits, w0, opts)?;
+    let out = drive_greedy(sess.as_mut(), exec, adapter, theta, statics, prompts, max_new)?;
+    sess.finish();
+    Ok(out)
+}
+
+/// Drive an already-begun session to completion over `prompts` (shared
+/// adapter). Split out so benches/tests can drive a specific session
+/// implementation.
+pub fn drive_greedy(
+    sess: &mut dyn DecodeSession,
+    exec: &mut dyn Backend,
+    adapter: &str,
+    theta: Arc<Vec<f32>>,
+    statics: Arc<Vec<Static>>,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    let mut owner: Vec<Option<usize>> = vec![None; sess.slots()];
+    let mut next = 0usize;
+    while next < prompts.len() || sess.active() > 0 {
+        while sess.free_slots() > 0 && next < prompts.len() {
+            let slot = sess.admit(SeqRequest {
+                adapter: adapter.to_string(),
+                theta: theta.clone(),
+                statics: statics.clone(),
+                prompt: prompts[next].clone(),
+                max_new,
+            })?;
+            anyhow::ensure!(owner[slot].is_none(), "session reused an occupied slot {slot}");
+            owner[slot] = Some(next);
+            next += 1;
+        }
+        if sess.active() == 0 {
+            break;
+        }
+        for ev in sess.step(exec)? {
+            let pi = owner[ev.slot].ok_or_else(|| anyhow::anyhow!("event for unowned slot"))?;
+            if let Some(t) = ev.token {
+                out[pi].push(t);
+            }
+            if ev.done {
+                owner[ev.slot] = None;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab;
+
+    #[test]
+    fn seq_state_replays_legacy_row_semantics() {
+        // normal emission: argmax token placed, budget spent
+        let mut s = SeqState::new(3, 2, 8);
+        assert!(!s.stillborn());
+        let logits = vec![0.0, 9.0, 0.0, 0.0, 1.0];
+        let (tok, done) = s.emit(&logits);
+        assert_eq!(tok, Some(1));
+        assert!(!done);
+        assert_eq!((s.placed, s.budget), (4, 1));
+        // budget exhausts: emits, then done
+        let (tok, done) = s.emit(&logits);
+        assert_eq!(tok, Some(1));
+        assert!(done);
+
+        // EOS ends without emitting
+        let mut s = SeqState::new(3, 4, 8);
+        let mut eos_row = vec![0.0f32; 8];
+        eos_row[vocab::EOS as usize] = 5.0;
+        assert_eq!(s.emit(&eos_row), (None, true));
+
+        // context window fills: the token placed at the last position
+        // is emitted, then the row is done (legacy `lens >= t`)
+        let mut s = SeqState::new(7, 10, 8);
+        let (tok, done) = s.emit(&logits);
+        assert_eq!(tok, Some(1));
+        assert!(done);
+
+        // stillborn rows: prompt >= window, or zero budget
+        assert!(SeqState::new(8, 4, 8).stillborn());
+        assert!(SeqState::new(12, 4, 8).stillborn());
+        assert!(SeqState::new(3, 0, 8).stillborn());
+    }
+
+    #[test]
+    fn session_opts_resolution() {
+        assert_eq!(SessionOpts::with_slots(5).resolve_slots(16), 5);
+        assert_eq!(SessionOpts::with_slots(0).resolve_slots(16), 16);
+        assert_eq!(SessionOpts::with_slots(0).resolve_slots(0), 1);
+    }
+}

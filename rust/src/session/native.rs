@@ -1,0 +1,158 @@
+//! The native decode session: per-layer K/V caches over
+//! `runtime::native::model::incr_forward` — one prefill pass per
+//! admitted prompt, then O(model) single-position steps — with
+//! per-adapter weights from the shared [`ReconCache`].
+//!
+//! Every slot is independent (own adapter, own K/V cache, own budget),
+//! so a session can decode a *heterogeneous* mix of adapters
+//! concurrently: per-step compute is row-sized either way, and this is
+//! exactly the multi-tenant story the paper's one-vector-per-task
+//! storage enables.
+
+use super::{DecodeSession, ReconCache, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats};
+use crate::config::ModelCfg;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::native::model::{self, AdaptedWeights, KvCache};
+use crate::runtime::Backend;
+use anyhow::{anyhow, ensure, Result};
+use std::sync::Arc;
+
+struct Slot {
+    eff: Arc<AdaptedWeights>,
+    kv: KvCache,
+    prompt: Vec<i32>,
+    state: SeqState,
+    /// last emitted token, fed at the next step
+    pending: Option<i32>,
+    prefilled: bool,
+}
+
+pub struct NativeDecodeSession {
+    cfg: ModelCfg,
+    w0: Arc<Vec<f32>>,
+    /// backbone layout built once per session; rebound to w0 each step
+    layout: model::BaseLayout,
+    cache: Arc<ReconCache>,
+    slots: Vec<Option<Slot>>,
+    active: usize,
+    stats: SessionStats,
+}
+
+impl NativeDecodeSession {
+    pub fn new(
+        meta: &ArtifactMeta,
+        w0: Arc<Vec<f32>>,
+        cache: Arc<ReconCache>,
+        opts: &SessionOpts,
+    ) -> Result<NativeDecodeSession> {
+        ensure!(
+            meta.kind == "lm_logits",
+            "decode sessions need an lm_logits artifact; {} has kind {:?}",
+            meta.name,
+            meta.kind
+        );
+        ensure!(
+            w0.len() == meta.base_params,
+            "w0 size mismatch: got {}, artifact wants {}",
+            w0.len(),
+            meta.base_params
+        );
+        let n = opts.resolve_slots(meta.cfg.batch);
+        Ok(NativeDecodeSession {
+            layout: model::BaseLayout::new(&meta.cfg),
+            cfg: meta.cfg.clone(),
+            w0,
+            cache,
+            slots: (0..n).map(|_| None).collect(),
+            active: 0,
+            stats: SessionStats::default(),
+        })
+    }
+}
+
+impl DecodeSession for NativeDecodeSession {
+    fn admit(&mut self, req: SeqRequest) -> Result<usize> {
+        ensure!(!req.prompt.is_empty(), "empty prompt");
+        let si = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free decode slot"))?;
+        let (eff, hit) =
+            self.cache.get_or_build(&req.adapter, &self.cfg, &self.w0, &req.theta, &req.statics)?;
+        if hit {
+            self.stats.recon_hits += 1;
+        } else {
+            self.stats.recon_misses += 1;
+        }
+        let state = SeqState::new(req.prompt.len(), req.max_new, self.cfg.seq);
+        let mut prompt = req.prompt;
+        prompt.truncate(self.cfg.seq);
+        self.slots[si] = Some(Slot {
+            eff,
+            kv: KvCache::new(&self.cfg),
+            prompt,
+            state,
+            pending: None,
+            prefilled: false,
+        });
+        self.active += 1;
+        self.stats.admitted += 1;
+        Ok(si)
+    }
+
+    fn step(&mut self, _exec: &mut dyn Backend) -> Result<Vec<SeqEvent>> {
+        let base = self.layout.bind(self.w0.as_slice())?;
+        let mut events = Vec::new();
+        for si in 0..self.slots.len() {
+            let Some(slot) = self.slots[si].as_mut() else { continue };
+            let hidden = if !slot.prefilled {
+                slot.prefilled = true;
+                if slot.state.stillborn() {
+                    // the legacy loop's no-op rows: prompt fills the
+                    // window, or zero budget — retire without a forward
+                    events.push(SeqEvent { slot: si, token: None, done: true });
+                    self.slots[si] = None;
+                    self.active -= 1;
+                    continue;
+                }
+                model::incr_forward(&self.cfg, &base, &slot.eff, &mut slot.kv, &slot.prompt)?
+            } else {
+                let tok = slot.pending.ok_or_else(|| anyhow!("active slot without pending"))?;
+                model::incr_forward(&self.cfg, &base, &slot.eff, &mut slot.kv, &[tok])?
+            };
+            let logits = model::lm_logits_row(&self.cfg, &base, &hidden);
+            let (token, done) = slot.state.emit(&logits);
+            slot.pending = token;
+            if token.is_some() {
+                self.stats.generated += 1;
+            }
+            events.push(SeqEvent { slot: si, token, done });
+            if done {
+                self.slots[si] = None;
+                self.active -= 1;
+            }
+        }
+        self.stats.steps += 1;
+        Ok(events)
+    }
+
+    fn finish(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.active = 0;
+    }
+
+    fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn active(&self) -> usize {
+        self.active
+    }
+
+    fn stats(&self) -> SessionStats {
+        self.stats
+    }
+}

@@ -236,9 +236,22 @@ fn native_server_roundtrip_and_batching() {
     assert!(client.generate("nope", vec![1], 2).is_err());
     let toks3 = client.generate("a0", vec![1, 21, 7], 2).unwrap();
     assert!(toks3.len() <= 2);
-    // stats reflect the traffic
+    // stats reflect the traffic, including the serving-quality metrics
+    // (tokens/s, TTFT, reconstruction-cache hit rate, slot occupancy)
     let stats = client.stats().unwrap();
     assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 3.0);
+    assert!(stats.get("steps").unwrap().as_f64().unwrap() >= 1.0);
+    let generated = stats.get("generated_tokens").unwrap().as_f64().unwrap();
+    if generated > 0.0 {
+        assert!(stats.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stats.get("mean_ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+    assert!(stats.get("mean_occupied_slots").unwrap().as_f64().unwrap() > 0.0);
+    // a1 was decoded twice with the same theta: the second admission
+    // must have hit the reconstruction cache
+    let hit_rate = stats.get("recon_hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&hit_rate), "{hit_rate}");
+    assert!(hit_rate > 0.0, "repeat adapter must hit the reconstruction cache");
     handle.shutdown();
 }
 

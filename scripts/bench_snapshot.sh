@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Record a per-commit perf snapshot: run the benches with JSON
+# reporting on, then archive BENCH_*.json under bench_history/ keyed by
+# the current commit — the ROADMAP "perf trajectory" loop. Regressions
+# become visible by diffing consecutive snapshots.
+#
+# Usage: scripts/bench_snapshot.sh [bench ...]
+#   (default benches: train_step projection serving)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+benches=("$@")
+if [ ${#benches[@]} -eq 0 ]; then
+  benches=(train_step projection serving)
+fi
+
+for b in "${benches[@]}"; do
+  UNI_LORA_BENCH_JSON=1 cargo bench --bench "$b"
+done
+
+commit=$(git rev-parse --short=12 HEAD 2>/dev/null || echo "nogit")
+stamp=$(date -u +%Y%m%dT%H%M%SZ)
+dest="bench_history/${stamp}_${commit}"
+mkdir -p "$dest"
+
+shopt -s nullglob
+archived=0
+for f in BENCH_*.json; do
+  cp "$f" "$dest/$f"
+  archived=$((archived + 1))
+done
+
+if [ "$archived" -eq 0 ]; then
+  echo "bench_snapshot: no BENCH_*.json produced — nothing archived" >&2
+  exit 1
+fi
+echo "bench_snapshot: archived $archived report(s) -> $dest"
