@@ -1,13 +1,15 @@
 //! Serving bench: (a) session decode vs the legacy full-forward decode
 //! — tokens/s and time-to-first-token, the PR-5 acceptance numbers —
-//! and (b) router throughput under single- and mixed-adapter workloads
-//! across worker-pool widths. Kernel threads are pinned to 1 so the
+//! (b) the adapter-count sweep (1/16/256 distinct adapters, factored
+//! vs dense execution pinned through `SessionOpts`) and (c) router
+//! throughput under single- and mixed-adapter workloads across
+//! worker-pool widths. Kernel threads are pinned to 1 so the
 //! comparisons isolate the decode algorithm and worker-level
 //! parallelism from intra-op parallelism.
 //!
-//! With `UNI_LORA_BENCH_JSON=1` the decode comparison lands in
-//! `BENCH_serving.json` at the repo root (`scripts/bench_snapshot.sh`
-//! archives it per commit).
+//! With `UNI_LORA_BENCH_JSON=1` the decode comparison and the adapter
+//! sweep land in `BENCH_serving.json` at the repo root
+//! (`scripts/bench_snapshot.sh` archives it per commit).
 //!
 //! Runs on the default backend (native unless UNI_LORA_BACKEND=pjrt).
 //! Run: cargo bench --bench serving
@@ -140,6 +142,78 @@ fn decode_comparison() -> anyhow::Result<Vec<Json>> {
     Ok(entries)
 }
 
+/// Tentpole sweep: tokens/s and residency as the number of distinct
+/// resident adapters grows (1 / 16 / 256), with the execution mode
+/// pinned factored (threshold = usize::MAX) vs dense (threshold = 1)
+/// through `SessionOpts`. 256 round-robin requests over a 16-slot
+/// session either way, so the workload is identical and the entries
+/// isolate the execution-mode cost: dense pays reconstruction +
+/// ReconCache residency per distinct adapter, factored pays a rank-r
+/// application per token.
+fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
+    let mut exec = uni_lora::runtime::default_backend()?;
+    let meta = exec.meta(ART)?.clone();
+    let cfg = meta.cfg.clone();
+    let w0 = Arc::new(init_base(&meta, 42));
+    let statics = Arc::new(gen_statics(&cfg, 7)?);
+    let prompt = bench_prompt();
+    let (n_reqs, max_new) = (256usize, 4usize);
+
+    let mut entries = Vec::new();
+    for n_adapters in [1usize, 16, 256] {
+        let thetas: Vec<Arc<Vec<f32>>> =
+            (0..n_adapters).map(|i| Arc::new(init_theta(&cfg, i as u64).unwrap())).collect();
+        for (mode, threshold) in [("factored", usize::MAX), ("dense", 1usize)] {
+            let opts = SessionOpts::with_slots(16).with_dense_threshold(threshold);
+            let mut sess = exec.begin_decode(ART, w0.clone(), &opts)?;
+            let t0 = Instant::now();
+            let mut admitted = 0usize;
+            let mut generated = 0u64;
+            while admitted < n_reqs || sess.active() > 0 {
+                while sess.free_slots() > 0 && admitted < n_reqs {
+                    let a = admitted % n_adapters;
+                    sess.admit(SeqRequest {
+                        adapter: format!("a{a}"),
+                        theta: thetas[a].clone(),
+                        statics: statics.clone(),
+                        prompt: prompt.clone(),
+                        max_new,
+                    })
+                    .expect("admit");
+                    admitted += 1;
+                }
+                if sess.active() == 0 {
+                    break;
+                }
+                for ev in sess.step(exec.as_mut()).expect("step") {
+                    if ev.token.is_some() {
+                        generated += 1;
+                    }
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let st = sess.stats();
+            sess.finish();
+            let tps = generated as f64 / wall.max(1e-9);
+            println!(
+                "sweep {mode:<9} n_adapters={n_adapters:<4} {n_reqs} reqs x \
+                 max_new={max_new}: {tps:.1} tok/s | admits f/d \
+                 {}/{} | recon evictions {}",
+                st.factored_admits, st.dense_admits, st.recon_evictions
+            );
+            entries.push(obj(vec![
+                ("name", s(&format!("adapters/{mode}/n{n_adapters}"))),
+                ("tokens_per_sec", n(tps)),
+                ("wall_secs", n(wall)),
+                ("factored_admits", n(st.factored_admits as f64)),
+                ("dense_admits", n(st.dense_admits as f64)),
+                ("recon_evictions", n(st.recon_evictions as f64)),
+            ]));
+        }
+    }
+    Ok(entries)
+}
+
 fn run_with_workers(workers: usize) -> anyhow::Result<()> {
     let mut exec = uni_lora::runtime::default_backend()?;
     let meta = exec.meta(ART)?.clone();
@@ -222,6 +296,11 @@ fn main() -> anyhow::Result<()> {
     let entries = decode_comparison()?;
     if let Some(path) = bench::write_named_json_report("serving", "decode", entries)? {
         println!("recorded decode trajectory -> {}", path.display());
+    }
+
+    let sweep_entries = adapter_sweep()?;
+    if let Some(path) = bench::write_named_json_report("serving", "adapter_sweep", sweep_entries)? {
+        println!("recorded adapter sweep -> {}", path.display());
     }
 
     let auto = RuntimeOpts::from_env().threads;

@@ -131,7 +131,7 @@ impl AdapterCheckpoint {
             .map(|(d, w)| {
                 let dw = d.to_dense(cfg.hidden, cfg.rank);
                 w.iter()
-                    .zip(&dw)
+                    .zip(dw.iter())
                     .map(|(a, b)| a + cfg.scale * b)
                     .collect()
             })
@@ -205,8 +205,9 @@ mod tests {
         let w0: Vec<Vec<f32>> =
             (0..cfg.n_modules()).map(|_| vec![1.0; cfg.hidden * cfg.hidden]).collect();
         let merged = c.merge_into(&cfg, &w0).unwrap();
-        let dw = c.expand(&cfg).unwrap()[0].to_dense(cfg.hidden, cfg.rank);
-        for (m, d) in merged[0].iter().zip(&dw) {
+        let deltas = c.expand(&cfg).unwrap();
+        let dw = deltas[0].to_dense(cfg.hidden, cfg.rank);
+        for (m, d) in merged[0].iter().zip(dw.iter()) {
             assert!((m - (1.0 + cfg.scale * d)).abs() < 1e-6);
         }
     }

@@ -1,7 +1,12 @@
 //! In-memory + on-disk adapter registry for the multi-adapter server.
 //! Adapters are tiny (seed + one vector), so the registry keeps every
 //! loaded adapter resident — the deployment story the paper's storage
-//! complexity enables.
+//! complexity enables. Under factored serving the theta vectors ARE
+//! the unit of residency: a registered adapter costs its `d` floats
+//! here plus transient rank-r factors per active slot, and only the
+//! few adapters the session cost model densifies ever occupy
+//! `2 * layers * h^2`-float reconstructions (in the `ReconCache`,
+//! not here).
 
 use super::checkpoint::AdapterCheckpoint;
 use anyhow::{anyhow, Context, Result};
@@ -77,6 +82,15 @@ impl Registry {
     pub fn resident_bytes(&self) -> usize {
         self.inner.read().unwrap().values().map(|c| c.byte_size()).sum()
     }
+
+    /// Bytes held by the theta vectors alone — the factored-serving
+    /// residency unit (the multi-tenancy acceptance test budgets
+    /// `theta_bytes + ReconCache::resident_bytes` against a handful of
+    /// dense reconstructions).
+    pub fn theta_bytes(&self) -> usize {
+        let m = self.inner.read().unwrap();
+        m.values().map(|c| c.theta.len() * std::mem::size_of::<f32>()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +129,9 @@ mod tests {
         assert_eq!(r.len(), 2);
         assert_eq!(r.get("seven").unwrap().seed, 7);
         assert!(r.resident_bytes() > 0);
+        // two 16-float thetas; theta_bytes counts exactly those
+        assert_eq!(r.theta_bytes(), 2 * 16 * std::mem::size_of::<f32>());
+        assert!(r.theta_bytes() <= r.resident_bytes());
         std::fs::remove_dir_all(dir).ok();
     }
 

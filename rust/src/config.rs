@@ -224,6 +224,14 @@ pub struct RuntimeOpts {
     /// Adapter-reconstruction cache capacity, in resident adapters
     /// (`UNI_LORA_RECON_CACHE`; default [`DEFAULT_RECON_CACHE`]).
     pub recon_cache: usize,
+    /// Dense-densification crossover for the session cost model
+    /// (`UNI_LORA_DENSE_THRESHOLD`; default
+    /// [`DEFAULT_DENSE_THRESHOLD`]). An adapter occupying at least
+    /// this many of a session's slots is densified (one reconstruction
+    /// amortized over its slots); below it, slots run the factored
+    /// rank-r path. `1` = always densify (the legacy behavior); a huge
+    /// value = always factored.
+    pub dense_threshold: usize,
 }
 
 /// Default adapter-reconstruction cache capacity. Reconstructions are
@@ -231,6 +239,15 @@ pub struct RuntimeOpts {
 /// so 64 residents ≈ 32 MiB — small next to the backbone, large
 /// enough that a steady multi-tenant mix rarely misses.
 pub const DEFAULT_RECON_CACHE: usize = 64;
+
+/// Default dense-densification crossover. Factored execution adds two
+/// rank-r GEMVs per adapted module per step (~`4*h*r` FLOPs on top of
+/// the base `h^2` GEMV — a few percent at r=4, h=128), while a dense
+/// reconstruction costs `2 * layers * h^2` resident floats amortized
+/// over however many slots share the adapter. Around 4 same-adapter
+/// slots the residency is paid back quickly enough to be worth it;
+/// below that, factored keeps per-adapter state at rank-r factors.
+pub const DEFAULT_DENSE_THRESHOLD: usize = 4;
 
 impl RuntimeOpts {
     pub fn from_env() -> RuntimeOpts {
@@ -241,6 +258,9 @@ impl RuntimeOpts {
                 std::env::var("UNI_LORA_DECODE_SLOTS").ok().as_deref(),
             ),
             recon_cache: parse_recon_cache(std::env::var("UNI_LORA_RECON_CACHE").ok().as_deref()),
+            dense_threshold: parse_dense_threshold(
+                std::env::var("UNI_LORA_DENSE_THRESHOLD").ok().as_deref(),
+            ),
         }
     }
 }
@@ -290,6 +310,18 @@ pub fn parse_recon_cache(raw: Option<&str>) -> usize {
     raw.and_then(|s| s.trim().parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(DEFAULT_RECON_CACHE)
+}
+
+/// `UNI_LORA_DENSE_THRESHOLD` parsing: a positive integer wins;
+/// anything else (unset, garbage, 0 — a crossover of zero is
+/// meaningless) falls back to [`DEFAULT_DENSE_THRESHOLD`].
+/// Scheduling-only: both execution modes are token-stream identical,
+/// so the knob trades per-step FLOPs against resident bytes without
+/// changing what any sequence generates.
+pub fn parse_dense_threshold(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_DENSE_THRESHOLD)
 }
 
 #[cfg(test)]
@@ -368,9 +400,15 @@ mod tests {
         assert_eq!(parse_recon_cache(Some("0")), DEFAULT_RECON_CACHE);
         assert_eq!(parse_recon_cache(Some("big")), DEFAULT_RECON_CACHE);
         assert_eq!(parse_recon_cache(None), DEFAULT_RECON_CACHE);
+        assert_eq!(parse_dense_threshold(Some("2")), 2);
+        assert_eq!(parse_dense_threshold(Some(" 9 ")), 9);
+        assert_eq!(parse_dense_threshold(Some("0")), DEFAULT_DENSE_THRESHOLD);
+        assert_eq!(parse_dense_threshold(Some("never")), DEFAULT_DENSE_THRESHOLD);
+        assert_eq!(parse_dense_threshold(None), DEFAULT_DENSE_THRESHOLD);
         // from_env stays total (tests must not mutate the env)
         let o = RuntimeOpts::from_env();
         assert!(o.recon_cache >= 1);
+        assert!(o.dense_threshold >= 1);
     }
 
     #[test]

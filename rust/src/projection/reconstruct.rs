@@ -16,6 +16,7 @@ use crate::kernels;
 use crate::projection::op;
 use crate::projection::statics::{gen_statics, Static};
 use anyhow::Result;
+use std::borrow::Cow;
 
 /// Per-module weight increment, before the alpha/r scale.
 #[derive(Debug, Clone)]
@@ -31,14 +32,16 @@ impl ModuleDelta {
     /// Materialize the dense [h, h] increment (row-major). The
     /// low-rank product routes through the blocked `kernels::gemm_nn`
     /// — this is the hot path of adapter export/merge and of the
-    /// Table-1 Jacobian probes.
-    pub fn to_dense(&self, h: usize, r: usize) -> Vec<f32> {
+    /// Table-1 Jacobian probes. `Dense` variants (FourierFT) borrow
+    /// their existing buffer instead of cloning `h*h` floats the
+    /// callers only read.
+    pub fn to_dense(&self, h: usize, r: usize) -> Cow<'_, [f32]> {
         match self {
-            ModuleDelta::Dense(dw) => dw.clone(),
+            ModuleDelta::Dense(dw) => Cow::Borrowed(dw.as_slice()),
             ModuleDelta::LowRank { a, b } => {
                 let mut dw = vec![0f32; h * h];
                 kernels::gemm_nn(a, b, &mut dw, h, r, h, false);
-                dw
+                Cow::Owned(dw)
             }
         }
     }

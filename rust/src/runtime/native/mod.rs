@@ -59,6 +59,14 @@ impl NativeBackend {
         })
     }
 
+    /// A backend with an explicitly-sized reconstruction cache (tests
+    /// forcing eviction churn; benches pinning residency).
+    pub fn with_recon_cache(cap: usize) -> Result<NativeBackend> {
+        let mut be = NativeBackend::new()?;
+        be.recon = Arc::new(ReconCache::new(cap));
+        Ok(be)
+    }
+
     /// The shared adapter-reconstruction cache (stats surface for the
     /// server and tests).
     pub fn recon_cache(&self) -> Arc<ReconCache> {

@@ -29,14 +29,46 @@ use std::sync::Arc;
 // ------------------------------------------------------------------
 // frozen backbone layout
 
+/// Precomputed `(offset, len)` spans of one transformer layer's
+/// segments — resolved once when the [`BaseLayout`] is built, so the
+/// per-token hot paths (`incr_forward`, `adapted_weights`,
+/// `lm_logits_row`) never touch a `format!("wq{l}")` string key.
+#[derive(Clone, Copy)]
+pub struct LayerSegs {
+    pub ln1_g: (usize, usize),
+    pub ln1_b: (usize, usize),
+    pub wq: (usize, usize),
+    pub wk: (usize, usize),
+    pub wv: (usize, usize),
+    pub wo: (usize, usize),
+    pub ln2_g: (usize, usize),
+    pub ln2_b: (usize, usize),
+    pub w1: (usize, usize),
+    pub w2: (usize, usize),
+}
+
+/// Precomputed spans of the non-layer segments.
+#[derive(Clone, Copy)]
+pub struct FixedSegs {
+    pub tok_emb: (usize, usize),
+    pub pos_emb: (usize, usize),
+    pub lnf_g: (usize, usize),
+    pub lnf_b: (usize, usize),
+    pub lm_head: (usize, usize),
+}
+
 /// Backbone layout table (segment name -> (offset, len)) decoupled
 /// from any particular `w0` borrow: long-lived holders (the decode
 /// session) build it once and `bind` it to the weights each step,
 /// instead of re-deriving the per-segment name strings for every
-/// generated token.
+/// generated token. Per-layer and fixed spans are additionally
+/// resolved into index tables here, so the string map is only
+/// consulted by the (cold) train/eval paths.
 #[derive(Clone)]
 pub struct BaseLayout {
     offs: Arc<BTreeMap<String, (usize, usize)>>,
+    layers: Arc<Vec<LayerSegs>>,
+    fixed: FixedSegs,
     total: usize,
 }
 
@@ -49,7 +81,29 @@ impl BaseLayout {
             offs.insert(s.name.clone(), (off, n));
             off += n;
         }
-        BaseLayout { offs: Arc::new(offs), total: off }
+        let at = |name: &str| offs[name];
+        let layers: Vec<LayerSegs> = (0..cfg.layers)
+            .map(|l| LayerSegs {
+                ln1_g: at(&format!("ln1_g{l}")),
+                ln1_b: at(&format!("ln1_b{l}")),
+                wq: at(&format!("wq{l}")),
+                wk: at(&format!("wk{l}")),
+                wv: at(&format!("wv{l}")),
+                wo: at(&format!("wo{l}")),
+                ln2_g: at(&format!("ln2_g{l}")),
+                ln2_b: at(&format!("ln2_b{l}")),
+                w1: at(&format!("w1{l}")),
+                w2: at(&format!("w2{l}")),
+            })
+            .collect();
+        let fixed = FixedSegs {
+            tok_emb: at("tok_emb"),
+            pos_emb: at("pos_emb"),
+            lnf_g: at("lnf_g"),
+            lnf_b: at("lnf_b"),
+            lm_head: at("lm_head"),
+        };
+        BaseLayout { offs: Arc::new(offs), layers: Arc::new(layers), fixed, total: off }
     }
 
     /// View `w0` through this layout (validating the length).
@@ -60,7 +114,13 @@ impl BaseLayout {
             w0.len(),
             self.total
         );
-        Ok(BaseMap { w0, offs: self.offs.clone(), total: self.total })
+        Ok(BaseMap {
+            w0,
+            offs: self.offs.clone(),
+            layers: self.layers.clone(),
+            fixed: self.fixed,
+            total: self.total,
+        })
     }
 }
 
@@ -68,6 +128,8 @@ impl BaseLayout {
 pub struct BaseMap<'a> {
     w0: &'a [f32],
     offs: Arc<BTreeMap<String, (usize, usize)>>,
+    layers: Arc<Vec<LayerSegs>>,
+    fixed: FixedSegs,
     total: usize,
 }
 
@@ -79,6 +141,21 @@ impl<'a> BaseMap<'a> {
     pub fn seg(&self, name: &str) -> &'a [f32] {
         let (o, n) = self.offs[name];
         &self.w0[o..o + n]
+    }
+
+    /// Slice a precomputed `(offset, len)` span out of the backbone.
+    pub fn at(&self, span: (usize, usize)) -> &'a [f32] {
+        &self.w0[span.0..span.0 + span.1]
+    }
+
+    /// Precomputed spans for layer `l`.
+    pub fn layer(&self, l: usize) -> &LayerSegs {
+        &self.layers[l]
+    }
+
+    /// Precomputed spans for the non-layer segments.
+    pub fn fixed(&self) -> &FixedSegs {
+        &self.fixed
     }
 
     pub fn offset(&self, name: &str) -> (usize, usize) {
@@ -453,10 +530,111 @@ pub fn adapted_weights(
     let mut wq = Vec::with_capacity(cfg.layers);
     let mut wv = Vec::with_capacity(cfg.layers);
     for l in 0..cfg.layers {
-        wq.push(effective_weight(base.seg(&format!("wq{l}")), &deltas[2 * l], h, r, cfg.scale));
-        wv.push(effective_weight(base.seg(&format!("wv{l}")), &deltas[2 * l + 1], h, r, cfg.scale));
+        let segs = base.layer(l);
+        wq.push(effective_weight(base.at(segs.wq), &deltas[2 * l], h, r, cfg.scale));
+        wv.push(effective_weight(base.at(segs.wv), &deltas[2 * l + 1], h, r, cfg.scale));
     }
     Ok(AdaptedWeights { wq, wv })
+}
+
+/// Rank-r factors for every adapted module, held exactly as
+/// `reconstruct::ModuleDelta` produced them — never densified. This is
+/// the paper's serving story made literal: per-adapter resident state
+/// is `4 * layers * h * r` floats (the A/B factors for q and v per
+/// layer) instead of the `2 * layers * h^2` a dense reconstruction
+/// costs, so thousands of adapters fit where one dense reconstruction
+/// used to.
+pub struct FactoredWeights {
+    /// per layer: q-projection factors (`a: [h, r]`, `b: [r, h]`)
+    q: Vec<(Vec<f32>, Vec<f32>)>,
+    /// per layer: v-projection factors
+    v: Vec<(Vec<f32>, Vec<f32>)>,
+    scale: f32,
+    rank: usize,
+}
+
+impl FactoredWeights {
+    /// Capture the rank-r factors from reconstructed deltas. Returns
+    /// `None` when ANY module delta is `Dense` (FourierFT): a dense
+    /// spectral delta has no factored form, so such adapters must run
+    /// through [`AdapterExec::Dense`] — the session cost model owns
+    /// that routing, not the call sites.
+    pub fn from_deltas(cfg: &ModelCfg, deltas: &[ModuleDelta]) -> Option<FactoredWeights> {
+        if deltas.len() != cfg.n_modules() {
+            return None;
+        }
+        let mut q = Vec::with_capacity(cfg.layers);
+        let mut v = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            for (dst, d) in [(&mut q, &deltas[2 * l]), (&mut v, &deltas[2 * l + 1])] {
+                match d {
+                    ModuleDelta::LowRank { a, b } => dst.push((a.clone(), b.clone())),
+                    ModuleDelta::Dense(_) => return None,
+                }
+            }
+        }
+        Some(FactoredWeights { q, v, scale: cfg.scale, rank: cfg.rank })
+    }
+
+    /// Resident bytes (factored-mode footprint accounting).
+    pub fn byte_size(&self) -> usize {
+        let n: usize = self.q.iter().chain(&self.v).map(|(a, b)| a.len() + b.len()).sum();
+        n * std::mem::size_of::<f32>()
+    }
+}
+
+/// How a decode slot applies its adapter — the first-class execution
+/// representation the session subsystem schedules:
+///
+/// - `Dense`: today's path — GEMV against `W0 + scale*DeltaW`
+///   materialized once per adapter (via the `ReconCache`). Cheapest
+///   per step, `2 * layers * h^2` floats resident per adapter.
+/// - `Factored`: GEMV against the frozen `W0` plus `y += scale*B(A x)`
+///   as two rank-r GEMVs — no `h×h` delta is ever built. Per-adapter
+///   residency is just the rank-r factors, which is what lets a
+///   session serve thousands of distinct one-vector adapters.
+pub enum AdapterExec {
+    Dense(Arc<AdaptedWeights>),
+    Factored(FactoredWeights),
+}
+
+impl AdapterExec {
+    pub fn is_dense(&self) -> bool {
+        matches!(self, AdapterExec::Dense(_))
+    }
+
+    /// Resident bytes attributable to this exec form. `Dense` reports
+    /// 0 here: the dense weights are owned (and counted) by the
+    /// `ReconCache`, and the slot only holds a refcount.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            AdapterExec::Dense(_) => 0,
+            AdapterExec::Factored(fw) => fw.byte_size(),
+        }
+    }
+}
+
+/// `y += scale * (x @ a) @ b` — the factored-mode adapter application:
+/// two rank-r GEMVs through the kernels vtable instead of one h×h
+/// GEMV against a densified delta. Accumulating the second GEMM
+/// (`acc = true`) keeps the per-element k-ascending contract: each
+/// output element is finished in one pass, exactly as the dense path's
+/// single accumulation is.
+fn apply_factored(
+    x: &[f32],
+    (a, b): &(Vec<f32>, Vec<f32>),
+    scale: f32,
+    r: usize,
+    y: &mut [f32],
+    n: usize,
+    h: usize,
+) {
+    let mut t = vec![0f32; n * r];
+    gemm_nn(x, a, &mut t, n, h, r, false);
+    for v in t.iter_mut() {
+        *v *= scale;
+    }
+    gemm_nn(&t, b, y, n, r, h, true);
 }
 
 /// Per-sequence decode state: one K and one V buffer per layer, laid
@@ -501,11 +679,16 @@ impl KvCache {
 /// with per-element k-ascending accumulation, the attention
 /// expressions copied from `attention` verbatim), so the returned row
 /// is bit-identical to the `[B, T]` `forward`'s row at the same
-/// position — on every kernel tier.
+/// position — on every kernel tier — when `w` is `Dense`. The
+/// `Factored` mode computes the SAME adapted projection as
+/// `scale*B(A x)` added onto `x @ W0`, which associates the float sums
+/// differently from densifying first: factored streams are held to
+/// token-stream parity with dense (argmax-equal logits), not bit
+/// parity — `tests/decode_parity.rs` asserts exactly that.
 pub fn incr_forward(
     cfg: &ModelCfg,
     base: &BaseMap,
-    w: &AdaptedWeights,
+    w: &AdapterExec,
     kv: &mut KvCache,
     toks: &[i32],
 ) -> Result<Vec<f32>> {
@@ -522,11 +705,19 @@ pub fn incr_forward(
         "kv cache overflow: {start} processed + {n} new > window {}",
         kv.cap
     );
-    ensure!(w.wq.len() == cfg.layers, "adapted weights have {} layers", w.wq.len());
+    match w {
+        AdapterExec::Dense(aw) => {
+            ensure!(aw.wq.len() == cfg.layers, "adapted weights have {} layers", aw.wq.len())
+        }
+        AdapterExec::Factored(fw) => {
+            ensure!(fw.q.len() == cfg.layers, "factored weights have {} layers", fw.q.len())
+        }
+    }
 
     // embeddings at the absolute positions
-    let tok_emb = base.seg("tok_emb");
-    let pos_emb = base.seg("pos_emb");
+    let fixed = *base.fixed();
+    let tok_emb = base.at(fixed.tok_emb);
+    let pos_emb = base.at(fixed.pos_emb);
     let mut x = vec![0f32; n * h];
     for i in 0..n {
         let tok = toks[i];
@@ -544,17 +735,30 @@ pub fn incr_forward(
     }
 
     for l in 0..cfg.layers {
-        let (x2, _) =
-            layer_norm(&x, base.seg(&format!("ln1_g{l}")), base.seg(&format!("ln1_b{l}")), n, h);
+        let segs = *base.layer(l);
+        let (x2, _) = layer_norm(&x, base.at(segs.ln1_g), base.at(segs.ln1_b), n, h);
+        // adapted q projection: dense GEMV, or base GEMV + rank-r update
         let mut q = vec![0f32; n * h];
-        gemm_nn(&x2, &w.wq[l], &mut q, n, h, h, false);
+        match w {
+            AdapterExec::Dense(aw) => gemm_nn(&x2, &aw.wq[l], &mut q, n, h, h, false),
+            AdapterExec::Factored(fw) => {
+                gemm_nn(&x2, base.at(segs.wq), &mut q, n, h, h, false);
+                apply_factored(&x2, &fw.q[l], fw.scale, fw.rank, &mut q, n, h);
+            }
+        }
         // new keys/values land directly in the cache rows
         {
             let mut knew = vec![0f32; n * h];
-            gemm_nn(&x2, base.seg(&format!("wk{l}")), &mut knew, n, h, h, false);
+            gemm_nn(&x2, base.at(segs.wk), &mut knew, n, h, h, false);
             kv.k[l][start * h..(start + n) * h].copy_from_slice(&knew);
             let mut vnew = vec![0f32; n * h];
-            gemm_nn(&x2, &w.wv[l], &mut vnew, n, h, h, false);
+            match w {
+                AdapterExec::Dense(aw) => gemm_nn(&x2, &aw.wv[l], &mut vnew, n, h, h, false),
+                AdapterExec::Factored(fw) => {
+                    gemm_nn(&x2, base.at(segs.wv), &mut vnew, n, h, h, false);
+                    apply_factored(&x2, &fw.v[l], fw.scale, fw.rank, &mut vnew, n, h);
+                }
+            }
             kv.v[l][start * h..(start + n) * h].copy_from_slice(&vnew);
         }
         let kbuf = &kv.k[l];
@@ -596,23 +800,17 @@ pub fn incr_forward(
             }
         }
         let mut x_mid = vec![0f32; n * h];
-        gemm_nn(&att_out, base.seg(&format!("wo{l}")), &mut x_mid, n, h, h, false);
+        gemm_nn(&att_out, base.at(segs.wo), &mut x_mid, n, h, h, false);
         for (xm, xi) in x_mid.iter_mut().zip(&x) {
             *xm += xi;
         }
-        let (x3, _) = layer_norm(
-            &x_mid,
-            base.seg(&format!("ln2_g{l}")),
-            base.seg(&format!("ln2_b{l}")),
-            n,
-            h,
-        );
+        let (x3, _) = layer_norm(&x_mid, base.at(segs.ln2_g), base.at(segs.ln2_b), n, h);
         let mut u = vec![0f32; n * f];
-        gemm_nn(&x3, base.seg(&format!("w1{l}")), &mut u, n, h, f, false);
+        gemm_nn(&x3, base.at(segs.w1), &mut u, n, h, f, false);
         let mut gelu_v = vec![0f32; n * f];
         (kops.gelu_map)(&mut gelu_v, &u);
         let mut x_next = vec![0f32; n * h];
-        gemm_nn(&gelu_v, base.seg(&format!("w2{l}")), &mut x_next, n, f, h, false);
+        gemm_nn(&gelu_v, base.at(segs.w2), &mut x_next, n, f, h, false);
         for (xn, xm) in x_next.iter_mut().zip(&x_mid) {
             *xn += xm;
         }
@@ -622,7 +820,7 @@ pub fn incr_forward(
 
     // final layer norm on the LAST row only (LN is per-row)
     let last = &x[(n - 1) * h..n * h];
-    let (hidden, _) = layer_norm(last, base.seg("lnf_g"), base.seg("lnf_b"), 1, h);
+    let (hidden, _) = layer_norm(last, base.at(fixed.lnf_g), base.at(fixed.lnf_b), 1, h);
     Ok(hidden)
 }
 
@@ -630,7 +828,8 @@ pub fn incr_forward(
 /// the incremental replacement for the full `[B*T, vocab]` lm head.
 pub fn lm_logits_row(cfg: &ModelCfg, base: &BaseMap, hidden_row: &[f32]) -> Vec<f32> {
     let mut logits = vec![0f32; cfg.vocab];
-    gemm_nn(hidden_row, base.seg("lm_head"), &mut logits, 1, cfg.hidden, cfg.vocab, false);
+    let head = base.at(base.fixed().lm_head);
+    gemm_nn(hidden_row, head, &mut logits, 1, cfg.hidden, cfg.vocab, false);
     logits
 }
 
@@ -1393,7 +1592,7 @@ mod tests {
         // nonzero theta so the adapted-weight path is active
         let theta: Vec<f32> = rng::normals(9, cfg.d).iter().map(|v| 0.1 * v).collect();
         let deltas = reconstruct_with_statics(&cfg, &stats, &theta).unwrap();
-        let w = adapted_weights(&cfg, &base, &deltas).unwrap();
+        let w = AdapterExec::Dense(Arc::new(adapted_weights(&cfg, &base, &deltas).unwrap()));
         let tokens = tokens_for(&cfg, 4);
         let fc = forward(&cfg, &base, &deltas, &tokens).unwrap();
 
@@ -1438,6 +1637,54 @@ mod tests {
         assert!(incr_forward(&cfg, &base, &w, &mut kv, &too_long).is_err());
         assert!(incr_forward(&cfg, &base, &w, &mut kv, &[]).is_err());
         assert!(incr_forward(&cfg, &base, &w, &mut kv, &[cfg.vocab as i32]).is_err());
+    }
+
+    /// The factored execution mode (`y += scale*B(A x)` on top of the
+    /// frozen W0 projection) computes the same adapted forward as the
+    /// densified mode up to float re-association: hidden rows agree to
+    /// tolerance and the next-token argmax is identical.
+    #[test]
+    fn factored_incremental_forward_matches_dense() {
+        let cfg = tiny_cfg();
+        let w0 = init_w0(&cfg, 5);
+        let base = BaseMap::new(&cfg, &w0).unwrap();
+        let stats = gen_statics(&cfg, 5).unwrap();
+        let theta: Vec<f32> = rng::normals(17, cfg.d).iter().map(|v| 0.1 * v).collect();
+        let deltas = reconstruct_with_statics(&cfg, &stats, &theta).unwrap();
+        let dense = AdapterExec::Dense(Arc::new(adapted_weights(&cfg, &base, &deltas).unwrap()));
+        let fw = FactoredWeights::from_deltas(&cfg, &deltas).expect("uni deltas are low-rank");
+        // factored residency really is the rank-r factors, not h^2
+        assert_eq!(
+            fw.byte_size(),
+            4 * cfg.layers * cfg.hidden * cfg.rank * std::mem::size_of::<f32>()
+        );
+        let factored = AdapterExec::Factored(fw);
+        assert!(dense.is_dense() && !factored.is_dense());
+        assert_eq!(dense.byte_size(), 0);
+
+        let tokens = tokens_for(&cfg, 6);
+        let seq = &tokens[..cfg.seq];
+        let mut kv_d = KvCache::new(&cfg);
+        let mut kv_f = KvCache::new(&cfg);
+        let mut rows_d = vec![incr_forward(&cfg, &base, &dense, &mut kv_d, &seq[..2]).unwrap()];
+        let mut rows_f = vec![incr_forward(&cfg, &base, &factored, &mut kv_f, &seq[..2]).unwrap()];
+        for p in 2..cfg.seq {
+            rows_d.push(incr_forward(&cfg, &base, &dense, &mut kv_d, &seq[p..p + 1]).unwrap());
+            rows_f.push(incr_forward(&cfg, &base, &factored, &mut kv_f, &seq[p..p + 1]).unwrap());
+        }
+        for (step, (got, want)) in rows_f.iter().zip(&rows_d).enumerate() {
+            for (g, wv) in got.iter().zip(want) {
+                assert!((g - wv).abs() <= 1e-4 * wv.abs().max(1.0), "step {step}: {g} vs {wv}");
+            }
+            let lf = lm_logits_row(&cfg, &base, got);
+            let ld = lm_logits_row(&cfg, &base, want);
+            assert_eq!(crate::metrics::argmax(&lf), crate::metrics::argmax(&ld), "step {step}");
+        }
+
+        // a Dense (FourierFT-style) module delta has no factored form
+        let mut spectral = deltas.clone();
+        spectral[0] = ModuleDelta::Dense(vec![0.0; cfg.hidden * cfg.hidden]);
+        assert!(FactoredWeights::from_deltas(&cfg, &spectral).is_none());
     }
 
     #[test]

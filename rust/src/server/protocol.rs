@@ -20,8 +20,10 @@
 //! The `stats` object carries the serving-quality counters aggregated
 //! across workers: `requests`, `rejected`, `workers`, `steps`,
 //! `generated_tokens`, `tokens_per_sec`, `mean_ttft_ms`
-//! (time-to-first-token), `recon_hit_rate` (adapter-reconstruction
-//! cache), `mean_occupied_slots` (continuous-batching occupancy) and
+//! (time-to-first-token), `recon_hit_rate` and `recon_evictions`
+//! (adapter-reconstruction cache), `factored_admits` / `dense_admits`
+//! (execution-mode mix the admission cost model picked),
+//! `mean_occupied_slots` (continuous-batching occupancy) and
 //! `mean_latency_ms`.
 
 use crate::util::json::{n, obj, s, Json};

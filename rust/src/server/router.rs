@@ -65,6 +65,13 @@ pub struct RouterStats {
     /// adapter-reconstruction cache hits/misses (native sessions)
     pub recon_hits: u64,
     pub recon_misses: u64,
+    /// dense reconstructions evicted from the shared cache on behalf
+    /// of this router's admissions
+    pub recon_evictions: u64,
+    /// admissions run on the factored rank-r path vs densified — the
+    /// execution-mode mix the session cost model picked
+    pub factored_admits: u64,
+    pub dense_admits: u64,
     pub total_latency_secs: f64,
     pub total_queue_secs: f64,
 }
@@ -351,9 +358,9 @@ impl Router {
         art_logits: &str,
         cfg: &ModelCfg,
         w0: &Arc<Vec<f32>>,
+        opts: &SessionOpts,
     ) {
-        let opts = SessionOpts::from_env();
-        let mut sess = match exec.begin_decode(art_logits, w0.clone(), &opts) {
+        let mut sess = match exec.begin_decode(art_logits, w0.clone(), opts) {
             Ok(s) => s,
             Err(e) => {
                 self.drain_with_errors(&format!("decode session unavailable: {e}"));
@@ -398,7 +405,7 @@ impl Router {
                         }
                     }
                     sess.finish();
-                    match exec.begin_decode(art_logits, w0.clone(), &opts) {
+                    match exec.begin_decode(art_logits, w0.clone(), opts) {
                         Ok(s) => {
                             sess = s;
                             last = sess.stats();
@@ -421,6 +428,9 @@ impl Router {
             st.note_decode(t0, step_secs);
             st.recon_hits += snow.recon_hits - last.recon_hits;
             st.recon_misses += snow.recon_misses - last.recon_misses;
+            st.recon_evictions += snow.recon_evictions - last.recon_evictions;
+            st.factored_admits += snow.factored_admits - last.factored_admits;
+            st.dense_admits += snow.dense_admits - last.dense_admits;
             last = snow;
             for ev in events {
                 let Some(book) = books.get_mut(&ev.slot) else { continue };
@@ -533,6 +543,81 @@ mod tests {
         // a queued request still comes out after stop; then None
         assert!(r.pop_blocking().is_some());
         assert!(r.pop_blocking().is_none());
+    }
+
+    /// Force eviction churn through a worker: a 1-entry recon cache
+    /// serving 3 adapters pinned dense (threshold 1) must surface
+    /// evictions and an all-dense admission mix in `RouterStats`; the
+    /// same workload pinned factored surfaces the opposite mix and
+    /// never touches the dense cache.
+    #[test]
+    fn worker_surfaces_eviction_churn_and_mode_mix() {
+        use crate::adapters::AdapterCheckpoint;
+        use crate::runtime::NativeBackend;
+
+        const ART: &str = "lm_uni_lm_logits";
+        let run = |opts: SessionOpts| -> (RouterStats, u64) {
+            let mut be = NativeBackend::with_recon_cache(1).unwrap();
+            let cache = be.recon_cache();
+            let meta = be.meta(ART).unwrap().clone();
+            let cfg = meta.cfg.clone();
+            let w0 = Arc::new(crate::coordinator::init_base(&meta, 9));
+            let registry = Arc::new(Registry::new());
+            for i in 0..3u64 {
+                let theta: Vec<f32> =
+                    crate::rng::normals(100 + i, crate::projection::statics::d_effective(&cfg))
+                        .iter()
+                        .map(|v| 0.05 * v)
+                        .collect();
+                registry.insert(
+                    format!("a{i}"),
+                    AdapterCheckpoint {
+                        seed: 7,
+                        method: cfg.method.clone(),
+                        artifact: ART.into(),
+                        theta,
+                        head: vec![],
+                    },
+                );
+            }
+            let r = Router::new();
+            let worker = {
+                let r = r.clone();
+                let registry = registry.clone();
+                let cfg = cfg.clone();
+                let w0 = w0.clone();
+                std::thread::spawn(move || {
+                    r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts)
+                })
+            };
+            for round in 0..2 {
+                for i in 0..3 {
+                    let out = r.generate(&format!("a{i}"), vec![1, 2, 3], 2);
+                    assert!(out.is_ok(), "round {round} adapter a{i}: {out:?}");
+                }
+            }
+            r.stop();
+            worker.join().unwrap();
+            let st = r.stats.lock().unwrap().clone();
+            (st, cache.evictions())
+        };
+
+        // pinned dense: every admission densifies; cycling 3 adapters
+        // through a 1-entry cache evicts on every adapter switch
+        let (st, cache_evictions) = run(SessionOpts::with_slots(1).with_dense_threshold(1));
+        assert_eq!(st.requests, 6);
+        assert_eq!((st.dense_admits, st.factored_admits), (6, 0));
+        assert!(st.recon_evictions >= 1, "cycling adapters must evict: {st:?}");
+        assert_eq!(st.recon_evictions, cache_evictions);
+        assert_eq!(st.recon_hits, 0, "a 1-entry cache cycling 3 adapters never hits");
+
+        // pinned factored: no admission ever touches the dense cache
+        let factored_opts = SessionOpts::with_slots(1).with_dense_threshold(usize::MAX);
+        let (st, cache_evictions) = run(factored_opts);
+        assert_eq!(st.requests, 6);
+        assert_eq!((st.dense_admits, st.factored_admits), (0, 6));
+        assert_eq!((st.recon_evictions, cache_evictions), (0, 0));
+        assert_eq!((st.recon_hits, st.recon_misses), (0, 0));
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::router::{DEFAULT_QUEUE_DEPTH, Router};
 use crate::adapters::Registry;
 use crate::config::{ModelCfg, RuntimeOpts};
 use crate::runtime::Backend;
+use crate::session::SessionOpts;
 use crate::util::json::{n, obj, Json};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -115,6 +116,9 @@ pub fn serve(
         }
     }
     let workers = backends.len();
+    // one env read for the whole pool; every worker session gets the
+    // same slot count and dense-threshold cost model
+    let opts = SessionOpts::from_env();
 
     let worker_threads: Vec<JoinHandle<()>> = backends
         .into_iter()
@@ -125,7 +129,7 @@ pub fn serve(
             let model_cfg = model_cfg.clone();
             let w0 = w0.clone();
             std::thread::spawn(move || {
-                router.worker_loop(be.as_mut(), &registry, &art, &model_cfg, &w0);
+                router.worker_loop(be.as_mut(), &registry, &art, &model_cfg, &w0, &opts);
             })
         })
         .collect();
@@ -182,6 +186,9 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, worke
                     ("tokens_per_sec", n(st.tokens_per_sec())),
                     ("mean_ttft_ms", n(st.mean_ttft_ms())),
                     ("recon_hit_rate", n(st.recon_hit_rate())),
+                    ("recon_evictions", n(st.recon_evictions as f64)),
+                    ("factored_admits", n(st.factored_admits as f64)),
+                    ("dense_admits", n(st.dense_admits as f64)),
                     ("mean_occupied_slots", n(st.mean_occupied_slots())),
                     ("mean_latency_ms", n(st.mean_latency_ms())),
                 ]))

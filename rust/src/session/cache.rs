@@ -1,11 +1,21 @@
-//! LRU adapter-reconstruction cache, shared by every worker's decode
-//! sessions (the same `Arc` pattern as the router's statics cache).
+//! Adapter execution-form selection (the session cost model) and the
+//! LRU dense-reconstruction cache behind it.
 //!
-//! An adapter checkpoint is one tiny vector; its reconstruction — the
-//! dense per-layer adapted q/v weights `W0 + scale*ΔW` — is
-//! `2 * layers * h^2` floats. The legacy decode loop rebuilt that for
-//! every generated token; a cache entry rebuilds it once per adapter
-//! and every session on every worker shares the result.
+//! An adapter checkpoint is one tiny vector. Since the factored
+//! refactor, the DEFAULT way a decode slot applies it is
+//! [`AdapterExec::Factored`]: the rank-r A/B factors straight from
+//! reconstruction, applied as `y += scale*B(A x)` — per-adapter
+//! resident state is `4 * layers * h * r` floats, which is what lets
+//! one session serve thousands of distinct adapters.
+//!
+//! The [`ReconCache`] is demoted to a *hot-adapter optimization*: when
+//! one adapter dominates a session's slots (at least `dense_threshold`
+//! of them), [`build_exec`] densifies it once — `W0 + scale*ΔW`,
+//! `2 * layers * h^2` floats — and every same-adapter slot shares the
+//! cached result, trading residency for the cheapest per-step GEMV.
+//! FourierFT's `Dense` module deltas have no factored form, so the
+//! cost model (never the call sites) routes them dense regardless of
+//! the threshold.
 //!
 //! Entries are validated, not trusted: each remembers WHICH backbone
 //! (`Weak` identity of the `Arc`'d w0) and WHICH theta (bit
@@ -16,7 +26,9 @@
 use crate::config::ModelCfg;
 use crate::projection::reconstruct::reconstruct_with_statics;
 use crate::projection::statics::Static;
-use crate::runtime::native::model::{adapted_weights, AdaptedWeights, BaseMap};
+use crate::runtime::native::model::{
+    adapted_weights, AdaptedWeights, AdapterExec, BaseMap, FactoredWeights,
+};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -39,6 +51,7 @@ pub struct ReconCache {
     tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
     inner: Mutex<HashMap<String, Entry>>,
 }
 
@@ -51,6 +64,7 @@ impl ReconCache {
             tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
             inner: Mutex::new(HashMap::new()),
         }
     }
@@ -75,12 +89,26 @@ impl ReconCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Dense reconstructions evicted over the cache's lifetime.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently held by resident dense reconstructions — the
+    /// memory the factored path exists to avoid; the multi-tenancy
+    /// acceptance test budgets against this.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().values().map(|e| e.eff.byte_size()).sum()
+    }
+
     /// Get the reconstruction for `name`, rebuilding on miss (unknown
     /// name, different theta, different backbone). Returns
-    /// `(weights, hit)`. Reconstruction runs OUTSIDE the lock so a
-    /// first-touch adapter never stalls workers serving cached ones;
-    /// racing workers may rebuild the same entry once each — the
-    /// results are deterministic duplicates and the last insert wins.
+    /// `(weights, hit, evicted)` where `evicted` counts entries this
+    /// call pushed out of the LRU. Reconstruction runs OUTSIDE the
+    /// lock so a first-touch adapter never stalls workers serving
+    /// cached ones; racing workers may rebuild the same entry once
+    /// each — the results are deterministic duplicates and the last
+    /// insert wins.
     pub fn get_or_build(
         &self,
         name: &str,
@@ -88,7 +116,7 @@ impl ReconCache {
         w0: &Arc<Vec<f32>>,
         theta: &[f32],
         statics: &[Static],
-    ) -> Result<(Arc<AdaptedWeights>, bool)> {
+    ) -> Result<(Arc<AdaptedWeights>, bool, u64)> {
         let fp = super::theta_fingerprint(theta);
         {
             let mut m = self.inner.lock().unwrap();
@@ -97,7 +125,7 @@ impl ReconCache {
                 if same_w0 && e.theta_fp == fp {
                     e.tick = self.tick.fetch_add(1, Ordering::Relaxed);
                     self.hits.fetch_add(1, Ordering::Relaxed);
-                    return Ok((e.eff.clone(), true));
+                    return Ok((e.eff.clone(), true, 0));
                 }
             }
         }
@@ -111,16 +139,65 @@ impl ReconCache {
             name.to_string(),
             Entry { eff: eff.clone(), w0: Arc::downgrade(w0), theta_fp: fp, tick },
         );
+        let mut evicted = 0u64;
         while m.len() > self.cap {
             let oldest = m.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| k.clone());
             match oldest {
                 Some(k) => {
                     m.remove(&k);
+                    evicted += 1;
                 }
                 None => break,
             }
         }
-        Ok((eff, false))
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        Ok((eff, false, evicted))
+    }
+}
+
+/// What [`build_exec`] resolved for one admission.
+pub struct ExecFetch {
+    pub exec: Arc<AdapterExec>,
+    /// dense-cache hit (always `false` for factored admissions)
+    pub hit: bool,
+    /// dense reconstructions evicted on behalf of this admission
+    pub evicted: u64,
+}
+
+/// The cost model: pick the execution form for an admission, given how
+/// many slots the same (adapter, theta) already occupies in the
+/// session. `same_adapter_active + 1 >= dense_threshold` densifies
+/// through the shared [`ReconCache`]; otherwise the admission runs
+/// factored — unless reconstruction yields any `Dense` module delta
+/// (FourierFT), which has no factored form and falls back to the dense
+/// path here, at the model, not at the call sites.
+#[allow(clippy::too_many_arguments)]
+pub fn build_exec(
+    cache: &ReconCache,
+    name: &str,
+    cfg: &ModelCfg,
+    w0: &Arc<Vec<f32>>,
+    theta: &[f32],
+    statics: &[Static],
+    same_adapter_active: usize,
+    dense_threshold: usize,
+) -> Result<ExecFetch> {
+    if same_adapter_active.saturating_add(1) >= dense_threshold {
+        let (eff, hit, evicted) = cache.get_or_build(name, cfg, w0, theta, statics)?;
+        return Ok(ExecFetch { exec: Arc::new(AdapterExec::Dense(eff)), hit, evicted });
+    }
+    let deltas = reconstruct_with_statics(cfg, statics, theta)?;
+    match FactoredWeights::from_deltas(cfg, &deltas) {
+        Some(fw) => {
+            Ok(ExecFetch { exec: Arc::new(AdapterExec::Factored(fw)), hit: false, evicted: 0 })
+        }
+        None => {
+            // dense module deltas (FourierFT) cannot run factored
+            let (eff, hit, evicted) = cache.get_or_build(name, cfg, w0, theta, statics)?;
+            Ok(ExecFetch { exec: Arc::new(AdapterExec::Dense(eff)), hit, evicted })
+        }
     }
 }
 
@@ -156,21 +233,21 @@ mod tests {
         let stats = gen_statics(&cfg, 1).unwrap();
         let theta: Vec<f32> = rng::normals(3, d_effective(&cfg)).iter().map(|v| 0.1 * v).collect();
 
-        let (a, hit) = cache.get_or_build("x", &cfg, &w0, &theta, &stats).unwrap();
+        let (a, hit, _) = cache.get_or_build("x", &cfg, &w0, &theta, &stats).unwrap();
         assert!(!hit);
-        let (b, hit) = cache.get_or_build("x", &cfg, &w0, &theta, &stats).unwrap();
+        let (b, hit, _) = cache.get_or_build("x", &cfg, &w0, &theta, &stats).unwrap();
         assert!(hit, "same name/theta/backbone must hit");
         assert!(Arc::ptr_eq(&a, &b), "hit must return the cached reconstruction");
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
 
         // re-registered adapter (same name, new theta) must rebuild
         let theta2: Vec<f32> = theta.iter().map(|v| v + 1.0).collect();
-        let (_, hit) = cache.get_or_build("x", &cfg, &w0, &theta2, &stats).unwrap();
+        let (_, hit, _) = cache.get_or_build("x", &cfg, &w0, &theta2, &stats).unwrap();
         assert!(!hit, "changed theta must miss");
 
         // a different backbone identity must rebuild too
         let w0b = Arc::new(w0.as_ref().clone());
-        let (_, hit) = cache.get_or_build("x", &cfg, &w0b, &theta2, &stats).unwrap();
+        let (_, hit, _) = cache.get_or_build("x", &cfg, &w0b, &theta2, &stats).unwrap();
         assert!(!hit, "changed backbone must miss");
         assert_eq!(cache.len(), 1);
     }
@@ -184,10 +261,17 @@ mod tests {
         let theta = init_theta(&cfg, 2).unwrap();
         cache.get_or_build("a", &cfg, &w0, &theta, &stats).unwrap();
         cache.get_or_build("b", &cfg, &w0, &theta, &stats).unwrap();
+        assert_eq!(cache.evictions(), 0);
+        // two residents of 2*layers*h^2 floats each
+        let dense_bytes = 2 * cfg.layers * cfg.hidden * cfg.hidden * std::mem::size_of::<f32>();
+        assert_eq!(cache.resident_bytes(), 2 * dense_bytes);
         // touch "a" so "b" is the LRU entry
         assert!(cache.get_or_build("a", &cfg, &w0, &theta, &stats).unwrap().1);
-        cache.get_or_build("c", &cfg, &w0, &theta, &stats).unwrap();
+        let (_, _, evicted) = cache.get_or_build("c", &cfg, &w0, &theta, &stats).unwrap();
+        assert_eq!(evicted, 1, "inserting past capacity must evict");
+        assert_eq!(cache.evictions(), 1);
         assert_eq!(cache.len(), 2);
+        assert_eq!(cache.resident_bytes(), 2 * dense_bytes);
         // "a" survived, "b" was evicted
         assert!(cache.get_or_build("a", &cfg, &w0, &theta, &stats).unwrap().1);
         assert!(!cache.get_or_build("b", &cfg, &w0, &theta, &stats).unwrap().1);
@@ -199,5 +283,48 @@ mod tests {
         assert_ne!(fp(&[1.0, 2.0]), fp(&[1.0, 2.5]));
         assert_ne!(fp(&[0.0]), fp(&[0.0, 0.0]));
         assert_eq!(fp(&[1.5; 7]), fp(&[1.5; 7]));
+    }
+
+    #[test]
+    fn cost_model_picks_factored_below_threshold_dense_at_it() {
+        let cfg = small_cfg();
+        let cache = ReconCache::new(8);
+        let w0 = w0_for(&cfg, 4);
+        let stats = gen_statics(&cfg, 4).unwrap();
+        let theta: Vec<f32> = rng::normals(5, d_effective(&cfg)).iter().map(|v| 0.1 * v).collect();
+
+        // below the crossover: factored, and the dense cache is untouched
+        let f = build_exec(&cache, "x", &cfg, &w0, &theta, &stats, 0, 4).unwrap();
+        assert!(!f.exec.is_dense());
+        assert!(!f.hit);
+        assert_eq!(cache.len(), 0, "factored admissions must not densify");
+
+        // at the crossover (3 active + this one = 4): densified
+        let d = build_exec(&cache, "x", &cfg, &w0, &theta, &stats, 3, 4).unwrap();
+        assert!(d.exec.is_dense());
+        assert_eq!(cache.len(), 1);
+
+        // threshold 1 = legacy always-dense, even for a cold adapter
+        let d1 = build_exec(&cache, "y", &cfg, &w0, &theta, &stats, 0, 1).unwrap();
+        assert!(d1.exec.is_dense());
+
+        // threshold MAX never densifies a low-rank adapter
+        let fmax = build_exec(&cache, "z", &cfg, &w0, &theta, &stats, 1000, usize::MAX).unwrap();
+        assert!(!fmax.exec.is_dense());
+    }
+
+    #[test]
+    fn fourierft_routes_dense_regardless_of_threshold() {
+        let mut cfg = small_cfg();
+        cfg.method = "fourierft".into();
+        let cache = ReconCache::new(8);
+        let w0 = w0_for(&cfg, 6);
+        let stats = gen_statics(&cfg, 6).unwrap();
+        let theta = init_theta(&cfg, 6).unwrap();
+        // spectral deltas have no factored form: the cost model owns
+        // the dense fallback even at an always-factored threshold
+        let f = build_exec(&cache, "ft", &cfg, &w0, &theta, &stats, 0, usize::MAX).unwrap();
+        assert!(f.exec.is_dense());
+        assert_eq!(cache.len(), 1);
     }
 }

@@ -9,6 +9,13 @@
 //! Slots sharing an adapter are coalesced into one `[B, T]` forward
 //! per step (the same same-adapter batching the legacy router did);
 //! heterogeneous slots cost one forward per adapter group.
+//!
+//! Execution-mode-free by construction: theta ships to the backend as
+//! an artifact input and the adapter is reconstructed inside the
+//! forward, so no dense weights (and no factored factors) are ever
+//! resident host-side. The factored/dense admission counters in
+//! [`SessionStats`] therefore stay 0 here — the cost model is a
+//! native-session concern.
 
 use super::{DecodeSession, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats};
 use crate::data::vocab;

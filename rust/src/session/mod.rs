@@ -53,17 +53,34 @@ pub struct SessionOpts {
     /// Decode slots (concurrent sequences) per session; 0 = auto
     /// (`UNI_LORA_DECODE_SLOTS`, else the artifact batch size).
     pub slots: usize,
+    /// Dense-densification crossover for the admission cost model;
+    /// 0 = auto (`UNI_LORA_DENSE_THRESHOLD`, else
+    /// [`config::DEFAULT_DENSE_THRESHOLD`]). An adapter occupying at
+    /// least this many of the session's slots runs densified; below
+    /// it, slots run the factored rank-r path.
+    pub dense_threshold: usize,
 }
 
 impl SessionOpts {
-    /// Knobs from the environment (`UNI_LORA_DECODE_SLOTS`).
+    /// Knobs from the environment (`UNI_LORA_DECODE_SLOTS`,
+    /// `UNI_LORA_DENSE_THRESHOLD`).
     pub fn from_env() -> SessionOpts {
-        SessionOpts { slots: config::RuntimeOpts::from_env().decode_slots }
+        let ro = config::RuntimeOpts::from_env();
+        SessionOpts { slots: ro.decode_slots, dense_threshold: ro.dense_threshold }
     }
 
-    /// An explicit slot count (tests, benches).
+    /// An explicit slot count (tests, benches); the cost model stays
+    /// on its default crossover.
     pub fn with_slots(slots: usize) -> SessionOpts {
-        SessionOpts { slots }
+        SessionOpts { slots, dense_threshold: 0 }
+    }
+
+    /// Pin the dense-densification crossover (tests, benches): `1`
+    /// forces every admission dense (the legacy path), `usize::MAX`
+    /// forces every low-rank adapter factored.
+    pub fn with_dense_threshold(mut self, dense_threshold: usize) -> SessionOpts {
+        self.dense_threshold = dense_threshold;
+        self
     }
 
     /// Resolve the slot count against the artifact's batch size.
@@ -72,6 +89,15 @@ impl SessionOpts {
             self.slots
         } else {
             artifact_batch.max(1)
+        }
+    }
+
+    /// Resolve the cost-model crossover (0 = compiled default).
+    pub fn resolve_dense_threshold(&self) -> usize {
+        if self.dense_threshold > 0 {
+            self.dense_threshold
+        } else {
+            config::DEFAULT_DENSE_THRESHOLD
         }
     }
 }
@@ -110,6 +136,13 @@ pub struct SessionStats {
     pub generated: u64,
     pub recon_hits: u64,
     pub recon_misses: u64,
+    /// admissions the cost model routed to the factored rank-r path
+    pub factored_admits: u64,
+    /// admissions the cost model densified (hot adapters, FourierFT)
+    pub dense_admits: u64,
+    /// dense reconstructions the `ReconCache` evicted on behalf of
+    /// this session's admissions
+    pub recon_evictions: u64,
 }
 
 /// A stateful decoding session over one `lm_logits`-kind artifact.
@@ -308,5 +341,14 @@ mod tests {
         assert_eq!(SessionOpts::with_slots(5).resolve_slots(16), 5);
         assert_eq!(SessionOpts::with_slots(0).resolve_slots(16), 16);
         assert_eq!(SessionOpts::with_slots(0).resolve_slots(0), 1);
+        assert_eq!(
+            SessionOpts::with_slots(4).resolve_dense_threshold(),
+            crate::config::DEFAULT_DENSE_THRESHOLD
+        );
+        assert_eq!(SessionOpts::with_slots(4).with_dense_threshold(1).resolve_dense_threshold(), 1);
+        assert_eq!(
+            SessionOpts::with_slots(4).with_dense_threshold(usize::MAX).resolve_dense_threshold(),
+            usize::MAX
+        );
     }
 }

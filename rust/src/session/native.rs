@@ -1,24 +1,32 @@
 //! The native decode session: per-layer K/V caches over
 //! `runtime::native::model::incr_forward` — one prefill pass per
-//! admitted prompt, then O(model) single-position steps — with
-//! per-adapter weights from the shared [`ReconCache`].
+//! admitted prompt, then O(model) single-position steps — with each
+//! slot carrying an [`AdapterExec`] picked by the admission cost model
+//! (`cache::build_exec`): factored rank-r application by default,
+//! dense weights from the shared [`ReconCache`] when one adapter
+//! dominates the session's slots (or has no factored form).
 //!
 //! Every slot is independent (own adapter, own K/V cache, own budget),
 //! so a session can decode a *heterogeneous* mix of adapters
 //! concurrently: per-step compute is row-sized either way, and this is
 //! exactly the multi-tenant story the paper's one-vector-per-task
-//! storage enables.
+//! storage enables — factored slots keep per-adapter residency at the
+//! rank-r factors, so thousands of distinct adapters fit in a session.
 
 use super::{DecodeSession, ReconCache, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats};
 use crate::config::ModelCfg;
 use crate::runtime::artifact::ArtifactMeta;
-use crate::runtime::native::model::{self, AdaptedWeights, KvCache};
+use crate::runtime::native::model::{self, AdapterExec, KvCache};
 use crate::runtime::Backend;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::Arc;
 
 struct Slot {
-    eff: Arc<AdaptedWeights>,
+    /// adapter identity — what the cost model counts to decide when a
+    /// hot adapter is worth densifying
+    adapter: String,
+    theta_fp: u64,
+    exec: Arc<AdapterExec>,
     kv: KvCache,
     prompt: Vec<i32>,
     state: SeqState,
@@ -33,6 +41,7 @@ pub struct NativeDecodeSession {
     /// backbone layout built once per session; rebound to w0 each step
     layout: model::BaseLayout,
     cache: Arc<ReconCache>,
+    dense_threshold: usize,
     slots: Vec<Option<Slot>>,
     active: usize,
     stats: SessionStats,
@@ -63,6 +72,7 @@ impl NativeDecodeSession {
             cfg: meta.cfg.clone(),
             w0,
             cache,
+            dense_threshold: opts.resolve_dense_threshold(),
             slots: (0..n).map(|_| None).collect(),
             active: 0,
             stats: SessionStats::default(),
@@ -78,18 +88,41 @@ impl DecodeSession for NativeDecodeSession {
             .iter()
             .position(|s| s.is_none())
             .ok_or_else(|| anyhow!("no free decode slot"))?;
-        let (eff, hit) =
-            self.cache.get_or_build(&req.adapter, &self.cfg, &self.w0, &req.theta, &req.statics)?;
-        if hit {
-            self.stats.recon_hits += 1;
+        let theta_fp = super::theta_fingerprint(&req.theta);
+        let same_adapter_active = self
+            .slots
+            .iter()
+            .flatten()
+            .filter(|s| s.adapter == req.adapter && s.theta_fp == theta_fp)
+            .count();
+        let fetch = super::cache::build_exec(
+            &self.cache,
+            &req.adapter,
+            &self.cfg,
+            &self.w0,
+            &req.theta,
+            &req.statics,
+            same_adapter_active,
+            self.dense_threshold,
+        )?;
+        if fetch.exec.is_dense() {
+            self.stats.dense_admits += 1;
+            if fetch.hit {
+                self.stats.recon_hits += 1;
+            } else {
+                self.stats.recon_misses += 1;
+            }
         } else {
-            self.stats.recon_misses += 1;
+            self.stats.factored_admits += 1;
         }
+        self.stats.recon_evictions += fetch.evicted;
         let state = SeqState::new(req.prompt.len(), req.max_new, self.cfg.seq);
         let mut prompt = req.prompt;
         prompt.truncate(self.cfg.seq);
         self.slots[si] = Some(Slot {
-            eff,
+            adapter: req.adapter,
+            theta_fp,
+            exec: fetch.exec,
             kv: KvCache::new(&self.cfg),
             prompt,
             state,
@@ -116,10 +149,10 @@ impl DecodeSession for NativeDecodeSession {
                     self.active -= 1;
                     continue;
                 }
-                model::incr_forward(&self.cfg, &base, &slot.eff, &mut slot.kv, &slot.prompt)?
+                model::incr_forward(&self.cfg, &base, &slot.exec, &mut slot.kv, &slot.prompt)?
             } else {
                 let tok = slot.pending.ok_or_else(|| anyhow!("active slot without pending"))?;
-                model::incr_forward(&self.cfg, &base, &slot.eff, &mut slot.kv, &[tok])?
+                model::incr_forward(&self.cfg, &base, &slot.exec, &mut slot.kv, &[tok])?
             };
             let logits = model::lm_logits_row(&self.cfg, &base, &hidden);
             let (token, done) = slot.state.emit(&logits);

@@ -262,6 +262,134 @@ fn continuous_batching_is_arrival_order_invariant() {
     assert_eq!(run(reqs.len(), &order_rev, false), expected, "all-at-once, reversed");
 }
 
+/// Tentpole parity: the factored execution path (rank-r factor
+/// application, no densified deltas) and the dense path both emit
+/// token streams identical to the legacy loop across the full
+/// prompt x max_new matrix. The execution mode is pinned through
+/// `SessionOpts` (threshold 1 = always dense, usize::MAX = never),
+/// so the test is env-free and runs under both kernel tiers in CI.
+#[test]
+fn factored_and_dense_pinned_sessions_match_legacy() {
+    let mut fx = fixture(23);
+    let prompts = parity_prompts(&fx.cfg);
+    for max_new in [0usize, 1, 12] {
+        let legacy = decode_with(
+            fx.exec.as_mut(),
+            ART,
+            &fx.cfg,
+            &fx.theta,
+            &fx.w0,
+            &fx.statics,
+            &prompts,
+            max_new,
+        )
+        .unwrap();
+        for (mode, threshold) in [("factored", usize::MAX), ("dense", 1usize)] {
+            let opts = SessionOpts::with_slots(0).with_dense_threshold(threshold);
+            let mut sess =
+                fx.exec.begin_decode(ART, Arc::new(fx.w0.clone()), &opts).unwrap();
+            let out = drive_greedy(
+                sess.as_mut(),
+                fx.exec.as_mut(),
+                mode,
+                Arc::new(fx.theta.clone()),
+                Arc::new(fx.statics.clone()),
+                &prompts,
+                max_new,
+            )
+            .unwrap();
+            let st = sess.stats();
+            sess.finish();
+            assert_eq!(legacy, out, "{mode}, max_new = {max_new}");
+            if mode == "factored" {
+                assert_eq!(st.dense_admits, 0, "pinned factored must never densify");
+                assert!(st.factored_admits > 0);
+            } else {
+                assert_eq!(st.factored_admits, 0, "pinned dense must never run factored");
+                assert!(st.dense_admits > 0);
+            }
+        }
+    }
+}
+
+/// Mixed-mode session: with the dense threshold at 2, a hot adapter's
+/// later slots densify while its first slot and the cold adapter stay
+/// factored — and every request still matches its adapter's legacy
+/// stream even though the session mixes execution modes.
+#[test]
+fn heterogeneous_mixed_mode_session_matches_legacy() {
+    let mut fx = fixture(31);
+    let theta_x = fx.theta.clone();
+    let theta_y: Vec<f32> =
+        uni_lora::rng::normals(77, theta_x.len()).iter().map(|v| 0.05 * v).collect();
+    let prompts = parity_prompts(&fx.cfg);
+    let max_new = 8usize;
+    // x is hot (3 concurrent slots), y is cold (1 slot)
+    let reqs: Vec<(&str, &Vec<f32>, Vec<i32>)> = vec![
+        ("x", &theta_x, prompts[0].clone()),
+        ("x", &theta_x, prompts[1].clone()),
+        ("x", &theta_x, prompts[2].clone()),
+        ("y", &theta_y, prompts[0].clone()),
+    ];
+
+    // expected: each adapter's requests decoded alone via the legacy loop
+    let mut expected: Vec<Vec<i32>> = vec![Vec::new(); reqs.len()];
+    for (name, th) in [("x", &theta_x), ("y", &theta_y)] {
+        let idxs: Vec<usize> = (0..reqs.len()).filter(|&k| reqs[k].0 == name).collect();
+        let subset: Vec<Vec<i32>> = idxs.iter().map(|&k| reqs[k].2.clone()).collect();
+        let outs = decode_with(
+            fx.exec.as_mut(),
+            ART,
+            &fx.cfg,
+            th,
+            &fx.w0,
+            &fx.statics,
+            &subset,
+            max_new,
+        )
+        .unwrap();
+        for (k, o) in idxs.into_iter().zip(outs) {
+            expected[k] = o;
+        }
+    }
+
+    let opts = SessionOpts::with_slots(reqs.len()).with_dense_threshold(2);
+    let mut sess = fx.exec.begin_decode(ART, Arc::new(fx.w0.clone()), &opts).unwrap();
+    let statics = Arc::new(fx.statics.clone());
+    let mut owner: Vec<Option<usize>> = vec![None; sess.slots()];
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); reqs.len()];
+    for (k, (name, th, p)) in reqs.iter().enumerate() {
+        let slot = sess
+            .admit(SeqRequest {
+                adapter: name.to_string(),
+                theta: Arc::new((*th).clone()),
+                statics: statics.clone(),
+                prompt: p.clone(),
+                max_new,
+            })
+            .unwrap();
+        owner[slot] = Some(k);
+    }
+    while sess.active() > 0 {
+        for ev in sess.step(fx.exec.as_mut()).unwrap() {
+            let k = owner[ev.slot].unwrap();
+            if let Some(t) = ev.token {
+                out[k].push(t);
+            }
+            if ev.done {
+                owner[ev.slot] = None;
+            }
+        }
+    }
+    let st = sess.stats();
+    sess.finish();
+    assert_eq!(out, expected);
+    // admit order x,x,x,y with threshold 2: the first x slot admits
+    // factored (0 active + 1 < 2), the 2nd and 3rd densify, y admits
+    // factored again
+    assert_eq!((st.factored_admits, st.dense_admits), (2, 2));
+}
+
 /// Admission guards: empty prompts are rejected up front, full
 /// sessions refuse instead of overwriting, and wrong-kind artifacts
 /// can't open sessions.

@@ -1,0 +1,96 @@
+//! Multi-tenant residency acceptance: 256 distinct adapters served
+//! through one native session must stay factored end-to-end — no
+//! densified reconstructions, and total adapter residency (registry
+//! thetas + ReconCache dense entries) bounded by a handful of dense
+//! reconstructions. This is the serving half of the paper's
+//! one-vector-per-task storage story: resident cost scales with `d`
+//! floats per tenant, not `2 * layers * h^2`.
+
+use std::sync::Arc;
+use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::projection::statics::{d_effective, gen_statics};
+use uni_lora::runtime::{Backend, NativeBackend};
+use uni_lora::session::{DecodeSession, SeqRequest, SessionOpts};
+
+const ART: &str = "lm_uni_lm_logits";
+
+#[test]
+fn serves_256_adapters_within_factored_residency_budget() {
+    let mut exec = NativeBackend::new().unwrap();
+    let cache = exec.recon_cache();
+    let meta = exec.meta(ART).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let w0 = Arc::new(uni_lora::coordinator::init_base(&meta, 7));
+    let statics = Arc::new(gen_statics(&cfg, 7).unwrap());
+    let d = d_effective(&cfg);
+
+    // 256 distinct tenants: same projection statics, per-tenant theta
+    let n_adapters = 256usize;
+    let registry = Registry::new();
+    for i in 0..n_adapters {
+        let theta: Vec<f32> =
+            uni_lora::rng::normals(i as u64, d).iter().map(|v| 0.05 * v).collect();
+        registry.insert(
+            format!("a{i}"),
+            AdapterCheckpoint {
+                seed: 7,
+                method: cfg.method.clone(),
+                artifact: ART.into(),
+                theta,
+                head: vec![],
+            },
+        );
+    }
+    assert_eq!(registry.len(), n_adapters);
+
+    // round-robin all 256 tenants through a 16-slot session; every
+    // arrival is a distinct adapter, so the default cost model keeps
+    // every slot factored
+    let opts = SessionOpts::with_slots(16);
+    let mut sess = exec.begin_decode(ART, w0.clone(), &opts).unwrap();
+    let mut pending: Vec<String> = registry.names();
+    pending.reverse();
+    let mut generated = 0usize;
+    while sess.active() > 0 || !pending.is_empty() {
+        while sess.free_slots() > 0 {
+            let Some(name) = pending.pop() else { break };
+            let ckpt = registry.get(&name).unwrap();
+            sess.admit(SeqRequest {
+                adapter: name,
+                theta: Arc::new(ckpt.theta),
+                statics: statics.clone(),
+                prompt: vec![1, 2, 3],
+                max_new: 2,
+            })
+            .unwrap();
+        }
+        for ev in sess.step(&mut exec).unwrap() {
+            if ev.token.is_some() {
+                generated += 1;
+            }
+        }
+    }
+    let st = sess.stats();
+    sess.finish();
+
+    assert_eq!(st.admitted, n_adapters as u64);
+    assert_eq!(
+        (st.factored_admits, st.dense_admits),
+        (n_adapters as u64, 0),
+        "distinct tenants must all admit factored under the default cost model"
+    );
+    assert_eq!(generated, n_adapters * 2, "every tenant decodes its budget");
+
+    // residency budget: thetas + any dense reconstructions must fit in
+    // ~4 dense reconstructions' worth of memory. One dense recon is
+    // 2 * layers * h^2 floats (q and v deltas per layer).
+    let dense_bytes = 2 * cfg.layers * cfg.hidden * cfg.hidden * std::mem::size_of::<f32>();
+    assert_eq!(cache.len(), 0, "no adapter should have been densified");
+    assert_eq!(cache.resident_bytes(), 0);
+    let resident = registry.theta_bytes() + cache.resident_bytes();
+    assert!(
+        resident <= 4 * dense_bytes,
+        "256 tenants resident in {resident} bytes exceeds 4 dense recons ({})",
+        4 * dense_bytes
+    );
+}
