@@ -1,15 +1,17 @@
 //! Serving bench: (a) session decode vs the legacy full-forward decode
 //! — tokens/s and time-to-first-token, the PR-5 acceptance numbers —
-//! (b) the adapter-count sweep (1/16/256 distinct adapters, factored
-//! vs dense execution pinned through `SessionOpts`) and (c) router
-//! throughput under single- and mixed-adapter workloads across
-//! worker-pool widths. Kernel threads are pinned to 1 so the
+//! (b) the fused batched decode step vs per-slot stepping at 16-slot
+//! occupancy (the PR-7 acceptance number, plus the paged-K/V residency
+//! peak), (c) the adapter-count sweep (1/16/256 distinct adapters,
+//! factored vs dense execution pinned through `SessionOpts`) and
+//! (d) router throughput under single- and mixed-adapter workloads
+//! across worker-pool widths. Kernel threads are pinned to 1 so the
 //! comparisons isolate the decode algorithm and worker-level
 //! parallelism from intra-op parallelism.
 //!
-//! With `UNI_LORA_BENCH_JSON=1` the decode comparison and the adapter
-//! sweep land in `BENCH_serving.json` at the repo root
-//! (`scripts/bench_snapshot.sh` archives it per commit).
+//! With `UNI_LORA_BENCH_JSON=1` the decode comparison, the fused-step
+//! comparison and the adapter sweep land in `BENCH_serving.json` at
+//! the repo root (`scripts/bench_snapshot.sh` archives it per commit).
 //!
 //! Runs on the default backend (native unless UNI_LORA_BACKEND=pjrt).
 //! Run: cargo bench --bench serving
@@ -42,7 +44,8 @@ fn bench_prompt() -> Vec<i32> {
 }
 
 /// Drive `n_seqs` same-adapter sequences through a session, measuring
-/// wall time, generated tokens and mean time-to-first-token.
+/// wall time, generated tokens, mean time-to-first-token and the peak
+/// of the paged-K/V residency gauge across steps.
 fn drive_session(
     sess: &mut dyn DecodeSession,
     exec: &mut dyn Backend,
@@ -50,13 +53,14 @@ fn drive_session(
     statics: &Arc<Vec<uni_lora::projection::statics::Static>>,
     n_seqs: usize,
     max_new: usize,
-) -> (f64, u64, f64) {
+) -> (f64, u64, f64, u64) {
     let prompt = bench_prompt();
     let t0 = Instant::now();
     let mut admitted = 0usize;
     let mut first_tok_at: Vec<Option<f64>> = vec![None; n_seqs];
     let mut owner: Vec<Option<usize>> = vec![None; sess.slots()];
     let mut generated = 0u64;
+    let mut kv_peak = 0u64;
     while admitted < n_seqs || sess.active() > 0 {
         while sess.free_slots() > 0 && admitted < n_seqs {
             let slot = sess
@@ -67,7 +71,8 @@ fn drive_session(
                     prompt: prompt.clone(),
                     max_new,
                 })
-                .expect("admit");
+                .expect("admit")
+                .slot;
             owner[slot] = Some(admitted);
             admitted += 1;
         }
@@ -86,12 +91,13 @@ fn drive_session(
                 owner[ev.slot] = None;
             }
         }
+        kv_peak = kv_peak.max(sess.stats().kv_bytes_in_flight);
     }
     let wall = t0.elapsed().as_secs_f64();
     let ttfts: Vec<f64> = first_tok_at.into_iter().flatten().collect();
     let mean_ttft =
         if ttfts.is_empty() { 0.0 } else { ttfts.iter().sum::<f64>() / ttfts.len() as f64 };
-    (wall, generated, mean_ttft)
+    (wall, generated, mean_ttft, kv_peak)
 }
 
 /// Acceptance comparison: incremental session decode vs the legacy
@@ -114,7 +120,7 @@ fn decode_comparison() -> anyhow::Result<Vec<Json>> {
         };
         // warmup (reconstruction cache, allocators)
         drive_session(sess.as_mut(), exec.as_mut(), &theta, &statics, 2, 4);
-        let (wall, generated, ttft) =
+        let (wall, generated, ttft, kv_peak) =
             drive_session(sess.as_mut(), exec.as_mut(), &theta, &statics, n_seqs, max_new);
         sess.finish();
         let tps = generated as f64 / wall.max(1e-9);
@@ -128,6 +134,7 @@ fn decode_comparison() -> anyhow::Result<Vec<Json>> {
             ("name", s(&format!("decode/{label}/seqs{n_seqs}/new{max_new}"))),
             ("tokens_per_sec", n(tps)),
             ("mean_ttft_ms", n(1000.0 * ttft)),
+            ("kv_bytes_peak", n(kv_peak as f64)),
             ("generated", n(generated as f64)),
             ("wall_secs", n(wall)),
         ]));
@@ -136,6 +143,56 @@ fn decode_comparison() -> anyhow::Result<Vec<Json>> {
         println!(
             "decode speedup: session is {:.1}x the full-forward tokens/s \
              (acceptance floor: 3x)",
+            recorded[1] / recorded[0].max(1e-9)
+        );
+    }
+    Ok(entries)
+}
+
+/// Fused-step comparison: the batched decode step (all active rows
+/// through one GEMM per layer weight) vs per-slot stepping, on the
+/// same 16-sequence same-adapter workload. The acceptance bar is the
+/// fused row strictly above the per-slot baseline at this occupancy;
+/// the K/V residency peak is identical by construction (pages track
+/// tokens, not the step schedule).
+fn fused_comparison() -> anyhow::Result<Vec<Json>> {
+    let mut exec = uni_lora::runtime::default_backend()?;
+    let meta = exec.meta(ART)?.clone();
+    let w0 = Arc::new(init_base(&meta, 42));
+    let theta = Arc::new(init_theta(&meta.cfg, 7)?);
+    let statics = Arc::new(gen_statics(&meta.cfg, 7)?);
+    let (n_seqs, max_new) = (16usize, 16usize);
+
+    let mut entries = Vec::new();
+    let mut recorded = Vec::new();
+    for (label, fused) in [("per-slot", false), ("fused", true)] {
+        let opts = SessionOpts::with_slots(n_seqs).with_fused_step(fused);
+        let mut sess = exec.begin_decode(ART, w0.clone(), &opts)?;
+        // warmup (reconstruction cache, arena pages, allocators)
+        drive_session(sess.as_mut(), exec.as_mut(), &theta, &statics, 2, 4);
+        let (wall, generated, ttft, kv_peak) =
+            drive_session(sess.as_mut(), exec.as_mut(), &theta, &statics, n_seqs, max_new);
+        sess.finish();
+        let tps = generated as f64 / wall.max(1e-9);
+        println!(
+            "step   {label:<13} {n_seqs} seqs x max_new={max_new}: {generated} tokens \
+             in {wall:.2}s = {tps:.1} tok/s | kv peak {} KiB | mean ttft {:.1}ms",
+            kv_peak / 1024, 1000.0 * ttft
+        );
+        recorded.push(tps);
+        entries.push(obj(vec![
+            ("name", s(&format!("step/{label}/seqs{n_seqs}/new{max_new}"))),
+            ("tokens_per_sec", n(tps)),
+            ("mean_ttft_ms", n(1000.0 * ttft)),
+            ("kv_bytes_peak", n(kv_peak as f64)),
+            ("generated", n(generated as f64)),
+            ("wall_secs", n(wall)),
+        ]));
+    }
+    if recorded.len() == 2 {
+        println!(
+            "fused-step speedup: {:.2}x per-slot tokens/s at {n_seqs}-slot occupancy \
+             (acceptance floor: >1x)",
             recorded[1] / recorded[0].max(1e-9)
         );
     }
@@ -169,6 +226,7 @@ fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
             let t0 = Instant::now();
             let mut admitted = 0usize;
             let mut generated = 0u64;
+            let mut kv_peak = 0u64;
             while admitted < n_reqs || sess.active() > 0 {
                 while sess.free_slots() > 0 && admitted < n_reqs {
                     let a = admitted % n_adapters;
@@ -190,6 +248,7 @@ fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
                         generated += 1;
                     }
                 }
+                kv_peak = kv_peak.max(sess.stats().kv_bytes_in_flight);
             }
             let wall = t0.elapsed().as_secs_f64();
             let st = sess.stats();
@@ -198,8 +257,8 @@ fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
             println!(
                 "sweep {mode:<9} n_adapters={n_adapters:<4} {n_reqs} reqs x \
                  max_new={max_new}: {tps:.1} tok/s | admits f/d \
-                 {}/{} | recon evictions {}",
-                st.factored_admits, st.dense_admits, st.recon_evictions
+                 {}/{} | recon evictions {} | kv peak {} KiB",
+                st.factored_admits, st.dense_admits, st.recon_evictions, kv_peak / 1024
             );
             entries.push(obj(vec![
                 ("name", s(&format!("adapters/{mode}/n{n_adapters}"))),
@@ -208,6 +267,7 @@ fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
                 ("factored_admits", n(st.factored_admits as f64)),
                 ("dense_admits", n(st.dense_admits as f64)),
                 ("recon_evictions", n(st.recon_evictions as f64)),
+                ("kv_bytes_peak", n(kv_peak as f64)),
             ]));
         }
     }
@@ -296,6 +356,11 @@ fn main() -> anyhow::Result<()> {
     let entries = decode_comparison()?;
     if let Some(path) = bench::write_named_json_report("serving", "decode", entries)? {
         println!("recorded decode trajectory -> {}", path.display());
+    }
+
+    let fused_entries = fused_comparison()?;
+    if let Some(path) = bench::write_named_json_report("serving", "fused_step", fused_entries)? {
+        println!("recorded fused-step comparison -> {}", path.display());
     }
 
     let sweep_entries = adapter_sweep()?;

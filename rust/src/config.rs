@@ -232,7 +232,24 @@ pub struct RuntimeOpts {
     /// rank-r path. `1` = always densify (the legacy behavior); a huge
     /// value = always factored.
     pub dense_threshold: usize,
+    /// K/V arena token budget, in pages of [`KV_PAGE_TOKENS`]
+    /// positions (`UNI_LORA_KV_PAGES`; 0 = auto: the per-slot
+    /// worst case `slots * ceil(seq / KV_PAGE_TOKENS)`, i.e. exactly
+    /// the capacity the old per-slot preallocation guaranteed).
+    pub kv_pages: usize,
+    /// Fused batched decode step (`UNI_LORA_FUSED_STEP`; default on).
+    /// Scheduling-only: the fused step is bit-equal per kernel tier to
+    /// per-slot stepping, so the knob exists for A/B benching and
+    /// bisection, not correctness.
+    pub fused_step: bool,
 }
+
+/// Positions per K/V arena page. One page holds every layer's keys and
+/// values for this many consecutive positions
+/// (`layers * 2 * KV_PAGE_TOKENS * hidden` floats). 16 keeps partial-
+/// page waste under one-quarter of the `lm` window while page tables
+/// stay a handful of entries.
+pub const KV_PAGE_TOKENS: usize = 16;
 
 /// Default adapter-reconstruction cache capacity. Reconstructions are
 /// `2 * layers * hidden^2` floats each (~512 KiB on the `lm` shape),
@@ -261,6 +278,8 @@ impl RuntimeOpts {
             dense_threshold: parse_dense_threshold(
                 std::env::var("UNI_LORA_DENSE_THRESHOLD").ok().as_deref(),
             ),
+            kv_pages: parse_kv_pages(std::env::var("UNI_LORA_KV_PAGES").ok().as_deref()),
+            fused_step: parse_fused_step(std::env::var("UNI_LORA_FUSED_STEP").ok().as_deref()),
         }
     }
 }
@@ -322,6 +341,25 @@ pub fn parse_dense_threshold(raw: Option<&str>) -> usize {
     raw.and_then(|s| s.trim().parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(DEFAULT_DENSE_THRESHOLD)
+}
+
+/// `UNI_LORA_KV_PAGES` parsing: a positive integer wins; anything else
+/// (unset, garbage, 0) is 0 = auto — sessions reserve the per-slot
+/// worst case, so paging is opt-out-safe: the default budget admits
+/// exactly what per-slot preallocation admitted.
+pub fn parse_kv_pages(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(0)
+}
+
+/// `UNI_LORA_FUSED_STEP` parsing: `0|false|off|no` disables the fused
+/// batched decode step; everything else (unset, `1`, garbage) keeps it
+/// on. Scheduling-only — fused and per-slot stepping are bit-equal per
+/// kernel tier — so garbage safely takes the default.
+pub fn parse_fused_step(raw: Option<&str>) -> bool {
+    !matches!(
+        raw.map(|s| s.trim().to_ascii_lowercase()).as_deref(),
+        Some("0") | Some("false") | Some("off") | Some("no")
+    )
 }
 
 #[cfg(test)]
@@ -405,6 +443,19 @@ mod tests {
         assert_eq!(parse_dense_threshold(Some("0")), DEFAULT_DENSE_THRESHOLD);
         assert_eq!(parse_dense_threshold(Some("never")), DEFAULT_DENSE_THRESHOLD);
         assert_eq!(parse_dense_threshold(None), DEFAULT_DENSE_THRESHOLD);
+        assert_eq!(parse_kv_pages(Some("128")), 128);
+        assert_eq!(parse_kv_pages(Some(" 7 ")), 7);
+        assert_eq!(parse_kv_pages(Some("0")), 0);
+        assert_eq!(parse_kv_pages(Some("unlimited")), 0);
+        assert_eq!(parse_kv_pages(None), 0);
+        assert!(parse_fused_step(None));
+        assert!(parse_fused_step(Some("1")));
+        assert!(parse_fused_step(Some("yes")));
+        assert!(parse_fused_step(Some("garbage")));
+        assert!(!parse_fused_step(Some("0")));
+        assert!(!parse_fused_step(Some(" OFF ")));
+        assert!(!parse_fused_step(Some("false")));
+        assert!(!parse_fused_step(Some("no")));
         // from_env stays total (tests must not mutate the env)
         let o = RuntimeOpts::from_env();
         assert!(o.recon_cache >= 1);

@@ -1,0 +1,393 @@
+//! Block-paged K/V arena: the session-owned replacement for per-slot
+//! `layers * 2 * seq * hidden` K/V preallocation.
+//!
+//! One *page* holds every layer's keys AND values for
+//! [`crate::config::KV_PAGE_TOKENS`] consecutive positions, so a slot's
+//! K/V state is a short page table instead of a pair of full-window
+//! buffers. Pages are physical `Vec<f32>` blocks allocated lazily the
+//! first time a position inside them is written, recycled through a
+//! free list when a slot retires, and never handed to two slots at
+//! once. Idle slots hold zero pages; a slot mid-decode holds exactly
+//! `ceil(len / page_tokens)` pages — resident bytes track tokens
+//! actually in flight, not worst-case windows.
+//!
+//! Admission becomes a *token budget*: [`KvArena::reserve`] accounts
+//! (in page units) for the worst case a sequence can ever need —
+//! `min(seq, prompt + max_new)` positions — and fails with the typed
+//! [`KvBudgetExhausted`] error when the budget cannot cover it.
+//! Reserving up front means a mid-decode `grow` can never fail: every
+//! page a live slot will touch is already promised to it, so the
+//! decode hot path stays infallible and the router can treat budget
+//! exhaustion as a retryable admission condition (capacity frees when
+//! slots retire), distinct from malformed-request errors.
+//!
+//! Numerics: the arena only changes WHERE K/V rows live, never their
+//! values or the order attention reads them (positions ascend within
+//! and across pages), so paged decode is bit-identical to the flat
+//! cache on every kernel tier. Recycled pages are handed out dirty on
+//! purpose — causal attention at position `p` reads only rows
+//! `0..=p`, all written during the owning slot's lifetime.
+
+use crate::config::{ModelCfg, KV_PAGE_TOKENS};
+use anyhow::{ensure, Result};
+
+/// Typed admission failure: the arena's token budget cannot cover a
+/// reservation. Carries the page accounting so callers (the router)
+/// can tell a transient condition (`needed_pages <= budget_pages`:
+/// retry once slots retire) from an impossible one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvBudgetExhausted {
+    /// pages the admission needs reserved
+    pub needed_pages: usize,
+    /// pages not currently reserved by live slots
+    pub free_pages: usize,
+    /// total pages the arena may ever hand out
+    pub budget_pages: usize,
+}
+
+impl std::fmt::Display for KvBudgetExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kv token budget exhausted: admission needs {} pages, {} of {} free",
+            self.needed_pages, self.free_pages, self.budget_pages
+        )
+    }
+}
+
+impl std::error::Error for KvBudgetExhausted {}
+
+/// One sequence's view into the arena: a page table plus the same
+/// `len`/`cap` cursor the flat cache kept. Created by
+/// [`KvArena::reserve`], returned to the arena by [`KvArena::release`]
+/// (dropping a slot without releasing it leaks its reservation — the
+/// session owns that pairing, and the churn fuzz test enforces it).
+#[derive(Debug, Default)]
+pub struct KvSlot {
+    /// physical page index per logical page, in position order;
+    /// grows lazily via [`KvArena::grow`]
+    page_ids: Vec<usize>,
+    /// pages promised at reservation time (page table never outgrows this)
+    reserved_pages: usize,
+    /// positions already processed
+    pub len: usize,
+    /// reserved position capacity (`incr_forward`'s overflow bound)
+    pub cap: usize,
+}
+
+/// Session-owned paged K/V storage shared by every decode slot.
+pub struct KvArena {
+    layers: usize,
+    hidden: usize,
+    /// f32 length of one physical page:
+    /// `layers * 2 * KV_PAGE_TOKENS * hidden`
+    page_floats: usize,
+    budget_pages: usize,
+    /// physical pages; allocated on first use, kept for reuse after
+    pages: Vec<Vec<f32>>,
+    /// recycled physical page indices available for reuse
+    free: Vec<usize>,
+    /// pages currently reserved by live slots (incl. unmaterialized)
+    reserved: usize,
+    /// physical pages currently held by live slots
+    held: usize,
+    /// pages recycled over the arena's lifetime (slot retirements)
+    churn: u64,
+}
+
+/// Pages needed to hold `tokens` positions.
+pub fn pages_for_tokens(tokens: usize) -> usize {
+    tokens.div_ceil(KV_PAGE_TOKENS)
+}
+
+impl KvArena {
+    /// An arena with a hard budget of `budget_pages` pages (0 is
+    /// clamped to 1 so a session can always hold one page). See
+    /// `SessionOpts::resolve_kv_pages` for the `UNI_LORA_KV_PAGES`
+    /// knob and the worst-case default.
+    pub fn new(cfg: &ModelCfg, budget_pages: usize) -> KvArena {
+        KvArena {
+            layers: cfg.layers,
+            hidden: cfg.hidden,
+            page_floats: cfg.layers * 2 * KV_PAGE_TOKENS * cfg.hidden,
+            budget_pages: budget_pages.max(1),
+            pages: Vec::new(),
+            free: Vec::new(),
+            reserved: 0,
+            held: 0,
+            churn: 0,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn budget_pages(&self) -> usize {
+        self.budget_pages
+    }
+
+    /// Pages not reserved by any live slot.
+    pub fn free_pages(&self) -> usize {
+        self.budget_pages - self.reserved
+    }
+
+    /// Pages reserved by live slots (materialized or not).
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved
+    }
+
+    /// Physical pages currently held by live slots.
+    pub fn used_pages(&self) -> usize {
+        self.held
+    }
+
+    /// Bytes held by live slots — actual tokens in flight rounded up
+    /// to page granularity, NOT reserved capacity.
+    pub fn bytes_in_flight(&self) -> usize {
+        self.held * self.page_floats * std::mem::size_of::<f32>()
+    }
+
+    /// Pages recycled over the arena's lifetime.
+    pub fn page_churn(&self) -> u64 {
+        self.churn
+    }
+
+    /// Reserve capacity for a sequence that will occupy at most
+    /// `tokens` positions. `tokens == 0` (stillborn admissions) holds
+    /// nothing and always succeeds.
+    pub fn reserve(&mut self, tokens: usize) -> Result<KvSlot, KvBudgetExhausted> {
+        let needed = pages_for_tokens(tokens);
+        if self.reserved + needed > self.budget_pages {
+            return Err(KvBudgetExhausted {
+                needed_pages: needed,
+                free_pages: self.free_pages(),
+                budget_pages: self.budget_pages,
+            });
+        }
+        self.reserved += needed;
+        Ok(KvSlot { page_ids: Vec::new(), reserved_pages: needed, len: 0, cap: tokens })
+    }
+
+    /// Return a slot's pages to the free list and drop its
+    /// reservation. Idempotent: a released slot holds nothing.
+    pub fn release(&mut self, slot: &mut KvSlot) {
+        let recycled = slot.page_ids.len();
+        for pid in slot.page_ids.drain(..) {
+            self.free.push(pid);
+        }
+        self.held -= recycled;
+        self.churn += recycled as u64;
+        self.reserved -= slot.reserved_pages;
+        slot.reserved_pages = 0;
+        slot.len = 0;
+        slot.cap = 0;
+    }
+
+    /// Materialize pages so positions `0..new_len` are addressable.
+    /// Infallible within the slot's reservation (the point of
+    /// reserving at admission); exceeding it is a caller bug.
+    pub fn grow(&mut self, slot: &mut KvSlot, new_len: usize) -> Result<()> {
+        let need = pages_for_tokens(new_len);
+        ensure!(
+            need <= slot.reserved_pages,
+            "kv arena grow past reservation: {new_len} positions need {need} pages, \
+             slot reserved {}",
+            slot.reserved_pages
+        );
+        while slot.page_ids.len() < need {
+            let pid = match self.free.pop() {
+                // recycled pages are reused dirty (see module docs)
+                Some(pid) => pid,
+                None => {
+                    self.pages.push(vec![0f32; self.page_floats]);
+                    self.pages.len() - 1
+                }
+            };
+            slot.page_ids.push(pid);
+            self.held += 1;
+        }
+        Ok(())
+    }
+
+    /// Flat offset of row (layer `l`, k/v select `sel`, position
+    /// `pos`) inside its page. Consecutive positions within a page are
+    /// contiguous per (layer, k/v) so attention walks mostly-linear
+    /// memory.
+    #[inline]
+    fn row_at(&self, slot: &KvSlot, l: usize, sel: usize, pos: usize) -> (usize, usize) {
+        let pid = slot.page_ids[pos / KV_PAGE_TOKENS];
+        let off = ((l * 2 + sel) * KV_PAGE_TOKENS + pos % KV_PAGE_TOKENS) * self.hidden;
+        (pid, off)
+    }
+
+    #[inline]
+    pub fn k_row(&self, slot: &KvSlot, l: usize, pos: usize) -> &[f32] {
+        let (pid, off) = self.row_at(slot, l, 0, pos);
+        &self.pages[pid][off..off + self.hidden]
+    }
+
+    #[inline]
+    pub fn v_row(&self, slot: &KvSlot, l: usize, pos: usize) -> &[f32] {
+        let (pid, off) = self.row_at(slot, l, 1, pos);
+        &self.pages[pid][off..off + self.hidden]
+    }
+
+    #[inline]
+    pub fn k_row_mut(&mut self, slot: &KvSlot, l: usize, pos: usize) -> &mut [f32] {
+        let (pid, off) = self.row_at(slot, l, 0, pos);
+        &mut self.pages[pid][off..off + self.hidden]
+    }
+
+    #[inline]
+    pub fn v_row_mut(&mut self, slot: &KvSlot, l: usize, pos: usize) -> &mut [f32] {
+        let (pid, off) = self.row_at(slot, l, 1, pos);
+        &mut self.pages[pid][off..off + self.hidden]
+    }
+}
+
+/// Single-sequence convenience over the arena — the shape
+/// `incr_forward` and the model-level tests use: one private arena
+/// with a full-window reservation, so standalone incremental decode
+/// needs no session. `byte_size` reports pages actually materialized,
+/// not the reservation.
+pub struct KvCache {
+    pub arena: KvArena,
+    pub slot: KvSlot,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelCfg) -> KvCache {
+        let mut arena = KvArena::new(cfg, pages_for_tokens(cfg.seq));
+        let slot = arena.reserve(cfg.seq).expect("full-window reservation fits its own budget");
+        KvCache { arena, slot }
+    }
+
+    /// Positions already processed.
+    pub fn len(&self) -> usize {
+        self.slot.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slot.len == 0
+    }
+
+    /// Resident bytes: pages this cache has materialized — zero until
+    /// the first prefill writes a position.
+    pub fn byte_size(&self) -> usize {
+        self.arena.bytes_in_flight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelCfg {
+        let mut c = ModelCfg::test_base("uni");
+        c.layers = 2;
+        c.hidden = 8;
+        c.seq = 3 * KV_PAGE_TOKENS + 5; // spans whole and partial pages
+        c
+    }
+
+    #[test]
+    fn reservation_accounting_and_exact_exhaustion() {
+        let c = cfg();
+        let mut a = KvArena::new(&c, 4);
+        assert_eq!((a.budget_pages(), a.free_pages(), a.used_pages()), (4, 4, 0));
+
+        // stillborn reservations hold nothing and always fit
+        let mut zero = a.reserve(0).unwrap();
+        assert_eq!((zero.cap, a.reserved_pages()), (0, 0));
+
+        let mut s1 = a.reserve(KV_PAGE_TOKENS + 1).unwrap(); // 2 pages
+        let mut s2 = a.reserve(2 * KV_PAGE_TOKENS).unwrap(); // 2 pages
+        assert_eq!((a.reserved_pages(), a.free_pages()), (4, 0));
+        // budget exhausted EXACTLY here: one more token needs a page
+        let err = a.reserve(1).unwrap_err();
+        assert_eq!(err, KvBudgetExhausted { needed_pages: 1, free_pages: 0, budget_pages: 4 });
+        assert!(err.to_string().contains("kv token budget exhausted"), "{err}");
+
+        // nothing is materialized until grow; bytes track used pages
+        assert_eq!((a.used_pages(), a.bytes_in_flight()), (0, 0));
+        a.grow(&mut s1, 1).unwrap();
+        let page_bytes = c.layers * 2 * KV_PAGE_TOKENS * c.hidden * 4;
+        assert_eq!((a.used_pages(), a.bytes_in_flight()), (1, page_bytes));
+        // growing within the same page allocates nothing new
+        a.grow(&mut s1, KV_PAGE_TOKENS).unwrap();
+        assert_eq!(a.used_pages(), 1);
+        a.grow(&mut s1, KV_PAGE_TOKENS + 1).unwrap();
+        assert_eq!(a.used_pages(), 2);
+        // growing past the reservation is a caller bug, not a budget miss
+        assert!(a.grow(&mut s1, 2 * KV_PAGE_TOKENS + 1).is_err());
+
+        // release returns capacity and counts churn
+        a.release(&mut s1);
+        assert_eq!((a.reserved_pages(), a.used_pages(), a.page_churn()), (2, 0, 2));
+        a.release(&mut s2);
+        a.release(&mut zero);
+        assert_eq!((a.reserved_pages(), a.free_pages(), a.page_churn()), (0, 4, 2));
+        // released slots are inert: releasing again changes nothing
+        a.release(&mut s1);
+        assert_eq!((a.reserved_pages(), a.page_churn()), (0, 2));
+    }
+
+    #[test]
+    fn pages_are_recycled_not_reallocated() {
+        let c = cfg();
+        let mut a = KvArena::new(&c, 2);
+        let mut s = a.reserve(KV_PAGE_TOKENS).unwrap();
+        a.grow(&mut s, KV_PAGE_TOKENS).unwrap();
+        assert_eq!(a.pages.len(), 1);
+        a.release(&mut s);
+        // the next slot reuses the physical page instead of growing the pool
+        let mut s2 = a.reserve(KV_PAGE_TOKENS).unwrap();
+        a.grow(&mut s2, 1).unwrap();
+        assert_eq!((a.pages.len(), a.used_pages()), (1, 1));
+        a.release(&mut s2);
+        assert_eq!(a.page_churn(), 2);
+    }
+
+    #[test]
+    fn rows_roundtrip_across_page_boundaries() {
+        let c = cfg();
+        let mut a = KvArena::new(&c, pages_for_tokens(c.seq));
+        let mut s = a.reserve(c.seq).unwrap();
+        a.grow(&mut s, c.seq).unwrap();
+        // write a distinct signature into every (layer, k/v, pos) row
+        for l in 0..c.layers {
+            for pos in 0..c.seq {
+                let kv = (1000 * l + pos) as f32;
+                a.k_row_mut(&s, l, pos).fill(kv);
+                a.v_row_mut(&s, l, pos).fill(-kv - 1.0);
+            }
+        }
+        // reads see exactly what was written — no row aliases another,
+        // including across the page boundary at pos = KV_PAGE_TOKENS
+        for l in 0..c.layers {
+            for pos in 0..c.seq {
+                let kv = (1000 * l + pos) as f32;
+                assert!(a.k_row(&s, l, pos).iter().all(|&x| x == kv), "k l={l} pos={pos}");
+                assert!(a.v_row(&s, l, pos).iter().all(|&x| x == -kv - 1.0), "v l={l} pos={pos}");
+                assert_eq!(a.k_row(&s, l, pos).len(), c.hidden);
+            }
+        }
+        a.release(&mut s);
+    }
+
+    #[test]
+    fn kv_cache_wrapper_reports_used_pages_only() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        // a fresh cache reserves the window but materializes nothing
+        assert_eq!(kv.byte_size(), 0);
+        assert!(kv.is_empty());
+        kv.arena.grow(&mut kv.slot, 1).unwrap();
+        let page_bytes = c.layers * 2 * KV_PAGE_TOKENS * c.hidden * 4;
+        assert_eq!(kv.byte_size(), page_bytes);
+        // a full window is still bounded by the page-rounded seq
+        kv.arena.grow(&mut kv.slot, c.seq).unwrap();
+        assert_eq!(kv.byte_size(), pages_for_tokens(c.seq) * page_bytes);
+    }
+}

@@ -20,6 +20,7 @@
 //! backend's reproducibility guarantees hold for each tier; switching
 //! tiers changes results only within the documented ULP tolerance.
 
+pub mod kv_arena;
 pub mod model;
 
 use super::artifact::ArtifactMeta;

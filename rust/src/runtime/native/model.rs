@@ -637,34 +637,10 @@ fn apply_factored(
     gemm_nn(&t, b, y, n, r, h, true);
 }
 
-/// Per-sequence decode state: one K and one V buffer per layer, laid
-/// out `[seq, h]` row-major; positions `0..len` hold processed
-/// keys/values.
-pub struct KvCache {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    /// positions already processed
-    pub len: usize,
-    cap: usize,
-}
-
-impl KvCache {
-    pub fn new(cfg: &ModelCfg) -> KvCache {
-        let n = cfg.seq * cfg.hidden;
-        KvCache {
-            k: (0..cfg.layers).map(|_| vec![0f32; n]).collect(),
-            v: (0..cfg.layers).map(|_| vec![0f32; n]).collect(),
-            len: 0,
-            cap: cfg.seq,
-        }
-    }
-
-    /// Resident bytes (per-slot footprint accounting).
-    pub fn byte_size(&self) -> usize {
-        let n: usize = self.k.iter().chain(&self.v).map(|b| b.len()).sum();
-        n * std::mem::size_of::<f32>()
-    }
-}
+// Per-sequence decode state lives in the block-paged arena now; the
+// single-slot `KvCache` convenience and the session-shared `KvArena`
+// are re-exported so existing call sites keep their import paths.
+pub use super::kv_arena::{KvArena, KvBudgetExhausted, KvCache, KvSlot};
 
 /// Incremental backbone forward for ONE sequence: process `toks` at
 /// absolute positions `kv.len .. kv.len + toks.len()`, append their
@@ -692,6 +668,22 @@ pub fn incr_forward(
     kv: &mut KvCache,
     toks: &[i32],
 ) -> Result<Vec<f32>> {
+    let KvCache { arena, slot } = kv;
+    incr_forward_slot(cfg, base, w, arena, slot, toks)
+}
+
+/// [`incr_forward`] against a session-shared [`KvArena`]: the slot's
+/// K/V rows live in arena pages instead of private buffers. Same
+/// numerics row for row — the arena changes where rows are stored,
+/// never their values or read order.
+pub fn incr_forward_slot(
+    cfg: &ModelCfg,
+    base: &BaseMap,
+    w: &AdapterExec,
+    arena: &mut KvArena,
+    kv: &mut KvSlot,
+    toks: &[i32],
+) -> Result<Vec<f32>> {
     let (h, f, nh) = (cfg.hidden, cfg.ffn, cfg.heads);
     let hd = cfg.head_dim();
     let scale = 1.0 / (hd as f32).sqrt();
@@ -699,7 +691,13 @@ pub fn incr_forward(
     let start = kv.len;
     let n = toks.len();
     ensure!(n > 0, "incr_forward: empty token slice");
-    ensure!(kv.k.len() == cfg.layers, "kv cache has {} layers, want {}", kv.k.len(), cfg.layers);
+    ensure!(
+        arena.layers() == cfg.layers,
+        "kv arena has {} layers, want {}",
+        arena.layers(),
+        cfg.layers
+    );
+    ensure!(kv.cap <= cfg.seq, "kv reservation {} exceeds window {}", kv.cap, cfg.seq);
     ensure!(
         start + n <= kv.cap,
         "kv cache overflow: {start} processed + {n} new > window {}",
@@ -713,6 +711,8 @@ pub fn incr_forward(
             ensure!(fw.q.len() == cfg.layers, "factored weights have {} layers", fw.q.len())
         }
     }
+    // materialize pages up front so the layer loop never allocates
+    arena.grow(kv, start + n)?;
 
     // embeddings at the absolute positions
     let fixed = *base.fixed();
@@ -746,11 +746,10 @@ pub fn incr_forward(
                 apply_factored(&x2, &fw.q[l], fw.scale, fw.rank, &mut q, n, h);
             }
         }
-        // new keys/values land directly in the cache rows
+        // new keys/values land directly in the slot's arena pages
         {
             let mut knew = vec![0f32; n * h];
             gemm_nn(&x2, base.at(segs.wk), &mut knew, n, h, h, false);
-            kv.k[l][start * h..(start + n) * h].copy_from_slice(&knew);
             let mut vnew = vec![0f32; n * h];
             match w {
                 AdapterExec::Dense(aw) => gemm_nn(&x2, &aw.wv[l], &mut vnew, n, h, h, false),
@@ -759,25 +758,27 @@ pub fn incr_forward(
                     apply_factored(&x2, &fw.v[l], fw.scale, fw.rank, &mut vnew, n, h);
                 }
             }
-            kv.v[l][start * h..(start + n) * h].copy_from_slice(&vnew);
+            for i in 0..n {
+                arena.k_row_mut(kv, l, start + i).copy_from_slice(&knew[i * h..(i + 1) * h]);
+                arena.v_row_mut(kv, l, start + i).copy_from_slice(&vnew[i * h..(i + 1) * h]);
+            }
         }
-        let kbuf = &kv.k[l];
-        let vbuf = &kv.v[l];
         // causal attention: query at absolute position start+i over
         // cached keys 0..=start+i — the same expression order as
         // `attention` (running max, exp pass, weighted accumulate)
         let mut att_out = vec![0f32; n * h];
-        let mut sc = vec![0f32; kv.cap];
+        let mut sc = vec![0f32; start + n];
         for head in 0..nh {
             for i in 0..n {
                 let p = start + i;
                 let qo = i * h + head * hd;
+                let ko = head * hd;
                 let mut mx = f32::NEG_INFINITY;
                 for j in 0..=p {
-                    let ko = j * h + head * hd;
+                    let krow = arena.k_row(kv, l, j);
                     let mut dot = 0f32;
                     for dd in 0..hd {
-                        dot += q[qo + dd] * kbuf[ko + dd];
+                        dot += q[qo + dd] * krow[ko + dd];
                     }
                     sc[j] = dot * scale;
                     if sc[j] > mx {
@@ -792,9 +793,9 @@ pub fn incr_forward(
                 let orow = &mut att_out[qo..qo + hd];
                 for j in 0..=p {
                     let wj = sc[j] / denom;
-                    let vo = j * h + head * hd;
+                    let vrow = arena.v_row(kv, l, j);
                     for dd in 0..hd {
-                        orow[dd] += wj * vbuf[vo + dd];
+                        orow[dd] += wj * vrow[ko + dd];
                     }
                 }
             }
@@ -831,6 +832,279 @@ pub fn lm_logits_row(cfg: &ModelCfg, base: &BaseMap, hidden_row: &[f32]) -> Vec<
     let head = base.at(base.fixed().lm_head);
     gemm_nn(hidden_row, head, &mut logits, 1, cfg.hidden, cfg.vocab, false);
     logits
+}
+
+/// Next-token logits for `m` stacked hidden rows: one `[m, vocab]`
+/// GEMM against the shared lm head. Per-row results are bit-equal to
+/// [`lm_logits_row`] on every tier (per-element k-ascending
+/// accumulation is row-count invariant).
+pub fn lm_logits_batch(cfg: &ModelCfg, base: &BaseMap, hidden: &[f32], m: usize) -> Vec<f32> {
+    let mut logits = vec![0f32; m * cfg.vocab];
+    let head = base.at(base.fixed().lm_head);
+    gemm_nn(hidden, head, &mut logits, m, cfg.hidden, cfg.vocab, false);
+    logits
+}
+
+/// One sequence's contribution to a fused decode step: its execution
+/// form, its arena slot, and the single token to feed at position
+/// `kv.len`.
+pub struct BatchEntry<'a> {
+    pub exec: &'a AdapterExec,
+    pub kv: &'a mut KvSlot,
+    pub tok: i32,
+}
+
+/// GEMM over a subset of a batch's rows: gather `rows` of `x`
+/// (`[m, k]` row-major), multiply by `wmat` (`[k, nout]`), scatter the
+/// products back into the same rows of `out`. Per-row results are
+/// bit-equal to the all-rows GEMM — per-element k-ascending
+/// accumulation does not depend on how many rows share the call — so
+/// grouping rows by adapter never changes numerics. The all-rows case
+/// skips the gather/scatter copies.
+fn gemm_rows(
+    x: &[f32],
+    wmat: &[f32],
+    out: &mut [f32],
+    rows: &[usize],
+    m: usize,
+    k: usize,
+    nout: usize,
+) {
+    if rows.len() == m {
+        gemm_nn(x, wmat, out, m, k, nout, false);
+        return;
+    }
+    if rows.is_empty() {
+        return;
+    }
+    let g = rows.len();
+    let mut xg = vec![0f32; g * k];
+    for (gi, &ri) in rows.iter().enumerate() {
+        xg[gi * k..(gi + 1) * k].copy_from_slice(&x[ri * k..(ri + 1) * k]);
+    }
+    let mut og = vec![0f32; g * nout];
+    gemm_nn(&xg, wmat, &mut og, g, k, nout, false);
+    for (gi, &ri) in rows.iter().enumerate() {
+        out[ri * nout..(ri + 1) * nout].copy_from_slice(&og[gi * nout..(gi + 1) * nout]);
+    }
+}
+
+/// Fused decode step: advance `m` sequences by ONE position each with
+/// one `[m, h]` GEMM per layer weight instead of `m` row-sized GEMVs —
+/// the layer weights (the dominant memory traffic of a decode step)
+/// are read once per step, not once per slot.
+///
+/// Heterogeneous adapters batch naturally: every row shares the frozen
+/// base `W0` GEMMs (wk/wo/w1/w2 unconditionally; wq/wv for factored
+/// rows, which then add their private rank-r `scale·B(Aᵀx)` update per
+/// row), while dense-exec rows group by reconstruction identity (the
+/// shared `Arc` from the `ReconCache`) and run one grouped GEMM per
+/// distinct adapter. Attention stays per-slot over that slot's page
+/// list. Returns the `[m, h]` final-layer-norm hidden rows in entry
+/// order.
+///
+/// Parity contract: every op is per-row (LN, GELU, residuals) or a
+/// GEMM whose per-element k-ascending accumulation is row-count
+/// invariant, and the attention expressions are shared with
+/// [`incr_forward_slot`] verbatim — so row `i` here is bit-identical,
+/// per kernel tier, to stepping entry `i` alone. The fused step can
+/// therefore never change a token stream.
+pub fn incr_forward_batch(
+    cfg: &ModelCfg,
+    base: &BaseMap,
+    arena: &mut KvArena,
+    entries: &mut [BatchEntry],
+) -> Result<Vec<f32>> {
+    let (h, f, nh) = (cfg.hidden, cfg.ffn, cfg.heads);
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let kops = dispatch::ops();
+    let m = entries.len();
+    ensure!(m > 0, "incr_forward_batch: no entries");
+    ensure!(
+        arena.layers() == cfg.layers,
+        "kv arena has {} layers, want {}",
+        arena.layers(),
+        cfg.layers
+    );
+    for e in entries.iter() {
+        ensure!(e.kv.cap <= cfg.seq, "kv reservation {} exceeds window {}", e.kv.cap, cfg.seq);
+        ensure!(
+            e.kv.len + 1 <= e.kv.cap,
+            "kv cache overflow: {} processed + 1 new > window {}",
+            e.kv.len,
+            e.kv.cap
+        );
+        let tok = e.tok;
+        ensure!(
+            tok >= 0 && (tok as usize) < cfg.vocab,
+            "token id {tok} out of range for vocab {}",
+            cfg.vocab
+        );
+        match e.exec {
+            AdapterExec::Dense(aw) => {
+                ensure!(aw.wq.len() == cfg.layers, "adapted weights have {} layers", aw.wq.len())
+            }
+            AdapterExec::Factored(fw) => {
+                ensure!(fw.q.len() == cfg.layers, "factored weights have {} layers", fw.q.len())
+            }
+        }
+    }
+    // materialize pages up front so the layer loop never allocates
+    for e in entries.iter_mut() {
+        let upto = e.kv.len + 1;
+        arena.grow(e.kv, upto)?;
+    }
+
+    // row partition, built once: factored rows all share the base
+    // wq/wv GEMM; dense rows group by reconstruction identity
+    let mut factored_rows: Vec<usize> = Vec::new();
+    let mut dense_groups: Vec<(*const AdaptedWeights, Vec<usize>)> = Vec::new();
+    for (ri, e) in entries.iter().enumerate() {
+        match e.exec {
+            AdapterExec::Factored(_) => factored_rows.push(ri),
+            AdapterExec::Dense(aw) => {
+                let key = Arc::as_ptr(aw);
+                match dense_groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, rows)) => rows.push(ri),
+                    None => dense_groups.push((key, vec![ri])),
+                }
+            }
+        }
+    }
+
+    // embeddings: each row at its own absolute position
+    let fixed = *base.fixed();
+    let tok_emb = base.at(fixed.tok_emb);
+    let pos_emb = base.at(fixed.pos_emb);
+    let mut x = vec![0f32; m * h];
+    for (i, e) in entries.iter().enumerate() {
+        let (tok, pos) = (e.tok as usize, e.kv.len);
+        let te = &tok_emb[tok * h..(tok + 1) * h];
+        let pe = &pos_emb[pos * h..(pos + 1) * h];
+        let xr = &mut x[i * h..(i + 1) * h];
+        for j in 0..h {
+            xr[j] = te[j] + pe[j];
+        }
+    }
+
+    for l in 0..cfg.layers {
+        let segs = *base.layer(l);
+        let (x2, _) = layer_norm(&x, base.at(segs.ln1_g), base.at(segs.ln1_b), m, h);
+        // adapted q projection: factored rows share the base GEMM and
+        // add their rank-r update per row (n = 1 keeps the exact
+        // per-slot float order); dense rows run one GEMM per group
+        let mut q = vec![0f32; m * h];
+        gemm_rows(&x2, base.at(segs.wq), &mut q, &factored_rows, m, h, h);
+        for &ri in &factored_rows {
+            if let AdapterExec::Factored(fw) = entries[ri].exec {
+                apply_factored(
+                    &x2[ri * h..(ri + 1) * h],
+                    &fw.q[l],
+                    fw.scale,
+                    fw.rank,
+                    &mut q[ri * h..(ri + 1) * h],
+                    1,
+                    h,
+                );
+            }
+        }
+        for (_, rows) in &dense_groups {
+            if let AdapterExec::Dense(aw) = entries[rows[0]].exec {
+                gemm_rows(&x2, &aw.wq[l], &mut q, rows, m, h, h);
+            }
+        }
+        // keys: every row shares the frozen base wk
+        let mut knew = vec![0f32; m * h];
+        gemm_nn(&x2, base.at(segs.wk), &mut knew, m, h, h, false);
+        // values: same adapter split as q
+        let mut vnew = vec![0f32; m * h];
+        gemm_rows(&x2, base.at(segs.wv), &mut vnew, &factored_rows, m, h, h);
+        for &ri in &factored_rows {
+            if let AdapterExec::Factored(fw) = entries[ri].exec {
+                apply_factored(
+                    &x2[ri * h..(ri + 1) * h],
+                    &fw.v[l],
+                    fw.scale,
+                    fw.rank,
+                    &mut vnew[ri * h..(ri + 1) * h],
+                    1,
+                    h,
+                );
+            }
+        }
+        for (_, rows) in &dense_groups {
+            if let AdapterExec::Dense(aw) = entries[rows[0]].exec {
+                gemm_rows(&x2, &aw.wv[l], &mut vnew, rows, m, h, h);
+            }
+        }
+        // new keys/values land in each slot's arena pages
+        for (i, e) in entries.iter().enumerate() {
+            arena.k_row_mut(e.kv, l, e.kv.len).copy_from_slice(&knew[i * h..(i + 1) * h]);
+            arena.v_row_mut(e.kv, l, e.kv.len).copy_from_slice(&vnew[i * h..(i + 1) * h]);
+        }
+        // attention stays per-slot: each row attends over its own
+        // slot's cached positions — the same expression order as
+        // `incr_forward_slot` (running max, exp pass, accumulate)
+        let mut att_out = vec![0f32; m * h];
+        let max_pos = entries.iter().map(|e| e.kv.len + 1).max().unwrap_or(1);
+        let mut sc = vec![0f32; max_pos];
+        for head in 0..nh {
+            for (i, e) in entries.iter().enumerate() {
+                let p = e.kv.len;
+                let qo = i * h + head * hd;
+                let ko = head * hd;
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..=p {
+                    let krow = arena.k_row(e.kv, l, j);
+                    let mut dot = 0f32;
+                    for dd in 0..hd {
+                        dot += q[qo + dd] * krow[ko + dd];
+                    }
+                    sc[j] = dot * scale;
+                    if sc[j] > mx {
+                        mx = sc[j];
+                    }
+                }
+                let mut denom = 0f32;
+                for j in 0..=p {
+                    sc[j] = (sc[j] - mx).exp();
+                    denom += sc[j];
+                }
+                let orow = &mut att_out[qo..qo + hd];
+                for j in 0..=p {
+                    let wj = sc[j] / denom;
+                    let vrow = arena.v_row(e.kv, l, j);
+                    for dd in 0..hd {
+                        orow[dd] += wj * vrow[ko + dd];
+                    }
+                }
+            }
+        }
+        let mut x_mid = vec![0f32; m * h];
+        gemm_nn(&att_out, base.at(segs.wo), &mut x_mid, m, h, h, false);
+        for (xm, xi) in x_mid.iter_mut().zip(&x) {
+            *xm += xi;
+        }
+        let (x3, _) = layer_norm(&x_mid, base.at(segs.ln2_g), base.at(segs.ln2_b), m, h);
+        let mut u = vec![0f32; m * f];
+        gemm_nn(&x3, base.at(segs.w1), &mut u, m, h, f, false);
+        let mut gelu_v = vec![0f32; m * f];
+        (kops.gelu_map)(&mut gelu_v, &u);
+        let mut x_next = vec![0f32; m * h];
+        gemm_nn(&gelu_v, base.at(segs.w2), &mut x_next, m, f, h, false);
+        for (xn, xm) in x_next.iter_mut().zip(&x_mid) {
+            *xn += xm;
+        }
+        x = x_next;
+    }
+    for e in entries.iter_mut() {
+        e.kv.len += 1;
+    }
+
+    // final layer norm on every row (LN is per-row)
+    let (hidden, _) = layer_norm(&x, base.at(fixed.lnf_g), base.at(fixed.lnf_b), m, h);
+    Ok(hidden)
 }
 
 // ------------------------------------------------------------------
@@ -1599,13 +1873,15 @@ mod tests {
         for row in 0..cfg.batch {
             let seq = &tokens[row * cfg.seq..(row + 1) * cfg.seq];
             let mut kv = KvCache::new(&cfg);
-            assert!(kv.byte_size() > 0);
+            // paged cache: nothing materialized before the prefill
+            assert_eq!(kv.byte_size(), 0);
             // prefill the first two positions, then step one at a time
             let mut rows = vec![incr_forward(&cfg, &base, &w, &mut kv, &seq[..2]).unwrap()];
+            assert!(kv.byte_size() > 0);
             for p in 2..cfg.seq {
                 rows.push(incr_forward(&cfg, &base, &w, &mut kv, &seq[p..p + 1]).unwrap());
             }
-            assert_eq!(kv.len, cfg.seq);
+            assert_eq!(kv.len(), cfg.seq);
             let full_logits = lm_head_forward(&cfg, &base, &fc.hidden);
             for (step, pos) in (1..cfg.seq).enumerate() {
                 let o = (row * cfg.seq + pos) * cfg.hidden;
@@ -1637,6 +1913,96 @@ mod tests {
         assert!(incr_forward(&cfg, &base, &w, &mut kv, &too_long).is_err());
         assert!(incr_forward(&cfg, &base, &w, &mut kv, &[]).is_err());
         assert!(incr_forward(&cfg, &base, &w, &mut kv, &[cfg.vocab as i32]).is_err());
+    }
+
+    /// The fused batched step is bit-identical, per kernel tier, to
+    /// stepping each slot alone: a heterogeneous batch (two slots
+    /// sharing one dense reconstruction `Arc`, a factored slot, and a
+    /// second distinct dense slot) at staggered positions produces
+    /// exactly the same hidden rows and logits as four per-slot steps.
+    #[test]
+    fn batched_step_matches_per_slot_bitwise() {
+        let mut cfg = tiny_cfg();
+        cfg.seq = 12;
+        let w0 = init_w0(&cfg, 11);
+        let base = BaseMap::new(&cfg, &w0).unwrap();
+        let stats = gen_statics(&cfg, 11).unwrap();
+        let th_a: Vec<f32> = rng::normals(21, cfg.d).iter().map(|v| 0.1 * v).collect();
+        let th_b: Vec<f32> = rng::normals(22, cfg.d).iter().map(|v| 0.1 * v).collect();
+        let da = reconstruct_with_statics(&cfg, &stats, &th_a).unwrap();
+        let db = reconstruct_with_statics(&cfg, &stats, &th_b).unwrap();
+        let dense_a = AdapterExec::Dense(Arc::new(adapted_weights(&cfg, &base, &da).unwrap()));
+        let dense_b = AdapterExec::Dense(Arc::new(adapted_weights(&cfg, &base, &db).unwrap()));
+        let factored =
+            AdapterExec::Factored(FactoredWeights::from_deltas(&cfg, &da).expect("low-rank"));
+        // slots 0 and 2 share ONE reconstruction Arc (one dense group);
+        // slot 3 is a distinct dense group; slot 1 is factored
+        let execs: [&AdapterExec; 4] = [&dense_a, &factored, &dense_a, &dense_b];
+
+        let toks = rng::indices(33, 64, cfg.vocab);
+        let mut arena_a = KvArena::new(&cfg, 64); // per-slot reference
+        let mut arena_b = KvArena::new(&cfg, 64); // fused stepping
+        let mut slots_a: Vec<KvSlot> = Vec::new();
+        let mut slots_b: Vec<KvSlot> = Vec::new();
+        // staggered prefills: prompt lengths 2..=5, so every batched
+        // row attends over a different number of cached positions
+        for i in 0..4 {
+            let prompt = &toks[i * 8..i * 8 + 2 + i];
+            let mut sa = arena_a.reserve(cfg.seq).unwrap();
+            let mut sb = arena_b.reserve(cfg.seq).unwrap();
+            let ra = incr_forward_slot(&cfg, &base, execs[i], &mut arena_a, &mut sa, prompt);
+            let rb = incr_forward_slot(&cfg, &base, execs[i], &mut arena_b, &mut sb, prompt);
+            assert_eq!(ra.unwrap(), rb.unwrap(), "prefill {i}");
+            slots_a.push(sa);
+            slots_b.push(sb);
+        }
+        let h = cfg.hidden;
+        for step in 0..4 {
+            let feed: Vec<i32> = (0..4).map(|i| toks[32 + step * 4 + i]).collect();
+            let mut want_rows = Vec::new();
+            for i in 0..4 {
+                want_rows.push(
+                    incr_forward_slot(
+                        &cfg,
+                        &base,
+                        execs[i],
+                        &mut arena_a,
+                        &mut slots_a[i],
+                        &[feed[i]],
+                    )
+                    .unwrap(),
+                );
+            }
+            let mut entries: Vec<BatchEntry> = slots_b
+                .iter_mut()
+                .enumerate()
+                .map(|(i, kv)| BatchEntry { exec: execs[i], kv, tok: feed[i] })
+                .collect();
+            let got = incr_forward_batch(&cfg, &base, &mut arena_b, &mut entries).unwrap();
+            for i in 0..4 {
+                assert_eq!(
+                    &got[i * h..(i + 1) * h],
+                    want_rows[i].as_slice(),
+                    "step {step} row {i}"
+                );
+            }
+            // batched logits are bit-equal to per-row logits
+            let lg = lm_logits_batch(&cfg, &base, &got, 4);
+            for i in 0..4 {
+                let one = lm_logits_row(&cfg, &base, &want_rows[i]);
+                assert_eq!(
+                    &lg[i * cfg.vocab..(i + 1) * cfg.vocab],
+                    one.as_slice(),
+                    "step {step} row {i}"
+                );
+            }
+        }
+        for i in 0..4 {
+            assert_eq!(slots_a[i].len, slots_b[i].len);
+            arena_a.release(&mut slots_a[i]);
+            arena_b.release(&mut slots_b[i]);
+        }
+        assert_eq!((arena_a.used_pages(), arena_b.used_pages()), (0, 0));
     }
 
     /// The factored execution mode (`y += scale*B(A x)` on top of the

@@ -23,8 +23,12 @@
 //! (time-to-first-token), `recon_hit_rate` and `recon_evictions`
 //! (adapter-reconstruction cache), `factored_admits` / `dense_admits`
 //! (execution-mode mix the admission cost model picked),
-//! `mean_occupied_slots` (continuous-batching occupancy) and
-//! `mean_latency_ms`.
+//! `mean_occupied_slots` (continuous-batching occupancy),
+//! `mean_latency_ms`, `truncated_admits` (prompts cut to the context
+//! window at admission), and the paged-K/V pair `kv_bytes_in_flight`
+//! (resident arena bytes — a gauge tracking tokens actually decoding,
+//! not reserved capacity) / `kv_page_churn` (pages recycled through
+//! arena free lists over the server's lifetime).
 
 use crate::util::json::{n, obj, s, Json};
 use anyhow::{anyhow, Result};

@@ -21,7 +21,8 @@ use crate::adapters::Registry;
 use crate::config::ModelCfg;
 use crate::projection::statics::{gen_statics, Static};
 use crate::runtime::Backend;
-use crate::session::{DecodeSession, SeqRequest, SessionOpts};
+use crate::runtime::native::kv_arena::KvBudgetExhausted;
+use crate::session::{Admission, DecodeSession, SeqRequest, SessionOpts};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -72,6 +73,14 @@ pub struct RouterStats {
     /// execution-mode mix the session cost model picked
     pub factored_admits: u64,
     pub dense_admits: u64,
+    /// admissions whose prompt was silently-no-more truncated to the
+    /// context window (surfaced per admission, not hidden)
+    pub truncated_admits: u64,
+    /// K/V bytes currently resident across all workers' arenas — a
+    /// gauge tracking tokens actually in flight, not reserved capacity
+    pub kv_bytes_in_flight: u64,
+    /// K/V pages recycled through arena free lists (counter)
+    pub kv_page_churn: u64,
     pub total_latency_secs: f64,
     pub total_queue_secs: f64,
 }
@@ -258,6 +267,15 @@ impl Router {
         self.shared.queue.lock().unwrap().pop_front()
     }
 
+    /// Put a request back at the HEAD of the queue: admission hit a
+    /// transient resource limit (K/V token budget), so it retries in
+    /// FIFO position once capacity frees. Bypasses the capacity check —
+    /// the request already held its queue place.
+    fn requeue_front(&self, req: PendingReq) {
+        self.shared.queue.lock().unwrap().push_front(req);
+        self.shared.cv.notify_one();
+    }
+
     /// Blocking pop for an idle worker: waits until a request arrives,
     /// or returns None once the router is stopped AND drained.
     fn pop_blocking(&self) -> Option<PendingReq> {
@@ -308,8 +326,13 @@ impl Router {
 
     /// Resolve one queued request against the registry and admit it
     /// into a session slot. Failures (unknown adapter, empty prompt,
-    /// reconstruction error) reply immediately — they never occupy a
-    /// slot or poison the session.
+    /// reconstruction error, oversized K/V reservation) reply
+    /// immediately — they never occupy a slot or poison the session.
+    /// A *transient* K/V-budget miss (the reservation would fit an
+    /// empty arena, but live sequences hold the pages) requeues the
+    /// request at the queue head instead, when `can_requeue`; returns
+    /// `false` in that case so the caller stops admitting this round
+    /// (re-popping the same request would spin).
     fn admit_req(
         &self,
         sess: &mut dyn DecodeSession,
@@ -317,32 +340,61 @@ impl Router {
         registry: &Registry,
         cfg: &ModelCfg,
         req: PendingReq,
-    ) {
+        can_requeue: bool,
+    ) -> bool {
+        enum Outcome {
+            Admitted(Admission),
+            Requeue,
+            Fail(String),
+        }
         let queue_wait = req.enqueued.elapsed().as_secs_f64();
-        let outcome = (|| -> Result<usize, String> {
-            let ckpt = registry
-                .get(&req.adapter)
-                .ok_or_else(|| format!("unknown adapter {:?}", req.adapter))?;
-            let statics = self.statics_for(&req.adapter, cfg, ckpt.seed)?;
-            sess.admit(SeqRequest {
+        let outcome = (|| {
+            let ckpt = match registry.get(&req.adapter) {
+                Some(c) => c,
+                None => return Outcome::Fail(format!("unknown adapter {:?}", req.adapter)),
+            };
+            let statics = match self.statics_for(&req.adapter, cfg, ckpt.seed) {
+                Ok(s) => s,
+                Err(e) => return Outcome::Fail(e),
+            };
+            match sess.admit(SeqRequest {
                 adapter: req.adapter.clone(),
                 theta: Arc::new(ckpt.theta),
                 statics,
                 prompt: req.prompt.clone(),
                 max_new: req.max_new,
-            })
-            .map_err(|e| e.to_string())
-        })();
-        let mut st = self.stats.lock().unwrap();
-        st.total_queue_secs += queue_wait;
-        match outcome {
-            Ok(slot) => {
-                books.insert(slot, SlotBook { req, tokens: Vec::new(), got_first: false });
+            }) {
+                Ok(adm) => Outcome::Admitted(adm),
+                Err(e) => match e.downcast_ref::<KvBudgetExhausted>() {
+                    // pages free when live sequences retire; an
+                    // admission that can never fit fails permanently
+                    Some(b) if can_requeue && b.needed_pages <= b.budget_pages => Outcome::Requeue,
+                    _ => Outcome::Fail(e.to_string()),
+                },
             }
-            Err(e) => {
+        })();
+        match outcome {
+            Outcome::Admitted(adm) => {
+                let mut st = self.stats.lock().unwrap();
+                st.total_queue_secs += queue_wait;
+                if adm.truncated {
+                    st.truncated_admits += 1;
+                }
+                books.insert(adm.slot, SlotBook { req, tokens: Vec::new(), got_first: false });
+                true
+            }
+            Outcome::Requeue => {
+                // queue wait keeps accruing from the original enqueue
+                self.requeue_front(req);
+                false
+            }
+            Outcome::Fail(e) => {
+                let mut st = self.stats.lock().unwrap();
+                st.total_queue_secs += queue_wait;
                 st.requests += 1;
                 st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
                 let _ = req.reply.send(Err(e));
+                true
             }
         }
     }
@@ -375,12 +427,20 @@ impl Router {
             if sess.active() == 0 {
                 match self.pop_blocking() {
                     None => break, // stopped and drained
-                    Some(req) => self.admit_req(sess.as_mut(), &mut books, registry, cfg, req),
+                    // an idle session's arena is all free, so a budget
+                    // miss here can never be transient: no requeue
+                    Some(req) => {
+                        self.admit_req(sess.as_mut(), &mut books, registry, cfg, req, false);
+                    }
                 }
             }
             while sess.free_slots() > 0 {
                 match self.try_pop() {
-                    Some(req) => self.admit_req(sess.as_mut(), &mut books, registry, cfg, req),
+                    Some(req) => {
+                        if !self.admit_req(sess.as_mut(), &mut books, registry, cfg, req, true) {
+                            break; // requeued at the head; step to free pages
+                        }
+                    }
                     None => break,
                 }
             }
@@ -396,6 +456,10 @@ impl Router {
                     // a fresh session — one poisoned step must not
                     // take the worker down
                     let msg = format!("decode step failed: {e}");
+                    sess.finish();
+                    // post-finish sample: the arena released everything,
+                    // so the gauge zeroes and churn counts the releases
+                    let fin = sess.stats();
                     {
                         let mut st = self.stats.lock().unwrap();
                         for (_, book) in books.drain() {
@@ -403,8 +467,10 @@ impl Router {
                             st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
                             let _ = book.req.reply.send(Err(msg.clone()));
                         }
+                        st.kv_page_churn += fin.kv_page_churn - last.kv_page_churn;
+                        st.kv_bytes_in_flight = (st.kv_bytes_in_flight + fin.kv_bytes_in_flight)
+                            .saturating_sub(last.kv_bytes_in_flight);
                     }
-                    sess.finish();
                     match exec.begin_decode(art_logits, w0.clone(), opts) {
                         Ok(s) => {
                             sess = s;
@@ -431,6 +497,11 @@ impl Router {
             st.recon_evictions += snow.recon_evictions - last.recon_evictions;
             st.factored_admits += snow.factored_admits - last.factored_admits;
             st.dense_admits += snow.dense_admits - last.dense_admits;
+            st.kv_page_churn += snow.kv_page_churn - last.kv_page_churn;
+            // gauge, not counter: fold this worker's delta so the
+            // router-wide value sums live arenas across workers
+            st.kv_bytes_in_flight = (st.kv_bytes_in_flight + snow.kv_bytes_in_flight)
+                .saturating_sub(last.kv_bytes_in_flight);
             last = snow;
             for ev in events {
                 let Some(book) = books.get_mut(&ev.slot) else { continue };
@@ -610,6 +681,11 @@ mod tests {
         assert!(st.recon_evictions >= 1, "cycling adapters must evict: {st:?}");
         assert_eq!(st.recon_evictions, cache_evictions);
         assert_eq!(st.recon_hits, 0, "a 1-entry cache cycling 3 adapters never hits");
+        // paged K/V accounting: every retired sequence recycled its
+        // pages, and nothing is in flight once the worker drains
+        assert!(st.kv_page_churn >= 6, "6 retirements must churn pages: {st:?}");
+        assert_eq!(st.kv_bytes_in_flight, 0, "drained worker holds no K/V: {st:?}");
+        assert_eq!(st.truncated_admits, 0);
 
         // pinned factored: no admission ever touches the dense cache
         let factored_opts = SessionOpts::with_slots(1).with_dense_threshold(usize::MAX);
@@ -618,6 +694,73 @@ mod tests {
         assert_eq!((st.dense_admits, st.factored_admits), (0, 6));
         assert_eq!((st.recon_evictions, cache_evictions), (0, 0));
         assert_eq!((st.recon_hits, st.recon_misses), (0, 0));
+    }
+
+    /// A K/V token budget of one page under two decode slots turns the
+    /// second concurrent admission into backpressure, not failure: the
+    /// request requeues at the queue head until pages free, and every
+    /// request still completes in order.
+    #[test]
+    fn worker_requeues_on_transient_kv_budget_exhaustion() {
+        use crate::adapters::AdapterCheckpoint;
+        use crate::runtime::NativeBackend;
+
+        const ART: &str = "lm_uni_lm_logits";
+        let mut be = NativeBackend::new().unwrap();
+        let meta = be.meta(ART).unwrap().clone();
+        let cfg = meta.cfg.clone();
+        let w0 = Arc::new(crate::coordinator::init_base(&meta, 9));
+        let registry = Arc::new(Registry::new());
+        let theta: Vec<f32> =
+            crate::rng::normals(55, crate::projection::statics::d_effective(&cfg))
+                .iter()
+                .map(|v| 0.05 * v)
+                .collect();
+        registry.insert(
+            "a".to_string(),
+            AdapterCheckpoint {
+                seed: 7,
+                method: cfg.method.clone(),
+                artifact: ART.into(),
+                theta,
+                head: vec![],
+            },
+        );
+        // queue three requests BEFORE the worker starts, so the second
+        // admission deterministically hits the exhausted budget while
+        // the first sequence is live
+        let r = Router::new();
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = mpsc::channel();
+            r.submit(PendingReq {
+                adapter: "a".into(),
+                prompt: vec![1, 2, 3],
+                max_new: 2,
+                enqueued: Instant::now(),
+                reply: tx,
+            })
+            .unwrap();
+            rxs.push(rx);
+        }
+        let opts = SessionOpts::with_slots(2).with_kv_pages(1);
+        let worker = {
+            let r = r.clone();
+            let registry = registry.clone();
+            let cfg = cfg.clone();
+            let w0 = w0.clone();
+            std::thread::spawn(move || r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts))
+        };
+        for rx in rxs {
+            let out = rx.recv().unwrap();
+            assert!(out.is_ok(), "budget pressure must delay, not fail: {out:?}");
+        }
+        r.stop();
+        worker.join().unwrap();
+        let st = r.stats.lock().unwrap().clone();
+        assert_eq!(st.requests, 3);
+        assert_eq!(st.kv_bytes_in_flight, 0, "{st:?}");
+        assert!(st.kv_page_churn >= 3, "{st:?}");
     }
 
     #[test]

@@ -191,6 +191,9 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, worke
                     ("dense_admits", n(st.dense_admits as f64)),
                     ("mean_occupied_slots", n(st.mean_occupied_slots())),
                     ("mean_latency_ms", n(st.mean_latency_ms())),
+                    ("truncated_admits", n(st.truncated_admits as f64)),
+                    ("kv_bytes_in_flight", n(st.kv_bytes_in_flight as f64)),
+                    ("kv_page_churn", n(st.kv_page_churn as f64)),
                 ]))
             }
             Ok(Request::Generate { adapter, prompt, max_new }) => {

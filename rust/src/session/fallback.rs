@@ -17,7 +17,7 @@
 //! [`SessionStats`] therefore stay 0 here — the cost model is a
 //! native-session concern.
 
-use super::{DecodeSession, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats};
+use super::{Admission, DecodeSession, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats};
 use crate::data::vocab;
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::{Backend, TensorIn};
@@ -78,7 +78,7 @@ impl FallbackSession {
 }
 
 impl DecodeSession for FallbackSession {
-    fn admit(&mut self, req: SeqRequest) -> Result<usize> {
+    fn admit(&mut self, req: SeqRequest) -> Result<Admission> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
         let si = self
             .slots
@@ -88,6 +88,10 @@ impl DecodeSession for FallbackSession {
         let t = self.meta.cfg.seq;
         let mut toks = vec![vocab::PAD; t];
         let l = req.prompt.len().min(t);
+        let truncated = req.prompt.len() > t;
+        if truncated {
+            self.stats.truncated_admits += 1;
+        }
         toks[..l].copy_from_slice(&req.prompt[..l]);
         let statics: Vec<TensorIn> = req.statics.iter().map(TensorIn::shared_from).collect();
         self.slots[si] = Some(Slot {
@@ -101,7 +105,7 @@ impl DecodeSession for FallbackSession {
         });
         self.active += 1;
         self.stats.admitted += 1;
-        Ok(si)
+        Ok(Admission { slot: si, truncated })
     }
 
     fn step(&mut self, exec: &mut dyn Backend) -> Result<Vec<SeqEvent>> {

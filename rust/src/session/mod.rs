@@ -59,20 +59,48 @@ pub struct SessionOpts {
     /// least this many of the session's slots runs densified; below
     /// it, slots run the factored rank-r path.
     pub dense_threshold: usize,
+    /// K/V arena token budget in pages of [`config::KV_PAGE_TOKENS`]
+    /// positions; 0 = auto (`UNI_LORA_KV_PAGES`, else the per-slot
+    /// worst case — exactly what per-slot preallocation guaranteed, so
+    /// the paged default is opt-out-safe).
+    pub kv_pages: usize,
+    /// Fuse the native decode step: all active single-position slots
+    /// advance through one `[active, h]` GEMM per layer weight instead
+    /// of per-slot GEMVs. Scheduling-only (bit-equal per kernel tier
+    /// to per-slot stepping); `UNI_LORA_FUSED_STEP=0` disables it for
+    /// A/B benching.
+    pub fused_step: bool,
 }
 
 impl SessionOpts {
     /// Knobs from the environment (`UNI_LORA_DECODE_SLOTS`,
-    /// `UNI_LORA_DENSE_THRESHOLD`).
+    /// `UNI_LORA_DENSE_THRESHOLD`, `UNI_LORA_KV_PAGES`,
+    /// `UNI_LORA_FUSED_STEP`).
     pub fn from_env() -> SessionOpts {
         let ro = config::RuntimeOpts::from_env();
-        SessionOpts { slots: ro.decode_slots, dense_threshold: ro.dense_threshold }
+        SessionOpts {
+            slots: ro.decode_slots,
+            dense_threshold: ro.dense_threshold,
+            kv_pages: ro.kv_pages,
+            fused_step: ro.fused_step,
+        }
     }
 
-    /// An explicit slot count (tests, benches); the cost model stays
-    /// on its default crossover.
+    /// An explicit slot count (tests, benches); every other knob stays
+    /// on its default. The fused-step default follows
+    /// `UNI_LORA_FUSED_STEP` (not a pinned `true`) so CI can re-run
+    /// whole parity suites under per-slot stepping; pin it explicitly
+    /// with [`SessionOpts::with_fused_step`] when a test A/Bs the two
+    /// schedules itself.
     pub fn with_slots(slots: usize) -> SessionOpts {
-        SessionOpts { slots, dense_threshold: 0 }
+        SessionOpts {
+            slots,
+            dense_threshold: 0,
+            kv_pages: 0,
+            fused_step: crate::config::parse_fused_step(
+                std::env::var("UNI_LORA_FUSED_STEP").ok().as_deref(),
+            ),
+        }
     }
 
     /// Pin the dense-densification crossover (tests, benches): `1`
@@ -80,6 +108,18 @@ impl SessionOpts {
     /// forces every low-rank adapter factored.
     pub fn with_dense_threshold(mut self, dense_threshold: usize) -> SessionOpts {
         self.dense_threshold = dense_threshold;
+        self
+    }
+
+    /// Pin the K/V arena budget, in pages (tests, benches).
+    pub fn with_kv_pages(mut self, kv_pages: usize) -> SessionOpts {
+        self.kv_pages = kv_pages;
+        self
+    }
+
+    /// Toggle the fused batched decode step (benches, bisection).
+    pub fn with_fused_step(mut self, fused_step: bool) -> SessionOpts {
+        self.fused_step = fused_step;
         self
     }
 
@@ -100,6 +140,34 @@ impl SessionOpts {
             config::DEFAULT_DENSE_THRESHOLD
         }
     }
+
+    /// Resolve the K/V arena page budget for a session of
+    /// `slots` slots over a `seq`-position window. 0 = the per-slot
+    /// worst case: every slot can hold a full window simultaneously,
+    /// so the arena never refuses an admission the old per-slot
+    /// preallocation would have accepted.
+    pub fn resolve_kv_pages(&self, slots: usize, seq: usize) -> usize {
+        if self.kv_pages > 0 {
+            self.kv_pages
+        } else {
+            slots * seq.div_ceil(config::KV_PAGE_TOKENS)
+        }
+    }
+}
+
+/// What [`DecodeSession::admit`] did with a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admission {
+    /// Slot the sequence occupies until it retires.
+    pub slot: usize,
+    /// The prompt exceeded the context window and was truncated to it.
+    /// Historically this happened silently; callers that care (the
+    /// router, API clients) can now surface it. A truncated prompt
+    /// fills the window, so the sequence is stillborn: it admits,
+    /// occupies the slot for one step, and emits nothing — the same
+    /// stream the legacy full-forward loop produced for over-window
+    /// rows.
+    pub truncated: bool,
 }
 
 /// One sequence to decode: the adapter identity plus everything the
@@ -143,14 +211,28 @@ pub struct SessionStats {
     /// dense reconstructions the `ReconCache` evicted on behalf of
     /// this session's admissions
     pub recon_evictions: u64,
+    /// admissions whose prompt was truncated to the context window
+    pub truncated_admits: u64,
+    /// K/V bytes currently held by resident pages (a gauge, not a
+    /// counter: it tracks tokens actually in flight, rising on
+    /// grow/admission and falling on retirement)
+    pub kv_bytes_in_flight: u64,
+    /// K/V pages recycled through the arena free list (counter)
+    pub kv_page_churn: u64,
 }
 
 /// A stateful decoding session over one `lm_logits`-kind artifact.
 pub trait DecodeSession: Send {
     /// Admit a sequence into a free slot; errors when none is free
-    /// (callers check [`DecodeSession::free_slots`] first) or the
-    /// request is malformed (empty prompt, unknown reconstruction).
-    fn admit(&mut self, req: SeqRequest) -> Result<usize>;
+    /// (callers check [`DecodeSession::free_slots`] first), the
+    /// request is malformed (empty prompt, unknown reconstruction), or
+    /// — native sessions only — the K/V token budget cannot cover the
+    /// sequence (the error carries a [`runtime::native::kv_arena::KvBudgetExhausted`]
+    /// so callers can distinguish transient pressure from oversized
+    /// requests).
+    ///
+    /// [`runtime::native::kv_arena::KvBudgetExhausted`]: crate::runtime::native::kv_arena::KvBudgetExhausted
+    fn admit(&mut self, req: SeqRequest) -> Result<Admission>;
 
     /// Advance every active sequence by one greedy iteration (newly
     /// admitted slots run their prefill first). Finished sequences are
@@ -270,13 +352,15 @@ pub fn drive_greedy(
     let mut next = 0usize;
     while next < prompts.len() || sess.active() > 0 {
         while sess.free_slots() > 0 && next < prompts.len() {
-            let slot = sess.admit(SeqRequest {
-                adapter: adapter.to_string(),
-                theta: theta.clone(),
-                statics: statics.clone(),
-                prompt: prompts[next].clone(),
-                max_new,
-            })?;
+            let slot = sess
+                .admit(SeqRequest {
+                    adapter: adapter.to_string(),
+                    theta: theta.clone(),
+                    statics: statics.clone(),
+                    prompt: prompts[next].clone(),
+                    max_new,
+                })?
+                .slot;
             anyhow::ensure!(owner[slot].is_none(), "session reused an occupied slot {slot}");
             owner[slot] = Some(next);
             next += 1;
@@ -350,5 +434,18 @@ mod tests {
             SessionOpts::with_slots(4).with_dense_threshold(usize::MAX).resolve_dense_threshold(),
             usize::MAX
         );
+
+        // kv budget: explicit wins; 0 = per-slot worst case in pages
+        let pp = crate::config::KV_PAGE_TOKENS;
+        assert_eq!(SessionOpts::with_slots(4).with_kv_pages(9).resolve_kv_pages(4, 64), 9);
+        assert_eq!(SessionOpts::with_slots(4).resolve_kv_pages(4, 64), 4 * 64usize.div_ceil(pp));
+        assert_eq!(SessionOpts::with_slots(2).resolve_kv_pages(2, pp + 1), 2 * 2);
+        // fused step follows the env default (on unless disabled), and
+        // the builder pins it either way
+        let env_fused =
+            crate::config::parse_fused_step(std::env::var("UNI_LORA_FUSED_STEP").ok().as_deref());
+        assert_eq!(SessionOpts::with_slots(4).fused_step, env_fused);
+        assert!(SessionOpts::with_slots(4).with_fused_step(true).fused_step);
+        assert!(!SessionOpts::with_slots(4).with_fused_step(false).fused_step);
     }
 }

@@ -1,22 +1,40 @@
-//! The native decode session: per-layer K/V caches over
-//! `runtime::native::model::incr_forward` — one prefill pass per
+//! The native decode session: arena-paged K/V over
+//! `runtime::native::model::incr_forward_slot` — one prefill pass per
 //! admitted prompt, then O(model) single-position steps — with each
 //! slot carrying an [`AdapterExec`] picked by the admission cost model
 //! (`cache::build_exec`): factored rank-r application by default,
 //! dense weights from the shared [`ReconCache`] when one adapter
 //! dominates the session's slots (or has no factored form).
 //!
-//! Every slot is independent (own adapter, own K/V cache, own budget),
+//! K/V storage is one session-owned [`KvArena`]: slots hold short page
+//! tables instead of full-window buffers, admission reserves the
+//! worst case a sequence can need (`min(seq, prompt + max_new)`
+//! positions, in page units) against a shared token budget, and
+//! retirement recycles the pages. Idle slots hold zero pages, so
+//! resident K/V bytes track tokens actually in flight.
+//!
+//! The step itself is *fused* by default: every active single-position
+//! slot advances through one `[active, h]` GEMM per layer weight
+//! (`incr_forward_batch`) and one `[active, vocab]` logits GEMM,
+//! instead of per-slot GEMVs. Batching is scheduling-only — per-row
+//! accumulation order is unchanged, so the fused step is bit-equal per
+//! kernel tier to per-slot stepping (`UNI_LORA_FUSED_STEP=0`), and the
+//! decode-parity suite pins both paths to the same streams.
+//!
+//! Every slot is independent (own adapter, own K/V pages, own budget),
 //! so a session can decode a *heterogeneous* mix of adapters
-//! concurrently: per-step compute is row-sized either way, and this is
-//! exactly the multi-tenant story the paper's one-vector-per-task
-//! storage enables — factored slots keep per-adapter residency at the
-//! rank-r factors, so thousands of distinct adapters fit in a session.
+//! concurrently — this is exactly the multi-tenant story the paper's
+//! one-vector-per-task storage enables: factored slots keep
+//! per-adapter residency at the rank-r factors, so thousands of
+//! distinct adapters fit in a session, and the fused step still
+//! batches them (shared-base GEMM + per-slot rank-r updates).
 
-use super::{DecodeSession, ReconCache, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats};
+use super::{
+    Admission, DecodeSession, ReconCache, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats,
+};
 use crate::config::ModelCfg;
 use crate::runtime::artifact::ArtifactMeta;
-use crate::runtime::native::model::{self, AdapterExec, KvCache};
+use crate::runtime::native::model::{self, AdapterExec, KvArena, KvSlot};
 use crate::runtime::Backend;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::Arc;
@@ -27,7 +45,7 @@ struct Slot {
     adapter: String,
     theta_fp: u64,
     exec: Arc<AdapterExec>,
-    kv: KvCache,
+    kv: KvSlot,
     prompt: Vec<i32>,
     state: SeqState,
     /// last emitted token, fed at the next step
@@ -42,6 +60,8 @@ pub struct NativeDecodeSession {
     layout: model::BaseLayout,
     cache: Arc<ReconCache>,
     dense_threshold: usize,
+    arena: KvArena,
+    fused: bool,
     slots: Vec<Option<Slot>>,
     active: usize,
     stats: SessionStats,
@@ -69,6 +89,8 @@ impl NativeDecodeSession {
         let n = opts.resolve_slots(meta.cfg.batch);
         Ok(NativeDecodeSession {
             layout: model::BaseLayout::new(&meta.cfg),
+            arena: KvArena::new(&meta.cfg, opts.resolve_kv_pages(n, meta.cfg.seq)),
+            fused: opts.fused_step,
             cfg: meta.cfg.clone(),
             w0,
             cache,
@@ -78,16 +100,34 @@ impl NativeDecodeSession {
             stats: SessionStats::default(),
         })
     }
+
+    /// Free a slot and recycle its K/V pages.
+    fn retire(&mut self, si: usize) {
+        if let Some(mut slot) = self.slots[si].take() {
+            self.arena.release(&mut slot.kv);
+            self.active -= 1;
+        }
+    }
 }
 
 impl DecodeSession for NativeDecodeSession {
-    fn admit(&mut self, req: SeqRequest) -> Result<usize> {
+    fn admit(&mut self, req: SeqRequest) -> Result<Admission> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
         let si = self
             .slots
             .iter()
             .position(|s| s.is_none())
             .ok_or_else(|| anyhow!("no free decode slot"))?;
+        let state = SeqState::new(req.prompt.len(), req.max_new, self.cfg.seq);
+        // Reserve K/V capacity before paying for reconstruction: the
+        // worst case this sequence can occupy. Stillborn sequences
+        // never run a forward, so they hold nothing.
+        let kv_tokens = if state.stillborn() {
+            0
+        } else {
+            (req.prompt.len() + req.max_new).min(self.cfg.seq)
+        };
+        let mut kv = self.arena.reserve(kv_tokens)?;
         let theta_fp = super::theta_fingerprint(&req.theta);
         let same_adapter_active = self
             .slots
@@ -95,7 +135,7 @@ impl DecodeSession for NativeDecodeSession {
             .flatten()
             .filter(|s| s.adapter == req.adapter && s.theta_fp == theta_fp)
             .count();
-        let fetch = super::cache::build_exec(
+        let fetch = match super::cache::build_exec(
             &self.cache,
             &req.adapter,
             &self.cfg,
@@ -104,7 +144,13 @@ impl DecodeSession for NativeDecodeSession {
             &req.statics,
             same_adapter_active,
             self.dense_threshold,
-        )?;
+        ) {
+            Ok(fetch) => fetch,
+            Err(e) => {
+                self.arena.release(&mut kv);
+                return Err(e);
+            }
+        };
         if fetch.exec.is_dense() {
             self.stats.dense_admits += 1;
             if fetch.hit {
@@ -116,14 +162,17 @@ impl DecodeSession for NativeDecodeSession {
             self.stats.factored_admits += 1;
         }
         self.stats.recon_evictions += fetch.evicted;
-        let state = SeqState::new(req.prompt.len(), req.max_new, self.cfg.seq);
+        let truncated = req.prompt.len() > self.cfg.seq;
+        if truncated {
+            self.stats.truncated_admits += 1;
+        }
         let mut prompt = req.prompt;
         prompt.truncate(self.cfg.seq);
         self.slots[si] = Some(Slot {
             adapter: req.adapter,
             theta_fp,
             exec: fetch.exec,
-            kv: KvCache::new(&self.cfg),
+            kv,
             prompt,
             state,
             pending: None,
@@ -131,30 +180,116 @@ impl DecodeSession for NativeDecodeSession {
         });
         self.active += 1;
         self.stats.admitted += 1;
-        Ok(si)
+        Ok(Admission { slot: si, truncated })
     }
 
     fn step(&mut self, _exec: &mut dyn Backend) -> Result<Vec<SeqEvent>> {
         let base = self.layout.bind(self.w0.as_slice())?;
-        let mut events = Vec::new();
-        for si in 0..self.slots.len() {
+        let n = self.slots.len();
+        let h = self.cfg.hidden;
+        // Per-slot outcome of the forward passes: the final hidden row
+        // each active slot produced this step.
+        let mut hidden_rows: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+        let mut stillborn: Vec<bool> = vec![false; n];
+
+        // Pass 1 — first-step slots: retire stillborn sequences
+        // without a forward; run multi-position prefills per slot.
+        for si in 0..n {
             let Some(slot) = self.slots[si].as_mut() else { continue };
-            let hidden = if !slot.prefilled {
-                slot.prefilled = true;
-                if slot.state.stillborn() {
-                    // the legacy loop's no-op rows: prompt fills the
-                    // window, or zero budget — retire without a forward
-                    events.push(SeqEvent { slot: si, token: None, done: true });
-                    self.slots[si] = None;
-                    self.active -= 1;
+            if slot.prefilled {
+                continue;
+            }
+            slot.prefilled = true;
+            if slot.state.stillborn() {
+                // the legacy loop's no-op rows: prompt fills the
+                // window, or zero budget — retire without a forward
+                stillborn[si] = true;
+                continue;
+            }
+            hidden_rows[si] = Some(model::incr_forward_slot(
+                &self.cfg,
+                &base,
+                &slot.exec,
+                &mut self.arena,
+                &mut slot.kv,
+                &slot.prompt,
+            )?);
+        }
+
+        // Pass 2 — continuing slots advance one position each: fused
+        // into a single batched forward, or per-slot when disabled.
+        if self.fused {
+            let mut batch_slots: Vec<usize> = Vec::new();
+            let mut entries: Vec<model::BatchEntry> = Vec::new();
+            for (si, s) in self.slots.iter_mut().enumerate() {
+                let Some(slot) = s else { continue };
+                if stillborn[si] || hidden_rows[si].is_some() {
                     continue;
                 }
-                model::incr_forward(&self.cfg, &base, &slot.exec, &mut slot.kv, &slot.prompt)?
-            } else {
                 let tok = slot.pending.ok_or_else(|| anyhow!("active slot without pending"))?;
-                model::incr_forward(&self.cfg, &base, &slot.exec, &mut slot.kv, &[tok])?
-            };
-            let logits = model::lm_logits_row(&self.cfg, &base, &hidden);
+                batch_slots.push(si);
+                entries.push(model::BatchEntry { exec: slot.exec.as_ref(), kv: &mut slot.kv, tok });
+            }
+            if !entries.is_empty() {
+                let batched =
+                    model::incr_forward_batch(&self.cfg, &base, &mut self.arena, &mut entries)?;
+                for (bi, &si) in batch_slots.iter().enumerate() {
+                    hidden_rows[si] = Some(batched[bi * h..(bi + 1) * h].to_vec());
+                }
+            }
+        } else {
+            for si in 0..n {
+                let Some(slot) = self.slots[si].as_mut() else { continue };
+                if stillborn[si] || hidden_rows[si].is_some() {
+                    continue;
+                }
+                let tok = slot.pending.ok_or_else(|| anyhow!("active slot without pending"))?;
+                hidden_rows[si] = Some(model::incr_forward_slot(
+                    &self.cfg,
+                    &base,
+                    &slot.exec,
+                    &mut self.arena,
+                    &mut slot.kv,
+                    &[tok],
+                )?);
+            }
+        }
+
+        // Pass 3 — logits: one [active, vocab] GEMM when fused, else
+        // the legacy per-row projection.
+        let active_rows: Vec<usize> = (0..n).filter(|&si| hidden_rows[si].is_some()).collect();
+        let mut logits_rows: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+        if self.fused {
+            if !active_rows.is_empty() {
+                let m = active_rows.len();
+                let mut x = vec![0f32; m * h];
+                for (ri, &si) in active_rows.iter().enumerate() {
+                    x[ri * h..(ri + 1) * h].copy_from_slice(hidden_rows[si].as_ref().unwrap());
+                }
+                let all = model::lm_logits_batch(&self.cfg, &base, &x, m);
+                let v = all.len() / m;
+                for (ri, &si) in active_rows.iter().enumerate() {
+                    logits_rows[si] = Some(all[ri * v..(ri + 1) * v].to_vec());
+                }
+            }
+        } else {
+            for &si in &active_rows {
+                logits_rows[si] =
+                    Some(model::lm_logits_row(&self.cfg, &base, hidden_rows[si].as_ref().unwrap()));
+            }
+        }
+
+        // Pass 4 — emission in slot index order, exactly the legacy
+        // per-slot event order.
+        let mut events = Vec::new();
+        for si in 0..n {
+            if stillborn[si] {
+                events.push(SeqEvent { slot: si, token: None, done: true });
+                self.retire(si);
+                continue;
+            }
+            let Some(logits) = logits_rows[si].take() else { continue };
+            let slot = self.slots[si].as_mut().ok_or_else(|| anyhow!("lost slot {si}"))?;
             let (token, done) = slot.state.emit(&logits);
             slot.pending = token;
             if token.is_some() {
@@ -162,8 +297,7 @@ impl DecodeSession for NativeDecodeSession {
             }
             events.push(SeqEvent { slot: si, token, done });
             if done {
-                self.slots[si] = None;
-                self.active -= 1;
+                self.retire(si);
             }
         }
         self.stats.steps += 1;
@@ -171,8 +305,10 @@ impl DecodeSession for NativeDecodeSession {
     }
 
     fn finish(&mut self) {
-        for s in self.slots.iter_mut() {
-            *s = None;
+        for si in 0..self.slots.len() {
+            if let Some(mut slot) = self.slots[si].take() {
+                self.arena.release(&mut slot.kv);
+            }
         }
         self.active = 0;
     }
@@ -186,6 +322,9 @@ impl DecodeSession for NativeDecodeSession {
     }
 
     fn stats(&self) -> SessionStats {
-        self.stats
+        let mut st = self.stats;
+        st.kv_bytes_in_flight = self.arena.bytes_in_flight() as u64;
+        st.kv_page_churn = self.arena.page_churn();
+        st
     }
 }

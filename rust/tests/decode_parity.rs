@@ -231,7 +231,8 @@ fn continuous_batching_is_arrival_order_invariant() {
                         prompt: p.clone(),
                         max_new,
                     })
-                    .unwrap();
+                    .unwrap()
+                    .slot;
                 owner[slot] = Some(k);
                 admitted += 1;
             }
@@ -367,7 +368,8 @@ fn heterogeneous_mixed_mode_session_matches_legacy() {
                 prompt: p.clone(),
                 max_new,
             })
-            .unwrap();
+            .unwrap()
+            .slot;
         owner[slot] = Some(k);
     }
     while sess.active() > 0 {
@@ -388,6 +390,108 @@ fn heterogeneous_mixed_mode_session_matches_legacy() {
     // factored (0 active + 1 < 2), the 2nd and 3rd densify, y admits
     // factored again
     assert_eq!((st.factored_admits, st.dense_admits), (2, 2));
+}
+
+/// Tentpole determinism contract: the fused batched step (the
+/// `UNI_LORA_FUSED_STEP` default) and per-slot stepping emit IDENTICAL
+/// token streams across the whole prompt matrix — batching is
+/// scheduling-only, never numeric. Run over a heterogeneous
+/// two-adapter mix so the fused step really batches distinct execs.
+#[test]
+fn fused_step_streams_equal_per_slot_streams() {
+    let mut fx = fixture(61);
+    let theta_b: Vec<f32> =
+        uni_lora::rng::normals(88, fx.theta.len()).iter().map(|v| 0.05 * v).collect();
+    let prompts = parity_prompts(&fx.cfg);
+    let statics = Arc::new(fx.statics.clone());
+    let mut run = |fused: bool| -> Vec<Vec<i32>> {
+        let opts = SessionOpts::with_slots(prompts.len()).with_fused_step(fused);
+        let mut sess = fx.exec.begin_decode(ART, Arc::new(fx.w0.clone()), &opts).unwrap();
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        let mut owner: Vec<Option<usize>> = vec![None; sess.slots()];
+        for (k, p) in prompts.iter().enumerate() {
+            let (name, th) = if k % 2 == 0 { ("fa", &fx.theta) } else { ("fb", &theta_b) };
+            let slot = sess
+                .admit(SeqRequest {
+                    adapter: name.into(),
+                    theta: Arc::new(th.clone()),
+                    statics: statics.clone(),
+                    prompt: p.clone(),
+                    max_new: 10,
+                })
+                .unwrap()
+                .slot;
+            owner[slot] = Some(k);
+        }
+        while sess.active() > 0 {
+            for ev in sess.step(fx.exec.as_mut()).unwrap() {
+                let k = owner[ev.slot].unwrap();
+                if let Some(t) = ev.token {
+                    out[k].push(t);
+                }
+                if ev.done {
+                    owner[ev.slot] = None;
+                }
+            }
+        }
+        sess.finish();
+        out
+    };
+    assert_eq!(run(true), run(false));
+}
+
+/// Satellite: prompt truncation at admission is surfaced, not silent.
+/// Boundary: `len == seq-1` and `len == seq` admit untruncated;
+/// `len == seq+1` sets the flag (and the session counter). Over-window
+/// prompts stay stillborn — admitted, one step, zero tokens — exactly
+/// the legacy stream, so surfacing never changes decode behavior.
+#[test]
+fn admission_surfaces_prompt_truncation_at_the_window_boundary() {
+    let mut fx = fixture(17);
+    let t = fx.cfg.seq;
+    let mut sess = fx
+        .exec
+        .begin_decode(ART, Arc::new(fx.w0.clone()), &SessionOpts::with_slots(3))
+        .unwrap();
+    let mk = |prompt: Vec<i32>| SeqRequest {
+        adapter: "tr".into(),
+        theta: Arc::new(fx.theta.clone()),
+        statics: Arc::new(fx.statics.clone()),
+        prompt,
+        max_new: 4,
+    };
+    let under = sess.admit(mk(vec![3; t - 1])).unwrap();
+    assert!(!under.truncated, "len == seq-1 fits untruncated");
+    let exact = sess.admit(mk(vec![3; t])).unwrap();
+    assert!(!exact.truncated, "len == seq fills the window but loses nothing");
+    let over = sess.admit(mk(vec![3; t + 1])).unwrap();
+    assert!(over.truncated, "len == seq+1 must surface the cut");
+    assert_eq!(sess.stats().truncated_admits, 1);
+
+    let mut emitted: Vec<Vec<i32>> = vec![Vec::new(); 3];
+    while sess.active() > 0 {
+        for ev in sess.step(fx.exec.as_mut()).unwrap() {
+            if let Some(tok) = ev.token {
+                emitted[ev.slot].push(tok);
+            }
+        }
+    }
+    sess.finish();
+    // window-filling and truncated sequences generate nothing (legacy
+    // stillborn rows); the seq-1 prompt emits at most its window-
+    // filling token (zero if the first argmax is EOS)
+    assert!(emitted[under.slot].len() <= 1);
+    assert!(emitted[exact.slot].is_empty());
+    assert!(emitted[over.slot].is_empty());
+
+    // the full-forward fallback surfaces the same flag and counter
+    let meta = fx.exec.meta(ART).unwrap().clone();
+    let mut fb =
+        FallbackSession::new(meta, Arc::new(fx.w0.clone()), &SessionOpts::with_slots(2)).unwrap();
+    assert!(!fb.admit(mk(vec![3; t])).unwrap().truncated);
+    assert!(fb.admit(mk(vec![3; t + 1])).unwrap().truncated);
+    assert_eq!(fb.stats().truncated_admits, 1);
+    fb.finish();
 }
 
 /// Admission guards: empty prompts are rejected up front, full

@@ -252,6 +252,11 @@ fn native_server_roundtrip_and_batching() {
     let hit_rate = stats.get("recon_hit_rate").unwrap().as_f64().unwrap();
     assert!((0.0..=1.0).contains(&hit_rate), "{hit_rate}");
     assert!(hit_rate > 0.0, "repeat adapter must hit the reconstruction cache");
+    // paged-K/V accounting is on the wire: nothing in flight once all
+    // requests drained, and the retired sequences recycled their pages
+    assert_eq!(stats.get("kv_bytes_in_flight").unwrap().as_f64().unwrap(), 0.0);
+    assert!(stats.get("kv_page_churn").unwrap().as_f64().unwrap() >= 3.0);
+    assert_eq!(stats.get("truncated_admits").unwrap().as_f64().unwrap(), 0.0);
     handle.shutdown();
 }
 

@@ -94,3 +94,138 @@ fn serves_256_adapters_within_factored_residency_budget() {
         4 * dense_bytes
     );
 }
+
+/// Arena lifecycle fuzz: seeded-random admit/step interleavings of
+/// heterogeneous adapters through a session whose K/V budget is
+/// EXACTLY `slots` pages. Every sequence here fits one page, so any
+/// leaked page or reservation makes a later admission fail, and any
+/// page still held after the drain shows up in the session gauge.
+#[test]
+fn kv_arena_churn_fuzz_leaks_no_pages() {
+    let mut exec = NativeBackend::new().unwrap();
+    let meta = exec.meta(ART).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let w0 = Arc::new(uni_lora::coordinator::init_base(&meta, 19));
+    let statics = Arc::new(gen_statics(&cfg, 19).unwrap());
+    let d = d_effective(&cfg);
+    let thetas: Vec<Arc<Vec<f32>>> = (0..3)
+        .map(|i| Arc::new(uni_lora::rng::normals(300 + i, d).iter().map(|v| 0.05 * v).collect()))
+        .collect();
+
+    // prompt (1..=4) + max_new (0..=3) <= 7 tokens <= one page per
+    // live sequence, so `slots` pages is the exact worst case
+    let slots = 4usize;
+    let opts = SessionOpts::with_slots(slots).with_kv_pages(slots);
+    let mut sess = exec.begin_decode(ART, w0.clone(), &opts).unwrap();
+
+    // deterministic LCG stand-in for an RNG: the point is interleaving
+    // variety, not entropy
+    let mut state = 0x2545f4914f6cdd1du64;
+    let mut rnd = move |m: usize| {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((state >> 33) as usize) % m
+    };
+    let total = 64usize;
+    let mut admitted = 0usize;
+    let mut one_page_seqs = 0u64; // non-stillborn => exactly one page
+    while admitted < total || sess.active() > 0 {
+        let can_admit = admitted < total && sess.free_slots() > 0;
+        if can_admit && (sess.active() == 0 || rnd(2) == 0) {
+            let plen = 1 + rnd(4);
+            let max_new = rnd(4); // 0 => stillborn: reserves no pages
+            let adm = sess
+                .admit(SeqRequest {
+                    adapter: format!("t{}", admitted % 3),
+                    theta: thetas[admitted % 3].clone(),
+                    statics: statics.clone(),
+                    prompt: vec![(1 + (admitted % 7)) as i32; plen],
+                    max_new,
+                })
+                .expect("a free slot under an exact budget must admit; a failure is a page leak");
+            assert!(!adm.truncated);
+            if max_new > 0 {
+                one_page_seqs += 1;
+            }
+            admitted += 1;
+        } else {
+            sess.step(&mut exec).unwrap();
+        }
+    }
+    let st = sess.stats();
+    assert_eq!(st.admitted, total as u64);
+    assert_eq!(st.kv_bytes_in_flight, 0, "drained session must hold no pages");
+    assert_eq!(
+        st.kv_page_churn, one_page_seqs,
+        "every retired non-stillborn sequence recycles exactly its one page"
+    );
+
+    // the budget is fully recoverable: a fresh full-occupancy wave
+    // still admits after all that churn
+    for k in 0..slots {
+        sess.admit(SeqRequest {
+            adapter: format!("t{}", k % 3),
+            theta: thetas[k % 3].clone(),
+            statics: statics.clone(),
+            prompt: vec![1, 2],
+            max_new: 2,
+        })
+        .unwrap();
+    }
+    while sess.active() > 0 {
+        sess.step(&mut exec).unwrap();
+    }
+    assert_eq!(sess.stats().kv_page_churn, one_page_seqs + slots as u64);
+    sess.finish();
+    assert_eq!(sess.stats().kv_bytes_in_flight, 0);
+}
+
+/// Admission fails with the typed budget error exactly when the token
+/// budget runs out — not a slot earlier, not a slot later — and the
+/// refused request fits again once a sequence retires.
+#[test]
+fn admission_rejects_exactly_at_kv_budget_exhaustion() {
+    use uni_lora::runtime::native::kv_arena::KvBudgetExhausted;
+
+    let mut exec = NativeBackend::new().unwrap();
+    let meta = exec.meta(ART).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let w0 = Arc::new(uni_lora::coordinator::init_base(&meta, 23));
+    let statics = Arc::new(gen_statics(&cfg, 23).unwrap());
+    let d = d_effective(&cfg);
+    let theta: Arc<Vec<f32>> =
+        Arc::new(uni_lora::rng::normals(91, d).iter().map(|v| 0.05 * v).collect());
+    let mk = |k: usize| SeqRequest {
+        adapter: format!("b{k}"),
+        theta: theta.clone(),
+        statics: statics.clone(),
+        prompt: vec![1, 2, 3],
+        max_new: 2,
+    };
+
+    // three slots but only two pages: the token budget, not the slot
+    // count, is the binding constraint
+    let opts = SessionOpts::with_slots(3).with_kv_pages(2);
+    let mut sess = exec.begin_decode(ART, w0.clone(), &opts).unwrap();
+    sess.admit(mk(0)).unwrap();
+    sess.admit(mk(1)).unwrap();
+    assert_eq!(sess.free_slots(), 1, "a slot is free; only the budget refuses");
+    let err = sess.admit(mk(2)).unwrap_err();
+    let b = err
+        .downcast_ref::<KvBudgetExhausted>()
+        .unwrap_or_else(|| panic!("expected KvBudgetExhausted, got: {err}"));
+    assert_eq!((b.needed_pages, b.free_pages, b.budget_pages), (1, 0, 2));
+    assert_eq!(sess.active(), 2, "the refused admission must not occupy a slot");
+
+    // retirement returns the pages; the identical request now admits
+    while sess.active() > 0 {
+        sess.step(&mut exec).unwrap();
+    }
+    let adm = sess.admit(mk(2)).unwrap();
+    assert!(!adm.truncated);
+    while sess.active() > 0 {
+        sess.step(&mut exec).unwrap();
+    }
+    let st = sess.stats();
+    assert_eq!((st.admitted, st.kv_bytes_in_flight), (3, 0));
+    sess.finish();
+}
