@@ -4,18 +4,23 @@
 //! occupancy (the PR-7 acceptance number, plus the paged-K/V residency
 //! peak), (c) the adapter-count sweep (1/16/256 distinct adapters,
 //! factored vs dense execution pinned through `SessionOpts`) and
-//! (d) router throughput under single- and mixed-adapter workloads
-//! across worker-pool widths. Kernel threads are pinned to 1 so the
-//! comparisons isolate the decode algorithm and worker-level
+//! (d) sampled-vs-greedy decoding through the streaming serve path
+//! (tokens/s and TTFT-to-first-frame — the PR-8 acceptance numbers)
+//! and (e) router throughput under single- and mixed-adapter
+//! workloads across worker-pool widths. Kernel threads are pinned to
+//! 1 so the comparisons isolate the decode algorithm and worker-level
 //! parallelism from intra-op parallelism.
 //!
 //! With `UNI_LORA_BENCH_JSON=1` the decode comparison, the fused-step
-//! comparison and the adapter sweep land in `BENCH_serving.json` at
-//! the repo root (`scripts/bench_snapshot.sh` archives it per commit).
+//! comparison, the adapter sweep and the sampling comparison land in
+//! `BENCH_serving.json` at the repo root (`scripts/bench_snapshot.sh`
+//! archives it per commit).
 //!
 //! Runs on the default backend (native unless UNI_LORA_BACKEND=pjrt).
 //! Run: cargo bench --bench serving
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Instant;
 use uni_lora::adapters::{AdapterCheckpoint, Registry};
@@ -23,8 +28,10 @@ use uni_lora::bench;
 use uni_lora::config::RuntimeOpts;
 use uni_lora::coordinator::init_base;
 use uni_lora::data::vocab;
+use uni_lora::generation::SamplingParams;
 use uni_lora::projection::statics::{gen_statics, init_theta};
 use uni_lora::runtime::Backend;
+use uni_lora::server::protocol::{Request, Response};
 use uni_lora::server::{serve, ServerConfig};
 use uni_lora::session::{DecodeSession, FallbackSession, SeqRequest, SessionOpts};
 use uni_lora::util::json::{n, obj, s, Json};
@@ -70,6 +77,7 @@ fn drive_session(
                     statics: statics.clone(),
                     prompt: prompt.clone(),
                     max_new,
+                    sampling: SamplingParams::default(),
                 })
                 .expect("admit")
                 .slot;
@@ -236,6 +244,7 @@ fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
                         statics: statics.clone(),
                         prompt: prompt.clone(),
                         max_new,
+                        sampling: SamplingParams::default(),
                     })
                     .expect("admit");
                     admitted += 1;
@@ -271,6 +280,117 @@ fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
             ]));
         }
     }
+    Ok(entries)
+}
+
+/// Send one streamed `generate` over a raw socket and read frames
+/// until the terminal one. Returns the token count and the wall time
+/// from the request write to the FIRST frame — real time-to-first-byte
+/// through the whole serve path, not a session-internal estimate.
+fn stream_once(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    adapter: &str,
+    prompt: &[i32],
+    max_new: usize,
+    sampling: &SamplingParams,
+) -> anyhow::Result<(usize, f64)> {
+    let req = Request::Generate {
+        adapter: adapter.into(),
+        prompt: prompt.to_vec(),
+        max_new,
+        sampling: sampling.clone(),
+        stream: true,
+    };
+    let t0 = Instant::now();
+    writeln!(writer, "{}", req.to_json())?;
+    let mut first: Option<f64> = None;
+    let mut count = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        match Response::parse(&line)? {
+            Response::Frame { token, done, .. } => {
+                if token.is_some() {
+                    count += 1;
+                    first.get_or_insert_with(|| t0.elapsed().as_secs_f64());
+                }
+                if done {
+                    let t = first.unwrap_or_else(|| t0.elapsed().as_secs_f64());
+                    return Ok((count, t));
+                }
+            }
+            Response::Error(e) => anyhow::bail!("server error: {e}"),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+/// Satellite comparison: sampled vs greedy decoding through the
+/// streaming serve path — tokens/s plus TTFT-to-first-frame, i.e. the
+/// latency a streaming client actually observes. Seeded sampling
+/// should cost a sort + one RNG draw per token over the greedy
+/// argmax; the entries record how much of that shows up end to end.
+fn sampling_comparison() -> anyhow::Result<Vec<Json>> {
+    let mut exec = uni_lora::runtime::default_backend()?;
+    let meta = exec.meta(ART)?.clone();
+    let w0 = init_base(&meta, 42);
+    exec.prepare(ART)?;
+    let registry = Registry::new();
+    registry.insert(
+        "a0".into(),
+        AdapterCheckpoint {
+            seed: 9,
+            method: "uni".into(),
+            artifact: ART.into(),
+            theta: init_theta(&meta.cfg, 9)?,
+            head: vec![],
+        },
+    );
+    let handle = serve(
+        ServerConfig::new("127.0.0.1:0", ART).with_workers(1),
+        exec,
+        Arc::new(registry),
+        meta.cfg.clone(),
+        w0,
+    )?;
+    let stream = TcpStream::connect(handle.addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let prompt = bench_prompt();
+    let (n_reqs, max_new) = (16usize, 16usize);
+    let greedy = SamplingParams::default();
+    let sampled = SamplingParams { temperature: 0.8, top_k: 12, seed: 9, ..Default::default() };
+
+    let mut entries = Vec::new();
+    for (label, params) in [("greedy", &greedy), ("sampled", &sampled)] {
+        // warmup (reconstruction cache, arena pages)
+        stream_once(&mut reader, &mut writer, "a0", &prompt, 4, params)?;
+        let t0 = Instant::now();
+        let mut generated = 0usize;
+        let mut ttfts = Vec::new();
+        for _ in 0..n_reqs {
+            let (toks, ttft) =
+                stream_once(&mut reader, &mut writer, "a0", &prompt, max_new, params)?;
+            generated += toks;
+            ttfts.push(ttft);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tps = generated as f64 / wall.max(1e-9);
+        let ttft_ms = 1000.0 * ttfts.iter().sum::<f64>() / ttfts.len().max(1) as f64;
+        println!(
+            "sampling {label:<8} {n_reqs} reqs x max_new={max_new}: {generated} tokens \
+             in {wall:.2}s = {tps:.1} tok/s | ttft-to-first-frame {ttft_ms:.1}ms"
+        );
+        entries.push(obj(vec![
+            ("name", s(&format!("sampling/{label}/seqs{n_reqs}/new{max_new}"))),
+            ("tokens_per_sec", n(tps)),
+            ("ttft_first_frame_ms", n(ttft_ms)),
+            ("generated", n(generated as f64)),
+            ("wall_secs", n(wall)),
+        ]));
+    }
+    handle.shutdown();
     Ok(entries)
 }
 
@@ -366,6 +486,11 @@ fn main() -> anyhow::Result<()> {
     let sweep_entries = adapter_sweep()?;
     if let Some(path) = bench::write_named_json_report("serving", "adapter_sweep", sweep_entries)? {
         println!("recorded adapter sweep -> {}", path.display());
+    }
+
+    let sampling_entries = sampling_comparison()?;
+    if let Some(path) = bench::write_named_json_report("serving", "sampling", sampling_entries)? {
+        println!("recorded sampled-vs-greedy comparison -> {}", path.display());
     }
 
     let auto = RuntimeOpts::from_env().threads;

@@ -242,6 +242,10 @@ pub struct RuntimeOpts {
     /// per-slot stepping, so the knob exists for A/B benching and
     /// bisection, not correctness.
     pub fused_step: bool,
+    /// Beam width the eval harness resolves when a caller asks for
+    /// beam search without pinning a width
+    /// (`UNI_LORA_BEAM_WIDTH`; default [`DEFAULT_BEAM_WIDTH`]).
+    pub beam_width: usize,
 }
 
 /// Positions per K/V arena page. One page holds every layer's keys and
@@ -266,6 +270,11 @@ pub const DEFAULT_RECON_CACHE: usize = 64;
 /// below that, factored keeps per-adapter state at rank-r factors.
 pub const DEFAULT_DENSE_THRESHOLD: usize = 4;
 
+/// Default eval-harness beam width. 4 is the conventional
+/// small-model sweet spot: wide enough to recover from a first-token
+/// argmax mistake, narrow enough that eval cost stays ~width× greedy.
+pub const DEFAULT_BEAM_WIDTH: usize = 4;
+
 impl RuntimeOpts {
     pub fn from_env() -> RuntimeOpts {
         RuntimeOpts {
@@ -280,6 +289,7 @@ impl RuntimeOpts {
             ),
             kv_pages: parse_kv_pages(std::env::var("UNI_LORA_KV_PAGES").ok().as_deref()),
             fused_step: parse_fused_step(std::env::var("UNI_LORA_FUSED_STEP").ok().as_deref()),
+            beam_width: parse_beam_width(std::env::var("UNI_LORA_BEAM_WIDTH").ok().as_deref()),
         }
     }
 }
@@ -360,6 +370,15 @@ pub fn parse_fused_step(raw: Option<&str>) -> bool {
         raw.map(|s| s.trim().to_ascii_lowercase()).as_deref(),
         Some("0") | Some("false") | Some("off") | Some("no")
     )
+}
+
+/// `UNI_LORA_BEAM_WIDTH` parsing: a positive integer wins; anything
+/// else (unset, garbage, 0 — a width of zero keeps no beams) falls
+/// back to [`DEFAULT_BEAM_WIDTH`]. Width 1 is exactly greedy.
+pub fn parse_beam_width(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_BEAM_WIDTH)
 }
 
 #[cfg(test)]
@@ -456,10 +475,16 @@ mod tests {
         assert!(!parse_fused_step(Some(" OFF ")));
         assert!(!parse_fused_step(Some("false")));
         assert!(!parse_fused_step(Some("no")));
+        assert_eq!(parse_beam_width(Some("6")), 6);
+        assert_eq!(parse_beam_width(Some(" 1 ")), 1);
+        assert_eq!(parse_beam_width(Some("0")), DEFAULT_BEAM_WIDTH);
+        assert_eq!(parse_beam_width(Some("wide")), DEFAULT_BEAM_WIDTH);
+        assert_eq!(parse_beam_width(None), DEFAULT_BEAM_WIDTH);
         // from_env stays total (tests must not mutate the env)
         let o = RuntimeOpts::from_env();
         assert!(o.recon_cache >= 1);
         assert!(o.dense_threshold >= 1);
+        assert!(o.beam_width >= 1);
     }
 
     #[test]

@@ -1,11 +1,47 @@
 //! Generation-based evaluation: exact-match accuracy (GSM8K/MATH-like)
-//! and MT-Bench-style rubric scores, via batched greedy decoding.
+//! and MT-Bench-style rubric scores, via batched decoding under a
+//! selectable [`DecodeMode`] — greedy (the default and the paper's
+//! protocol), seeded sampling, or beam search.
 
 use crate::coordinator::trainer::LmTrainer;
 use crate::data::LmExample;
+use crate::generation::SamplingParams;
 use crate::metrics;
 use crate::runtime::Backend;
 use anyhow::Result;
+
+/// How the eval harness decodes. Every mode is deterministic: greedy
+/// and beam by construction, sampling through the seeded draw streams.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecodeMode {
+    /// Batched greedy decoding (the paper's protocol).
+    Greedy,
+    /// Seeded sampling; prompt `k` draws from `child_seed(seed, k)`.
+    Sampled(SamplingParams),
+    /// Beam search with this width; `0` = resolve from
+    /// `UNI_LORA_BEAM_WIDTH` (default
+    /// [`crate::config::DEFAULT_BEAM_WIDTH`]).
+    Beam(usize),
+}
+
+impl DecodeMode {
+    fn decode(
+        &self,
+        trainer: &mut LmTrainer,
+        exec: &mut dyn Backend,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        match self {
+            DecodeMode::Greedy => trainer.greedy_decode(exec, prompts, max_new),
+            DecodeMode::Sampled(p) => trainer.sampled_decode(exec, prompts, max_new, p),
+            DecodeMode::Beam(w) => {
+                let w = if *w == 0 { crate::config::RuntimeOpts::from_env().beam_width } else { *w };
+                trainer.beam_decode(exec, prompts, max_new, w)
+            }
+        }
+    }
+}
 
 /// Exact-match accuracy over a dev split: decode from each prompt and
 /// require the full reference answer as a prefix of the generation.
@@ -15,8 +51,20 @@ pub fn exact_match_accuracy(
     dev: &[LmExample],
     max_new: usize,
 ) -> Result<f64> {
+    exact_match_accuracy_with(trainer, exec, dev, max_new, &DecodeMode::Greedy)
+}
+
+/// [`exact_match_accuracy`] under an explicit [`DecodeMode`] (beam
+/// search for the math harness, sampled for robustness sweeps).
+pub fn exact_match_accuracy_with(
+    trainer: &mut LmTrainer,
+    exec: &mut dyn Backend,
+    dev: &[LmExample],
+    max_new: usize,
+    mode: &DecodeMode,
+) -> Result<f64> {
     let prompts: Vec<Vec<i32>> = dev.iter().map(|e| e.tokens[..e.prompt_len].to_vec()).collect();
-    let gens = trainer.greedy_decode(exec, &prompts, max_new)?;
+    let gens = mode.decode(trainer, exec, &prompts, max_new)?;
     let hits = gens
         .iter()
         .zip(dev)
@@ -32,8 +80,19 @@ pub fn rubric_score(
     dev: &[LmExample],
     max_new: usize,
 ) -> Result<f64> {
+    rubric_score_with(trainer, exec, dev, max_new, &DecodeMode::Greedy)
+}
+
+/// [`rubric_score`] under an explicit [`DecodeMode`].
+pub fn rubric_score_with(
+    trainer: &mut LmTrainer,
+    exec: &mut dyn Backend,
+    dev: &[LmExample],
+    max_new: usize,
+    mode: &DecodeMode,
+) -> Result<f64> {
     let prompts: Vec<Vec<i32>> = dev.iter().map(|e| e.tokens[..e.prompt_len].to_vec()).collect();
-    let gens = trainer.greedy_decode(exec, &prompts, max_new)?;
+    let gens = mode.decode(trainer, exec, &prompts, max_new)?;
     let total: f64 = gens
         .iter()
         .zip(dev)

@@ -419,7 +419,22 @@ impl LmTrainer {
         prompts: &[Vec<i32>],
         max_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        crate::session::decode_greedy(
+        self.sampled_decode(exec, prompts, max_new, &crate::generation::SamplingParams::default())
+    }
+
+    /// [`LmTrainer::greedy_decode`] generalized to any
+    /// [`crate::generation::SamplingParams`] — greedy is the
+    /// default-params special case of the same session path. Prompt `k`
+    /// samples from `child_seed(sampling.seed, k)`, so a given
+    /// (prompts, params) pair replays bit-identical streams.
+    pub fn sampled_decode(
+        &mut self,
+        exec: &mut dyn Backend,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        sampling: &crate::generation::SamplingParams,
+    ) -> Result<Vec<Vec<i32>>> {
+        crate::session::decode_sampled(
             exec,
             &self.art_logits,
             &format!("{}#seed{}", self.art_logits, self.seed),
@@ -428,7 +443,31 @@ impl LmTrainer {
             self.stats.clone(),
             prompts,
             max_new,
+            sampling,
             &crate::session::SessionOpts::from_env(),
+        )
+    }
+
+    /// Eval-time beam search (`width` beams per prompt) over full
+    /// forwards — see [`crate::generation::beam`]. Width 1 reproduces
+    /// the greedy stream exactly.
+    pub fn beam_decode(
+        &mut self,
+        exec: &mut dyn Backend,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        width: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        crate::generation::beam::beam_decode_with(
+            exec,
+            &self.art_logits,
+            &self.cfg,
+            &self.theta,
+            &self.w0,
+            &self.stats,
+            prompts,
+            max_new,
+            width,
         )
     }
 }

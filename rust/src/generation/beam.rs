@@ -1,0 +1,155 @@
+//! Eval-time beam search over full `[B, T]` forwards.
+//!
+//! The serving stack samples or argmaxes one token per step; the
+//! math/instruct eval harness (PAPER.md §5 generation tasks) also
+//! wants beam search, which needs *alternative* continuations kept
+//! alive — a poor fit for decode-session slots (each slot is one
+//! committed sequence). So beams run the way the legacy golden decode
+//! loop does: ordinary `Backend::run` `lm_logits` executions, beams
+//! packed into batch rows, scored by summed log-softmax.
+//!
+//! Determinism contract: expansion order is total (score descending,
+//! then parent beam, then token id, compared with `total_cmp`), and
+//! scoring is f64 accumulation in a fixed order — so beam output is
+//! bit-stable across runs and thread counts, like everything else in
+//! the decode surface. Width 1 degenerates to exactly the legacy
+//! greedy stream (same EOS / context-window / budget rules; ties break
+//! to the lowest token id, matching `metrics::argmax`'s first-max
+//! rule), which `tests/generation.rs` pins.
+
+use crate::config::ModelCfg;
+use crate::data::vocab;
+use crate::projection::statics::Static;
+use crate::runtime::{Backend, TensorIn};
+use anyhow::Result;
+use std::sync::Arc;
+
+struct Beam {
+    /// emitted continuation (prompt excluded)
+    toks: Vec<i32>,
+    /// summed log-softmax of every emitted step
+    score: f64,
+    done: bool,
+}
+
+/// Beam-search decode of `prompts` (shared adapter theta), `width`
+/// beams per prompt, up to `max_new` emitted tokens. Returns the
+/// highest-scoring beam's emitted tokens per prompt. The signature
+/// mirrors `coordinator::trainer::decode_with` — the eval harness
+/// calls it through [`crate::coordinator::trainer::LmTrainer::beam_decode`].
+pub fn beam_decode_with(
+    exec: &mut dyn Backend,
+    art_logits: &str,
+    cfg: &ModelCfg,
+    theta: &[f32],
+    w0: &[f32],
+    stats: &[Static],
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    width: usize,
+) -> Result<Vec<Vec<i32>>> {
+    anyhow::ensure!(width >= 1, "beam width must be >= 1, got {width}");
+    // frozen inputs wrapped as shared tensors once (refcount bumps per
+    // step, not backbone copies — same hoist as decode_with)
+    let theta_in = TensorIn::SharedF32(Arc::new(theta.to_vec()));
+    let w0_in = TensorIn::SharedF32(Arc::new(w0.to_vec()));
+    let stat_ins: Vec<TensorIn> = stats.iter().map(TensorIn::shared_from).collect();
+    let mut out = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        out.push(beam_one(exec, art_logits, cfg, &theta_in, &w0_in, &stat_ins, p, max_new, width)?);
+    }
+    Ok(out)
+}
+
+fn beam_one(
+    exec: &mut dyn Backend,
+    art_logits: &str,
+    cfg: &ModelCfg,
+    theta_in: &TensorIn,
+    w0_in: &TensorIn,
+    stat_ins: &[TensorIn],
+    prompt: &[i32],
+    max_new: usize,
+    width: usize,
+) -> Result<Vec<i32>> {
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let (bsz, t, vocab_n) = (cfg.batch, cfg.seq, cfg.vocab);
+    let plen = prompt.len();
+    if plen >= t || max_new == 0 {
+        // the legacy loop's stillborn rows: window already full (an
+        // over-window prompt truncates to full), or zero budget
+        return Ok(Vec::new());
+    }
+    let mut beams = vec![Beam { toks: Vec::new(), score: 0.0, done: false }];
+    for _ in 0..max_new {
+        let live: Vec<usize> = (0..beams.len()).filter(|&i| !beams[i].done).collect();
+        if live.is_empty() {
+            break;
+        }
+        // one forward per batch-row chunk of live beams
+        let mut rows: Vec<Vec<f64>> = (0..beams.len()).map(|_| Vec::new()).collect();
+        for chunk in live.chunks(bsz) {
+            let mut toks = vec![vocab::PAD; bsz * t];
+            for (row, &bi) in chunk.iter().enumerate() {
+                let b = &beams[bi];
+                toks[row * t..row * t + plen].copy_from_slice(prompt);
+                toks[row * t + plen..row * t + plen + b.toks.len()].copy_from_slice(&b.toks);
+            }
+            let mut inputs = vec![theta_in.clone(), w0_in.clone(), TensorIn::I32(toks)];
+            inputs.extend(stat_ins.iter().cloned());
+            let outv = exec.run(art_logits, &inputs)?;
+            let logits = outv[0].as_f32()?; // [B, T, V]
+            for (row, &bi) in chunk.iter().enumerate() {
+                let pos = plen + beams[bi].toks.len() - 1;
+                let slice = &logits[(row * t + pos) * vocab_n..(row * t + pos + 1) * vocab_n];
+                rows[bi] = crate::metrics::log_softmax(slice);
+            }
+        }
+        // expand: finished beams carry over as single candidates, live
+        // beams branch on every vocabulary token
+        let mut cand: Vec<(f64, usize, Option<i32>)> = Vec::new();
+        for (bi, b) in beams.iter().enumerate() {
+            if b.done {
+                cand.push((b.score, bi, None));
+            } else {
+                for (tok, lp) in rows[bi].iter().enumerate() {
+                    cand.push((b.score + lp, bi, Some(tok as i32)));
+                }
+            }
+        }
+        cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        cand.truncate(width);
+        beams = cand
+            .into_iter()
+            .map(|(score, bi, tok)| {
+                let parent = &beams[bi];
+                match tok {
+                    // carried-over finished beam, or EOS: ends without
+                    // emitting (the greedy EOS rule)
+                    None => Beam { toks: parent.toks.clone(), score, done: true },
+                    Some(tk) if tk == vocab::EOS => {
+                        Beam { toks: parent.toks.clone(), score, done: true }
+                    }
+                    Some(tk) => {
+                        let mut toks = parent.toks.clone();
+                        toks.push(tk);
+                        // window fills: the token at the last position
+                        // is kept, then the beam is done (legacy
+                        // `lens >= t`)
+                        let done = plen + toks.len() >= t;
+                        Beam { toks, score, done }
+                    }
+                }
+            })
+            .collect();
+    }
+    // best = highest summed log-prob; ties break to the earlier beam
+    // (which the selection sort already ordered deterministically)
+    let best = beams
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.score.total_cmp(&b.1.score).then(b.0.cmp(&a.0)))
+        .map(|(_, b)| b)
+        .expect("width >= 1 guarantees at least one beam");
+    Ok(best.toks.clone())
+}

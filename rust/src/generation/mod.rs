@@ -1,0 +1,498 @@
+//! Generation subsystem: everything between a logits row and an
+//! emitted token.
+//!
+//! [`SamplingParams`] is the per-request decoding policy — temperature,
+//! top-k / top-p truncation, repetition penalty, stop sequences,
+//! per-token logit bias and a replay seed. [`Sampler`] applies it one
+//! logits row at a time, drawing from a deterministic
+//! [`crate::rng::Stream`] child ([`crate::rng::STREAM_SAMPLE`]), so an
+//! identical `(request, seed)` pair replays a bit-identical token
+//! stream across runs and thread counts — the same counter-based
+//! determinism contract the projection streams already carry.
+//!
+//! Greedy decoding is the `temperature = 0` special case of this code
+//! path, not a separate one: with default params the sampler routes
+//! through plain [`crate::metrics::argmax`] and consumes **zero** RNG
+//! draws, so temperature-0 streams are bit-equal to the legacy greedy
+//! decode by construction (held to it in `tests/decode_parity.rs`).
+//! Sampling happens strictly after the logits GEMM, so the fused
+//! batched decode step and per-slot stepping stay token-stream
+//! identical under any params.
+//!
+//! [`beam`] adds beam search as an eval-time decode mode over full
+//! `[B, T]` forwards (the math/instruct harness); it is not a serving
+//! path.
+
+pub mod beam;
+
+use crate::util::json::{n, obj, Json};
+use anyhow::{anyhow, ensure, Result};
+
+/// Per-request decoding policy. `Default` is exact greedy: temperature
+/// 0, no truncation, no penalty, no stops, no bias — the configuration
+/// every pre-existing caller implicitly ran.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `0` = greedy argmax (the default). Must be
+    /// finite and >= 0.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens before sampling;
+    /// `0` = disabled.
+    pub top_k: usize,
+    /// Nucleus truncation: keep the smallest prefix of the
+    /// probability-sorted vocabulary whose mass reaches `top_p`. Must
+    /// be in (0, 1]; `1` = disabled.
+    pub top_p: f32,
+    /// Divide positive logits (multiply negative ones) of
+    /// already-emitted tokens by this factor; `1` = disabled. Must be
+    /// finite and > 0.
+    pub repetition_penalty: f32,
+    /// Replay seed: the sampler draws from
+    /// `Stream::child(seed, STREAM_SAMPLE)`.
+    pub seed: u64,
+    /// Stop sequences over emitted tokens. A sequence ends — without
+    /// emitting — when the next token would complete any stop
+    /// sequence; earlier tokens of a partial match are already out.
+    pub stop: Vec<Vec<i32>>,
+    /// Additive per-token logit adjustments, applied before
+    /// temperature/truncation. Out-of-vocabulary ids are ignored at
+    /// pick time (vocabulary size is an artifact property the wire
+    /// layer cannot see).
+    pub logit_bias: Vec<(i32, f32)>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            seed: 0,
+            stop: Vec::new(),
+            logit_bias: Vec::new(),
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Temperature-0 requests pick deterministically (argmax after
+    /// bias/penalty) and consume no RNG draws.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
+    /// Range-check every field with a typed message (the wire layer
+    /// surfaces these verbatim; sessions re-check at admission).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.temperature.is_finite() && self.temperature >= 0.0,
+            "sampling.temperature must be finite and >= 0, got {}",
+            self.temperature
+        );
+        ensure!(
+            self.top_p.is_finite() && self.top_p > 0.0 && self.top_p <= 1.0,
+            "sampling.top_p must be in (0, 1], got {}",
+            self.top_p
+        );
+        ensure!(
+            self.repetition_penalty.is_finite() && self.repetition_penalty > 0.0,
+            "sampling.repetition_penalty must be finite and > 0, got {}",
+            self.repetition_penalty
+        );
+        ensure!(
+            self.stop.iter().all(|s| !s.is_empty()),
+            "sampling.stop sequences must be non-empty token arrays"
+        );
+        ensure!(
+            self.logit_bias.iter().all(|&(_, b)| b.is_finite()),
+            "sampling.logit_bias values must be finite"
+        );
+        Ok(())
+    }
+
+    /// Parse the `sampling` object of a `generate` request. Unknown
+    /// keys are an error (satellite: no more silently-accepted
+    /// garbage), every field is range-validated via
+    /// [`SamplingParams::validate`].
+    pub fn from_json(j: &Json) -> Result<SamplingParams> {
+        const ALLOWED: [&str; 7] =
+            ["temperature", "top_k", "top_p", "repetition_penalty", "seed", "stop", "logit_bias"];
+        for k in j.as_obj()?.keys() {
+            ensure!(ALLOWED.contains(&k.as_str()), "unknown sampling key {k:?}");
+        }
+        let d = SamplingParams::default();
+        let p = SamplingParams {
+            temperature: match j.get("temperature") {
+                Some(v) => v.as_f64()? as f32,
+                None => d.temperature,
+            },
+            top_k: match j.get("top_k") {
+                Some(v) => non_negative_int(v, "sampling.top_k")? as usize,
+                None => d.top_k,
+            },
+            top_p: match j.get("top_p") {
+                Some(v) => v.as_f64()? as f32,
+                None => d.top_p,
+            },
+            repetition_penalty: match j.get("repetition_penalty") {
+                Some(v) => v.as_f64()? as f32,
+                None => d.repetition_penalty,
+            },
+            seed: match j.get("seed") {
+                Some(v) => non_negative_int(v, "sampling.seed")?,
+                None => d.seed,
+            },
+            stop: match j.get("stop") {
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|seq| {
+                        seq.as_arr()?.iter().map(|t| Ok(t.as_i64()? as i32)).collect::<Result<_>>()
+                    })
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+            logit_bias: match j.get("logit_bias") {
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|pair| {
+                        let p = pair.as_arr()?;
+                        ensure!(p.len() == 2, "sampling.logit_bias entries are [token, bias] pairs");
+                        Ok((p[0].as_i64()? as i32, p[1].as_f64()? as f32))
+                    })
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Wire form: only non-default fields are emitted, so a default
+    /// (greedy) request serializes without a `sampling` object at all.
+    pub fn to_json(&self) -> Json {
+        let d = SamplingParams::default();
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if self.temperature != d.temperature {
+            pairs.push(("temperature", n(self.temperature as f64)));
+        }
+        if self.top_k != d.top_k {
+            pairs.push(("top_k", n(self.top_k as f64)));
+        }
+        if self.top_p != d.top_p {
+            pairs.push(("top_p", n(self.top_p as f64)));
+        }
+        if self.repetition_penalty != d.repetition_penalty {
+            pairs.push(("repetition_penalty", n(self.repetition_penalty as f64)));
+        }
+        if self.seed != d.seed {
+            pairs.push(("seed", n(self.seed as f64)));
+        }
+        if !self.stop.is_empty() {
+            pairs.push((
+                "stop",
+                Json::Arr(
+                    self.stop
+                        .iter()
+                        .map(|s| Json::Arr(s.iter().map(|&t| n(t as f64)).collect()))
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.logit_bias.is_empty() {
+            pairs.push((
+                "logit_bias",
+                Json::Arr(
+                    self.logit_bias
+                        .iter()
+                        .map(|&(t, b)| Json::Arr(vec![n(t as f64), n(b as f64)]))
+                        .collect(),
+                ),
+            ));
+        }
+        obj(pairs)
+    }
+}
+
+fn non_negative_int(v: &Json, what: &str) -> Result<u64> {
+    let f = v.as_f64()?;
+    if f.fract() != 0.0 || !(0.0..=9.007_199_254_740_992e15).contains(&f) {
+        return Err(anyhow!("{what} must be a non-negative integer, got {f}"));
+    }
+    Ok(f as u64)
+}
+
+/// Per-sequence sampler state: the params, the seeded draw stream, and
+/// the emitted-token history (repetition penalty + stop matching).
+/// One lives in each decode-session slot ([`crate::session`]) and is
+/// consulted once per emission, strictly after the logits GEMM.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+    stream: crate::rng::Stream,
+    emitted: Vec<i32>,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Sampler {
+        let stream = crate::rng::Stream::child(params.seed, crate::rng::STREAM_SAMPLE);
+        Sampler { params, stream, emitted: Vec::new() }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// The pure-greedy fast path: nothing perturbs the logits row, so
+    /// the pick IS `metrics::argmax` and no scratch copy or RNG draw
+    /// happens — this is what makes temperature-0 requests bit-equal
+    /// (and cost-equal) to the legacy greedy decode.
+    fn pure_greedy(&self) -> bool {
+        self.params.temperature == 0.0
+            && self.params.logit_bias.is_empty()
+            && self.params.repetition_penalty == 1.0
+    }
+
+    /// Pick the next token for one logits row. Temperature-0 picks
+    /// argmax (after bias/penalty); otherwise one `next_f64` CDF draw
+    /// over the truncated, temperature-scaled softmax — exactly one
+    /// draw per emitted token, so streams replay positionally.
+    pub fn pick(&mut self, logits: &[f32]) -> i32 {
+        if self.pure_greedy() {
+            return crate::metrics::argmax(logits) as i32;
+        }
+        let mut row: Vec<f32> = logits.to_vec();
+        for &(tok, bias) in &self.params.logit_bias {
+            if let Some(x) = usize::try_from(tok).ok().and_then(|t| row.get_mut(t)) {
+                *x += bias;
+            }
+        }
+        if self.params.repetition_penalty != 1.0 {
+            for (i, &tok) in self.emitted.iter().enumerate() {
+                if self.emitted[..i].contains(&tok) {
+                    continue; // penalize each distinct token once
+                }
+                if let Some(x) = usize::try_from(tok).ok().and_then(|t| row.get_mut(t)) {
+                    *x = if *x > 0.0 {
+                        *x / self.params.repetition_penalty
+                    } else {
+                        *x * self.params.repetition_penalty
+                    };
+                }
+            }
+        }
+        if self.params.temperature == 0.0 {
+            return crate::metrics::argmax(&row) as i32;
+        }
+        // candidate order: logit descending, index ascending — total
+        // and deterministic (total_cmp), so truncation and the CDF
+        // walk are replayable bit-for-bit
+        let mut cand: Vec<(usize, f32)> = row.iter().copied().enumerate().collect();
+        cand.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        if self.params.top_k > 0 && self.params.top_k < cand.len() {
+            cand.truncate(self.params.top_k);
+        }
+        let t = self.params.temperature as f64;
+        let mx = cand[0].1 as f64;
+        let mut probs: Vec<f64> = cand.iter().map(|&(_, l)| ((l as f64 - mx) / t).exp()).collect();
+        let mut z: f64 = probs.iter().sum();
+        if self.params.top_p < 1.0 {
+            let mut cum = 0.0;
+            let mut keep = cand.len();
+            for (i, p) in probs.iter().enumerate() {
+                cum += p / z;
+                if cum >= self.params.top_p as f64 {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            cand.truncate(keep);
+            probs.truncate(keep);
+            z = probs.iter().sum();
+        }
+        let u = self.stream.next_f64() * z;
+        let mut acc = 0.0;
+        for (k, &(idx, _)) in cand.iter().enumerate() {
+            acc += probs[k];
+            if u < acc {
+                return idx as i32;
+            }
+        }
+        cand[cand.len() - 1].0 as i32
+    }
+
+    /// Would emitting `next` complete a stop sequence? Checked by the
+    /// session BEFORE the token is recorded: the sequence ends without
+    /// emitting it (the EOS rule, generalized to arbitrary suffixes).
+    pub fn stop_hit(&self, next: i32) -> bool {
+        self.params.stop.iter().any(|s| match s.split_last() {
+            Some((last, head)) => *last == next && self.emitted.ends_with(head),
+            None => false,
+        })
+    }
+
+    /// Record an emitted token (repetition penalty and stop matching
+    /// both read this history).
+    pub fn note_emitted(&mut self, tok: i32) {
+        self.emitted.push(tok);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_are_greedy_and_valid() {
+        let d = SamplingParams::default();
+        assert!(d.is_greedy());
+        d.validate().unwrap();
+        // default params never consume RNG draws
+        let mut s = Sampler::new(d);
+        let pos0 = s.stream.pos;
+        let row = vec![0.0, 3.0, 1.0];
+        assert_eq!(s.pick(&row), 1);
+        assert_eq!(s.pick(&row), 1);
+        assert_eq!(s.stream.pos, pos0, "greedy picks must not draw");
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_fields() {
+        let reject = |p: SamplingParams, what: &str| {
+            let err = p.validate().unwrap_err().to_string();
+            assert!(err.contains(what), "{what}: {err}");
+        };
+        reject(SamplingParams { temperature: -1.0, ..Default::default() }, "temperature");
+        reject(SamplingParams { temperature: f32::NAN, ..Default::default() }, "temperature");
+        reject(SamplingParams { top_p: 0.0, ..Default::default() }, "top_p");
+        reject(SamplingParams { top_p: 1.5, ..Default::default() }, "top_p");
+        let bad_pen = SamplingParams { repetition_penalty: 0.0, ..Default::default() };
+        reject(bad_pen, "repetition_penalty");
+        reject(SamplingParams { stop: vec![vec![]], ..Default::default() }, "stop");
+        let bias = vec![(1, f32::INFINITY)];
+        reject(SamplingParams { logit_bias: bias, ..Default::default() }, "logit_bias");
+    }
+
+    #[test]
+    fn json_roundtrip_and_unknown_keys() {
+        let p = SamplingParams {
+            temperature: 0.8,
+            top_k: 5,
+            top_p: 0.9,
+            repetition_penalty: 1.2,
+            seed: 7,
+            stop: vec![vec![3, 4]],
+            logit_bias: vec![(2, -1.5)],
+        };
+        let back = SamplingParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // default serializes to an empty object and parses back
+        assert_eq!(SamplingParams::default().to_json().to_string(), "{}");
+        let err = SamplingParams::from_json(&Json::parse(r#"{"temperatur":1.0}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown sampling key"), "{err}");
+        let err = SamplingParams::from_json(&Json::parse(r#"{"top_p":2.0}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("top_p"), "{err}");
+        let err = SamplingParams::from_json(&Json::parse(r#"{"seed":-1}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-negative integer"), "{err}");
+    }
+
+    #[test]
+    fn seeded_picks_replay_and_diverge_across_seeds() {
+        let row: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let params = |seed| SamplingParams { temperature: 1.0, seed, ..Default::default() };
+        let run = |seed| {
+            let mut s = Sampler::new(params(seed));
+            (0..20)
+                .map(|_| {
+                    let t = s.pick(&row);
+                    s.note_emitted(t);
+                    t
+                })
+                .collect::<Vec<i32>>()
+        };
+        assert_eq!(run(1), run(1), "same seed must replay bit-identically");
+        let a = run(1);
+        let b = run(2);
+        assert_ne!(a, b, "different seeds should diverge on a 32-token row over 20 draws");
+        // exactly one draw per pick: replay from a cloned sampler state
+        let mut s = Sampler::new(params(9));
+        let before = s.stream.pos;
+        s.pick(&row);
+        assert_eq!(s.stream.pos, before + 1);
+    }
+
+    #[test]
+    fn top_k_and_top_p_truncate_support() {
+        let mut row = vec![0.0f32; 8];
+        row[2] = 10.0;
+        row[5] = 9.0;
+        row[7] = 8.0;
+        // top_k=2: only tokens 2 and 5 can ever appear
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            seed: 3,
+            ..Default::default()
+        });
+        for _ in 0..50 {
+            let t = s.pick(&row);
+            assert!(t == 2 || t == 5, "top_k=2 leaked token {t}");
+        }
+        // top_p tiny: collapses to the single highest-probability token
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 1.0,
+            top_p: 1e-6,
+            seed: 3,
+            ..Default::default()
+        });
+        for _ in 0..20 {
+            assert_eq!(s.pick(&row), 2);
+        }
+    }
+
+    #[test]
+    fn logit_bias_and_repetition_penalty_shift_the_argmax() {
+        let row = vec![0.0, 5.0, 4.0];
+        // bias is applied even at temperature 0
+        let mut s = Sampler::new(SamplingParams {
+            logit_bias: vec![(2, 2.0)],
+            ..Default::default()
+        });
+        assert_eq!(s.pick(&row), 2);
+        // out-of-range bias ids are ignored, not a crash
+        let mut s = Sampler::new(SamplingParams {
+            logit_bias: vec![(-1, 9.0), (99, 9.0)],
+            ..Default::default()
+        });
+        assert_eq!(s.pick(&row), 1);
+        // a strong repetition penalty demotes the emitted token
+        let mut s = Sampler::new(SamplingParams {
+            repetition_penalty: 10.0,
+            ..Default::default()
+        });
+        assert_eq!(s.pick(&row), 1);
+        s.note_emitted(1);
+        assert_eq!(s.pick(&row), 2, "penalized token 1 must lose to token 2");
+    }
+
+    #[test]
+    fn stop_sequences_match_on_the_completing_token() {
+        let mut s = Sampler::new(SamplingParams {
+            stop: vec![vec![4, 5], vec![9]],
+            ..Default::default()
+        });
+        assert!(s.stop_hit(9), "single-token stop fires immediately");
+        assert!(!s.stop_hit(5), "multi-token stop needs its prefix emitted");
+        s.note_emitted(4);
+        assert!(s.stop_hit(5), "prefix [4] + next 5 completes [4, 5]");
+        assert!(!s.stop_hit(4));
+    }
+}

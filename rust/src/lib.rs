@@ -14,6 +14,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod generation;
 pub mod kernels;
 pub mod metrics;
 pub mod projection;

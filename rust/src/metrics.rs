@@ -14,6 +14,16 @@ pub fn argmax(row: &[f32]) -> usize {
     best
 }
 
+/// Row-wise log-softmax in f64. Beam search accumulates sums of these
+/// as beam scores; f64 with a fixed accumulation order keeps the
+/// scores (and therefore beam selection) bit-stable across runs.
+pub fn log_softmax(row: &[f32]) -> Vec<f64> {
+    let mx = row.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b as f64));
+    let z: f64 = row.iter().map(|&x| (x as f64 - mx).exp()).sum();
+    let lz = z.ln() + mx;
+    row.iter().map(|&x| x as f64 - lz).collect()
+}
+
 pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
     assert_eq!(pred.len(), gold.len());
     if pred.is_empty() {
@@ -139,6 +149,17 @@ pub fn compute(metric: &str, logits: &[Vec<f32>], labels: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn log_softmax_normalizes_and_preserves_order() {
+        let row = vec![1.0f32, 3.0, 2.0, -1.0];
+        let lp = log_softmax(&row);
+        let total: f64 = lp.iter().map(|&x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-12, "probabilities must sum to 1: {total}");
+        assert!(lp[1] > lp[2] && lp[2] > lp[0] && lp[0] > lp[3], "order preserved");
+        // argmax of the logits row and of its log-softmax agree
+        assert_eq!(argmax(&row), 1);
+    }
 
     #[test]
     fn accuracy_basic() {

@@ -23,6 +23,11 @@ pub const STREAM_VB_TOPIDX: u64 = 6;
 pub const STREAM_XS_BASES: u64 = 7;
 pub const STREAM_FOURIER_FREQ: u64 = 8;
 pub const STREAM_BASE_INIT: u64 = 9;
+/// Serving-side sampling draws (`generation::Sampler`). Rust-only: the
+/// Python compiler never samples, so this id has no python/compile
+/// counterpart — it is reserved here so no future shared stream can
+/// collide with it.
+pub const STREAM_SAMPLE: u64 = 10;
 pub const STREAM_DATA: u64 = 100;
 
 /// SplitMix64 finalizer.

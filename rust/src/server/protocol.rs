@@ -1,14 +1,27 @@
-//! Wire protocol: one JSON object per line.
+//! Wire protocol: one JSON object per line. (Objects serialize with
+//! keys in lexicographic order; clients must not rely on key order.)
 //!
 //! Requests:
 //!
 //! ```text
-//! {"op":"generate","adapter":"<name>","prompt":[ids],"max_new":N}
+//! {"op":"generate","adapter":"<name>","prompt":[ids],"max_new":N,
+//!  "sampling":{...},"stream":true|false}
 //! {"op":"adapters"}
 //! {"op":"stats"}
 //! ```
 //!
-//! Responses:
+//! `generate` parsing is strict: unknown keys are an error, `max_new`
+//! must be a non-negative integer (absent = 8, the historical
+//! default), and the optional `sampling` object is range-validated
+//! field by field (see [`SamplingParams`]): `temperature` finite and
+//! >= 0 (0 = greedy, the default), `top_k` a non-negative integer
+//! (0 = off), `top_p` in (0, 1] (1 = off), `repetition_penalty`
+//! finite and > 0 (1 = off), `seed` a non-negative integer, `stop` an
+//! array of non-empty token arrays, `logit_bias` an array of
+//! `[token, bias]` pairs. `stream` (default false) switches the
+//! response to per-token frames.
+//!
+//! Responses (buffered, i.e. `"stream":false`):
 //!
 //! ```text
 //! {"ok":true,"tokens":[ids]}
@@ -17,25 +30,47 @@
 //! {"ok":false,"error":"..."}
 //! ```
 //!
+//! Streamed generation instead answers with one frame per emitted
+//! token, then a final frame carrying the full token list for
+//! backward compatibility:
+//!
+//! ```text
+//! {"frame":{"done":false,"token":id},"ok":true}
+//! ...
+//! {"frame":{"done":true},"ok":true,"tokens":[ids]}
+//! ```
+//!
 //! The `stats` object carries the serving-quality counters aggregated
 //! across workers: `requests`, `rejected`, `workers`, `steps`,
 //! `generated_tokens`, `tokens_per_sec`, `mean_ttft_ms`
-//! (time-to-first-token), `recon_hit_rate` and `recon_evictions`
-//! (adapter-reconstruction cache), `factored_admits` / `dense_admits`
-//! (execution-mode mix the admission cost model picked),
-//! `mean_occupied_slots` (continuous-batching occupancy),
+//! (time-to-first-token; for streamed requests this is measured at
+//! the first frame dispatch, i.e. real time-to-first-byte),
+//! `recon_hit_rate` and `recon_evictions` (adapter-reconstruction
+//! cache), `factored_admits` / `dense_admits` (execution-mode mix the
+//! admission cost model picked), `sampled_requests` /
+//! `greedy_requests` (decode-policy mix: temperature > 0 vs 0),
+//! `stream_frames_sent` (per-token frames written to streaming
+//! clients), `mean_occupied_slots` (continuous-batching occupancy),
 //! `mean_latency_ms`, `truncated_admits` (prompts cut to the context
 //! window at admission), and the paged-K/V pair `kv_bytes_in_flight`
 //! (resident arena bytes — a gauge tracking tokens actually decoding,
 //! not reserved capacity) / `kv_page_churn` (pages recycled through
 //! arena free lists over the server's lifetime).
 
+use crate::generation::SamplingParams;
 use crate::util::json::{n, obj, s, Json};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Generate { adapter: String, prompt: Vec<i32>, max_new: usize },
+    Generate {
+        adapter: String,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingParams,
+        /// reply with per-token frames instead of one buffered line
+        stream: bool,
+    },
     Adapters,
     Stats,
 }
@@ -44,16 +79,39 @@ impl Request {
     pub fn parse(line: &str) -> Result<Request> {
         let j = Json::parse(line)?;
         match j.req("op")?.as_str()? {
-            "generate" => Ok(Request::Generate {
-                adapter: j.req("adapter")?.as_str()?.to_string(),
-                prompt: j
-                    .req("prompt")?
-                    .as_arr()?
-                    .iter()
-                    .map(|v| Ok(v.as_i64()? as i32))
-                    .collect::<Result<_>>()?,
-                max_new: j.get("max_new").map(|v| v.as_usize()).transpose()?.unwrap_or(8),
-            }),
+            "generate" => {
+                const ALLOWED: [&str; 6] =
+                    ["op", "adapter", "prompt", "max_new", "sampling", "stream"];
+                for k in j.as_obj()?.keys() {
+                    ensure!(ALLOWED.contains(&k.as_str()), "unknown generate key {k:?}");
+                }
+                let max_new = match j.get("max_new") {
+                    None => 8,
+                    Some(v) => {
+                        let f = v.as_f64()?;
+                        ensure!(
+                            f.fract() == 0.0 && (0.0..=1e9).contains(&f),
+                            "max_new must be a non-negative integer, got {f}"
+                        );
+                        f as usize
+                    }
+                };
+                Ok(Request::Generate {
+                    adapter: j.req("adapter")?.as_str()?.to_string(),
+                    prompt: j
+                        .req("prompt")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| Ok(v.as_i64()? as i32))
+                        .collect::<Result<_>>()?,
+                    max_new,
+                    sampling: match j.get("sampling") {
+                        Some(v) => SamplingParams::from_json(v)?,
+                        None => SamplingParams::default(),
+                    },
+                    stream: j.get("stream").map(|v| v.as_bool()).transpose()?.unwrap_or(false),
+                })
+            }
             "adapters" => Ok(Request::Adapters),
             "stats" => Ok(Request::Stats),
             other => Err(anyhow!("unknown op {other:?}")),
@@ -62,13 +120,21 @@ impl Request {
 
     pub fn to_json(&self) -> String {
         match self {
-            Request::Generate { adapter, prompt, max_new } => obj(vec![
-                ("op", s("generate")),
-                ("adapter", s(adapter)),
-                ("prompt", Json::Arr(prompt.iter().map(|&t| n(t as f64)).collect())),
-                ("max_new", n(*max_new as f64)),
-            ])
-            .to_string(),
+            Request::Generate { adapter, prompt, max_new, sampling, stream } => {
+                let mut pairs = vec![
+                    ("op", s("generate")),
+                    ("adapter", s(adapter)),
+                    ("prompt", Json::Arr(prompt.iter().map(|&t| n(t as f64)).collect())),
+                    ("max_new", n(*max_new as f64)),
+                ];
+                if *sampling != SamplingParams::default() {
+                    pairs.push(("sampling", sampling.to_json()));
+                }
+                if *stream {
+                    pairs.push(("stream", Json::Bool(true)));
+                }
+                obj(pairs).to_string()
+            }
             Request::Adapters => obj(vec![("op", s("adapters"))]).to_string(),
             Request::Stats => obj(vec![("op", s("stats"))]).to_string(),
         }
@@ -78,6 +144,10 @@ impl Request {
 #[derive(Debug, Clone)]
 pub enum Response {
     Tokens(Vec<i32>),
+    /// One streamed generation event: a per-token frame
+    /// (`token: Some, done: false`) or the terminal frame
+    /// (`done: true`, `tokens` carrying the full list).
+    Frame { token: Option<i32>, done: bool, tokens: Option<Vec<i32>> },
     Adapters(Vec<String>),
     Stats(Json),
     Error(String),
@@ -91,6 +161,17 @@ impl Response {
                 ("tokens", Json::Arr(t.iter().map(|&x| n(x as f64)).collect())),
             ])
             .to_string(),
+            Response::Frame { token, done, tokens } => {
+                let mut frame = vec![("done", Json::Bool(*done))];
+                if let Some(t) = token {
+                    frame.push(("token", n(*t as f64)));
+                }
+                let mut top = vec![("ok", Json::Bool(true)), ("frame", obj(frame))];
+                if let Some(ts) = tokens {
+                    top.push(("tokens", Json::Arr(ts.iter().map(|&x| n(x as f64)).collect())));
+                }
+                obj(top).to_string()
+            }
             Response::Adapters(a) => obj(vec![
                 ("ok", Json::Bool(true)),
                 ("adapters", Json::Arr(a.iter().map(|x| s(x)).collect())),
@@ -109,6 +190,19 @@ impl Response {
         let j = Json::parse(line)?;
         if !j.req("ok")?.as_bool()? {
             return Ok(Response::Error(j.req("error")?.as_str()?.to_string()));
+        }
+        // frames first: the terminal frame also carries "tokens"
+        if let Some(f) = j.get("frame") {
+            return Ok(Response::Frame {
+                token: f.get("token").map(|v| Ok(v.as_i64()? as i32)).transpose()?,
+                done: f.req("done")?.as_bool()?,
+                tokens: j
+                    .get("tokens")
+                    .map(|t| {
+                        t.as_arr()?.iter().map(|v| Ok(v.as_i64()? as i32)).collect::<Result<_>>()
+                    })
+                    .transpose()?,
+            });
         }
         if let Some(t) = j.get("tokens") {
             return Ok(Response::Tokens(
@@ -134,12 +228,39 @@ impl Response {
 mod tests {
     use super::*;
 
+    fn greedy_gen(adapter: &str, prompt: Vec<i32>, max_new: usize) -> Request {
+        Request::Generate {
+            adapter: adapter.into(),
+            prompt,
+            max_new,
+            sampling: SamplingParams::default(),
+            stream: false,
+        }
+    }
+
     #[test]
     fn request_roundtrip() {
-        let r = Request::Generate { adapter: "math".into(), prompt: vec![1, 5, 9], max_new: 4 };
+        let r = greedy_gen("math", vec![1, 5, 9], 4);
         let back = Request::parse(&r.to_json()).unwrap();
         assert_eq!(r, back);
         assert_eq!(Request::parse(r#"{"op":"adapters"}"#).unwrap(), Request::Adapters);
+        // non-default sampling and stream survive the roundtrip
+        let r = Request::Generate {
+            adapter: "math".into(),
+            prompt: vec![1],
+            max_new: 4,
+            sampling: SamplingParams {
+                temperature: 0.7,
+                top_k: 3,
+                seed: 11,
+                stop: vec![vec![2, 2]],
+                ..Default::default()
+            },
+            stream: true,
+        };
+        assert_eq!(Request::parse(&r.to_json()).unwrap(), r);
+        // default sampling serializes without a sampling key at all
+        assert!(!greedy_gen("a", vec![1], 2).to_json().contains("sampling"));
     }
 
     #[test]
@@ -156,10 +277,63 @@ mod tests {
     }
 
     #[test]
-    fn default_max_new() {
-        match Request::parse(r#"{"op":"generate","adapter":"a","prompt":[1]}"#).unwrap() {
-            Request::Generate { max_new, .. } => assert_eq!(max_new, 8),
+    fn frame_roundtrip() {
+        let per_token = Response::Frame { token: Some(7), done: false, tokens: None };
+        match Response::parse(&per_token.to_json()).unwrap() {
+            Response::Frame { token, done, tokens } => {
+                assert_eq!((token, done, tokens), (Some(7), false, None));
+            }
             other => panic!("{other:?}"),
         }
+        let terminal = Response::Frame { token: None, done: true, tokens: Some(vec![7, 9]) };
+        match Response::parse(&terminal.to_json()).unwrap() {
+            Response::Frame { token, done, tokens } => {
+                assert_eq!((token, done, tokens), (None, true, Some(vec![7, 9])));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn default_max_new() {
+        match Request::parse(r#"{"op":"generate","adapter":"a","prompt":[1]}"#).unwrap() {
+            Request::Generate { max_new, sampling, stream, .. } => {
+                assert_eq!(max_new, 8);
+                assert_eq!(sampling, SamplingParams::default());
+                assert!(!stream);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Satellite: `generate` no longer accepts garbage — unknown keys
+    /// and out-of-range fields are typed errors, not silent defaults.
+    #[test]
+    fn generate_parse_is_strict() {
+        let cases = [
+            (r#"{"op":"generate","adapter":"a","prompt":[1],"maxnew":4}"#, "unknown generate key"),
+            (r#"{"op":"generate","adapter":"a","prompt":[1],"max_new":-3}"#, "non-negative"),
+            (r#"{"op":"generate","adapter":"a","prompt":[1],"max_new":2.5}"#, "non-negative"),
+            (
+                r#"{"op":"generate","adapter":"a","prompt":[1],"sampling":{"temperature":-1}}"#,
+                "temperature",
+            ),
+            (
+                r#"{"op":"generate","adapter":"a","prompt":[1],"sampling":{"top_p":0}}"#,
+                "top_p",
+            ),
+            (
+                r#"{"op":"generate","adapter":"a","prompt":[1],"sampling":{"beam":2}}"#,
+                "unknown sampling key",
+            ),
+            (r#"{"op":"generate","adapter":"a","prompt":[1],"stream":1}"#, "expected bool"),
+        ];
+        for (line, what) in cases {
+            let err = Request::parse(line).unwrap_err().to_string();
+            assert!(err.contains(what), "{line}: {err}");
+        }
+        // unknown keys on OTHER ops stay tolerated (only generate is
+        // strict — the op with silently-misinterpreted fields)
+        assert_eq!(Request::parse(r#"{"op":"stats","extra":1}"#).unwrap(), Request::Stats);
     }
 }

@@ -13,12 +13,20 @@
 //! the queue concurrently (`server::serve` runs one `worker_loop` per
 //! execution worker, each owning a backend clone and its own session).
 //!
+//! Requests carry a per-request [`SamplingParams`] (temperature 0 —
+//! exact greedy — by default) and may opt into **streaming**: the
+//! worker dispatches one [`GenEvent::Token`] per emitted token at the
+//! step boundary that produced it, so a streaming client's first byte
+//! arrives mid-decode instead of after the sequence finishes.
+//!
 //! Serving-quality accounting lives in [`RouterStats`]: tokens/s,
-//! time-to-first-token, reconstruction-cache hit rate and decode-slot
-//! occupancy, all surfaced through the protocol `stats` op.
+//! time-to-first-token (measured at first-frame dispatch for streamed
+//! requests), reconstruction-cache hit rate, decode-policy mix and
+//! decode-slot occupancy, all surfaced through the protocol `stats` op.
 
 use crate::adapters::Registry;
 use crate::config::ModelCfg;
+use crate::generation::SamplingParams;
 use crate::projection::statics::{gen_statics, Static};
 use crate::runtime::Backend;
 use crate::runtime::native::kv_arena::KvBudgetExhausted;
@@ -29,13 +37,28 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+/// One reply-channel event for a pending request. Buffered requests
+/// receive a single `Done`; streaming requests (`PendingReq::stream`)
+/// additionally receive one `Token` per emitted token, dispatched at
+/// the step boundary that produced it — the worker never buffers a
+/// finished token, which is what lets `mean_ttft_ms` measure real
+/// time-to-first-byte.
+#[derive(Debug)]
+pub enum GenEvent {
+    Token(i32),
+    Done(Result<Vec<i32>, String>),
+}
+
 #[derive(Debug)]
 pub struct PendingReq {
     pub adapter: String,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    pub sampling: SamplingParams,
+    /// deliver per-token `GenEvent::Token`s ahead of `Done`
+    pub stream: bool,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<Result<Vec<i32>, String>>,
+    pub reply: mpsc::Sender<GenEvent>,
 }
 
 /// Serving-quality counters, aggregated across all workers.
@@ -81,6 +104,12 @@ pub struct RouterStats {
     pub kv_bytes_in_flight: u64,
     /// K/V pages recycled through arena free lists (counter)
     pub kv_page_churn: u64,
+    /// decode-policy mix: admissions with temperature > 0 vs the
+    /// temperature-0 greedy default
+    pub sampled_requests: u64,
+    pub greedy_requests: u64,
+    /// per-token frames actually dispatched to streaming clients
+    pub stream_frames_sent: u64,
     pub total_latency_secs: f64,
     pub total_queue_secs: f64,
 }
@@ -230,25 +259,46 @@ impl Router {
         Ok(())
     }
 
-    /// Synchronous convenience: submit and wait for the generation.
+    /// Synchronous convenience: submit and wait for the generation
+    /// (greedy — the default sampling policy).
     pub fn generate(
         &self,
         adapter: &str,
         prompt: Vec<i32>,
         max_new: usize,
     ) -> Result<Vec<i32>, String> {
+        self.generate_with(adapter, prompt, max_new, SamplingParams::default())
+    }
+
+    /// Synchronous convenience: submit with an explicit sampling policy
+    /// and wait for the full generation (no streaming — per-token
+    /// delivery goes through `submit` with `stream: true`).
+    pub fn generate_with(
+        &self,
+        adapter: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingParams,
+    ) -> Result<Vec<i32>, String> {
         let (tx, rx) = mpsc::channel();
         let req = PendingReq {
             adapter: adapter.to_string(),
             prompt,
             max_new,
+            sampling,
+            stream: false,
             enqueued: Instant::now(),
             reply: tx,
         };
         if self.submit(req).is_err() {
             return Err(format!("busy: request queue full (depth {})", self.shared.capacity));
         }
-        rx.recv().map_err(|e| e.to_string())?
+        loop {
+            match rx.recv().map_err(|e| e.to_string())? {
+                GenEvent::Token(_) => continue, // defensive: non-stream requests get none
+                GenEvent::Done(out) => return out,
+            }
+        }
     }
 
     pub fn stop(&self) {
@@ -320,7 +370,7 @@ impl Router {
             let mut st = self.stats.lock().unwrap();
             st.requests += 1;
             st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
-            let _ = req.reply.send(Err(msg.to_string()));
+            let _ = req.reply.send(GenEvent::Done(Err(msg.to_string())));
         }
     }
 
@@ -363,6 +413,7 @@ impl Router {
                 statics,
                 prompt: req.prompt.clone(),
                 max_new: req.max_new,
+                sampling: req.sampling.clone(),
             }) {
                 Ok(adm) => Outcome::Admitted(adm),
                 Err(e) => match e.downcast_ref::<KvBudgetExhausted>() {
@@ -393,7 +444,7 @@ impl Router {
                 st.total_queue_secs += queue_wait;
                 st.requests += 1;
                 st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
-                let _ = req.reply.send(Err(e));
+                let _ = req.reply.send(GenEvent::Done(Err(e)));
                 true
             }
         }
@@ -465,8 +516,10 @@ impl Router {
                         for (_, book) in books.drain() {
                             st.requests += 1;
                             st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
-                            let _ = book.req.reply.send(Err(msg.clone()));
+                            let _ = book.req.reply.send(GenEvent::Done(Err(msg.clone())));
                         }
+                        st.sampled_requests += fin.sampled_admits - last.sampled_admits;
+                        st.greedy_requests += fin.greedy_admits - last.greedy_admits;
                         st.kv_page_churn += fin.kv_page_churn - last.kv_page_churn;
                         st.kv_bytes_in_flight = (st.kv_bytes_in_flight + fin.kv_bytes_in_flight)
                             .saturating_sub(last.kv_bytes_in_flight);
@@ -497,6 +550,8 @@ impl Router {
             st.recon_evictions += snow.recon_evictions - last.recon_evictions;
             st.factored_admits += snow.factored_admits - last.factored_admits;
             st.dense_admits += snow.dense_admits - last.dense_admits;
+            st.sampled_requests += snow.sampled_admits - last.sampled_admits;
+            st.greedy_requests += snow.greedy_admits - last.greedy_admits;
             st.kv_page_churn += snow.kv_page_churn - last.kv_page_churn;
             // gauge, not counter: fold this worker's delta so the
             // router-wide value sums live arenas across workers
@@ -507,9 +562,15 @@ impl Router {
                 let Some(book) = books.get_mut(&ev.slot) else { continue };
                 if let Some(tok) = ev.token {
                     if !book.got_first {
+                        // for streaming requests the frame dispatch is
+                        // the next statement, so this ttft IS
+                        // time-to-first-byte
                         book.got_first = true;
                         st.ttft_secs += book.req.enqueued.elapsed().as_secs_f64();
                         st.ttft_count += 1;
+                    }
+                    if book.req.stream && book.req.reply.send(GenEvent::Token(tok)).is_ok() {
+                        st.stream_frames_sent += 1;
                     }
                     book.tokens.push(tok);
                     st.generated_tokens += 1;
@@ -518,7 +579,7 @@ impl Router {
                     let book = books.remove(&ev.slot).expect("book exists for finished slot");
                     st.requests += 1;
                     st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
-                    let _ = book.req.reply.send(Ok(book.tokens));
+                    let _ = book.req.reply.send(GenEvent::Done(Ok(book.tokens)));
                 }
             }
         }
@@ -536,11 +597,13 @@ impl Default for Router {
 mod tests {
     use super::*;
 
-    fn req(adapter: &str, tx: &mpsc::Sender<Result<Vec<i32>, String>>) -> PendingReq {
+    fn req(adapter: &str, tx: &mpsc::Sender<GenEvent>) -> PendingReq {
         PendingReq {
             adapter: adapter.into(),
             prompt: vec![1],
             max_new: 1,
+            sampling: SamplingParams::default(),
+            stream: false,
             enqueued: Instant::now(),
             reply: tx.clone(),
         }
@@ -678,6 +741,9 @@ mod tests {
         let (st, cache_evictions) = run(SessionOpts::with_slots(1).with_dense_threshold(1));
         assert_eq!(st.requests, 6);
         assert_eq!((st.dense_admits, st.factored_admits), (6, 0));
+        // decode-policy mix: everything above ran the greedy default
+        assert_eq!((st.greedy_requests, st.sampled_requests), (6, 0));
+        assert_eq!(st.stream_frames_sent, 0, "no streaming clients here");
         assert!(st.recon_evictions >= 1, "cycling adapters must evict: {st:?}");
         assert_eq!(st.recon_evictions, cache_evictions);
         assert_eq!(st.recon_hits, 0, "a 1-entry cache cycling 3 adapters never hits");
@@ -737,6 +803,8 @@ mod tests {
                 adapter: "a".into(),
                 prompt: vec![1, 2, 3],
                 max_new: 2,
+                sampling: SamplingParams::default(),
+                stream: false,
                 enqueued: Instant::now(),
                 reply: tx,
             })
@@ -752,8 +820,12 @@ mod tests {
             std::thread::spawn(move || r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts))
         };
         for rx in rxs {
-            let out = rx.recv().unwrap();
-            assert!(out.is_ok(), "budget pressure must delay, not fail: {out:?}");
+            match rx.recv().unwrap() {
+                GenEvent::Done(out) => {
+                    assert!(out.is_ok(), "budget pressure must delay, not fail: {out:?}");
+                }
+                other => panic!("buffered request got a stream event: {other:?}"),
+            }
         }
         r.stop();
         worker.join().unwrap();

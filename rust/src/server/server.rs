@@ -3,11 +3,16 @@
 //! a backend clone over shared `Arc` backbone weights and one decode
 //! session doing continuous batching — see `server::router` and
 //! `crate::session`), so serve throughput scales with cores.
+//! `generate` requests carry an optional per-request sampling policy
+//! and may opt into per-token streaming (`"stream":true`): frames are
+//! relayed to the socket at the decode-step boundary that produced
+//! them, so the first byte leaves mid-decode.
 
 use super::protocol::{Request, Response};
-use super::router::{DEFAULT_QUEUE_DEPTH, Router};
+use super::router::{DEFAULT_QUEUE_DEPTH, GenEvent, PendingReq, Router};
 use crate::adapters::Registry;
 use crate::config::{ModelCfg, RuntimeOpts};
+use crate::generation::SamplingParams;
 use crate::runtime::Backend;
 use crate::session::SessionOpts;
 use crate::util::json::{n, obj, Json};
@@ -15,8 +20,9 @@ use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 #[derive(Clone)]
 pub struct ServerConfig {
@@ -189,6 +195,9 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, worke
                     ("recon_evictions", n(st.recon_evictions as f64)),
                     ("factored_admits", n(st.factored_admits as f64)),
                     ("dense_admits", n(st.dense_admits as f64)),
+                    ("sampled_requests", n(st.sampled_requests as f64)),
+                    ("greedy_requests", n(st.greedy_requests as f64)),
+                    ("stream_frames_sent", n(st.stream_frames_sent as f64)),
                     ("mean_occupied_slots", n(st.mean_occupied_slots())),
                     ("mean_latency_ms", n(st.mean_latency_ms())),
                     ("truncated_admits", n(st.truncated_admits as f64)),
@@ -196,8 +205,17 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, worke
                     ("kv_page_churn", n(st.kv_page_churn as f64)),
                 ]))
             }
-            Ok(Request::Generate { adapter, prompt, max_new }) => {
-                match router.generate(&adapter, prompt, max_new) {
+            Ok(Request::Generate { adapter, prompt, max_new, sampling, stream }) => {
+                if stream {
+                    // frames are written inline as the worker emits
+                    // them; a write failure means the client went away
+                    match stream_generate(&mut writer, &router, &adapter, prompt, max_new, sampling)
+                    {
+                        Ok(()) => continue,
+                        Err(_) => break,
+                    }
+                }
+                match router.generate_with(&adapter, prompt, max_new, sampling) {
                     Ok(tokens) => Response::Tokens(tokens),
                     Err(e) => Response::Error(e),
                 }
@@ -205,6 +223,54 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, worke
         };
         if writeln!(writer, "{}", resp.to_json()).is_err() {
             break;
+        }
+    }
+}
+
+/// Stream one generation: submit with `stream: true`, then relay each
+/// [`GenEvent`] to the socket the moment it arrives — one frame line
+/// per token, then the terminal frame carrying the full token list.
+/// Failures that precede any frame (busy queue, unknown adapter) are
+/// written as ordinary error responses. `Err` only on socket write
+/// failure.
+fn stream_generate(
+    writer: &mut TcpStream,
+    router: &Router,
+    adapter: &str,
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampling: SamplingParams,
+) -> std::io::Result<()> {
+    let (tx, rx) = mpsc::channel();
+    let req = PendingReq {
+        adapter: adapter.to_string(),
+        prompt,
+        max_new,
+        sampling,
+        stream: true,
+        enqueued: Instant::now(),
+        reply: tx,
+    };
+    if router.submit(req).is_err() {
+        let msg = format!("busy: request queue full (depth {})", router.capacity());
+        return writeln!(writer, "{}", Response::Error(msg).to_json());
+    }
+    loop {
+        let ev = rx
+            .recv()
+            .unwrap_or_else(|_| GenEvent::Done(Err("worker dropped the request".to_string())));
+        match ev {
+            GenEvent::Token(tok) => {
+                let f = Response::Frame { token: Some(tok), done: false, tokens: None };
+                writeln!(writer, "{}", f.to_json())?;
+            }
+            GenEvent::Done(Ok(tokens)) => {
+                let f = Response::Frame { token: None, done: true, tokens: Some(tokens) };
+                return writeln!(writer, "{}", f.to_json());
+            }
+            GenEvent::Done(Err(e)) => {
+                return writeln!(writer, "{}", Response::Error(e).to_json());
+            }
         }
     }
 }
@@ -234,10 +300,66 @@ impl Client {
         prompt: Vec<i32>,
         max_new: usize,
     ) -> Result<Vec<i32>> {
-        match self.call(&Request::Generate { adapter: adapter.into(), prompt, max_new })? {
+        self.generate_sampled(adapter, prompt, max_new, SamplingParams::default())
+    }
+
+    /// Buffered generation with an explicit sampling policy.
+    pub fn generate_sampled(
+        &mut self,
+        adapter: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingParams,
+    ) -> Result<Vec<i32>> {
+        let req = Request::Generate {
+            adapter: adapter.into(),
+            prompt,
+            max_new,
+            sampling,
+            stream: false,
+        };
+        match self.call(&req)? {
             Response::Tokens(t) => Ok(t),
             Response::Error(e) => anyhow::bail!("server error: {e}"),
             other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Streamed generation: reads frame lines until the terminal frame.
+    /// Returns the per-frame tokens in arrival order plus the terminal
+    /// frame's full token list (the two must agree — asserted by the
+    /// serving tests).
+    pub fn generate_stream(
+        &mut self,
+        adapter: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingParams,
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let req = Request::Generate {
+            adapter: adapter.into(),
+            prompt,
+            max_new,
+            sampling,
+            stream: true,
+        };
+        writeln!(self.writer, "{}", req.to_json())?;
+        let mut streamed = Vec::new();
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            match Response::parse(&line)? {
+                Response::Frame { token, done, tokens } => {
+                    if let Some(t) = token {
+                        streamed.push(t);
+                    }
+                    if done {
+                        return Ok((streamed, tokens.unwrap_or_default()));
+                    }
+                }
+                Response::Error(e) => anyhow::bail!("server error: {e}"),
+                other => anyhow::bail!("unexpected response {other:?}"),
+            }
         }
     }
 

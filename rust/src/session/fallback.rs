@@ -80,6 +80,7 @@ impl FallbackSession {
 impl DecodeSession for FallbackSession {
     fn admit(&mut self, req: SeqRequest) -> Result<Admission> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
+        req.sampling.validate()?;
         let si = self
             .slots
             .iter()
@@ -94,13 +95,18 @@ impl DecodeSession for FallbackSession {
         }
         toks[..l].copy_from_slice(&req.prompt[..l]);
         let statics: Vec<TensorIn> = req.statics.iter().map(TensorIn::shared_from).collect();
+        if req.sampling.is_greedy() {
+            self.stats.greedy_admits += 1;
+        } else {
+            self.stats.sampled_admits += 1;
+        }
         self.slots[si] = Some(Slot {
             key: req.adapter,
             theta_fp: super::theta_fingerprint(&req.theta),
             theta: TensorIn::SharedF32(req.theta),
             statics,
             toks,
-            state: SeqState::new(l, req.max_new, t),
+            state: SeqState::new(l, req.max_new, t, req.sampling),
             fresh: true,
         });
         self.active += 1;

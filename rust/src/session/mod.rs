@@ -28,10 +28,16 @@
 //!
 //! Emission semantics are shared through the crate-internal
 //! `SeqState`, which replays the legacy `decode_with` loop row-for-row
-//! (same EOS / context-window / budget rules in the same order) —
+//! (same EOS / context-window / budget rules in the same order) with a
+//! per-slot [`crate::generation::Sampler`] picking the token: default
+//! [`SamplingParams`] is exact greedy (argmax, zero RNG draws), so
 //! incremental and full-forward decode produce identical greedy token
 //! streams by construction, and the parity suite in
 //! `tests/decode_parity.rs` holds both implementations to that.
+//! Non-default params add seeded sampling, stop sequences and logit
+//! bias on the same rules — applied strictly after the logits GEMM, so
+//! fused and per-slot stepping stay token-stream identical under any
+//! params.
 
 pub mod cache;
 pub mod fallback;
@@ -42,6 +48,7 @@ pub use fallback::FallbackSession;
 pub use native::NativeDecodeSession;
 
 use crate::config;
+use crate::generation::{Sampler, SamplingParams};
 use crate::projection::statics::Static;
 use crate::runtime::Backend;
 use anyhow::Result;
@@ -182,6 +189,10 @@ pub struct SeqRequest {
     pub statics: Arc<Vec<Static>>,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Decoding policy for this sequence; `SamplingParams::default()`
+    /// is exact greedy. Sessions validate it at admission and seed a
+    /// per-slot sampler from it.
+    pub sampling: SamplingParams,
 }
 
 /// What one sequence did during a [`DecodeSession::step`].
@@ -213,6 +224,10 @@ pub struct SessionStats {
     pub recon_evictions: u64,
     /// admissions whose prompt was truncated to the context window
     pub truncated_admits: u64,
+    /// admissions decoding with non-greedy params (temperature > 0)
+    pub sampled_admits: u64,
+    /// admissions decoding greedy (temperature 0 — the default)
+    pub greedy_admits: u64,
     /// K/V bytes currently held by resident pages (a gauge, not a
     /// counter: it tracks tokens actually in flight, rising on
     /// grow/admission and falling on retirement)
@@ -271,13 +286,17 @@ pub(crate) fn theta_fingerprint(theta: &[f32]) -> u64 {
     h ^ (theta.len() as u64)
 }
 
-/// Per-slot greedy emission state shared by every session
-/// implementation — one instance replays exactly one row of the legacy
-/// full-forward decode loop (`coordinator::trainer::decode_with`):
-/// same EOS, context-window and budget rules, applied in the same
-/// order, so every implementation emits identical streams by
-/// construction.
-#[derive(Debug, Clone, Copy)]
+/// Per-slot emission state shared by every session implementation —
+/// one instance replays exactly one row of the legacy full-forward
+/// decode loop (`coordinator::trainer::decode_with`): same EOS,
+/// context-window and budget rules, applied in the same order, with
+/// the slot's [`Sampler`] picking the token. Default params pick plain
+/// argmax (zero RNG draws), so every implementation emits the legacy
+/// greedy streams by construction; non-default params add seeded
+/// sampling, stop-sequence termination (the EOS rule generalized to
+/// suffixes: the completing token is never emitted) and logit bias on
+/// the same rules.
+#[derive(Debug, Clone)]
 pub(crate) struct SeqState {
     /// tokens placed in the context window (prompt + emitted)
     pub placed: usize,
@@ -285,11 +304,23 @@ pub(crate) struct SeqState {
     pub budget: usize,
     /// context-window length (cfg.seq)
     pub limit: usize,
+    /// per-sequence decoding policy + seeded draw stream
+    pub sampler: Sampler,
 }
 
 impl SeqState {
-    pub fn new(prompt_len: usize, max_new: usize, limit: usize) -> SeqState {
-        SeqState { placed: prompt_len.min(limit), budget: max_new, limit }
+    pub fn new(
+        prompt_len: usize,
+        max_new: usize,
+        limit: usize,
+        sampling: SamplingParams,
+    ) -> SeqState {
+        SeqState {
+            placed: prompt_len.min(limit),
+            budget: max_new,
+            limit,
+            sampler: Sampler::new(sampling),
+        }
     }
 
     /// A sequence that can never emit: the prompt already fills the
@@ -299,14 +330,21 @@ impl SeqState {
         self.placed >= self.limit || self.budget == 0
     }
 
-    /// Apply one greedy emission given this iteration's logits row
-    /// (the row at position `placed - 1`). Returns `(token, done)`.
+    /// Apply one emission given this iteration's logits row (the row
+    /// at position `placed - 1`). Returns `(token, done)`. Rule order
+    /// matches the legacy loop: pick, spend budget, EOS ends without
+    /// emitting, a completed stop sequence ends without emitting, else
+    /// place the token and check window/budget.
     pub fn emit(&mut self, logits: &[f32]) -> (Option<i32>, bool) {
-        let next = crate::metrics::argmax(logits) as i32;
+        let next = self.sampler.pick(logits);
         self.budget -= 1;
         if next == crate::data::vocab::EOS {
             return (None, true);
         }
+        if self.sampler.stop_hit(next) {
+            return (None, true);
+        }
+        self.sampler.note_emitted(next);
         self.placed += 1;
         let done = self.placed >= self.limit || self.budget == 0;
         (Some(next), done)
@@ -317,7 +355,6 @@ impl SeqState {
 /// backend picks — the session-subsystem replacement for the legacy
 /// `decode_with` helper. All prompts share one adapter (trainer-style
 /// decoding); the serving router admits heterogeneous adapters itself.
-#[allow(clippy::too_many_arguments)]
 pub fn decode_greedy(
     exec: &mut dyn Backend,
     art_logits: &str,
@@ -329,15 +366,44 @@ pub fn decode_greedy(
     max_new: usize,
     opts: &SessionOpts,
 ) -> Result<Vec<Vec<i32>>> {
+    decode_sampled(
+        exec,
+        art_logits,
+        adapter,
+        theta,
+        w0,
+        statics,
+        prompts,
+        max_new,
+        &SamplingParams::default(),
+        opts,
+    )
+}
+
+/// [`decode_greedy`] generalized to any [`SamplingParams`] (greedy is
+/// the default-params special case of the same path).
+pub fn decode_sampled(
+    exec: &mut dyn Backend,
+    art_logits: &str,
+    adapter: &str,
+    theta: Arc<Vec<f32>>,
+    w0: Arc<Vec<f32>>,
+    statics: Arc<Vec<Static>>,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    sampling: &SamplingParams,
+    opts: &SessionOpts,
+) -> Result<Vec<Vec<i32>>> {
     let mut sess = exec.begin_decode(art_logits, w0, opts)?;
-    let out = drive_greedy(sess.as_mut(), exec, adapter, theta, statics, prompts, max_new)?;
+    let out =
+        drive_sampled(sess.as_mut(), exec, adapter, theta, statics, prompts, max_new, sampling)?;
     sess.finish();
     Ok(out)
 }
 
 /// Drive an already-begun session to completion over `prompts` (shared
-/// adapter). Split out so benches/tests can drive a specific session
-/// implementation.
+/// adapter), greedy. Split out so benches/tests can drive a specific
+/// session implementation.
 pub fn drive_greedy(
     sess: &mut dyn DecodeSession,
     exec: &mut dyn Backend,
@@ -347,11 +413,42 @@ pub fn drive_greedy(
     prompts: &[Vec<i32>],
     max_new: usize,
 ) -> Result<Vec<Vec<i32>>> {
+    drive_sampled(
+        sess,
+        exec,
+        adapter,
+        theta,
+        statics,
+        prompts,
+        max_new,
+        &SamplingParams::default(),
+    )
+}
+
+/// Drive an already-begun session over `prompts` under one shared
+/// [`SamplingParams`]. Prompt `k` draws from the child seed
+/// `child_seed(sampling.seed, k)` so batch rows never sample in
+/// lockstep; re-driving the same (prompts, params) replays identical
+/// streams. (The serving router passes each request's params verbatim
+/// instead — its replay unit is the single request.)
+pub fn drive_sampled(
+    sess: &mut dyn DecodeSession,
+    exec: &mut dyn Backend,
+    adapter: &str,
+    theta: Arc<Vec<f32>>,
+    statics: Arc<Vec<Static>>,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    sampling: &SamplingParams,
+) -> Result<Vec<Vec<i32>>> {
+    sampling.validate()?;
     let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
     let mut owner: Vec<Option<usize>> = vec![None; sess.slots()];
     let mut next = 0usize;
     while next < prompts.len() || sess.active() > 0 {
         while sess.free_slots() > 0 && next < prompts.len() {
+            let mut params = sampling.clone();
+            params.seed = crate::rng::child_seed(sampling.seed, next as u64);
             let slot = sess
                 .admit(SeqRequest {
                     adapter: adapter.to_string(),
@@ -359,6 +456,7 @@ pub fn drive_greedy(
                     statics: statics.clone(),
                     prompt: prompts[next].clone(),
                     max_new,
+                    sampling: params,
                 })?
                 .slot;
             anyhow::ensure!(owner[slot].is_none(), "session reused an occupied slot {slot}");
@@ -386,10 +484,14 @@ mod tests {
     use super::*;
     use crate::data::vocab;
 
+    fn greedy_state(prompt_len: usize, max_new: usize, limit: usize) -> SeqState {
+        SeqState::new(prompt_len, max_new, limit, SamplingParams::default())
+    }
+
     #[test]
     fn seq_state_replays_legacy_row_semantics() {
         // normal emission: argmax token placed, budget spent
-        let mut s = SeqState::new(3, 2, 8);
+        let mut s = greedy_state(3, 2, 8);
         assert!(!s.stillborn());
         let logits = vec![0.0, 9.0, 0.0, 0.0, 1.0];
         let (tok, done) = s.emit(&logits);
@@ -402,22 +504,47 @@ mod tests {
         assert!(done);
 
         // EOS ends without emitting
-        let mut s = SeqState::new(3, 4, 8);
+        let mut s = greedy_state(3, 4, 8);
         let mut eos_row = vec![0.0f32; 8];
         eos_row[vocab::EOS as usize] = 5.0;
         assert_eq!(s.emit(&eos_row), (None, true));
 
         // context window fills: the token placed at the last position
         // is emitted, then the row is done (legacy `lens >= t`)
-        let mut s = SeqState::new(7, 10, 8);
+        let mut s = greedy_state(7, 10, 8);
         let (tok, done) = s.emit(&logits);
         assert_eq!(tok, Some(1));
         assert!(done);
 
         // stillborn rows: prompt >= window, or zero budget
-        assert!(SeqState::new(8, 4, 8).stillborn());
-        assert!(SeqState::new(12, 4, 8).stillborn());
-        assert!(SeqState::new(3, 0, 8).stillborn());
+        assert!(greedy_state(8, 4, 8).stillborn());
+        assert!(greedy_state(12, 4, 8).stillborn());
+        assert!(greedy_state(3, 0, 8).stillborn());
+    }
+
+    #[test]
+    fn seq_state_stop_sequences_end_without_emitting() {
+        // token 1 argmaxes every step; stop [1, 1] fires on the step
+        // that would emit the SECOND 1 — the first is already out
+        let logits = vec![0.0, 9.0, 0.0, 0.0, 1.0];
+        let sp = SamplingParams { stop: vec![vec![1, 1]], ..Default::default() };
+        let mut s = SeqState::new(2, 8, 16, sp);
+        assert_eq!(s.emit(&logits), (Some(1), false));
+        assert_eq!(s.emit(&logits), (None, true), "completing token is not emitted");
+
+        // a single-token stop behaves like a second EOS
+        let sp = SamplingParams { stop: vec![vec![1]], ..Default::default() };
+        let mut s = SeqState::new(2, 8, 16, sp);
+        assert_eq!(s.emit(&logits), (None, true));
+
+        // stop still spends budget (it replaces the emission, not the
+        // iteration), and EOS keeps priority over stop matching
+        let sp = SamplingParams { stop: vec![vec![vocab::EOS]], ..Default::default() };
+        let mut s = SeqState::new(2, 3, 16, sp);
+        let mut eos_row = vec![0.0f32; 8];
+        eos_row[vocab::EOS as usize] = 5.0;
+        assert_eq!(s.emit(&eos_row), (None, true));
+        assert_eq!(s.budget, 2);
     }
 
     #[test]

@@ -113,12 +113,14 @@ impl NativeDecodeSession {
 impl DecodeSession for NativeDecodeSession {
     fn admit(&mut self, req: SeqRequest) -> Result<Admission> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
+        req.sampling.validate()?;
         let si = self
             .slots
             .iter()
             .position(|s| s.is_none())
             .ok_or_else(|| anyhow!("no free decode slot"))?;
-        let state = SeqState::new(req.prompt.len(), req.max_new, self.cfg.seq);
+        let greedy = req.sampling.is_greedy();
+        let state = SeqState::new(req.prompt.len(), req.max_new, self.cfg.seq, req.sampling);
         // Reserve K/V capacity before paying for reconstruction: the
         // worst case this sequence can occupy. Stillborn sequences
         // never run a forward, so they hold nothing.
@@ -180,6 +182,11 @@ impl DecodeSession for NativeDecodeSession {
         });
         self.active += 1;
         self.stats.admitted += 1;
+        if greedy {
+            self.stats.greedy_admits += 1;
+        } else {
+            self.stats.sampled_admits += 1;
+        }
         Ok(Admission { slot: si, truncated })
     }
 

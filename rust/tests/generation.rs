@@ -1,0 +1,196 @@
+//! Generation-subsystem acceptance: beam search as an eval decode
+//! mode (width 1 IS greedy), per-token streaming over a raw TCP
+//! socket (the acceptance criterion: at least one frame arrives
+//! before the sequence finishes), strict wire-level validation of
+//! `generate` requests, and the sampled/greedy/stream stats counters
+//! end to end through the server.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::coordinator::evaluator::{
+    exact_match_accuracy, exact_match_accuracy_with, DecodeMode,
+};
+use uni_lora::coordinator::{init_base, LmTrainer};
+use uni_lora::data::math_tasks;
+use uni_lora::generation::SamplingParams;
+use uni_lora::runtime::{Backend, NativeBackend};
+use uni_lora::server::protocol::Response;
+use uni_lora::server::server::Client;
+use uni_lora::server::{serve, ServerConfig};
+
+const ART: &str = "lm_uni_lm_logits";
+
+fn backend() -> Box<dyn Backend> {
+    Box::new(NativeBackend::new().unwrap())
+}
+
+/// Beam search with width 1 is exactly greedy decoding — same EOS,
+/// window and budget rules in the same order — across the max_new
+/// matrix; wider beams still obey the emission limits. The evaluator's
+/// `DecodeMode` dispatch agrees: `Beam(1)` and temperature-0
+/// `Sampled` score identically to the greedy harness.
+#[test]
+fn beam_width_one_is_exactly_greedy() {
+    let mut exec = backend();
+    let meta = exec.meta("lm_uni_lm_train").unwrap().clone();
+    let w0 = init_base(&meta, 42);
+    let mut tr = LmTrainer::new(exec.as_ref(), "lm_uni", 42, w0).unwrap();
+    let t = meta.cfg.seq;
+    let prompts = vec![
+        vec![1, 21],
+        vec![1, 21, 7, 14, 8, 17, 22],
+        vec![5; t - 1], // fills the window on the first emission
+        vec![6; t + 3], // prompt >= seq: stillborn
+    ];
+    for max_new in [0usize, 1, 8] {
+        let greedy = tr.greedy_decode(exec.as_mut(), &prompts, max_new).unwrap();
+        let beam1 = tr.beam_decode(exec.as_mut(), &prompts, max_new, 1).unwrap();
+        assert_eq!(greedy, beam1, "width-1 beam must BE greedy, max_new = {max_new}");
+    }
+    let wide = tr.beam_decode(exec.as_mut(), &prompts, 6, 4).unwrap();
+    assert_eq!(wide.len(), prompts.len());
+    for (g, p) in wide.iter().zip(&prompts) {
+        assert!(g.len() <= 6, "beam stream over budget: {g:?}");
+        assert!(g.len() + p.len().min(t) <= t, "beam stream over the context window");
+        assert!(g.iter().all(|&tok| tok >= 0 && (tok as usize) < meta.cfg.vocab));
+    }
+    assert!(wide.last().unwrap().is_empty(), "over-long prompt is stillborn at any width");
+
+    // the eval harness dispatches all three modes to the same streams
+    let (split, _) = math_tasks::generate(42, meta.cfg.seq, 2 * meta.cfg.batch, 4);
+    let dev = &split.dev[..split.dev.len().min(4)];
+    let base = exact_match_accuracy(&mut tr, exec.as_mut(), dev, 3).unwrap();
+    let b1 = exact_match_accuracy_with(&mut tr, exec.as_mut(), dev, 3, &DecodeMode::Beam(1))
+        .unwrap();
+    let s0 = exact_match_accuracy_with(
+        &mut tr,
+        exec.as_mut(),
+        dev,
+        3,
+        &DecodeMode::Sampled(SamplingParams::default()),
+    )
+    .unwrap();
+    assert_eq!(base, b1, "Beam(1) eval must score exactly like greedy");
+    assert_eq!(base, s0, "temperature-0 sampled eval must score exactly like greedy");
+}
+
+/// The streaming + stats acceptance test, against real wire bytes: a
+/// raw TCP client sends `"stream":true` and receives one frame per
+/// token BEFORE the terminal frame (EOS is biased out so the sequence
+/// must run its full budget); strict parsing rejects unknown keys and
+/// out-of-range fields with typed errors on a connection that stays
+/// usable; and the sampled/greedy/stream counters come back through
+/// `stats` with exact values for the traffic sent.
+#[test]
+fn streaming_over_raw_tcp_and_serving_stats_counters() {
+    let mut exec = backend();
+    let meta = exec.meta(ART).unwrap().clone();
+    let w0 = init_base(&meta, 42);
+    exec.prepare(ART).unwrap();
+    let registry = Registry::new();
+    registry.insert(
+        "a0".into(),
+        AdapterCheckpoint {
+            seed: 5,
+            method: "uni".into(),
+            artifact: ART.into(),
+            theta: uni_lora::projection::statics::init_theta(&meta.cfg, 5).unwrap(),
+            head: vec![],
+        },
+    );
+    let handle = serve(
+        ServerConfig::new("127.0.0.1:0", ART).with_workers(1),
+        exec,
+        Arc::new(registry),
+        meta.cfg.clone(),
+        w0,
+    )
+    .unwrap();
+
+    // --- raw socket: hand-written request line, frame-by-frame reads.
+    // EOS (id 3) is biased far down so exactly max_new tokens stream.
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        "{}",
+        concat!(
+            r#"{"op":"generate","adapter":"a0","prompt":[1,21,7],"max_new":4,"#,
+            r#""sampling":{"logit_bias":[[3,-1000000000]]},"stream":true}"#
+        )
+    )
+    .unwrap();
+    let mut raw_streamed: Vec<i32> = Vec::new();
+    let raw_final: Vec<i32> = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        // pin the wire shape of the first per-token frame
+        if raw_streamed.is_empty() && !line.contains(r#""done":true"#) {
+            assert!(line.contains(r#""ok":true"#), "bad frame line: {line}");
+            assert!(line.contains(r#""done":false"#), "bad frame line: {line}");
+        }
+        match Response::parse(&line).unwrap() {
+            Response::Frame { token, done, tokens } => {
+                if let Some(t) = token {
+                    raw_streamed.push(t);
+                }
+                if done {
+                    break tokens.unwrap_or_default();
+                }
+            }
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    };
+    assert_eq!(raw_streamed.len(), 4, "EOS biased out: the budget must be the only limit");
+    assert_eq!(raw_streamed, raw_final, "terminal frame must carry the streamed tokens");
+
+    // --- strict parsing, over the same (still usable) connection
+    let bad = [
+        (
+            r#"{"op":"generate","adapter":"a0","prompt":[1],"max_new":2,"bogus":1}"#,
+            "unknown generate key",
+        ),
+        (r#"{"op":"generate","adapter":"a0","prompt":[1],"max_new":-3}"#, "max_new"),
+        (r#"{"op":"generate","adapter":"a0","prompt":[1],"sampling":{"top_p":2.0}}"#, "top_p"),
+    ];
+    for (line, needle) in bad {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        match Response::parse(&resp).unwrap() {
+            Response::Error(e) => assert!(e.contains(needle), "{needle}: {e}"),
+            other => panic!("garbage must error, got {other:?}"),
+        }
+    }
+
+    // --- client streaming equals buffered generation (greedy default)
+    let mut client = Client::connect(handle.addr).unwrap();
+    let prompt = vec![1, 21, 7, 14, 8, 17, 22];
+    let (streamed, final_tokens) = client
+        .generate_stream("a0", prompt.clone(), 3, SamplingParams::default())
+        .unwrap();
+    assert_eq!(streamed, final_tokens);
+    let buffered = client.generate("a0", prompt.clone(), 3).unwrap();
+    assert_eq!(streamed, buffered, "streaming must not change the tokens");
+
+    // --- seeded sampling replays through the serving path
+    let sampled = SamplingParams { temperature: 0.8, seed: 9, ..Default::default() };
+    let s1 = client.generate_sampled("a0", prompt.clone(), 5, sampled.clone()).unwrap();
+    let s2 = client.generate_sampled("a0", prompt.clone(), 5, sampled).unwrap();
+    assert_eq!(s1, s2, "identical (request, seed) must replay identically over the wire");
+
+    // --- counters: 3 greedy requests (raw stream, client stream,
+    // buffered), 2 sampled, and one stream frame per streamed token
+    let stats = client.stats().unwrap();
+    let get = |k: &str| stats.get(k).unwrap().as_f64().unwrap();
+    assert_eq!(get("greedy_requests"), 3.0);
+    assert_eq!(get("sampled_requests"), 2.0);
+    assert_eq!(get("stream_frames_sent"), (raw_streamed.len() + streamed.len()) as f64);
+    if get("generated_tokens") > 0.0 {
+        assert!(get("mean_ttft_ms") > 0.0, "streamed TTFT must be recorded");
+    }
+    handle.shutdown();
+}

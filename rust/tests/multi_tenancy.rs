@@ -8,6 +8,7 @@
 
 use std::sync::Arc;
 use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::generation::SamplingParams;
 use uni_lora::projection::statics::{d_effective, gen_statics};
 use uni_lora::runtime::{Backend, NativeBackend};
 use uni_lora::session::{DecodeSession, SeqRequest, SessionOpts};
@@ -61,6 +62,7 @@ fn serves_256_adapters_within_factored_residency_budget() {
                 statics: statics.clone(),
                 prompt: vec![1, 2, 3],
                 max_new: 2,
+                sampling: SamplingParams::default(),
             })
             .unwrap();
         }
@@ -140,6 +142,7 @@ fn kv_arena_churn_fuzz_leaks_no_pages() {
                     statics: statics.clone(),
                     prompt: vec![(1 + (admitted % 7)) as i32; plen],
                     max_new,
+                    sampling: SamplingParams::default(),
                 })
                 .expect("a free slot under an exact budget must admit; a failure is a page leak");
             assert!(!adm.truncated);
@@ -168,6 +171,7 @@ fn kv_arena_churn_fuzz_leaks_no_pages() {
             statics: statics.clone(),
             prompt: vec![1, 2],
             max_new: 2,
+            sampling: SamplingParams::default(),
         })
         .unwrap();
     }
@@ -200,6 +204,7 @@ fn admission_rejects_exactly_at_kv_budget_exhaustion() {
         statics: statics.clone(),
         prompt: vec![1, 2, 3],
         max_new: 2,
+        sampling: SamplingParams::default(),
     };
 
     // three slots but only two pages: the token budget, not the slot
