@@ -301,6 +301,7 @@ fn stream_once(
         max_new,
         sampling: sampling.clone(),
         stream: true,
+        timeout_ms: 0,
     };
     let t0 = Instant::now();
     writeln!(writer, "{}", req.to_json())?;

@@ -275,6 +275,23 @@ pub const DEFAULT_DENSE_THRESHOLD: usize = 4;
 /// argmax mistake, narrow enough that eval cost stays ~width× greedy.
 pub const DEFAULT_BEAM_WIDTH: usize = 4;
 
+/// Default graceful-drain deadline for `ServerHandle::shutdown`,
+/// milliseconds. Long enough for any in-flight sequence on the tiny
+/// reference shapes to finish its budget; a production deployment
+/// sizes it to p99 request latency.
+pub const DEFAULT_DRAIN_MS: u64 = 5_000;
+
+/// Default cap on one request line, bytes (1 MiB). A `generate`
+/// request is a prompt plus a few scalar fields — a line this long is
+/// either a protocol bug or an attack, and the old unbounded
+/// `read_line` would buffer it all before parsing.
+pub const DEFAULT_MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Default socket read/write timeout, milliseconds. Bounds how long a
+/// connection handler thread can sit in a blocking read (slow-loris)
+/// or write (stalled receiver) before the connection is dropped.
+pub const DEFAULT_SOCK_TIMEOUT_MS: u64 = 30_000;
+
 impl RuntimeOpts {
     pub fn from_env() -> RuntimeOpts {
         RuntimeOpts {
@@ -381,6 +398,45 @@ pub fn parse_beam_width(raw: Option<&str>) -> usize {
         .unwrap_or(DEFAULT_BEAM_WIDTH)
 }
 
+/// `UNI_LORA_REQUEST_TIMEOUT_MS` parsing: a non-negative integer wins;
+/// anything else (unset, garbage) is 0 = no default deadline. Requests
+/// can still pin their own `timeout_ms` on the wire.
+pub fn parse_request_timeout_ms(raw: Option<&str>) -> u64 {
+    raw.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(0)
+}
+
+/// `UNI_LORA_DRAIN_MS` parsing: a non-negative integer wins (0 =
+/// hard-stop immediately, no grace); anything else falls back to
+/// [`DEFAULT_DRAIN_MS`].
+pub fn parse_drain_ms(raw: Option<&str>) -> u64 {
+    raw.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(DEFAULT_DRAIN_MS)
+}
+
+/// `UNI_LORA_MAX_CONNS` parsing: a positive integer wins; anything
+/// else (unset, garbage, 0) is 0 = unlimited. Each live connection
+/// holds one handler thread, so a deployment sizes this to its thread
+/// budget.
+pub fn parse_max_conns(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(0)
+}
+
+/// `UNI_LORA_MAX_REQUEST_BYTES` parsing: a positive integer wins;
+/// anything else (unset, garbage, 0 — the cap must stay on) falls back
+/// to [`DEFAULT_MAX_REQUEST_BYTES`]. There is deliberately no
+/// "unlimited" spelling; pick a huge value instead.
+pub fn parse_max_request_bytes(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_MAX_REQUEST_BYTES)
+}
+
+/// `UNI_LORA_SOCK_TIMEOUT_MS` parsing: a non-negative integer wins
+/// (0 = no socket timeouts); anything else falls back to
+/// [`DEFAULT_SOCK_TIMEOUT_MS`].
+pub fn parse_sock_timeout_ms(raw: Option<&str>) -> u64 {
+    raw.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(DEFAULT_SOCK_TIMEOUT_MS)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -480,6 +536,36 @@ mod tests {
         assert_eq!(parse_beam_width(Some("0")), DEFAULT_BEAM_WIDTH);
         assert_eq!(parse_beam_width(Some("wide")), DEFAULT_BEAM_WIDTH);
         assert_eq!(parse_beam_width(None), DEFAULT_BEAM_WIDTH);
+    }
+
+    #[test]
+    fn lifecycle_knobs_parse_and_default() {
+        // request timeout: 0/unset/garbage = no default deadline
+        assert_eq!(parse_request_timeout_ms(Some("2500")), 2500);
+        assert_eq!(parse_request_timeout_ms(Some(" 0 ")), 0);
+        assert_eq!(parse_request_timeout_ms(Some("fast")), 0);
+        assert_eq!(parse_request_timeout_ms(None), 0);
+        // drain: 0 is a meaningful pin (immediate hard-stop), garbage
+        // falls back to the default grace
+        assert_eq!(parse_drain_ms(Some("250")), 250);
+        assert_eq!(parse_drain_ms(Some("0")), 0);
+        assert_eq!(parse_drain_ms(Some("forever")), DEFAULT_DRAIN_MS);
+        assert_eq!(parse_drain_ms(None), DEFAULT_DRAIN_MS);
+        // conns: 0/unset/garbage = unlimited
+        assert_eq!(parse_max_conns(Some("64")), 64);
+        assert_eq!(parse_max_conns(Some("0")), 0);
+        assert_eq!(parse_max_conns(Some("many")), 0);
+        assert_eq!(parse_max_conns(None), 0);
+        // request-line cap: never off — 0/garbage take the default
+        assert_eq!(parse_max_request_bytes(Some("4096")), 4096);
+        assert_eq!(parse_max_request_bytes(Some("0")), DEFAULT_MAX_REQUEST_BYTES);
+        assert_eq!(parse_max_request_bytes(Some("big")), DEFAULT_MAX_REQUEST_BYTES);
+        assert_eq!(parse_max_request_bytes(None), DEFAULT_MAX_REQUEST_BYTES);
+        // socket timeout: 0 is a meaningful pin (no timeouts)
+        assert_eq!(parse_sock_timeout_ms(Some("100")), 100);
+        assert_eq!(parse_sock_timeout_ms(Some("0")), 0);
+        assert_eq!(parse_sock_timeout_ms(Some("slow")), DEFAULT_SOCK_TIMEOUT_MS);
+        assert_eq!(parse_sock_timeout_ms(None), DEFAULT_SOCK_TIMEOUT_MS);
         // from_env stays total (tests must not mutate the env)
         let o = RuntimeOpts::from_env();
         assert!(o.recon_cache >= 1);

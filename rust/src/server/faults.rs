@@ -1,0 +1,273 @@
+//! Seeded fault injection for the serving stack.
+//!
+//! `UNI_LORA_FAULTS=<seed>:<site>=<rate>[@ms][,<site>=<rate>...]`
+//! deterministically injects failures into the request lifecycle so
+//! the recovery paths (session reopen + replay, requeue-at-head,
+//! cancellation, drain-with-errors) are exercised by replayable tests
+//! instead of contrived backends. Sites:
+//!
+//! - `step`  — a decode step fails; the worker reopens the session and
+//!   replays the in-flight sequences (decode is deterministic, so the
+//!   re-derived streams match and already-delivered tokens are
+//!   suppressed).
+//! - `admit` — an admission attempt reports transient resource
+//!   pressure; the request is requeued and retried.
+//! - `slow`  — a decode step sleeps `@ms` first (default
+//!   [`DEFAULT_SLOW_MS`]), forcing deadline/drain interleavings.
+//! - `frame` — a streamed frame write "fails", standing in for a
+//!   client that disconnected mid-stream; the sequence is cancelled.
+//!
+//! Rates are probabilities in `[0, 1]` evaluated per decision point.
+//! All injected faults are recoverable by design: under any plan the
+//! server still gives every request exactly one terminal reply (the
+//! exception is `step` at rate 1.0, where every step fails and no
+//! sequence can ever progress).
+//!
+//! Each site draws from its own counter-based SplitMix64 stream
+//! ([`crate::rng::value`] over [`crate::rng::child_seed`]), so the
+//! decision sequence depends only on the seed and the number of prior
+//! decisions at that site — single-worker runs replay bit-identically.
+//! With several workers sharing the plan the per-site counters
+//! interleave across threads; the fault mix stays seeded but the
+//! assignment of faults to requests is no longer reproducible.
+//!
+//! Off by default and zero-cost when disabled: every hook is a
+//! [`Faults::fire`] call that returns after one branch on a plain
+//! bool.
+
+use crate::rng;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Site index: a decode step fails.
+pub const SITE_STEP: usize = 0;
+/// Site index: an admission attempt reports transient pressure.
+pub const SITE_ADMIT: usize = 1;
+/// Site index: a decode step is delayed by `slow_ms`.
+pub const SITE_SLOW: usize = 2;
+/// Site index: a streamed frame write fails (client gone).
+pub const SITE_FRAME: usize = 3;
+const N_SITES: usize = 4;
+const SITE_NAMES: [&str; N_SITES] = ["step", "admit", "slow", "frame"];
+
+/// Default injected latency for `slow` faults, milliseconds. Small on
+/// purpose: big enough to reorder step boundaries against deadlines,
+/// small enough that fault-lane CI runs stay fast. Override per-plan
+/// with `slow=<rate>@<ms>`.
+pub const DEFAULT_SLOW_MS: u64 = 2;
+
+/// A parsed fault plan. Shared read-only across workers; the per-site
+/// draw counters are atomics so `fire` takes `&self`.
+#[derive(Debug)]
+pub struct Faults {
+    enabled: bool,
+    rates: [f64; N_SITES],
+    seeds: [u64; N_SITES],
+    draws: [AtomicU64; N_SITES],
+    injected: AtomicU64,
+    slow_ms: u64,
+}
+
+impl Faults {
+    /// The no-faults plan: every `fire` is false after one branch.
+    pub fn off() -> Faults {
+        Faults {
+            enabled: false,
+            rates: [0.0; N_SITES],
+            seeds: [0; N_SITES],
+            draws: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: AtomicU64::new(0),
+            slow_ms: DEFAULT_SLOW_MS,
+        }
+    }
+
+    /// Parse `<seed>:<site>=<rate>[@ms][,...]`. Strict: unknown sites,
+    /// out-of-range rates and misplaced `@ms` are errors — a typo'd
+    /// fault plan silently not injecting would make a red test green.
+    pub fn parse(spec: &str) -> Result<Faults> {
+        let (seed_s, plan) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow!("want <seed>:<site>=<rate>[@ms],..., got {spec:?}"))?;
+        let seed: u64 = seed_s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("fault seed must be a non-negative integer, got {seed_s:?}"))?;
+        let mut rates = [0.0f64; N_SITES];
+        let mut slow_ms = DEFAULT_SLOW_MS;
+        for part in plan.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("want <site>=<rate>, got {part:?}"))?;
+            let site = SITE_NAMES
+                .iter()
+                .position(|&n| n == name.trim())
+                .ok_or_else(|| anyhow!("unknown fault site {:?} (want step|admit|slow|frame)", name.trim()))?;
+            let (rate_s, ms_s) = match val.split_once('@') {
+                Some((r, m)) => (r, Some(m)),
+                None => (val, None),
+            };
+            let rate: f64 = rate_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("fault rate must be a number, got {rate_s:?}"))?;
+            ensure!(
+                rate.is_finite() && (0.0..=1.0).contains(&rate),
+                "fault rate must be in [0, 1], got {rate}"
+            );
+            if let Some(ms) = ms_s {
+                if site != SITE_SLOW {
+                    bail!("@ms only applies to the slow site, got {part:?}");
+                }
+                slow_ms = ms
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("slow @ms must be a non-negative integer, got {ms:?}"))?;
+            }
+            rates[site] = rate;
+        }
+        Ok(Faults {
+            enabled: rates.iter().any(|&r| r > 0.0),
+            rates,
+            // one independent child stream per site, so changing one
+            // site's rate never shifts another site's decision sequence
+            seeds: std::array::from_fn(|i| rng::child_seed(seed, 0xFA00 + i as u64)),
+            draws: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: AtomicU64::new(0),
+            slow_ms,
+        })
+    }
+
+    /// The `UNI_LORA_FAULTS` plan; unset/empty = off. A malformed spec
+    /// warns and disables injection (fail-safe: a production server
+    /// must not crash — or inject — over a typo'd debug knob).
+    pub fn from_env() -> Faults {
+        match std::env::var("UNI_LORA_FAULTS") {
+            Err(_) => Faults::off(),
+            Ok(s) if s.trim().is_empty() => Faults::off(),
+            Ok(s) => Faults::parse(&s).unwrap_or_else(|e| {
+                eprintln!("warning: UNI_LORA_FAULTS: {e}; fault injection disabled");
+                Faults::off()
+            }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// One seeded decision at `site`: true = inject. Consumes one draw
+    /// from the site's counter stream iff the plan is enabled and the
+    /// site's rate is positive, so disabled sites never perturb the
+    /// sequence of enabled ones.
+    #[inline]
+    pub fn fire(&self, site: usize) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let rate = self.rates[site];
+        if rate <= 0.0 {
+            return false;
+        }
+        let i = self.draws[site].fetch_add(1, Ordering::Relaxed);
+        // top 53 bits -> uniform f64 in [0, 1)
+        let u = (rng::value(self.seeds[site], i) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let hit = u < rate;
+        if hit {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Total decisions that injected a fault, across all sites.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Injected latency for `slow` faults, milliseconds.
+    pub fn slow_ms(&self) -> u64 {
+        self.slow_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_never_fires() {
+        let f = Faults::off();
+        assert!(!f.enabled());
+        for site in 0..N_SITES {
+            for _ in 0..50 {
+                assert!(!f.fire(site));
+            }
+        }
+        assert_eq!(f.injected(), 0);
+    }
+
+    #[test]
+    fn parse_is_strict() {
+        for (spec, needle) in [
+            ("no-colon", "<seed>:"),
+            ("x:step=0.5", "seed"),
+            ("1:boom=0.5", "unknown fault site"),
+            ("1:step", "<site>=<rate>"),
+            ("1:step=1.5", "[0, 1]"),
+            ("1:step=-0.1", "[0, 1]"),
+            ("1:step=nan", "[0, 1]"),
+            ("1:step=0.5@3", "slow"),
+            ("1:slow=0.5@fast", "@ms"),
+        ] {
+            let err = Faults::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn plan_parses_rates_and_slow_ms() {
+        let f = Faults::parse(" 7 : step=0.25, slow=0.5@9 , frame=1 ").unwrap();
+        assert!(f.enabled());
+        assert_eq!(f.slow_ms(), 9);
+        assert_eq!(f.rates[SITE_STEP], 0.25);
+        assert_eq!(f.rates[SITE_ADMIT], 0.0);
+        assert_eq!(f.rates[SITE_SLOW], 0.5);
+        assert_eq!(f.rates[SITE_FRAME], 1.0);
+        // rate 1 always fires, rate 0 never draws
+        assert!(f.fire(SITE_FRAME) && f.fire(SITE_FRAME));
+        assert!(!f.fire(SITE_ADMIT));
+        assert_eq!(f.draws[SITE_ADMIT].load(Ordering::Relaxed), 0);
+        // all-zero plans are enabled=false (zero-cost)
+        assert!(!Faults::parse("7:step=0").unwrap().enabled());
+    }
+
+    /// The replay contract: two plans from the same spec produce the
+    /// same decision sequence per site, decisions at one site don't
+    /// shift another site's stream, and a different seed diverges.
+    #[test]
+    fn decision_streams_are_seeded_and_independent() {
+        let spec = "42:step=0.3,admit=0.3,frame=0.3";
+        let a = Faults::parse(spec).unwrap();
+        let b = Faults::parse(spec).unwrap();
+        // interleave a's sites; b consumes step-only first — the step
+        // stream must come out identical either way
+        let mut a_step = Vec::new();
+        for _ in 0..200 {
+            a_step.push(a.fire(SITE_STEP));
+            a.fire(SITE_ADMIT);
+            a.fire(SITE_FRAME);
+        }
+        let b_step: Vec<bool> = (0..200).map(|_| b.fire(SITE_STEP)).collect();
+        assert_eq!(a_step, b_step);
+        assert!(a_step.iter().any(|&h| h), "rate 0.3 over 200 draws must fire");
+        assert!(a_step.iter().any(|&h| !h), "rate 0.3 over 200 draws must also pass");
+        // each site draws its own stream, so only a lower bound holds
+        assert!(a.injected() >= a_step.iter().filter(|&&h| h).count() as u64);
+        let c = Faults::parse("43:step=0.3,admit=0.3,frame=0.3").unwrap();
+        let c_step: Vec<bool> = (0..200).map(|_| c.fire(SITE_STEP)).collect();
+        assert_ne!(a_step, c_step, "different seed must reshuffle decisions");
+    }
+}

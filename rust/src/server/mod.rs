@@ -12,10 +12,22 @@
 //!     -> N worker threads, each owning a Backend clone over shared
 //!        Arc backbone weights (ServerConfig::workers, default = cores)
 //!     -> greedy decode via the lm_logits entry point
+//!
+//! The request lifecycle is hardened end to end: per-request deadlines
+//! (`timeout_ms` / `UNI_LORA_REQUEST_TIMEOUT_MS`) enforced at step
+//! boundaries, cancellation when a streaming client disconnects,
+//! graceful drain on shutdown (`UNI_LORA_DRAIN_MS`), bounded accepts
+//! (`UNI_LORA_MAX_CONNS`) with socket timeouts, capped request lines
+//! (`UNI_LORA_MAX_REQUEST_BYTES`), and a seeded fault-injection layer
+//! (`UNI_LORA_FAULTS`, see [`faults`]) that makes every recovery path
+//! deterministically testable.
 
+pub mod faults;
 pub mod protocol;
 pub mod router;
 pub mod server;
 
+pub use faults::Faults;
+pub use protocol::{ErrCode, ServeError};
 pub use router::{Router, RouterStats};
 pub use server::{serve, ServerConfig, ServerHandle};

@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! {"op":"generate","adapter":"<name>","prompt":[ids],"max_new":N,
-//!  "sampling":{...},"stream":true|false}
+//!  "sampling":{...},"stream":true|false,"timeout_ms":N}
 //! {"op":"adapters"}
 //! {"op":"stats"}
 //! ```
@@ -19,7 +19,11 @@
 //! finite and > 0 (1 = off), `seed` a non-negative integer, `stop` an
 //! array of non-empty token arrays, `logit_bias` an array of
 //! `[token, bias]` pairs. `stream` (default false) switches the
-//! response to per-token frames.
+//! response to per-token frames. `timeout_ms` (default 0 = inherit
+//! the server's `UNI_LORA_REQUEST_TIMEOUT_MS`) is a per-request
+//! deadline measured from arrival — queue wait counts against it, and
+//! an expired sequence is retired at the next step boundary with a
+//! `deadline_exceeded` error.
 //!
 //! Responses (buffered, i.e. `"stream":false`):
 //!
@@ -27,8 +31,17 @@
 //! {"ok":true,"tokens":[ids]}
 //! {"ok":true,"adapters":[names]}
 //! {"ok":true,"stats":{...}}
-//! {"ok":false,"error":"..."}
+//! {"ok":false,"code":"<err-code>","error":"..."}
 //! ```
+//!
+//! Error replies carry a machine-readable `code` from the closed
+//! vocabulary in [`ErrCode`] (`parse`, `busy`, `unknown_adapter`,
+//! `deadline_exceeded`, `shutting_down`, `request_too_large`,
+//! `client_gone`, `internal`) next to the human-readable `error`
+//! message. Clients route on the code — retry `busy`, fail over on
+//! `shutting_down`, surface the rest — and must tolerate codes they
+//! do not know (treat as `internal`). Pre-code servers omit the key;
+//! [`Response::parse`] maps that to `internal` too.
 //!
 //! Streamed generation instead answers with one frame per emitted
 //! token, then a final frame carrying the full token list for
@@ -56,10 +69,124 @@
 //! (resident arena bytes — a gauge tracking tokens actually decoding,
 //! not reserved capacity) / `kv_page_churn` (pages recycled through
 //! arena free lists over the server's lifetime).
+//!
+//! The request-lifecycle counters ride in the same object:
+//! `deadline_exceeded` (requests that ran out of wall-clock, queued or
+//! decoding), `cancelled` (sequences retired mid-flight before
+//! finishing — deadline expiries and client disconnects), `client_gone`
+//! (streaming clients that vanished mid-generation), `conns_rejected`
+//! (connections turned away at the `UNI_LORA_MAX_CONNS` cap),
+//! `drained_ok` / `drained_aborted` (in-flight requests that finished
+//! inside vs. were cut at the shutdown drain deadline), and
+//! `faults_injected` (decisions taken by the seeded `UNI_LORA_FAULTS`
+//! plan; always 0 in production).
 
 use crate::generation::SamplingParams;
 use crate::util::json::{n, obj, s, Json};
 use anyhow::{anyhow, ensure, Result};
+use std::fmt;
+
+/// Machine-readable error classes for the `code` field of error
+/// replies. The set is closed and additive-only: removing or renaming
+/// a code breaks clients that route on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// the request line was malformed or failed strict validation
+    Parse,
+    /// transient saturation: queue full or connection cap hit — retry
+    Busy,
+    /// the request named an adapter the registry does not hold
+    UnknownAdapter,
+    /// the per-request / server-default deadline expired (queue wait
+    /// counts against it)
+    DeadlineExceeded,
+    /// the server is draining; the request was failed without decoding
+    ShuttingDown,
+    /// the request line exceeded `UNI_LORA_MAX_REQUEST_BYTES`
+    RequestTooLarge,
+    /// the client disconnected mid-stream; the sequence was cancelled
+    ClientGone,
+    /// a session/decode failure the client cannot fix by retrying as-is
+    Internal,
+}
+
+impl ErrCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrCode::Parse => "parse",
+            ErrCode::Busy => "busy",
+            ErrCode::UnknownAdapter => "unknown_adapter",
+            ErrCode::DeadlineExceeded => "deadline_exceeded",
+            ErrCode::ShuttingDown => "shutting_down",
+            ErrCode::RequestTooLarge => "request_too_large",
+            ErrCode::ClientGone => "client_gone",
+            ErrCode::Internal => "internal",
+        }
+    }
+
+    /// Wire-name lookup. Unknown names resolve to [`ErrCode::Internal`]
+    /// — a client must not crash on a code minted by a newer server.
+    pub fn from_wire(s: &str) -> ErrCode {
+        match s {
+            "parse" => ErrCode::Parse,
+            "busy" => ErrCode::Busy,
+            "unknown_adapter" => ErrCode::UnknownAdapter,
+            "deadline_exceeded" => ErrCode::DeadlineExceeded,
+            "shutting_down" => ErrCode::ShuttingDown,
+            "request_too_large" => ErrCode::RequestTooLarge,
+            "client_gone" => ErrCode::ClientGone,
+            _ => ErrCode::Internal,
+        }
+    }
+}
+
+/// A typed serving error: a routing [`ErrCode`] plus the
+/// human-readable message. `Display` prints only the message, so
+/// callers that format errors into logs keep their historical text;
+/// route on `code`, not on message substrings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeError {
+    pub code: ErrCode,
+    pub msg: String,
+}
+
+impl ServeError {
+    pub fn new(code: ErrCode, msg: impl Into<String>) -> ServeError {
+        ServeError { code, msg: msg.into() }
+    }
+    pub fn parse(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::Parse, msg)
+    }
+    pub fn busy(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::Busy, msg)
+    }
+    pub fn unknown_adapter(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::UnknownAdapter, msg)
+    }
+    pub fn deadline_exceeded(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::DeadlineExceeded, msg)
+    }
+    pub fn shutting_down(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::ShuttingDown, msg)
+    }
+    pub fn too_large(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::RequestTooLarge, msg)
+    }
+    pub fn client_gone(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::ClientGone, msg)
+    }
+    pub fn internal(msg: impl Into<String>) -> ServeError {
+        ServeError::new(ErrCode::Internal, msg)
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -70,6 +197,9 @@ pub enum Request {
         sampling: SamplingParams,
         /// reply with per-token frames instead of one buffered line
         stream: bool,
+        /// per-request deadline in milliseconds, measured from arrival;
+        /// 0 = inherit the server default (`UNI_LORA_REQUEST_TIMEOUT_MS`)
+        timeout_ms: u64,
     },
     Adapters,
     Stats,
@@ -80,8 +210,8 @@ impl Request {
         let j = Json::parse(line)?;
         match j.req("op")?.as_str()? {
             "generate" => {
-                const ALLOWED: [&str; 6] =
-                    ["op", "adapter", "prompt", "max_new", "sampling", "stream"];
+                const ALLOWED: [&str; 7] =
+                    ["op", "adapter", "prompt", "max_new", "sampling", "stream", "timeout_ms"];
                 for k in j.as_obj()?.keys() {
                     ensure!(ALLOWED.contains(&k.as_str()), "unknown generate key {k:?}");
                 }
@@ -94,6 +224,17 @@ impl Request {
                             "max_new must be a non-negative integer, got {f}"
                         );
                         f as usize
+                    }
+                };
+                let timeout_ms = match j.get("timeout_ms") {
+                    None => 0,
+                    Some(v) => {
+                        let f = v.as_f64()?;
+                        ensure!(
+                            f.fract() == 0.0 && (0.0..=1e12).contains(&f),
+                            "timeout_ms must be a non-negative integer, got {f}"
+                        );
+                        f as u64
                     }
                 };
                 Ok(Request::Generate {
@@ -110,6 +251,7 @@ impl Request {
                         None => SamplingParams::default(),
                     },
                     stream: j.get("stream").map(|v| v.as_bool()).transpose()?.unwrap_or(false),
+                    timeout_ms,
                 })
             }
             "adapters" => Ok(Request::Adapters),
@@ -120,7 +262,7 @@ impl Request {
 
     pub fn to_json(&self) -> String {
         match self {
-            Request::Generate { adapter, prompt, max_new, sampling, stream } => {
+            Request::Generate { adapter, prompt, max_new, sampling, stream, timeout_ms } => {
                 let mut pairs = vec![
                     ("op", s("generate")),
                     ("adapter", s(adapter)),
@@ -132,6 +274,9 @@ impl Request {
                 }
                 if *stream {
                     pairs.push(("stream", Json::Bool(true)));
+                }
+                if *timeout_ms > 0 {
+                    pairs.push(("timeout_ms", n(*timeout_ms as f64)));
                 }
                 obj(pairs).to_string()
             }
@@ -150,7 +295,7 @@ pub enum Response {
     Frame { token: Option<i32>, done: bool, tokens: Option<Vec<i32>> },
     Adapters(Vec<String>),
     Stats(Json),
-    Error(String),
+    Error(ServeError),
 }
 
 impl Response {
@@ -180,16 +325,25 @@ impl Response {
             Response::Stats(j) => {
                 obj(vec![("ok", Json::Bool(true)), ("stats", j.clone())]).to_string()
             }
-            Response::Error(e) => {
-                obj(vec![("ok", Json::Bool(false)), ("error", s(e))]).to_string()
-            }
+            Response::Error(e) => obj(vec![
+                ("ok", Json::Bool(false)),
+                ("code", s(e.code.as_str())),
+                ("error", s(&e.msg)),
+            ])
+            .to_string(),
         }
     }
 
     pub fn parse(line: &str) -> Result<Response> {
         let j = Json::parse(line)?;
         if !j.req("ok")?.as_bool()? {
-            return Ok(Response::Error(j.req("error")?.as_str()?.to_string()));
+            // "code" is optional on the wire: pre-code servers (and
+            // proxies that strip unknown keys) degrade to `internal`
+            let code = match j.get("code") {
+                Some(c) => ErrCode::from_wire(c.as_str()?),
+                None => ErrCode::Internal,
+            };
+            return Ok(Response::Error(ServeError::new(code, j.req("error")?.as_str()?)));
         }
         // frames first: the terminal frame also carries "tokens"
         if let Some(f) = j.get("frame") {
@@ -235,6 +389,7 @@ mod tests {
             max_new,
             sampling: SamplingParams::default(),
             stream: false,
+            timeout_ms: 0,
         }
     }
 
@@ -244,7 +399,7 @@ mod tests {
         let back = Request::parse(&r.to_json()).unwrap();
         assert_eq!(r, back);
         assert_eq!(Request::parse(r#"{"op":"adapters"}"#).unwrap(), Request::Adapters);
-        // non-default sampling and stream survive the roundtrip
+        // non-default sampling, stream and timeout survive the roundtrip
         let r = Request::Generate {
             adapter: "math".into(),
             prompt: vec![1],
@@ -257,10 +412,14 @@ mod tests {
                 ..Default::default()
             },
             stream: true,
+            timeout_ms: 1500,
         };
         assert_eq!(Request::parse(&r.to_json()).unwrap(), r);
-        // default sampling serializes without a sampling key at all
-        assert!(!greedy_gen("a", vec![1], 2).to_json().contains("sampling"));
+        // default sampling serializes without a sampling key at all,
+        // and timeout 0 (= inherit the server default) stays off-wire
+        let plain = greedy_gen("a", vec![1], 2).to_json();
+        assert!(!plain.contains("sampling"));
+        assert!(!plain.contains("timeout_ms"));
     }
 
     #[test]
@@ -270,8 +429,44 @@ mod tests {
             Response::Tokens(t) => assert_eq!(t, vec![4, 5, 6]),
             other => panic!("{other:?}"),
         }
-        match Response::parse(&Response::Error("boom".into()).to_json()).unwrap() {
-            Response::Error(e) => assert_eq!(e, "boom"),
+        let boom = ServeError::internal("boom");
+        match Response::parse(&Response::Error(boom.clone()).to_json()).unwrap() {
+            Response::Error(e) => assert_eq!(e, boom),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Typed errors on the wire: every code roundtrips, the legacy
+    /// code-less shape degrades to `internal`, and unknown codes from
+    /// a newer server do too instead of failing the parse.
+    #[test]
+    fn error_codes_roundtrip_and_degrade() {
+        let all = [
+            ErrCode::Parse,
+            ErrCode::Busy,
+            ErrCode::UnknownAdapter,
+            ErrCode::DeadlineExceeded,
+            ErrCode::ShuttingDown,
+            ErrCode::RequestTooLarge,
+            ErrCode::ClientGone,
+            ErrCode::Internal,
+        ];
+        for code in all {
+            let line = Response::Error(ServeError::new(code, "msg")).to_json();
+            assert!(line.contains(&format!(r#""code":"{}""#, code.as_str())), "{line}");
+            match Response::parse(&line).unwrap() {
+                Response::Error(e) => assert_eq!(e.code, code),
+                other => panic!("{other:?}"),
+            }
+        }
+        // Display is the bare message — log lines keep their old text
+        assert_eq!(ServeError::busy("busy: queue full").to_string(), "busy: queue full");
+        match Response::parse(r#"{"ok":false,"error":"old server"}"#).unwrap() {
+            Response::Error(e) => assert_eq!(e.code, ErrCode::Internal),
+            other => panic!("{other:?}"),
+        }
+        match Response::parse(r#"{"ok":false,"code":"from_the_future","error":"x"}"#).unwrap() {
+            Response::Error(e) => assert_eq!(e.code, ErrCode::Internal),
             other => panic!("{other:?}"),
         }
     }
@@ -327,6 +522,14 @@ mod tests {
                 "unknown sampling key",
             ),
             (r#"{"op":"generate","adapter":"a","prompt":[1],"stream":1}"#, "expected bool"),
+            (
+                r#"{"op":"generate","adapter":"a","prompt":[1],"timeout_ms":-5}"#,
+                "timeout_ms",
+            ),
+            (
+                r#"{"op":"generate","adapter":"a","prompt":[1],"timeout_ms":0.5}"#,
+                "timeout_ms",
+            ),
         ];
         for (line, what) in cases {
             let err = Request::parse(line).unwrap_err().to_string();

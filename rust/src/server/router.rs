@@ -7,11 +7,11 @@
 //! weights from the shared reconstruction cache).
 //!
 //! The queue is bounded: past `capacity` pending requests, `submit`
-//! rejects immediately and `generate` surfaces a protocol-level
-//! "busy: ..." error instead of letting the backlog (and client
-//! latency) grow without limit. Any number of worker threads may drain
-//! the queue concurrently (`server::serve` runs one `worker_loop` per
-//! execution worker, each owning a backend clone and its own session).
+//! rejects immediately and `generate` surfaces a typed `busy` error
+//! instead of letting the backlog (and client latency) grow without
+//! limit. Any number of worker threads may drain the queue concurrently
+//! (`server::serve` runs one `worker_loop` per execution worker, each
+//! owning a backend clone and its own session).
 //!
 //! Requests carry a per-request [`SamplingParams`] (temperature 0 —
 //! exact greedy — by default) and may opt into **streaming**: the
@@ -19,23 +19,56 @@
 //! step boundary that produced it, so a streaming client's first byte
 //! arrives mid-decode instead of after the sequence finishes.
 //!
+//! The request lifecycle is bounded end to end. An optional per-request
+//! **deadline** is enforced at step boundaries: queue wait counts
+//! against it (a stale queued request fails without ever occupying a
+//! slot), and an expired in-flight sequence is cancelled — K/V pages
+//! and slot recycled immediately — with a typed `deadline_exceeded`
+//! reply. A streaming client that disconnects mid-generation is
+//! detected at its next frame dispatch and its sequence is
+//! **cancelled** the same way instead of decoding tokens nobody will
+//! read. On shutdown the router **drains**: new submissions fail with
+//! `shutting_down`, queued requests are failed in bulk, in-flight
+//! sequences run to completion until the drain deadline, then
+//! [`Router::hard_stop`] aborts the stragglers at the next step
+//! boundary.
+//!
+//! Failure recovery is deterministic under the seeded fault plan
+//! ([`Faults`]): an injected (or real) step failure reopens the session
+//! and **replays** the in-flight sequences — decode is deterministic,
+//! so the re-derived streams match and `SlotBook::replay_skip`
+//! suppresses re-delivery of tokens the client already holds.
+//!
 //! Serving-quality accounting lives in [`RouterStats`]: tokens/s,
 //! time-to-first-token (measured at first-frame dispatch for streamed
-//! requests), reconstruction-cache hit rate, decode-policy mix and
-//! decode-slot occupancy, all surfaced through the protocol `stats` op.
+//! requests), reconstruction-cache hit rate, decode-policy mix,
+//! decode-slot occupancy and the lifecycle counters, all surfaced
+//! through the protocol `stats` op.
 
+use super::faults::{Faults, SITE_ADMIT, SITE_FRAME, SITE_SLOW, SITE_STEP};
+use super::protocol::{ErrCode, ServeError};
 use crate::adapters::Registry;
 use crate::config::ModelCfg;
 use crate::generation::SamplingParams;
 use crate::projection::statics::{gen_statics, Static};
-use crate::runtime::Backend;
 use crate::runtime::native::kv_arena::KvBudgetExhausted;
-use crate::session::{Admission, DecodeSession, SeqRequest, SessionOpts};
+use crate::runtime::Backend;
+use crate::session::{Admission, DecodeSession, SeqRequest, SessionOpts, SessionStats};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the data from a poisoned one. The mutexes
+/// this guards (stats, queue, statics, stop flag) hold monotone
+/// counters and plain queue state with no invariant that spans the
+/// panic point, so recovery is safe — and the alternative is a worker
+/// panic cascading through every later `lock().unwrap()` in the pool
+/// until shutdown itself deadlocks.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One reply-channel event for a pending request. Buffered requests
 /// receive a single `Done`; streaming requests (`PendingReq::stream`)
@@ -46,7 +79,7 @@ use std::time::Instant;
 #[derive(Debug)]
 pub enum GenEvent {
     Token(i32),
-    Done(Result<Vec<i32>, String>),
+    Done(Result<Vec<i32>, ServeError>),
 }
 
 #[derive(Debug)]
@@ -57,6 +90,8 @@ pub struct PendingReq {
     pub sampling: SamplingParams,
     /// deliver per-token `GenEvent::Token`s ahead of `Done`
     pub stream: bool,
+    /// absolute deadline (queue wait included); `None` = no limit
+    pub deadline: Option<Instant>,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<GenEvent>,
 }
@@ -110,6 +145,25 @@ pub struct RouterStats {
     pub greedy_requests: u64,
     /// per-token frames actually dispatched to streaming clients
     pub stream_frames_sent: u64,
+    /// requests that ran out of wall-clock — failed while queued or
+    /// cancelled mid-decode (`timeout_ms` / UNI_LORA_REQUEST_TIMEOUT_MS)
+    pub deadline_exceeded: u64,
+    /// sequences retired mid-flight via `DecodeSession::cancel`, for
+    /// any reason; `deadline_exceeded` and `client_gone` break down the
+    /// causes
+    pub cancelled: u64,
+    /// streaming clients that disconnected mid-generation (their
+    /// sequences were cancelled at the next step boundary)
+    pub client_gone: u64,
+    /// connections rejected at the UNI_LORA_MAX_CONNS accept cap
+    pub conns_rejected: u64,
+    /// in-flight requests that completed inside the shutdown drain
+    /// window vs aborted at its deadline
+    pub drained_ok: u64,
+    pub drained_aborted: u64,
+    /// fault-plan decisions that injected a failure (UNI_LORA_FAULTS;
+    /// always 0 in production)
+    pub faults_injected: u64,
     pub total_latency_secs: f64,
     pub total_queue_secs: f64,
 }
@@ -174,16 +228,48 @@ impl RouterStats {
     }
 }
 
+/// Fold one worker's session-stat deltas into the router-wide stats.
+/// `last` is the worker's previous session snapshot; counters fold as
+/// differences, the K/V gauge folds so the router-wide value sums live
+/// arenas across workers.
+fn fold_deltas(st: &mut RouterStats, now: &SessionStats, last: &mut SessionStats) {
+    st.recon_hits += now.recon_hits - last.recon_hits;
+    st.recon_misses += now.recon_misses - last.recon_misses;
+    st.recon_evictions += now.recon_evictions - last.recon_evictions;
+    st.factored_admits += now.factored_admits - last.factored_admits;
+    st.dense_admits += now.dense_admits - last.dense_admits;
+    st.sampled_requests += now.sampled_admits - last.sampled_admits;
+    st.greedy_requests += now.greedy_admits - last.greedy_admits;
+    st.cancelled += now.cancelled - last.cancelled;
+    st.kv_page_churn += now.kv_page_churn - last.kv_page_churn;
+    st.kv_bytes_in_flight =
+        (st.kv_bytes_in_flight + now.kv_bytes_in_flight).saturating_sub(last.kv_bytes_in_flight);
+    *last = *now;
+}
+
 struct Shared {
     queue: Mutex<VecDeque<PendingReq>>,
     cv: Condvar,
     stopped: Mutex<bool>,
     capacity: usize,
+    /// drain mode: submissions fail typed, workers stop admitting from
+    /// the queue, in-flight sequences keep decoding
+    draining: AtomicBool,
+    /// the drain deadline expired: workers abort remaining in-flight
+    /// sequences at the next step boundary
+    hard_stop: AtomicBool,
+    /// sequences admitted into a slot but not yet terminally replied to
+    in_flight: AtomicUsize,
 }
 
 /// Default pending-request cap (`Router::new`); servers override it via
 /// `ServerConfig::with_queue_depth`.
 pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+
+/// Retries a sequence gets after a REAL (non-injected) step failure
+/// before its request is failed. Injected step faults replay without
+/// limit — they are probes of the recovery path, not real failures.
+const STEP_RETRIES: u32 = 1;
 
 /// The router owns the queue; each `worker_loop` owns one execution
 /// backend plus one decode session. The statics cache is shared across
@@ -217,6 +303,11 @@ struct SlotBook {
     req: PendingReq,
     tokens: Vec<i32>,
     got_first: bool,
+    /// tokens at the head of the re-derived stream to swallow after a
+    /// step-failure replay: the client already holds them
+    replay_skip: usize,
+    /// real step failures this sequence may still absorb
+    retries: u32,
 }
 
 impl Router {
@@ -232,6 +323,9 @@ impl Router {
                 cv: Condvar::new(),
                 stopped: Mutex::new(false),
                 capacity: capacity.max(1),
+                draining: AtomicBool::new(false),
+                hard_stop: AtomicBool::new(false),
+                in_flight: AtomicUsize::new(0),
             }),
             stats: Arc::new(Mutex::new(RouterStats::default())),
             statics: Arc::new(Mutex::new(HashMap::new())),
@@ -242,16 +336,24 @@ impl Router {
         self.shared.capacity
     }
 
-    /// Enqueue a request. When the queue is at capacity the request is
-    /// handed back unchanged (backpressure: the caller replies "busy"
-    /// instead of the backlog growing without bound).
-    pub fn submit(&self, req: PendingReq) -> Result<(), PendingReq> {
+    /// Enqueue a request. Rejections hand the request back unchanged
+    /// alongside the typed error the caller should reply with: `busy`
+    /// when the queue is at capacity (backpressure instead of unbounded
+    /// backlog), `shutting_down` once the router is draining.
+    pub fn submit(&self, req: PendingReq) -> Result<(), (PendingReq, ServeError)> {
+        if self.draining() {
+            return Err((req, ServeError::shutting_down("server is shutting down")));
+        }
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_recover(&self.shared.queue);
             if q.len() >= self.shared.capacity {
                 drop(q);
-                self.stats.lock().unwrap().rejected += 1;
-                return Err(req);
+                lock_recover(&self.stats).rejected += 1;
+                let e = ServeError::busy(format!(
+                    "busy: request queue full (depth {})",
+                    self.shared.capacity
+                ));
+                return Err((req, e));
             }
             q.push_back(req);
         }
@@ -266,7 +368,7 @@ impl Router {
         adapter: &str,
         prompt: Vec<i32>,
         max_new: usize,
-    ) -> Result<Vec<i32>, String> {
+    ) -> Result<Vec<i32>, ServeError> {
         self.generate_with(adapter, prompt, max_new, SamplingParams::default())
     }
 
@@ -279,7 +381,20 @@ impl Router {
         prompt: Vec<i32>,
         max_new: usize,
         sampling: SamplingParams,
-    ) -> Result<Vec<i32>, String> {
+    ) -> Result<Vec<i32>, ServeError> {
+        self.generate_deadline(adapter, prompt, max_new, sampling, None)
+    }
+
+    /// [`Router::generate_with`] plus an absolute deadline (queue wait
+    /// counts against it; `None` = no limit).
+    pub fn generate_deadline(
+        &self,
+        adapter: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingParams,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<i32>, ServeError> {
         let (tx, rx) = mpsc::channel();
         let req = PendingReq {
             adapter: adapter.to_string(),
@@ -287,57 +402,102 @@ impl Router {
             max_new,
             sampling,
             stream: false,
+            deadline,
             enqueued: Instant::now(),
             reply: tx,
         };
-        if self.submit(req).is_err() {
-            return Err(format!("busy: request queue full (depth {})", self.shared.capacity));
+        if let Err((_, e)) = self.submit(req) {
+            return Err(e);
         }
         loop {
-            match rx.recv().map_err(|e| e.to_string())? {
-                GenEvent::Token(_) => continue, // defensive: non-stream requests get none
-                GenEvent::Done(out) => return out,
+            match rx.recv() {
+                Err(_) => return Err(ServeError::internal("worker dropped the request")),
+                Ok(GenEvent::Token(_)) => continue, // defensive: non-stream requests get none
+                Ok(GenEvent::Done(out)) => return out,
             }
         }
     }
 
     pub fn stop(&self) {
-        *self.shared.stopped.lock().unwrap() = true;
+        *lock_recover(&self.shared.stopped) = true;
         // hold the condvar's mutex while notifying: a worker between its
         // stopped-check and cv.wait holds this lock for that whole
         // window, so it cannot miss the wakeup (with N workers a missed
         // wakeup would hang shutdown's join)
-        let _q = self.shared.queue.lock().unwrap();
+        let _q = lock_recover(&self.shared.queue);
         self.shared.cv.notify_all();
+    }
+
+    /// Enter drain mode: new submissions fail with `shutting_down` and
+    /// workers stop admitting queued requests, while in-flight
+    /// sequences keep decoding. Irreversible.
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Fail every queued (never admitted) request with a typed
+    /// `shutting_down` error. Returns how many were failed. Called by
+    /// shutdown after [`Router::drain`]; a request a worker popped in
+    /// the handoff window is simply treated as in-flight instead.
+    pub fn fail_queued(&self) -> usize {
+        let drained: Vec<PendingReq> = lock_recover(&self.shared.queue).drain(..).collect();
+        let n = drained.len();
+        let mut st = lock_recover(&self.stats);
+        for req in drained {
+            st.requests += 1;
+            st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+            let _ = req.reply.send(GenEvent::Done(Err(ServeError::shutting_down(
+                "server shutting down: request was queued, not started",
+            ))));
+        }
+        n
+    }
+
+    /// Sequences admitted into a slot but not yet terminally replied
+    /// to — what a draining shutdown waits on.
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// The drain deadline expired: workers abort their remaining
+    /// in-flight sequences (typed `shutting_down` reply) at the next
+    /// step boundary.
+    pub fn hard_stop(&self) {
+        self.shared.hard_stop.store(true, Ordering::SeqCst);
     }
 
     /// Non-blocking pop — admission at a step boundary while the
     /// session is busy.
     fn try_pop(&self) -> Option<PendingReq> {
-        self.shared.queue.lock().unwrap().pop_front()
+        lock_recover(&self.shared.queue).pop_front()
     }
 
     /// Put a request back at the HEAD of the queue: admission hit a
-    /// transient resource limit (K/V token budget), so it retries in
-    /// FIFO position once capacity frees. Bypasses the capacity check —
-    /// the request already held its queue place.
+    /// transient resource limit (K/V token budget, injected admission
+    /// fault), so it retries in FIFO position once capacity frees.
+    /// Bypasses the capacity check — the request already held its
+    /// queue place.
     fn requeue_front(&self, req: PendingReq) {
-        self.shared.queue.lock().unwrap().push_front(req);
+        lock_recover(&self.shared.queue).push_front(req);
         self.shared.cv.notify_one();
     }
 
     /// Blocking pop for an idle worker: waits until a request arrives,
     /// or returns None once the router is stopped AND drained.
     fn pop_blocking(&self) -> Option<PendingReq> {
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = lock_recover(&self.shared.queue);
         loop {
             if let Some(r) = q.pop_front() {
                 return Some(r);
             }
-            if *self.shared.stopped.lock().unwrap() {
+            if *lock_recover(&self.shared.stopped) {
                 return None;
             }
-            q = self.shared.cv.wait(q).unwrap();
+            q = self.shared.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -353,11 +513,11 @@ impl Router {
         seed: u64,
     ) -> Result<Arc<Vec<Static>>, String> {
         let key = (name.to_string(), seed);
-        if let Some(s) = self.statics.lock().unwrap().get(&key) {
+        if let Some(s) = lock_recover(&self.statics).get(&key) {
             return Ok(s.clone());
         }
         let fresh = Arc::new(gen_statics(cfg, seed).map_err(|e| e.to_string())?);
-        let mut cache = self.statics.lock().unwrap();
+        let mut cache = lock_recover(&self.statics);
         Ok(cache.entry(key).or_insert(fresh).clone())
     }
 
@@ -365,24 +525,45 @@ impl Router {
     /// at startup, or recovery after a poisoned step also fails), it
     /// keeps answering the queue with errors until stop() — exiting
     /// silently would leave queued clients blocked on replies forever.
-    fn drain_with_errors(&self, msg: &str) {
+    fn drain_with_errors(&self, err: &ServeError) {
         while let Some(req) = self.pop_blocking() {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock_recover(&self.stats);
             st.requests += 1;
             st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
-            let _ = req.reply.send(GenEvent::Done(Err(msg.to_string())));
+            let _ = req.reply.send(GenEvent::Done(Err(err.clone())));
         }
     }
 
+    /// The single terminal-reply point for an ADMITTED sequence:
+    /// exactly one `Done` per request, with latency, drain accounting
+    /// and the in-flight gauge updated where the reply leaves. Callers
+    /// hold the stats lock (`st`) and have already removed the book.
+    fn conclude(
+        &self,
+        st: &mut RouterStats,
+        book: SlotBook,
+        out: Result<Vec<i32>, ServeError>,
+    ) {
+        st.requests += 1;
+        st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
+        if self.draining() && out.is_ok() {
+            st.drained_ok += 1;
+        }
+        self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        let _ = book.req.reply.send(GenEvent::Done(out));
+    }
+
     /// Resolve one queued request against the registry and admit it
-    /// into a session slot. Failures (unknown adapter, empty prompt,
-    /// reconstruction error, oversized K/V reservation) reply
-    /// immediately — they never occupy a slot or poison the session.
-    /// A *transient* K/V-budget miss (the reservation would fit an
-    /// empty arena, but live sequences hold the pages) requeues the
-    /// request at the queue head instead, when `can_requeue`; returns
-    /// `false` in that case so the caller stops admitting this round
-    /// (re-popping the same request would spin).
+    /// into a session slot. Failures (unknown adapter, expired
+    /// deadline, empty prompt, reconstruction error, oversized K/V
+    /// reservation) reply immediately with a typed error — they never
+    /// occupy a slot or poison the session. A *transient* K/V-budget
+    /// miss (the reservation would fit an empty arena, but live
+    /// sequences hold the pages) requeues the request at the queue
+    /// head instead, when `can_requeue`; returns `false` in that case
+    /// so the caller stops admitting this round (re-popping the same
+    /// request would spin). Injected admission faults requeue
+    /// unconditionally — they model transient pressure.
     fn admit_req(
         &self,
         sess: &mut dyn DecodeSession,
@@ -391,21 +572,39 @@ impl Router {
         cfg: &ModelCfg,
         req: PendingReq,
         can_requeue: bool,
+        faults: &Faults,
     ) -> bool {
         enum Outcome {
             Admitted(Admission),
             Requeue,
-            Fail(String),
+            Fail(ServeError),
         }
         let queue_wait = req.enqueued.elapsed().as_secs_f64();
         let outcome = (|| {
+            // deadline first: a stale queued request must fail without
+            // ever occupying a slot (its wait already exceeded what the
+            // client gave the whole request)
+            if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                return Outcome::Fail(ServeError::deadline_exceeded(
+                    "deadline exceeded while queued",
+                ));
+            }
+            if faults.fire(SITE_ADMIT) {
+                lock_recover(&self.stats).faults_injected += 1;
+                return Outcome::Requeue;
+            }
             let ckpt = match registry.get(&req.adapter) {
                 Some(c) => c,
-                None => return Outcome::Fail(format!("unknown adapter {:?}", req.adapter)),
+                None => {
+                    return Outcome::Fail(ServeError::unknown_adapter(format!(
+                        "unknown adapter {:?}",
+                        req.adapter
+                    )))
+                }
             };
             let statics = match self.statics_for(&req.adapter, cfg, ckpt.seed) {
                 Ok(s) => s,
-                Err(e) => return Outcome::Fail(e),
+                Err(e) => return Outcome::Fail(ServeError::internal(e)),
             };
             match sess.admit(SeqRequest {
                 adapter: req.adapter.clone(),
@@ -420,18 +619,28 @@ impl Router {
                     // pages free when live sequences retire; an
                     // admission that can never fit fails permanently
                     Some(b) if can_requeue && b.needed_pages <= b.budget_pages => Outcome::Requeue,
-                    _ => Outcome::Fail(e.to_string()),
+                    _ => Outcome::Fail(ServeError::internal(e.to_string())),
                 },
             }
         })();
         match outcome {
             Outcome::Admitted(adm) => {
-                let mut st = self.stats.lock().unwrap();
+                let mut st = lock_recover(&self.stats);
                 st.total_queue_secs += queue_wait;
                 if adm.truncated {
                     st.truncated_admits += 1;
                 }
-                books.insert(adm.slot, SlotBook { req, tokens: Vec::new(), got_first: false });
+                self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                books.insert(
+                    adm.slot,
+                    SlotBook {
+                        req,
+                        tokens: Vec::new(),
+                        got_first: false,
+                        replay_skip: 0,
+                        retries: STEP_RETRIES,
+                    },
+                );
                 true
             }
             Outcome::Requeue => {
@@ -440,12 +649,68 @@ impl Router {
                 false
             }
             Outcome::Fail(e) => {
-                let mut st = self.stats.lock().unwrap();
+                let mut st = lock_recover(&self.stats);
                 st.total_queue_secs += queue_wait;
                 st.requests += 1;
                 st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+                if e.code == ErrCode::DeadlineExceeded {
+                    st.deadline_exceeded += 1;
+                }
                 let _ = req.reply.send(GenEvent::Done(Err(e)));
                 true
+            }
+        }
+    }
+
+    /// Re-admit a book into a fresh session after a step failure and
+    /// REPLAY it: decode is deterministic, so replaying from the prompt
+    /// re-derives the same stream, and `replay_skip` suppresses
+    /// re-delivery (and re-counting) of tokens the client already
+    /// holds. Re-admission failures conclude the request with a typed
+    /// error.
+    fn readmit_book(
+        &self,
+        sess: &mut dyn DecodeSession,
+        books: &mut HashMap<usize, SlotBook>,
+        registry: &Registry,
+        cfg: &ModelCfg,
+        mut book: SlotBook,
+    ) {
+        book.replay_skip = book.tokens.len();
+        let outcome = (|| {
+            let ckpt = registry.get(&book.req.adapter).ok_or_else(|| {
+                ServeError::unknown_adapter(format!("unknown adapter {:?}", book.req.adapter))
+            })?;
+            let statics =
+                self.statics_for(&book.req.adapter, cfg, ckpt.seed).map_err(ServeError::internal)?;
+            sess.admit(SeqRequest {
+                adapter: book.req.adapter.clone(),
+                theta: Arc::new(ckpt.theta),
+                statics,
+                prompt: book.req.prompt.clone(),
+                max_new: book.req.max_new,
+                sampling: book.req.sampling.clone(),
+            })
+            .map_err(|e| ServeError::internal(format!("replay re-admission failed: {e}")))
+        })();
+        match outcome {
+            Ok(adm) => {
+                let mut st = lock_recover(&self.stats);
+                // the replayed admission re-increments the session's
+                // per-REQUEST decode-policy counters; it is the same
+                // request, so cancel the double count (the original
+                // admission was already folded before this replay)
+                if book.req.sampling.is_greedy() {
+                    st.greedy_requests = st.greedy_requests.saturating_sub(1);
+                } else {
+                    st.sampled_requests = st.sampled_requests.saturating_sub(1);
+                }
+                drop(st);
+                books.insert(adm.slot, book);
+            }
+            Err(e) => {
+                let mut st = lock_recover(&self.stats);
+                self.conclude(&mut st, book, Err(e));
             }
         }
     }
@@ -453,7 +718,8 @@ impl Router {
     /// Worker: runs until stop() with the queue drained and no active
     /// sequences. Owns one execution backend and one decode session;
     /// shares the backbone weights, the statics cache and (native) the
-    /// reconstruction cache with the other workers.
+    /// reconstruction cache with the other workers. `faults` is the
+    /// seeded injection plan ([`Faults::off`] in production).
     pub fn worker_loop(
         &self,
         exec: &mut dyn Backend,
@@ -462,17 +728,67 @@ impl Router {
         cfg: &ModelCfg,
         w0: &Arc<Vec<f32>>,
         opts: &SessionOpts,
+        faults: &Faults,
     ) {
         let mut sess = match exec.begin_decode(art_logits, w0.clone(), opts) {
             Ok(s) => s,
             Err(e) => {
-                self.drain_with_errors(&format!("decode session unavailable: {e}"));
+                self.drain_with_errors(&ServeError::internal(format!(
+                    "decode session unavailable: {e}"
+                )));
                 return;
             }
         };
         let mut books: HashMap<usize, SlotBook> = HashMap::new();
         let mut last = sess.stats();
         loop {
+            // the drain deadline expired: abort whatever is still in
+            // flight with a typed error and exit
+            if self.shared.hard_stop.load(Ordering::SeqCst) {
+                let mut st = lock_recover(&self.stats);
+                let mut slots: Vec<usize> = books.keys().copied().collect();
+                slots.sort_unstable();
+                for si in slots {
+                    sess.cancel(si);
+                    let book = books.remove(&si).expect("aborting a live book");
+                    st.drained_aborted += 1;
+                    self.conclude(
+                        &mut st,
+                        book,
+                        Err(ServeError::shutting_down(
+                            "server shutting down: drain deadline expired",
+                        )),
+                    );
+                }
+                fold_deltas(&mut st, &sess.stats(), &mut last);
+                break;
+            }
+            // deadline sweep at the step boundary: expired sequences
+            // retire immediately — pages recycled, slot reopened —
+            // instead of decoding to the end of their budget
+            if !books.is_empty() {
+                let now = Instant::now();
+                let mut expired: Vec<usize> = books
+                    .iter()
+                    .filter(|(_, b)| b.req.deadline.is_some_and(|d| now >= d))
+                    .map(|(&s, _)| s)
+                    .collect();
+                if !expired.is_empty() {
+                    expired.sort_unstable();
+                    let mut st = lock_recover(&self.stats);
+                    for si in expired {
+                        sess.cancel(si);
+                        let book = books.remove(&si).expect("expiring a live book");
+                        st.deadline_exceeded += 1;
+                        let msg = format!(
+                            "deadline exceeded after {} generated token(s)",
+                            book.tokens.len()
+                        );
+                        self.conclude(&mut st, book, Err(ServeError::deadline_exceeded(msg)));
+                    }
+                    fold_deltas(&mut st, &sess.stats(), &mut last);
+                }
+            }
             // admission at the step boundary: fill free slots from the
             // queue, blocking only when the session is idle
             if sess.active() == 0 {
@@ -481,109 +797,181 @@ impl Router {
                     // an idle session's arena is all free, so a budget
                     // miss here can never be transient: no requeue
                     Some(req) => {
-                        self.admit_req(sess.as_mut(), &mut books, registry, cfg, req, false);
+                        self.admit_req(sess.as_mut(), &mut books, registry, cfg, req, false, faults);
                     }
                 }
             }
-            while sess.free_slots() > 0 {
-                match self.try_pop() {
-                    Some(req) => {
-                        if !self.admit_req(sess.as_mut(), &mut books, registry, cfg, req, true) {
-                            break; // requeued at the head; step to free pages
+            // while draining, the queue belongs to fail_queued():
+            // workers only finish what they already admitted
+            if !self.draining() {
+                while sess.free_slots() > 0 {
+                    match self.try_pop() {
+                        Some(req) => {
+                            if !self.admit_req(
+                                sess.as_mut(),
+                                &mut books,
+                                registry,
+                                cfg,
+                                req,
+                                true,
+                                faults,
+                            ) {
+                                break; // requeued at the head; step to free pages
+                            }
                         }
+                        None => break,
                     }
-                    None => break,
                 }
             }
             if sess.active() == 0 {
                 continue; // every admission this round failed
             }
             let occupied = sess.active() as u64;
+            if faults.fire(SITE_SLOW) {
+                lock_recover(&self.stats).faults_injected += 1;
+                std::thread::sleep(Duration::from_millis(faults.slow_ms()));
+            }
+            let injected_step = faults.fire(SITE_STEP);
+            if injected_step {
+                lock_recover(&self.stats).faults_injected += 1;
+            }
             let t0 = Instant::now();
-            let events = match sess.step(exec) {
+            let step_result = if injected_step {
+                // the session itself is untouched, but recovery runs
+                // the full real path: finish, reopen, replay
+                Err(anyhow::anyhow!("injected step fault (UNI_LORA_FAULTS)"))
+            } else {
+                sess.step(exec)
+            };
+            let events = match step_result {
                 Ok(ev) => ev,
                 Err(e) => {
-                    // fail every in-flight sequence, then restart with
-                    // a fresh session — one poisoned step must not
-                    // take the worker down
-                    let msg = format!("decode step failed: {e}");
+                    // one poisoned step must not take the worker down:
+                    // reopen a fresh session and replay the in-flight
+                    // sequences into it
                     sess.finish();
                     // post-finish sample: the arena released everything,
                     // so the gauge zeroes and churn counts the releases
                     let fin = sess.stats();
                     {
-                        let mut st = self.stats.lock().unwrap();
-                        for (_, book) in books.drain() {
-                            st.requests += 1;
-                            st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
-                            let _ = book.req.reply.send(GenEvent::Done(Err(msg.clone())));
-                        }
-                        st.sampled_requests += fin.sampled_admits - last.sampled_admits;
-                        st.greedy_requests += fin.greedy_admits - last.greedy_admits;
-                        st.kv_page_churn += fin.kv_page_churn - last.kv_page_churn;
-                        st.kv_bytes_in_flight = (st.kv_bytes_in_flight + fin.kv_bytes_in_flight)
-                            .saturating_sub(last.kv_bytes_in_flight);
+                        let mut st = lock_recover(&self.stats);
+                        fold_deltas(&mut st, &fin, &mut last);
                     }
                     match exec.begin_decode(art_logits, w0.clone(), opts) {
                         Ok(s) => {
                             sess = s;
                             last = sess.stats();
-                            continue;
                         }
-                        Err(e) => {
-                            // recovery failed too: keep serving errors
-                            // rather than abandoning queued clients
-                            self.drain_with_errors(&format!("decode session unavailable: {e}"));
+                        Err(e2) => {
+                            // recovery failed too: fail the in-flight
+                            // sequences, then keep serving errors rather
+                            // than abandoning queued clients
+                            let err = ServeError::internal(format!(
+                                "decode session unavailable: {e2}"
+                            ));
+                            let mut st = lock_recover(&self.stats);
+                            let mut slots: Vec<usize> = books.keys().copied().collect();
+                            slots.sort_unstable();
+                            for si in slots {
+                                let book = books.remove(&si).expect("failing a live book");
+                                self.conclude(&mut st, book, Err(err.clone()));
+                            }
+                            drop(st);
+                            self.drain_with_errors(&err);
                             return;
                         }
                     }
+                    // replay in slot order — HashMap order would
+                    // reshuffle slot assignment (and the fault plan's
+                    // frame-decision stream) across runs
+                    let mut old: Vec<(usize, SlotBook)> = books.drain().collect();
+                    old.sort_unstable_by_key(|(si, _)| *si);
+                    for (_, mut book) in old {
+                        if !injected_step {
+                            if book.retries == 0 {
+                                let mut st = lock_recover(&self.stats);
+                                self.conclude(
+                                    &mut st,
+                                    book,
+                                    Err(ServeError::internal(format!("decode step failed: {e}"))),
+                                );
+                                continue;
+                            }
+                            book.retries -= 1;
+                        }
+                        self.readmit_book(sess.as_mut(), &mut books, registry, cfg, book);
+                    }
+                    continue;
                 }
             };
             let step_secs = t0.elapsed().as_secs_f64();
             let snow = sess.stats();
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock_recover(&self.stats);
             st.steps += 1;
             st.slot_steps += occupied;
             st.note_decode(t0, step_secs);
-            st.recon_hits += snow.recon_hits - last.recon_hits;
-            st.recon_misses += snow.recon_misses - last.recon_misses;
-            st.recon_evictions += snow.recon_evictions - last.recon_evictions;
-            st.factored_admits += snow.factored_admits - last.factored_admits;
-            st.dense_admits += snow.dense_admits - last.dense_admits;
-            st.sampled_requests += snow.sampled_admits - last.sampled_admits;
-            st.greedy_requests += snow.greedy_admits - last.greedy_admits;
-            st.kv_page_churn += snow.kv_page_churn - last.kv_page_churn;
-            // gauge, not counter: fold this worker's delta so the
-            // router-wide value sums live arenas across workers
-            st.kv_bytes_in_flight = (st.kv_bytes_in_flight + snow.kv_bytes_in_flight)
-                .saturating_sub(last.kv_bytes_in_flight);
-            last = snow;
+            fold_deltas(&mut st, &snow, &mut last);
             for ev in events {
                 let Some(book) = books.get_mut(&ev.slot) else { continue };
+                let mut lost_client = false;
                 if let Some(tok) = ev.token {
-                    if !book.got_first {
-                        // for streaming requests the frame dispatch is
-                        // the next statement, so this ttft IS
-                        // time-to-first-byte
-                        book.got_first = true;
-                        st.ttft_secs += book.req.enqueued.elapsed().as_secs_f64();
-                        st.ttft_count += 1;
+                    if book.replay_skip > 0 {
+                        // replayed token: the client already holds it —
+                        // no frame, no TTFT, no recount
+                        book.replay_skip -= 1;
+                    } else {
+                        if !book.got_first {
+                            // for streaming requests the frame dispatch
+                            // is the next statement, so this ttft IS
+                            // time-to-first-byte
+                            book.got_first = true;
+                            st.ttft_secs += book.req.enqueued.elapsed().as_secs_f64();
+                            st.ttft_count += 1;
+                        }
+                        if book.req.stream {
+                            if faults.fire(SITE_FRAME) {
+                                // injected "client disconnected": the
+                                // frame write failed
+                                st.faults_injected += 1;
+                                lost_client = true;
+                            } else if book.req.reply.send(GenEvent::Token(tok)).is_ok() {
+                                st.stream_frames_sent += 1;
+                            } else {
+                                // the stream handler dropped its
+                                // receiver: the TCP client is gone
+                                lost_client = true;
+                            }
+                        }
+                        book.tokens.push(tok);
+                        st.generated_tokens += 1;
                     }
-                    if book.req.stream && book.req.reply.send(GenEvent::Token(tok)).is_ok() {
-                        st.stream_frames_sent += 1;
+                }
+                if lost_client {
+                    if !ev.done {
+                        sess.cancel(ev.slot);
                     }
-                    book.tokens.push(tok);
-                    st.generated_tokens += 1;
+                    let book = books.remove(&ev.slot).expect("cancelling a live book");
+                    st.client_gone += 1;
+                    self.conclude(
+                        &mut st,
+                        book,
+                        Err(ServeError::client_gone("client disconnected mid-stream")),
+                    );
+                    continue;
                 }
                 if ev.done {
-                    let book = books.remove(&ev.slot).expect("book exists for finished slot");
-                    st.requests += 1;
-                    st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
-                    let _ = book.req.reply.send(GenEvent::Done(Ok(book.tokens)));
+                    let mut book = books.remove(&ev.slot).expect("book exists for finished slot");
+                    let tokens = std::mem::take(&mut book.tokens);
+                    self.conclude(&mut st, book, Ok(tokens));
                 }
             }
         }
         sess.finish();
+        // trailing fold: cancels from the final iterations and the
+        // finish() releases zero the gauge and land the last counters
+        let fin = sess.stats();
+        let mut st = lock_recover(&self.stats);
+        fold_deltas(&mut st, &fin, &mut last);
     }
 }
 
@@ -604,6 +992,7 @@ mod tests {
             max_new: 1,
             sampling: SamplingParams::default(),
             stream: false,
+            deadline: None,
             enqueued: Instant::now(),
             reply: tx.clone(),
         }
@@ -624,7 +1013,8 @@ mod tests {
     }
 
     /// Satellite: saturate the bounded queue — submits past capacity
-    /// are rejected with a protocol-visible "busy" error and counted.
+    /// are rejected with a protocol-visible typed `busy` error and
+    /// counted.
     #[test]
     fn bounded_queue_rejects_when_saturated() {
         let r = Router::with_capacity(2);
@@ -632,12 +1022,14 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         assert!(r.submit(req("x", &tx)).is_ok());
         assert!(r.submit(req("x", &tx)).is_ok());
-        // full: the request comes back unchanged
-        let back = r.submit(req("y", &tx)).unwrap_err();
+        // full: the request comes back unchanged, with the typed error
+        let (back, err) = r.submit(req("y", &tx)).unwrap_err();
         assert_eq!(back.adapter, "y");
-        // the sync API maps the rejection to a "busy" error string
+        assert_eq!(err.code, ErrCode::Busy);
+        // the sync API surfaces the same typed rejection
         let err = r.generate("z", vec![1], 1).unwrap_err();
-        assert!(err.starts_with("busy"), "{err}");
+        assert_eq!(err.code, ErrCode::Busy);
+        assert!(err.msg.starts_with("busy"), "{err}");
         assert_eq!(r.stats.lock().unwrap().rejected, 2);
         // draining the queue frees capacity again
         assert!(r.try_pop().is_some());
@@ -653,6 +1045,65 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(30));
         r.stop();
         assert!(h.join().unwrap().is_none());
+    }
+
+    /// Draining flips submissions to typed `shutting_down` rejections
+    /// (NOT counted as busy) and `fail_queued` answers everything
+    /// already queued.
+    #[test]
+    fn drain_fails_queued_and_rejects_new_submissions() {
+        let r = Router::new();
+        let (tx, rx) = mpsc::channel();
+        r.submit(req("x", &tx)).unwrap();
+        assert!(!r.draining());
+        r.drain();
+        assert!(r.draining());
+        let (_, e) = r.submit(req("y", &tx)).unwrap_err();
+        assert_eq!(e.code, ErrCode::ShuttingDown);
+        assert_eq!(r.fail_queued(), 1);
+        match rx.recv().unwrap() {
+            GenEvent::Done(Err(e)) => assert_eq!(e.code, ErrCode::ShuttingDown),
+            other => panic!("queued request must fail typed: {other:?}"),
+        }
+        let st = r.stats.lock().unwrap();
+        assert_eq!(st.requests, 1, "the failed request still counts as replied");
+        assert_eq!(st.rejected, 0, "rejected counts backpressure, not shutdown");
+    }
+
+    /// Satellite: a worker panicking while holding the stats lock must
+    /// not wedge the router — `lock_recover` adopts the poisoned state
+    /// and every router operation keeps working.
+    #[test]
+    fn stats_lock_recovers_after_poisoning_panic() {
+        let r = Router::new();
+        let r2 = r.clone();
+        let joined = std::thread::spawn(move || {
+            let _g = r2.stats.lock().unwrap();
+            panic!("poison the stats lock");
+        })
+        .join();
+        assert!(joined.is_err(), "the poisoning thread must have panicked");
+        assert!(r.stats.lock().is_err(), "the lock must actually be poisoned");
+        lock_recover(&r.stats).rejected += 1;
+        assert_eq!(lock_recover(&r.stats).rejected, 1, "counters survive the panic");
+        // the full submit path crosses the poisoned stats mutex when
+        // it rejects; exercise accept + pop too
+        let (tx, _rx) = mpsc::channel();
+        r.submit(req("x", &tx)).unwrap();
+        assert!(r.try_pop().is_some());
+        let rr = Router::with_capacity(1);
+        let _ = std::thread::spawn({
+            let rr = rr.clone();
+            move || {
+                let _g = rr.stats.lock().unwrap();
+                panic!("poison");
+            }
+        })
+        .join();
+        rr.submit(req("a", &tx)).unwrap();
+        let (_, e) = rr.submit(req("b", &tx)).unwrap_err();
+        assert_eq!(e.code, ErrCode::Busy, "rejection path survives poisoning");
+        assert_eq!(lock_recover(&rr.stats).rejected, 1);
     }
 
     /// A re-registered adapter (same name, new seed) must get fresh
@@ -721,7 +1172,7 @@ mod tests {
                 let cfg = cfg.clone();
                 let w0 = w0.clone();
                 std::thread::spawn(move || {
-                    r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts)
+                    r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts, &Faults::off())
                 })
             };
             for round in 0..2 {
@@ -752,6 +1203,9 @@ mod tests {
         assert!(st.kv_page_churn >= 6, "6 retirements must churn pages: {st:?}");
         assert_eq!(st.kv_bytes_in_flight, 0, "drained worker holds no K/V: {st:?}");
         assert_eq!(st.truncated_admits, 0);
+        // lifecycle counters stay untouched on the clean path
+        assert_eq!(st.faults_injected, 0);
+        assert_eq!((st.deadline_exceeded, st.cancelled, st.client_gone), (0, 0, 0));
 
         // pinned factored: no admission ever touches the dense cache
         let factored_opts = SessionOpts::with_slots(1).with_dense_threshold(usize::MAX);
@@ -805,6 +1259,7 @@ mod tests {
                 max_new: 2,
                 sampling: SamplingParams::default(),
                 stream: false,
+                deadline: None,
                 enqueued: Instant::now(),
                 reply: tx,
             })
@@ -817,7 +1272,9 @@ mod tests {
             let registry = registry.clone();
             let cfg = cfg.clone();
             let w0 = w0.clone();
-            std::thread::spawn(move || r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts))
+            std::thread::spawn(move || {
+                r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts, &Faults::off())
+            })
         };
         for rx in rxs {
             match rx.recv().unwrap() {
@@ -833,6 +1290,99 @@ mod tests {
         assert_eq!(st.requests, 3);
         assert_eq!(st.kv_bytes_in_flight, 0, "{st:?}");
         assert!(st.kv_page_churn >= 3, "{st:?}");
+    }
+
+    /// Tentpole: injected step faults are recovered by session replay —
+    /// the fault plan trips repeatedly (seed 7 fires the step site on
+    /// its very first draws at rate 0.2), yet every request completes
+    /// with EXACTLY the tokens a fault-free run produces, because
+    /// decode re-derives the same streams and `replay_skip` suppresses
+    /// re-delivery.
+    #[test]
+    fn worker_replays_after_injected_step_faults() {
+        use crate::adapters::AdapterCheckpoint;
+        use crate::runtime::NativeBackend;
+
+        const ART: &str = "lm_uni_lm_logits";
+        let run = |spec: Option<&'static str>| -> (Vec<Vec<i32>>, RouterStats) {
+            let mut be = NativeBackend::new().unwrap();
+            let meta = be.meta(ART).unwrap().clone();
+            let cfg = meta.cfg.clone();
+            let w0 = Arc::new(crate::coordinator::init_base(&meta, 9));
+            let registry = Arc::new(Registry::new());
+            let theta: Vec<f32> =
+                crate::rng::normals(55, crate::projection::statics::d_effective(&cfg))
+                    .iter()
+                    .map(|v| 0.05 * v)
+                    .collect();
+            registry.insert(
+                "a".to_string(),
+                AdapterCheckpoint {
+                    seed: 7,
+                    method: cfg.method.clone(),
+                    artifact: ART.into(),
+                    theta,
+                    head: vec![],
+                },
+            );
+            // pre-queue everything so admission order (and thus the
+            // fault-decision stream) is identical across runs
+            let r = Router::new();
+            let mut rxs = Vec::new();
+            for i in 0..6i32 {
+                let (tx, rx) = mpsc::channel();
+                r.submit(PendingReq {
+                    adapter: "a".into(),
+                    prompt: vec![1, 2, 3 + (i % 3)],
+                    max_new: 1 + (i as usize % 3),
+                    sampling: SamplingParams::default(),
+                    stream: false,
+                    deadline: None,
+                    enqueued: Instant::now(),
+                    reply: tx,
+                })
+                .unwrap();
+                rxs.push(rx);
+            }
+            let opts = SessionOpts::with_slots(2);
+            let worker = {
+                let r = r.clone();
+                let registry = registry.clone();
+                let cfg = cfg.clone();
+                let w0 = w0.clone();
+                std::thread::spawn(move || {
+                    let faults = match spec {
+                        Some(s) => Faults::parse(s).unwrap(),
+                        None => Faults::off(),
+                    };
+                    r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts, &faults)
+                })
+            };
+            let mut outs = Vec::new();
+            for rx in rxs {
+                match rx.recv().unwrap() {
+                    GenEvent::Done(out) => {
+                        outs.push(out.expect("injected faults must be recovered, not surfaced"))
+                    }
+                    other => panic!("buffered request got a stream event: {other:?}"),
+                }
+            }
+            r.stop();
+            worker.join().unwrap();
+            let st = r.stats.lock().unwrap().clone();
+            (outs, st)
+        };
+
+        let (clean, clean_st) = run(None);
+        assert_eq!(clean_st.faults_injected, 0);
+        let (faulted, st) = run(Some("7:step=0.2"));
+        assert!(st.faults_injected >= 1, "seed 7 fires the step site early: {st:?}");
+        assert_eq!(st.requests, 6);
+        assert_eq!(
+            clean, faulted,
+            "replay must reproduce the fault-free streams bit-identically"
+        );
+        assert_eq!(st.kv_bytes_in_flight, 0, "replayed arenas drain too: {st:?}");
     }
 
     #[test]

@@ -7,22 +7,42 @@
 //! and may opt into per-token streaming (`"stream":true`): frames are
 //! relayed to the socket at the decode-step boundary that produced
 //! them, so the first byte leaves mid-decode.
+//!
+//! The front end enforces the request-lifecycle bounds:
+//!
+//! - **Deadlines** — `"timeout_ms"` on the request, defaulted by
+//!   `UNI_LORA_REQUEST_TIMEOUT_MS`, enforced by the router at step
+//!   boundaries (queue wait included).
+//! - **Bounded request lines** — a line past
+//!   `UNI_LORA_MAX_REQUEST_BYTES` (default 1 MiB) gets a typed
+//!   `request_too_large` error and the connection closes (there is no
+//!   way to resync mid-line).
+//! - **Bounded connections** — past `UNI_LORA_MAX_CONNS` (0 = off)
+//!   a new connection gets one typed `busy` line and is closed;
+//!   accepted sockets carry `UNI_LORA_SOCK_TIMEOUT_MS` read/write
+//!   timeouts, so a client trickling bytes forever (slow loris) is
+//!   disconnected instead of pinning a reader thread.
+//! - **Graceful drain** — `shutdown` stops accepting, fails queued
+//!   requests with `shutting_down`, lets in-flight sequences finish
+//!   inside `UNI_LORA_DRAIN_MS`, then hard-stops the stragglers, and
+//!   returns the final [`RouterStats`].
 
-use super::protocol::{Request, Response};
-use super::router::{DEFAULT_QUEUE_DEPTH, GenEvent, PendingReq, Router};
+use super::faults::Faults;
+use super::protocol::{Request, Response, ServeError};
+use super::router::{lock_recover, DEFAULT_QUEUE_DEPTH, GenEvent, PendingReq, Router, RouterStats};
 use crate::adapters::Registry;
-use crate::config::{ModelCfg, RuntimeOpts};
+use crate::config::{self, ModelCfg, RuntimeOpts};
 use crate::generation::SamplingParams;
 use crate::runtime::Backend;
 use crate::session::SessionOpts;
 use crate::util::json::{n, obj, Json};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone)]
 pub struct ServerConfig {
@@ -35,15 +55,49 @@ pub struct ServerConfig {
     pub workers: usize,
     /// pending-request cap before "busy" rejection (router backpressure)
     pub queue_depth: usize,
+    /// default per-request deadline for requests that don't carry
+    /// `timeout_ms`; 0 = none (`UNI_LORA_REQUEST_TIMEOUT_MS`)
+    pub request_timeout_ms: u64,
+    /// how long shutdown lets in-flight sequences finish before the
+    /// hard stop; 0 = abort immediately (`UNI_LORA_DRAIN_MS`)
+    pub drain_ms: u64,
+    /// concurrent-connection cap; 0 = unlimited (`UNI_LORA_MAX_CONNS`)
+    pub max_conns: usize,
+    /// request-line byte cap (`UNI_LORA_MAX_REQUEST_BYTES`)
+    pub max_request_bytes: usize,
+    /// per-socket read/write timeout; 0 = none
+    /// (`UNI_LORA_SOCK_TIMEOUT_MS`)
+    pub sock_timeout_ms: u64,
+    /// session knobs for the worker pool; None = read the
+    /// `UNI_LORA_DECODE_SLOTS`-family env once at serve time. Tests
+    /// pin this instead of mutating the environment.
+    pub session: Option<SessionOpts>,
+    /// fault-injection plan; None = `UNI_LORA_FAULTS` (off when
+    /// unset). Tests pin this instead of mutating the environment.
+    pub faults: Option<Arc<Faults>>,
 }
 
 impl ServerConfig {
     pub fn new(addr: impl Into<String>, art_logits: impl Into<String>) -> ServerConfig {
+        let env = |k: &str| std::env::var(k).ok();
         ServerConfig {
             addr: addr.into(),
             art_logits: art_logits.into(),
             workers: 0,
             queue_depth: DEFAULT_QUEUE_DEPTH,
+            request_timeout_ms: config::parse_request_timeout_ms(
+                env("UNI_LORA_REQUEST_TIMEOUT_MS").as_deref(),
+            ),
+            drain_ms: config::parse_drain_ms(env("UNI_LORA_DRAIN_MS").as_deref()),
+            max_conns: config::parse_max_conns(env("UNI_LORA_MAX_CONNS").as_deref()),
+            max_request_bytes: config::parse_max_request_bytes(
+                env("UNI_LORA_MAX_REQUEST_BYTES").as_deref(),
+            ),
+            sock_timeout_ms: config::parse_sock_timeout_ms(
+                env("UNI_LORA_SOCK_TIMEOUT_MS").as_deref(),
+            ),
+            session: None,
+            faults: None,
         }
     }
 
@@ -56,6 +110,43 @@ impl ServerConfig {
         self.queue_depth = depth;
         self
     }
+
+    pub fn with_request_timeout_ms(mut self, ms: u64) -> ServerConfig {
+        self.request_timeout_ms = ms;
+        self
+    }
+
+    pub fn with_drain_ms(mut self, ms: u64) -> ServerConfig {
+        self.drain_ms = ms;
+        self
+    }
+
+    pub fn with_max_conns(mut self, cap: usize) -> ServerConfig {
+        self.max_conns = cap;
+        self
+    }
+
+    pub fn with_max_request_bytes(mut self, cap: usize) -> ServerConfig {
+        self.max_request_bytes = cap.max(1);
+        self
+    }
+
+    pub fn with_sock_timeout_ms(mut self, ms: u64) -> ServerConfig {
+        self.sock_timeout_ms = ms;
+        self
+    }
+
+    /// Pin the worker sessions' knobs (tests; production reads env).
+    pub fn with_session(mut self, opts: SessionOpts) -> ServerConfig {
+        self.session = Some(opts);
+        self
+    }
+
+    /// Pin the fault-injection plan (tests; production reads env).
+    pub fn with_faults(mut self, faults: Arc<Faults>) -> ServerConfig {
+        self.faults = Some(faults);
+        self
+    }
 }
 
 pub struct ServerHandle {
@@ -64,23 +155,71 @@ pub struct ServerHandle {
     /// execution workers actually running (can be fewer than requested
     /// when the backend refuses to clone)
     pub workers: usize,
+    drain_ms: u64,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     worker_threads: Vec<JoinHandle<()>>,
 }
 
+/// The ephemeral-port poke `shutdown` uses to unblock the accept loop
+/// must target an address a client can actually dial: a wildcard bind
+/// (0.0.0.0 / ::) is not connectable on every platform, so route the
+/// poke through the matching loopback instead. (The old
+/// `connect(self.addr)` failed silently for wildcard binds, leaving
+/// shutdown to hang on the accept join.)
+fn poke_addr(addr: SocketAddr) -> SocketAddr {
+    let mut poke = addr;
+    if poke.ip().is_unspecified() {
+        poke.set_ip(match poke {
+            SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    poke
+}
+
+/// Join with an upper bound: shutdown must never hang on a thread that
+/// is itself blocked on I/O. On timeout the watcher thread (and the
+/// joined thread) are leaked — the process is exiting anyway, and a
+/// bounded leak beats an unbounded hang.
+fn join_timeout(handle: JoinHandle<()>, timeout: Duration) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = handle.join();
+        let _ = tx.send(());
+    });
+    let _ = rx.recv_timeout(timeout);
+}
+
 impl ServerHandle {
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown: stop accepting, fail everything still
+    /// queued with a typed `shutting_down` error, let in-flight
+    /// sequences finish for up to `drain_ms` (streaming clients keep
+    /// receiving frames), then hard-stop the stragglers. Returns the
+    /// final serving stats (drained_ok / drained_aborted record how
+    /// the drain went).
+    pub fn shutdown(mut self) -> RouterStats {
         self.stop.store(true, Ordering::SeqCst);
-        self.router.stop();
-        // poke the accept loop so it notices the stop flag
-        let _ = TcpStream::connect(self.addr);
+        // stop admitting new work before poking the accept loop: a
+        // connection racing the poke sees typed shutdown errors
+        self.router.drain();
+        let _ = TcpStream::connect_timeout(&poke_addr(self.addr), Duration::from_millis(250));
         if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+            join_timeout(t, Duration::from_millis(1_000));
         }
+        let _ = self.router.fail_queued();
+        let deadline = Instant::now() + Duration::from_millis(self.drain_ms);
+        while self.router.in_flight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if self.router.in_flight() > 0 {
+            self.router.hard_stop();
+        }
+        self.router.stop();
         for t in self.worker_threads.drain(..) {
             let _ = t.join();
         }
+        lock_recover(&self.router.stats).clone()
     }
 }
 
@@ -122,9 +261,12 @@ pub fn serve(
         }
     }
     let workers = backends.len();
-    // one env read for the whole pool; every worker session gets the
-    // same slot count and dense-threshold cost model
-    let opts = SessionOpts::from_env();
+    // one env read for the whole pool (unless the config pinned the
+    // knobs); every worker session gets the same slot count and
+    // dense-threshold cost model, and every worker shares one seeded
+    // fault plan
+    let opts = cfg.session.unwrap_or_else(SessionOpts::from_env);
+    let faults = cfg.faults.clone().unwrap_or_else(|| Arc::new(Faults::from_env()));
 
     let worker_threads: Vec<JoinHandle<()>> = backends
         .into_iter()
@@ -134,25 +276,54 @@ pub fn serve(
             let art = cfg.art_logits.clone();
             let model_cfg = model_cfg.clone();
             let w0 = w0.clone();
+            let faults = faults.clone();
             std::thread::spawn(move || {
-                router.worker_loop(be.as_mut(), &registry, &art, &model_cfg, &w0, &opts);
+                router.worker_loop(be.as_mut(), &registry, &art, &model_cfg, &w0, &opts, &faults);
             })
         })
         .collect();
 
+    let ctx = ConnCtx {
+        router: router.clone(),
+        registry,
+        workers,
+        max_request_bytes: cfg.max_request_bytes,
+        request_timeout_ms: cfg.request_timeout_ms,
+    };
+    let max_conns = cfg.max_conns;
+    let sock_timeout_ms = cfg.sock_timeout_ms;
     let accept = {
-        let router = router.clone();
         let stop = stop.clone();
-        let registry = registry.clone();
         std::thread::spawn(move || {
+            let live = Arc::new(AtomicUsize::new(0));
             for stream in listener.incoming() {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                let Ok(stream) = stream else { continue };
-                let router = router.clone();
-                let registry = registry.clone();
-                std::thread::spawn(move || handle_conn(stream, router, registry, workers));
+                let Ok(mut stream) = stream else { continue };
+                if max_conns > 0 && live.load(Ordering::SeqCst) >= max_conns {
+                    // one typed busy line, then close — never a silent
+                    // drop, never an unbounded handler thread
+                    lock_recover(&ctx.router.stats).conns_rejected += 1;
+                    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+                    let e = ServeError::busy(format!(
+                        "busy: too many connections (max {max_conns})"
+                    ));
+                    let _ = writeln!(stream, "{}", Response::Error(e).to_json());
+                    continue;
+                }
+                if sock_timeout_ms > 0 {
+                    let t = Some(Duration::from_millis(sock_timeout_ms));
+                    let _ = stream.set_read_timeout(t);
+                    let _ = stream.set_write_timeout(t);
+                }
+                live.fetch_add(1, Ordering::SeqCst);
+                let guard = ConnGuard(live.clone());
+                let ctx = ctx.clone();
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    handle_conn(stream, ctx);
+                });
             }
         })
     };
@@ -161,61 +332,134 @@ pub fn serve(
         addr,
         router,
         workers,
+        drain_ms: cfg.drain_ms,
         stop,
         accept_thread: Some(accept),
         worker_threads,
     })
 }
 
-fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, workers: usize) {
+/// Everything a connection handler needs, cloned per connection.
+#[derive(Clone)]
+struct ConnCtx {
+    router: Router,
+    registry: Arc<Registry>,
+    workers: usize,
+    max_request_bytes: usize,
+    request_timeout_ms: u64,
+}
+
+/// Decrements the live-connection gauge when the handler exits — by
+/// any path, including a panic.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+enum LineRead {
+    Line(String),
+    TooLarge,
+    Eof,
+}
+
+/// Read one `\n`-terminated line, refusing to buffer more than `cap`
+/// bytes of it — the unbounded `BufRead::lines` alternative lets one
+/// client allocate without limit. Errors surface the socket state
+/// (closed, reset, or read-timeout — the slow-loris kill).
+fn read_bounded_line(r: &mut impl BufRead, cap: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF mid-line: surface what arrived so a sender that
+            // forgot the trailing newline still gets parsed
+            return Ok(if buf.is_empty() {
+                LineRead::Eof
+            } else {
+                LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if buf.len() + pos > cap {
+                    r.consume(pos + 1);
+                    return Ok(LineRead::TooLarge);
+                }
+                buf.extend_from_slice(&chunk[..pos]);
+                r.consume(pos + 1);
+                return Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()));
+            }
+            None => {
+                let len = chunk.len();
+                if buf.len() + len > cap {
+                    r.consume(len);
+                    return Ok(LineRead::TooLarge);
+                }
+                buf.extend_from_slice(chunk);
+                r.consume(len);
+            }
+        }
+    }
+}
+
+/// The effective deadline for one request: its own `timeout_ms` wins,
+/// else the server default; 0 everywhere = unbounded.
+fn request_deadline(req_ms: u64, default_ms: u64) -> Option<Instant> {
+    let ms = if req_ms > 0 { req_ms } else { default_ms };
+    (ms > 0).then(|| Instant::now() + Duration::from_millis(ms))
+}
+
+fn handle_conn(stream: TcpStream, ctx: ConnCtx) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_bounded_line(&mut reader, ctx.max_request_bytes) {
+            // closed, reset, or read-timeout: either way this
+            // connection is done (the timeout is the slow-loris bound)
+            Err(_) => break,
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLarge) => {
+                let e = ServeError::too_large(format!(
+                    "request too large: line exceeds {} bytes",
+                    ctx.max_request_bytes
+                ));
+                let _ = writeln!(writer, "{}", Response::Error(e).to_json());
+                break; // the rest of the oversized line is unframed
+            }
+            Ok(LineRead::Line(l)) => l,
+        };
         if line.trim().is_empty() {
             continue;
         }
         let resp = match Request::parse(&line) {
-            Err(e) => Response::Error(e.to_string()),
-            Ok(Request::Adapters) => Response::Adapters(registry.names()),
-            Ok(Request::Stats) => {
-                let st = router.stats.lock().unwrap().clone();
-                Response::Stats(obj(vec![
-                    ("requests", n(st.requests as f64)),
-                    ("rejected", n(st.rejected as f64)),
-                    ("workers", n(workers as f64)),
-                    ("steps", n(st.steps as f64)),
-                    ("generated_tokens", n(st.generated_tokens as f64)),
-                    ("tokens_per_sec", n(st.tokens_per_sec())),
-                    ("mean_ttft_ms", n(st.mean_ttft_ms())),
-                    ("recon_hit_rate", n(st.recon_hit_rate())),
-                    ("recon_evictions", n(st.recon_evictions as f64)),
-                    ("factored_admits", n(st.factored_admits as f64)),
-                    ("dense_admits", n(st.dense_admits as f64)),
-                    ("sampled_requests", n(st.sampled_requests as f64)),
-                    ("greedy_requests", n(st.greedy_requests as f64)),
-                    ("stream_frames_sent", n(st.stream_frames_sent as f64)),
-                    ("mean_occupied_slots", n(st.mean_occupied_slots())),
-                    ("mean_latency_ms", n(st.mean_latency_ms())),
-                    ("truncated_admits", n(st.truncated_admits as f64)),
-                    ("kv_bytes_in_flight", n(st.kv_bytes_in_flight as f64)),
-                    ("kv_page_churn", n(st.kv_page_churn as f64)),
-                ]))
-            }
-            Ok(Request::Generate { adapter, prompt, max_new, sampling, stream }) => {
+            Err(e) => Response::Error(ServeError::parse(e.to_string())),
+            Ok(Request::Adapters) => Response::Adapters(ctx.registry.names()),
+            Ok(Request::Stats) => stats_response(&ctx),
+            Ok(Request::Generate { adapter, prompt, max_new, sampling, stream, timeout_ms }) => {
+                let deadline = request_deadline(timeout_ms, ctx.request_timeout_ms);
                 if stream {
                     // frames are written inline as the worker emits
                     // them; a write failure means the client went away
-                    match stream_generate(&mut writer, &router, &adapter, prompt, max_new, sampling)
-                    {
+                    match stream_generate(
+                        &mut writer,
+                        &ctx.router,
+                        &adapter,
+                        prompt,
+                        max_new,
+                        sampling,
+                        deadline,
+                    ) {
                         Ok(()) => continue,
                         Err(_) => break,
                     }
                 }
-                match router.generate_with(&adapter, prompt, max_new, sampling) {
+                match ctx.router.generate_deadline(&adapter, prompt, max_new, sampling, deadline) {
                     Ok(tokens) => Response::Tokens(tokens),
                     Err(e) => Response::Error(e),
                 }
@@ -227,12 +471,46 @@ fn handle_conn(stream: TcpStream, router: Router, registry: Arc<Registry>, worke
     }
 }
 
+fn stats_response(ctx: &ConnCtx) -> Response {
+    let st = lock_recover(&ctx.router.stats).clone();
+    Response::Stats(obj(vec![
+        ("requests", n(st.requests as f64)),
+        ("rejected", n(st.rejected as f64)),
+        ("workers", n(ctx.workers as f64)),
+        ("steps", n(st.steps as f64)),
+        ("generated_tokens", n(st.generated_tokens as f64)),
+        ("tokens_per_sec", n(st.tokens_per_sec())),
+        ("mean_ttft_ms", n(st.mean_ttft_ms())),
+        ("recon_hit_rate", n(st.recon_hit_rate())),
+        ("recon_evictions", n(st.recon_evictions as f64)),
+        ("factored_admits", n(st.factored_admits as f64)),
+        ("dense_admits", n(st.dense_admits as f64)),
+        ("sampled_requests", n(st.sampled_requests as f64)),
+        ("greedy_requests", n(st.greedy_requests as f64)),
+        ("stream_frames_sent", n(st.stream_frames_sent as f64)),
+        ("mean_occupied_slots", n(st.mean_occupied_slots())),
+        ("mean_latency_ms", n(st.mean_latency_ms())),
+        ("truncated_admits", n(st.truncated_admits as f64)),
+        ("kv_bytes_in_flight", n(st.kv_bytes_in_flight as f64)),
+        ("kv_page_churn", n(st.kv_page_churn as f64)),
+        ("deadline_exceeded", n(st.deadline_exceeded as f64)),
+        ("cancelled", n(st.cancelled as f64)),
+        ("client_gone", n(st.client_gone as f64)),
+        ("conns_rejected", n(st.conns_rejected as f64)),
+        ("drained_ok", n(st.drained_ok as f64)),
+        ("drained_aborted", n(st.drained_aborted as f64)),
+        ("faults_injected", n(st.faults_injected as f64)),
+    ]))
+}
+
 /// Stream one generation: submit with `stream: true`, then relay each
 /// [`GenEvent`] to the socket the moment it arrives — one frame line
 /// per token, then the terminal frame carrying the full token list.
-/// Failures that precede any frame (busy queue, unknown adapter) are
-/// written as ordinary error responses. `Err` only on socket write
-/// failure.
+/// Failures that precede any frame (busy queue, unknown adapter,
+/// draining server) are written as ordinary typed error responses.
+/// `Err` only on socket write failure; dropping the receiver after
+/// that is what tells the worker the client is gone (it cancels the
+/// sequence at the next step boundary).
 fn stream_generate(
     writer: &mut TcpStream,
     router: &Router,
@@ -240,6 +518,7 @@ fn stream_generate(
     prompt: Vec<i32>,
     max_new: usize,
     sampling: SamplingParams,
+    deadline: Option<Instant>,
 ) -> std::io::Result<()> {
     let (tx, rx) = mpsc::channel();
     let req = PendingReq {
@@ -248,17 +527,17 @@ fn stream_generate(
         max_new,
         sampling,
         stream: true,
+        deadline,
         enqueued: Instant::now(),
         reply: tx,
     };
-    if router.submit(req).is_err() {
-        let msg = format!("busy: request queue full (depth {})", router.capacity());
-        return writeln!(writer, "{}", Response::Error(msg).to_json());
+    if let Err((_, e)) = router.submit(req) {
+        return writeln!(writer, "{}", Response::Error(e).to_json());
     }
     loop {
-        let ev = rx
-            .recv()
-            .unwrap_or_else(|_| GenEvent::Done(Err("worker dropped the request".to_string())));
+        let ev = rx.recv().unwrap_or_else(|_| {
+            GenEvent::Done(Err(ServeError::internal("worker dropped the request")))
+        });
         match ev {
             GenEvent::Token(tok) => {
                 let f = Response::Frame { token: Some(tok), done: false, tokens: None };
@@ -317,6 +596,7 @@ impl Client {
             max_new,
             sampling,
             stream: false,
+            timeout_ms: 0,
         };
         match self.call(&req)? {
             Response::Tokens(t) => Ok(t),
@@ -342,6 +622,7 @@ impl Client {
             max_new,
             sampling,
             stream: true,
+            timeout_ms: 0,
         };
         writeln!(self.writer, "{}", req.to_json())?;
         let mut streamed = Vec::new();

@@ -78,6 +78,13 @@ impl FallbackSession {
 }
 
 impl DecodeSession for FallbackSession {
+    fn cancel(&mut self, slot: usize) {
+        if slot < self.slots.len() && self.slots[slot].take().is_some() {
+            self.active -= 1;
+            self.stats.cancelled += 1;
+        }
+    }
+
     fn admit(&mut self, req: SeqRequest) -> Result<Admission> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
         req.sampling.validate()?;

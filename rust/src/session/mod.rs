@@ -234,6 +234,10 @@ pub struct SessionStats {
     pub kv_bytes_in_flight: u64,
     /// K/V pages recycled through the arena free list (counter)
     pub kv_page_churn: u64,
+    /// sequences retired mid-flight via [`DecodeSession::cancel`]
+    /// (deadline expiries, client disconnects) — their pages and slot
+    /// were recycled before the sequence finished
+    pub cancelled: u64,
 }
 
 /// A stateful decoding session over one `lm_logits`-kind artifact.
@@ -253,6 +257,14 @@ pub trait DecodeSession: Send {
     /// admitted slots run their prefill first). Finished sequences are
     /// retired and their slots freed before this returns.
     fn step(&mut self, exec: &mut dyn Backend) -> Result<Vec<SeqEvent>>;
+
+    /// Retire one in-flight sequence before it finishes: the caller
+    /// decided nobody will read its tokens (client disconnected) or it
+    /// ran out of wall-clock (deadline). K/V pages and the slot free
+    /// immediately, no event is ever emitted for it, and
+    /// [`SessionStats::cancelled`] increments. Cancelling a free slot
+    /// is a no-op.
+    fn cancel(&mut self, slot: usize);
 
     /// Release all slots (in-flight sequences are abandoned).
     fn finish(&mut self);

@@ -111,6 +111,13 @@ impl NativeDecodeSession {
 }
 
 impl DecodeSession for NativeDecodeSession {
+    fn cancel(&mut self, slot: usize) {
+        if slot < self.slots.len() && self.slots[slot].is_some() {
+            self.retire(slot);
+            self.stats.cancelled += 1;
+        }
+    }
+
     fn admit(&mut self, req: SeqRequest) -> Result<Admission> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
         req.sampling.validate()?;

@@ -161,7 +161,7 @@ fn streaming_over_raw_tcp_and_serving_stats_counters() {
         let mut resp = String::new();
         reader.read_line(&mut resp).unwrap();
         match Response::parse(&resp).unwrap() {
-            Response::Error(e) => assert!(e.contains(needle), "{needle}: {e}"),
+            Response::Error(e) => assert!(e.msg.contains(needle), "{needle}: {e}"),
             other => panic!("garbage must error, got {other:?}"),
         }
     }

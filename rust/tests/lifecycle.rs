@@ -1,0 +1,594 @@
+//! Request-lifecycle acceptance: deadlines (queued and mid-flight),
+//! cancellation on client disconnect, graceful drain vs hard stop,
+//! connection/request-size bounds, and the seeded churn fuzz — ≥64
+//! interleaved requests over heterogeneous adapters under an active
+//! fault plan, where every request gets exactly one terminal reply, no
+//! K/V page or slot leaks, and the whole run replays bit-identically
+//! for a fixed fault seed.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::coordinator::init_base;
+use uni_lora::generation::SamplingParams;
+use uni_lora::projection::statics::{gen_statics, init_theta};
+use uni_lora::runtime::{Backend, NativeBackend};
+use uni_lora::server::protocol::{ErrCode, Request, Response};
+use uni_lora::server::router::{GenEvent, PendingReq, Router};
+use uni_lora::server::server::Client;
+use uni_lora::server::{serve, Faults, RouterStats, ServerConfig, ServerHandle};
+use uni_lora::session::{SeqRequest, SessionOpts};
+
+const ART: &str = "lm_uni_lm_logits";
+/// EOS token id — biased out wherever a test needs the full budget to
+/// actually decode (an untrained model may emit EOS at any step).
+const EOS_BIAS: &str = r#""logit_bias":[[3,-1000000000]]"#;
+
+fn no_eos() -> SamplingParams {
+    SamplingParams { logit_bias: vec![(3, -1e9)], ..SamplingParams::default() }
+}
+
+/// One-adapter server with one worker; every lifecycle knob the test
+/// cares about is pinned through the config (never the environment).
+fn start(cfgf: impl FnOnce(ServerConfig) -> ServerConfig) -> ServerHandle {
+    let mut exec: Box<dyn Backend> = Box::new(NativeBackend::new().unwrap());
+    let meta = exec.meta(ART).unwrap().clone();
+    let w0 = init_base(&meta, 42);
+    exec.prepare(ART).unwrap();
+    let registry = Registry::new();
+    registry.insert(
+        "a0".into(),
+        AdapterCheckpoint {
+            seed: 5,
+            method: "uni".into(),
+            artifact: ART.into(),
+            theta: init_theta(&meta.cfg, 5).unwrap(),
+            head: vec![],
+        },
+    );
+    let cfg = cfgf(ServerConfig::new("127.0.0.1:0", ART).with_workers(1));
+    serve(cfg, exec, Arc::new(registry), meta.cfg.clone(), w0).unwrap()
+}
+
+/// Session-level cancel contract: pages and the slot free immediately,
+/// the counter increments, cancelling a free slot is a no-op, and the
+/// freed slot is re-admissible.
+#[test]
+fn session_cancel_frees_pages_and_slot() {
+    let mut be = NativeBackend::new().unwrap();
+    let meta = be.meta(ART).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let w0 = Arc::new(init_base(&meta, 7));
+    let statics = Arc::new(gen_statics(&cfg, 7).unwrap());
+    let theta = Arc::new(init_theta(&cfg, 5).unwrap());
+    let req = |prompt: Vec<i32>| SeqRequest {
+        adapter: "a".into(),
+        theta: theta.clone(),
+        statics: statics.clone(),
+        prompt,
+        max_new: 4,
+        sampling: no_eos(),
+    };
+    let opts = SessionOpts::with_slots(2);
+    let mut sess = be.begin_decode(ART, w0.clone(), &opts).unwrap();
+    let a1 = sess.admit(req(vec![1, 2, 3])).unwrap();
+    let a2 = sess.admit(req(vec![4, 5])).unwrap();
+    assert_eq!(sess.active(), 2);
+    sess.step(&mut be).unwrap(); // prefill: K/V pages now hold tokens
+    let live = sess.stats().kv_bytes_in_flight;
+    assert!(live > 0, "prefilled sequences must hold K/V bytes");
+    sess.cancel(a1.slot);
+    assert_eq!(sess.active(), 1);
+    assert_eq!(sess.stats().cancelled, 1);
+    assert!(
+        sess.stats().kv_bytes_in_flight < live,
+        "cancel must release the sequence's pages immediately"
+    );
+    // cancelling a free slot is a no-op
+    sess.cancel(a1.slot);
+    assert_eq!(sess.stats().cancelled, 1);
+    assert_eq!(sess.active(), 1);
+    // the freed slot admits again and the session still decodes
+    let a3 = sess.admit(req(vec![6, 7, 8])).unwrap();
+    assert_eq!(a3.slot, a1.slot, "two slots, one live: cancel must have freed the other");
+    for _ in 0..16 {
+        if sess.active() == 0 {
+            break;
+        }
+        sess.step(&mut be).unwrap();
+    }
+    assert_eq!(sess.active(), 0, "remaining sequences must run to completion");
+    let _ = a2;
+    sess.finish();
+    assert_eq!(sess.stats().kv_bytes_in_flight, 0);
+}
+
+/// One request's full observable outcome, for bit-identical replay
+/// comparison across runs.
+fn churn_run() -> (Vec<String>, (u64, u64, u64, u64, u64), RouterStats) {
+    let mut be = NativeBackend::new().unwrap();
+    let meta = be.meta(ART).unwrap().clone();
+    let cfg = meta.cfg.clone();
+    let w0 = Arc::new(init_base(&meta, 9));
+    let registry = Arc::new(Registry::new());
+    for i in 0..3u64 {
+        registry.insert(
+            format!("a{i}"),
+            AdapterCheckpoint {
+                seed: 7,
+                method: cfg.method.clone(),
+                artifact: ART.into(),
+                theta: init_theta(&cfg, 50 + i).unwrap(),
+                head: vec![],
+            },
+        );
+    }
+    // every request is queued BEFORE the worker starts, so admission
+    // order — and with it the fault plan's decision streams — is a
+    // pure function of the request list and the seed
+    let r = Router::new();
+    let mut rxs = Vec::new();
+    for i in 0..72usize {
+        let (tx, rx) = mpsc::channel();
+        let sampling = if i % 3 == 2 {
+            SamplingParams {
+                temperature: 0.8,
+                seed: 100 + i as u64,
+                ..SamplingParams::default()
+            }
+        } else {
+            SamplingParams::default()
+        };
+        r.submit(PendingReq {
+            adapter: format!("a{}", i % 3),
+            prompt: vec![1, 2, 1 + (i as i32 % 5)],
+            max_new: 1 + i % 5,
+            sampling,
+            stream: i % 2 == 0,
+            // a sprinkling of already-expired deadlines: these must
+            // fail while queued, without ever occupying a slot
+            deadline: (i % 16 == 7).then(|| Instant::now() - Duration::from_millis(1)),
+            enqueued: Instant::now(),
+            reply: tx,
+        })
+        .unwrap();
+        rxs.push(rx);
+    }
+    // 4 slots over a 4-page budget: every sequence here reserves one
+    // page, so a single leaked page shows up as a hang in the
+    // full-budget wave below
+    let opts = SessionOpts::with_slots(4).with_kv_pages(4);
+    let worker = {
+        let r = r.clone();
+        let registry = registry.clone();
+        let cfg = cfg.clone();
+        let w0 = w0.clone();
+        std::thread::spawn(move || {
+            let faults =
+                Faults::parse("1234:step=0.2,admit=0.1,slow=0.05@1,frame=0.15").unwrap();
+            r.worker_loop(&mut be, &registry, ART, &cfg, &w0, &opts, &faults)
+        })
+    };
+    let mut outcomes = Vec::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut frames = 0usize;
+        let summary = loop {
+            match rx.recv() {
+                Ok(GenEvent::Token(_)) => frames += 1,
+                Ok(GenEvent::Done(Ok(toks))) => break format!("ok:{toks:?}:frames={frames}"),
+                Ok(GenEvent::Done(Err(e))) => break format!("err:{:?}:frames={frames}", e.code),
+                Err(_) => break "dropped-without-terminal".to_string(),
+            }
+        };
+        // exactly one terminal reply: the sender must be gone now
+        assert!(rx.recv().is_err(), "request {i} got a second event after its terminal");
+        outcomes.push(summary);
+    }
+    // deterministic snapshot: the worker is idle (blocked on the
+    // queue) once every terminal reply has been received
+    let mid = r.stats.lock().unwrap().clone();
+    let key = (mid.requests, mid.generated_tokens, mid.faults_injected, mid.deadline_exceeded,
+        mid.client_gone);
+    // leak check: a full-budget wave — 4 concurrent single-page
+    // admissions need all 4 pages free; a leaked page turns this into
+    // a requeue-forever hang (caught by the harness timeout)
+    let mut wave = Vec::new();
+    for _ in 0..4 {
+        let (tx, rx) = mpsc::channel();
+        r.submit(PendingReq {
+            adapter: "a0".into(),
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+            sampling: SamplingParams::default(),
+            stream: false,
+            deadline: None,
+            enqueued: Instant::now(),
+            reply: tx,
+        })
+        .unwrap();
+        wave.push(rx);
+    }
+    for (i, rx) in wave.into_iter().enumerate() {
+        match rx.recv().unwrap() {
+            GenEvent::Done(out) => {
+                assert!(out.is_ok(), "post-fuzz full-budget admission {i} failed: {out:?}")
+            }
+            other => panic!("wave request {i} got a stream event: {other:?}"),
+        }
+    }
+    r.stop();
+    worker.join().unwrap();
+    let fin = r.stats.lock().unwrap().clone();
+    (outcomes, key, fin)
+}
+
+/// Tentpole acceptance: the seeded churn fuzz. 72 interleaved
+/// requests (3 adapters, mixed stream/buffered, mixed greedy/sampled,
+/// a few pre-expired deadlines) under an active fault plan injecting
+/// step failures, admission failures, slow steps and frame-write
+/// failures. Every request gets exactly one terminal reply, nothing
+/// leaks, and the entire run replays bit-identically.
+#[test]
+fn churn_fuzz_replays_bit_identically_with_no_leaks() {
+    let (outcomes, key, fin) = churn_run();
+    assert_eq!(outcomes.len(), 72);
+    let expected_expired = (0..72).filter(|i| i % 16 == 7).count() as u64;
+    assert_eq!(key.3, expected_expired, "every pre-expired deadline fails while queued");
+    for (i, o) in outcomes.iter().enumerate() {
+        if i % 16 == 7 {
+            assert_eq!(o, "err:DeadlineExceeded:frames=0", "request {i}: {o}");
+        }
+        assert_ne!(o, "dropped-without-terminal", "request {i} never got a terminal reply");
+    }
+    assert!(key.2 > 0, "the fault plan must actually fire: {key:?}");
+    assert!(key.4 >= 1, "frame faults must produce client_gone cancellations: {key:?}");
+    // streamed requests that completed must have received every token
+    // exactly once — replay after a step fault must not re-deliver
+    for (i, o) in outcomes.iter().enumerate() {
+        if i % 2 == 0 && i % 16 != 7 {
+            if let Some(toks) = o.strip_prefix("ok:") {
+                let n_tokens = toks.split(',').count() - usize::from(toks.starts_with("[]"));
+                let frames: usize =
+                    o.rsplit("frames=").next().unwrap().parse().unwrap();
+                assert_eq!(frames, n_tokens, "request {i}: {o}");
+            }
+        }
+    }
+    // no K/V leak: the final fold (post-finish) must zero the gauge
+    assert_eq!(fin.kv_bytes_in_flight, 0, "{fin:?}");
+    assert_eq!(fin.requests, 76, "72 fuzz + 4 wave requests, one terminal each");
+
+    // the replay: same seed, same request list -> same everything
+    let (outcomes2, key2, _) = churn_run();
+    assert_eq!(outcomes, outcomes2, "fixed fault seed must replay bit-identically");
+    assert_eq!(key, key2, "lifecycle counters must replay exactly");
+}
+
+/// Graceful drain: in-flight streaming finishes (frames keep flowing
+/// after shutdown begins), queued requests fail with a typed
+/// shutting-down error, and the returned stats record the drain.
+#[test]
+fn graceful_drain_finishes_in_flight_and_fails_queued() {
+    let handle = start(|c| {
+        c.with_session(SessionOpts::with_slots(1))
+            .with_faults(Arc::new(Faults::parse("5:slow=1@25").unwrap()))
+            .with_drain_ms(10_000)
+    });
+    let addr = handle.addr;
+    // A: streaming, EOS biased out -> exactly 8 frames, ~25ms apart
+    let a = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(
+            writer,
+            r#"{{"op":"generate","adapter":"a0","prompt":[1,21,7],"max_new":8,"sampling":{{{EOS_BIAS}}},"stream":true}}"#
+        )
+        .unwrap();
+        let mut frames = 0usize;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Frame { token, done, tokens } => {
+                    if token.is_some() {
+                        frames += 1;
+                    }
+                    if done {
+                        return (frames, tokens.unwrap_or_default());
+                    }
+                }
+                other => panic!("drained stream must complete, got {other:?}"),
+            }
+        }
+    });
+    std::thread::sleep(Duration::from_millis(60)); // A is mid-decode
+    // B: buffered, queued behind A (1 slot) when shutdown begins
+    let b = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.generate("a0", vec![1, 2], 2)
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    let t0 = Instant::now();
+    let st = handle.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(10), "drain must beat its deadline");
+    let (frames, final_tokens) = a.join().unwrap();
+    assert_eq!(frames, 8, "the in-flight stream must finish during the drain");
+    assert_eq!(final_tokens.len(), 8);
+    let b_err = b.join().unwrap().unwrap_err().to_string();
+    assert!(b_err.contains("shutting down"), "queued request must fail typed: {b_err}");
+    assert_eq!(st.drained_ok, 1, "{st:?}");
+    assert_eq!(st.drained_aborted, 0, "{st:?}");
+    assert_eq!(st.kv_bytes_in_flight, 0, "{st:?}");
+}
+
+/// Drain deadline of zero: shutdown hard-stops immediately, and the
+/// in-flight streaming client gets a typed shutting-down error instead
+/// of a hang.
+#[test]
+fn hard_stop_aborts_in_flight_past_drain_deadline() {
+    let handle = start(|c| {
+        c.with_session(SessionOpts::with_slots(1))
+            .with_faults(Arc::new(Faults::parse("5:slow=1@25").unwrap()))
+            .with_drain_ms(0)
+    });
+    let addr = handle.addr;
+    let a = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(
+            writer,
+            r#"{{"op":"generate","adapter":"a0","prompt":[1,21,7],"max_new":30,"sampling":{{{EOS_BIAS}}},"stream":true}}"#
+        )
+        .unwrap();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Frame { done: false, .. } => continue,
+                Response::Frame { done: true, .. } => panic!("30-token stream outran the abort"),
+                Response::Error(e) => return e,
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+    });
+    std::thread::sleep(Duration::from_millis(80)); // A is mid-decode
+    let st = handle.shutdown();
+    let e = a.join().unwrap();
+    assert_eq!(e.code, ErrCode::ShuttingDown, "{e:?}");
+    assert_eq!(st.drained_aborted, 1, "{st:?}");
+    assert_eq!(st.kv_bytes_in_flight, 0, "aborted sequences must release K/V: {st:?}");
+}
+
+/// A mid-flight deadline cancels the sequence at a step boundary,
+/// frees the slot for the next request, and surfaces the typed error
+/// plus the deadline_exceeded / cancelled counters.
+#[test]
+fn deadline_expires_mid_flight_and_frees_the_slot() {
+    let handle = start(|c| {
+        c.with_session(SessionOpts::with_slots(1))
+            .with_faults(Arc::new(Faults::parse("5:slow=1@15").unwrap()))
+    });
+    let mut client = Client::connect(handle.addr).unwrap();
+    let req = Request::Generate {
+        adapter: "a0".into(),
+        prompt: vec![1, 21, 7],
+        max_new: 50,
+        sampling: no_eos(),
+        stream: false,
+        timeout_ms: 60,
+    };
+    let t0 = Instant::now();
+    match client.call(&req).unwrap() {
+        Response::Error(e) => {
+            assert_eq!(e.code, ErrCode::DeadlineExceeded, "{e:?}");
+        }
+        other => panic!("a 50-token decode at 15ms/step must miss a 60ms deadline: {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline must cut the request off, not let it run out its budget"
+    );
+    // the slot is free again: an undeadlined request completes
+    let toks = client.generate("a0", vec![1, 2, 3], 2).unwrap();
+    assert!(toks.len() <= 2);
+    let stats = client.stats().unwrap();
+    assert!(stats.get("deadline_exceeded").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(stats.get("cancelled").unwrap().as_f64().unwrap() >= 1.0);
+    handle.shutdown();
+}
+
+/// Queue wait counts against the deadline: a request that expires
+/// while queued fails with the typed error WITHOUT ever occupying a
+/// decode slot (cancelled stays 0 — nothing was in flight to cancel).
+#[test]
+fn queued_request_expires_without_occupying_a_slot() {
+    let handle = start(|c| {
+        c.with_session(SessionOpts::with_slots(1))
+            .with_faults(Arc::new(Faults::parse("5:slow=1@15").unwrap()))
+    });
+    let addr = handle.addr;
+    // A occupies the only slot for ~40 steps x 15ms
+    let a = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.generate_sampled("a0", vec![1, 21, 7], 40, no_eos())
+    });
+    std::thread::sleep(Duration::from_millis(50)); // A is admitted
+    let mut client = Client::connect(addr).unwrap();
+    let req = Request::Generate {
+        adapter: "a0".into(),
+        prompt: vec![1, 2],
+        max_new: 2,
+        sampling: SamplingParams::default(),
+        stream: false,
+        timeout_ms: 50,
+    };
+    let t0 = Instant::now();
+    match client.call(&req).unwrap() {
+        Response::Error(e) => {
+            assert_eq!(e.code, ErrCode::DeadlineExceeded, "{e:?}");
+            assert!(e.msg.contains("queued"), "must fail at admission, not mid-flight: {e:?}");
+        }
+        other => panic!("queued past its deadline must fail typed: {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    assert!(a.join().unwrap().is_ok(), "the in-flight request is untouched");
+    let stats = client.stats().unwrap();
+    assert!(stats.get("deadline_exceeded").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(
+        stats.get("cancelled").unwrap().as_f64().unwrap(),
+        0.0,
+        "a queued expiry must never have occupied a slot"
+    );
+    handle.shutdown();
+}
+
+/// Satellite: a streaming client that disconnects mid-generation is
+/// detected at the next frame write; the worker cancels the sequence,
+/// recycles its pages, and the slot serves the next request.
+#[test]
+fn mid_stream_disconnect_cancels_the_sequence() {
+    let handle = start(|c| {
+        c.with_session(SessionOpts::with_slots(1))
+            .with_faults(Arc::new(Faults::parse("5:slow=1@10").unwrap()))
+    });
+    let addr = handle.addr;
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(
+            writer,
+            r#"{{"op":"generate","adapter":"a0","prompt":[1,21,7],"max_new":40,"sampling":{{{EOS_BIAS}}},"stream":true}}"#
+        )
+        .unwrap();
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(r#""ok":true"#), "expected a frame: {line}");
+        }
+        // drop both halves: FIN now — the server's next frame writes
+        // start failing and the handler drops its reply receiver
+    }
+    // the worker notices at a step boundary and cancels
+    let mut client = Client::connect(addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = client.stats().unwrap();
+        if stats.get("client_gone").unwrap().as_f64().unwrap() >= 1.0
+            && stats.get("cancelled").unwrap().as_f64().unwrap() >= 1.0
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "disconnect was never detected: {stats:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // the slot (and its pages) are free again
+    let toks = client.generate("a0", vec![1, 2, 3], 2).unwrap();
+    assert!(toks.len() <= 2);
+    handle.shutdown();
+}
+
+/// Satellite: a client trickling a never-terminated request line is
+/// cut off by the socket read timeout without blocking other clients.
+#[test]
+fn slow_loris_is_cut_off_by_the_read_timeout() {
+    let handle = start(|c| c.with_sock_timeout_ms(200));
+    let addr = handle.addr;
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.write_all(b"{\"op\":").unwrap(); // partial line, no newline, then silence
+    loris.flush().unwrap();
+    // other clients are served while the loris connection idles
+    let mut client = Client::connect(addr).unwrap();
+    assert!(client.stats().is_ok());
+    // past the read timeout the server closes the connection: the
+    // loris sees EOF (or a reset), never its own read timeout
+    loris.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 64];
+    match loris.read(&mut buf) {
+        Ok(0) => {}                                                   // clean FIN
+        Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => {} // RST
+        other => panic!("server must hang up on a slow loris, got {other:?}"),
+    }
+    // and the server is still healthy
+    assert!(client.stats().is_ok());
+    handle.shutdown();
+}
+
+/// Satellite: past UNI_LORA_MAX_CONNS a connection gets one typed busy
+/// line and a close — and the slot reopens when a connection ends.
+#[test]
+fn connection_cap_rejects_with_typed_busy() {
+    let handle = start(|c| c.with_max_conns(1));
+    let addr = handle.addr;
+    let mut c1 = Client::connect(addr).unwrap();
+    assert!(c1.stats().is_ok()); // c1's handler is live and counted
+    {
+        let over = TcpStream::connect(addr).unwrap();
+        over.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(over);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match Response::parse(&line).unwrap() {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrCode::Busy, "{e:?}");
+                assert!(e.msg.contains("too many connections"), "{e:?}");
+            }
+            other => panic!("over-cap connection must get a typed busy line: {other:?}"),
+        }
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "then the close");
+    }
+    drop(c1); // the slot frees when the handler sees EOF
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let stats = loop {
+        let mut c = Client::connect(addr).unwrap();
+        match c.stats() {
+            Ok(s) => break s,
+            Err(_) => {
+                assert!(Instant::now() < deadline, "closed connection never freed the cap");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    assert!(stats.get("conns_rejected").unwrap().as_f64().unwrap() >= 1.0);
+    handle.shutdown();
+}
+
+/// Satellite: a request line past UNI_LORA_MAX_REQUEST_BYTES gets a
+/// typed error and the connection closes (there is no framing left to
+/// resync on); the server stays healthy.
+#[test]
+fn oversized_request_line_gets_typed_error() {
+    let handle = start(|c| c.with_max_request_bytes(64));
+    let addr = handle.addr;
+    {
+        let big = TcpStream::connect(addr).unwrap();
+        big.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut writer = big.try_clone().unwrap();
+        let mut reader = BufReader::new(big);
+        let huge = format!(r#"{{"op":"generate","adapter":"{}"}}"#, "a".repeat(200));
+        writeln!(writer, "{huge}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match Response::parse(&line).unwrap() {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrCode::RequestTooLarge, "{e:?}");
+                assert!(e.msg.contains("64"), "the cap is named in the error: {e:?}");
+            }
+            other => panic!("oversized line must get a typed error: {other:?}"),
+        }
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "connection closes after");
+    }
+    // under the cap everything still works on a fresh connection
+    let mut client = Client::connect(addr).unwrap();
+    assert!(client.stats().is_ok());
+    handle.shutdown();
+}
