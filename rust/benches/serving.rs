@@ -12,9 +12,12 @@
 //! parallelism from intra-op parallelism.
 //!
 //! With `UNI_LORA_BENCH_JSON=1` the decode comparison, the fused-step
-//! comparison, the adapter sweep and the sampling comparison land in
-//! `BENCH_serving.json` at the repo root (`scripts/bench_snapshot.sh`
-//! archives it per commit).
+//! comparison, the adapter sweep, the sampling comparison and the
+//! router latency percentiles (p50/p95/p99 TTFT and decode-step time,
+//! read from the router's histograms) land in `BENCH_serving.json` at
+//! the repo root, and one Prometheus scrape of the serving metrics is
+//! archived as `BENCH_metrics.prom` next to it
+//! (`scripts/bench_snapshot.sh` archives both per commit).
 //!
 //! Runs on the default backend (native unless UNI_LORA_BACKEND=pjrt).
 //! Run: cargo bench --bench serving
@@ -72,6 +75,7 @@ fn drive_session(
         while sess.free_slots() > 0 && admitted < n_seqs {
             let slot = sess
                 .admit(SeqRequest {
+                    request_id: 0,
                     adapter: "bench".into(),
                     theta: theta.clone(),
                     statics: statics.clone(),
@@ -239,6 +243,7 @@ fn adapter_sweep() -> anyhow::Result<Vec<Json>> {
                 while sess.free_slots() > 0 && admitted < n_reqs {
                     let a = admitted % n_adapters;
                     sess.admit(SeqRequest {
+                        request_id: 0,
                         adapter: format!("a{a}"),
                         theta: thetas[a].clone(),
                         statics: statics.clone(),
@@ -395,7 +400,7 @@ fn sampling_comparison() -> anyhow::Result<Vec<Json>> {
     Ok(entries)
 }
 
-fn run_with_workers(workers: usize) -> anyhow::Result<()> {
+fn run_with_workers(workers: usize) -> anyhow::Result<Vec<Json>> {
     let mut exec = uni_lora::runtime::default_backend()?;
     let meta = exec.meta(ART)?.clone();
     let w0 = init_base(&meta, 42);
@@ -435,6 +440,7 @@ fn run_with_workers(workers: usize) -> anyhow::Result<()> {
     let prompt = bench_prompt();
     let n_reqs = 32;
 
+    let mut entries = Vec::new();
     for (label, n_adapters) in [("single-adapter", 1usize), ("mixed-16-adapters", 16)] {
         // concurrent submissions through the router's sync API
         let t0 = std::time::Instant::now();
@@ -464,10 +470,47 @@ fn run_with_workers(workers: usize) -> anyhow::Result<()> {
             st.mean_occupied_slots(),
             100.0 * st.recon_hit_rate(),
         );
+        // percentile columns from the router's latency histograms —
+        // the same distributions the `metrics` op scrapes
+        let ttft = &st.hists.ttft;
+        let step = &st.hists.step;
+        let ms = 1000.0;
+        println!(
+            "workers={} {label:<20} ttft p50/p95/p99 {:.1}/{:.1}/{:.1}ms | \
+             step p50/p95/p99 {:.2}/{:.2}/{:.2}ms",
+            handle.workers,
+            ms * ttft.quantile(0.50),
+            ms * ttft.quantile(0.95),
+            ms * ttft.quantile(0.99),
+            ms * step.quantile(0.50),
+            ms * step.quantile(0.95),
+            ms * step.quantile(0.99),
+        );
+        entries.push(obj(vec![
+            ("name", s(&format!("latency/workers{workers}/{label}"))),
+            ("tokens_per_sec", n(st.tokens_per_sec())),
+            ("decode_wall_secs", n(st.decode_wall_secs)),
+            ("ttft_p50_ms", n(ms * ttft.quantile(0.50))),
+            ("ttft_p95_ms", n(ms * ttft.quantile(0.95))),
+            ("ttft_p99_ms", n(ms * ttft.quantile(0.99))),
+            ("step_p50_ms", n(ms * step.quantile(0.50))),
+            ("step_p95_ms", n(ms * step.quantile(0.95))),
+            ("step_p99_ms", n(ms * step.quantile(0.99))),
+        ]));
         *handle.router.stats.lock().unwrap() = Default::default();
     }
+    // archive one Prometheus scrape next to the JSON trajectory so a
+    // bench snapshot carries the full metric surface, not just the
+    // columns extracted above
+    if bench::json_report_enabled() {
+        let mut client = uni_lora::server::server::Client::connect(handle.addr)?;
+        let text = client.metrics_text()?;
+        let path = bench::named_json_path("metrics").with_extension("prom");
+        std::fs::write(&path, text)?;
+        println!("recorded metrics scrape -> {}", path.display());
+    }
     handle.shutdown();
-    Ok(())
+    Ok(entries)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -499,8 +542,12 @@ fn main() -> anyhow::Result<()> {
     if auto > 1 {
         sweep.push(auto);
     }
+    let mut latency_entries = Vec::new();
     for &w in &sweep {
-        run_with_workers(w)?;
+        latency_entries.extend(run_with_workers(w)?);
+    }
+    if let Some(path) = bench::write_named_json_report("serving", "latency", latency_entries)? {
+        println!("recorded latency percentiles -> {}", path.display());
     }
     Ok(())
 }

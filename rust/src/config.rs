@@ -292,6 +292,12 @@ pub const DEFAULT_MAX_REQUEST_BYTES: usize = 1 << 20;
 /// or write (stalled receiver) before the connection is dropped.
 pub const DEFAULT_SOCK_TIMEOUT_MS: u64 = 30_000;
 
+/// Default trace-ring capacity, events. A request's full timeline is
+/// a few events plus one per generated token, so 4096 holds the last
+/// ~100 small requests — enough to reconstruct any recent failure —
+/// at well under a megabyte of ring.
+pub const DEFAULT_TRACE_RING: usize = 4096;
+
 impl RuntimeOpts {
     pub fn from_env() -> RuntimeOpts {
         RuntimeOpts {
@@ -437,6 +443,34 @@ pub fn parse_sock_timeout_ms(raw: Option<&str>) -> u64 {
     raw.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(DEFAULT_SOCK_TIMEOUT_MS)
 }
 
+/// `UNI_LORA_TRACE_RING` parsing: a non-negative integer wins (0 is a
+/// meaningful pin — it disables the in-memory trace ring entirely);
+/// anything else (unset, garbage) falls back to
+/// [`DEFAULT_TRACE_RING`]. Observation-only, so garbage safely takes
+/// the default.
+pub fn parse_trace_ring(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(DEFAULT_TRACE_RING)
+}
+
+/// `UNI_LORA_TRACE` parsing: a non-empty value is the JSONL append
+/// path for the trace file sink; unset or empty disables it. (A path
+/// that fails to open at serve time warns and degrades to ring-only —
+/// see `obs::trace::Tracer::from_cfg`.)
+pub fn parse_trace_path(raw: Option<&str>) -> Option<String> {
+    raw.map(str::trim).filter(|s| !s.is_empty()).map(str::to_string)
+}
+
+/// `UNI_LORA_PROFILE` parsing: `1|true|on|yes` enables the decode
+/// profiling hooks; everything else (unset, `0`, garbage) keeps them
+/// off. Opt-in-only spelling — profiling reads the clock inside the
+/// decode step, so it should never latch on from a typo.
+pub fn parse_profile(raw: Option<&str>) -> bool {
+    matches!(
+        raw.map(|s| s.trim().to_ascii_lowercase()).as_deref(),
+        Some("1") | Some("true") | Some("on") | Some("yes")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -571,6 +605,31 @@ mod tests {
         assert!(o.recon_cache >= 1);
         assert!(o.dense_threshold >= 1);
         assert!(o.beam_width >= 1);
+    }
+
+    #[test]
+    fn obs_knobs_parse_and_default() {
+        // trace ring: 0 is a meaningful pin (ring off), garbage
+        // defaults
+        assert_eq!(parse_trace_ring(Some("128")), 128);
+        assert_eq!(parse_trace_ring(Some(" 0 ")), 0);
+        assert_eq!(parse_trace_ring(Some("lots")), DEFAULT_TRACE_RING);
+        assert_eq!(parse_trace_ring(None), DEFAULT_TRACE_RING);
+        // trace path: non-empty wins, unset/empty = no file sink
+        assert_eq!(parse_trace_path(Some("/tmp/t.jsonl")), Some("/tmp/t.jsonl".to_string()));
+        assert_eq!(parse_trace_path(Some(" /tmp/t.jsonl ")), Some("/tmp/t.jsonl".to_string()));
+        assert_eq!(parse_trace_path(Some("")), None);
+        assert_eq!(parse_trace_path(Some("   ")), None);
+        assert_eq!(parse_trace_path(None), None);
+        // profile: opt-in spellings only — garbage stays off
+        assert!(parse_profile(Some("1")));
+        assert!(parse_profile(Some(" TRUE ")));
+        assert!(parse_profile(Some("on")));
+        assert!(parse_profile(Some("yes")));
+        assert!(!parse_profile(Some("0")));
+        assert!(!parse_profile(Some("off")));
+        assert!(!parse_profile(Some("garbage")));
+        assert!(!parse_profile(None));
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub mod data;
 pub mod generation;
 pub mod kernels;
 pub mod metrics;
+pub mod obs;
 pub mod projection;
 pub mod rng;
 pub mod runtime;

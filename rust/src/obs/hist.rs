@@ -1,0 +1,272 @@
+//! Fixed-bucket histograms: the deterministic primitive under every
+//! latency/size distribution the server exports.
+//!
+//! Buckets are a fixed, compile-time bound set (log-spaced for
+//! latencies, power-of-two for token counts), so merging shards is
+//! exact integer addition — no sketch, no sampling, no dependence on
+//! observation order or worker count. Two properties the serving tests
+//! lean on:
+//!
+//! - **Merge is associative and commutative**: per-worker histograms
+//!   folded in any grouping produce identical bucket counts, so stats
+//!   are thread-count-invariant by construction.
+//! - **Quantiles derive from bucket counts alone** (linear
+//!   interpolation inside the containing bucket), so p50/p95/p99 are a
+//!   pure function of the merged counts — deterministic across runs
+//!   that observe the same values.
+
+/// Log-spaced latency bounds, seconds: `0.1ms · 2^k` for k = 0..19.
+/// Doubling keeps successive bounds exact in binary (each is the
+/// previous mantissa with a bumped exponent), so the rendered `le`
+/// labels stay short and stable. Covers 0.1 ms .. ~26 s; anything
+/// slower lands in the overflow bucket.
+pub const LATENCY_BOUNDS: [f64; 19] = [
+    0.0001, 0.0002, 0.0004, 0.0008, 0.0016, 0.0032, 0.0064, 0.0128, 0.0256, 0.0512, 0.1024,
+    0.2048, 0.4096, 0.8192, 1.6384, 3.2768, 6.5536, 13.1072, 26.2144,
+];
+
+/// Power-of-two token-count bounds: 1 .. 8192 positions.
+pub const TOKEN_BOUNDS: [f64; 14] = [
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0,
+];
+
+/// One fixed-bucket histogram. `counts` has one slot per bound plus a
+/// trailing overflow bucket; `sum`/`count` track the raw observations
+/// so means stay exact even though individual values are bucketed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Hist {
+    /// A histogram over an explicit bound set (ascending, non-empty).
+    pub fn with_bounds(bounds: &'static [f64]) -> Hist {
+        debug_assert!(!bounds.is_empty());
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Hist { bounds, counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    /// The standard latency histogram ([`LATENCY_BOUNDS`], seconds).
+    pub fn latency() -> Hist {
+        Hist::with_bounds(&LATENCY_BOUNDS)
+    }
+
+    /// The standard size histogram ([`TOKEN_BOUNDS`], token counts).
+    pub fn tokens() -> Hist {
+        Hist::with_bounds(&TOKEN_BOUNDS)
+    }
+
+    /// Record one observation. Values past the last bound land in the
+    /// overflow bucket; negative values clamp into the first.
+    pub fn observe(&mut self, v: f64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Fold another shard in. Exact (integer bucket adds), so any
+    /// merge order over any shard partition yields the same result.
+    /// Both histograms must share a bound set.
+    pub fn merge(&mut self, other: &Hist) {
+        assert_eq!(self.bounds, other.bounds, "merging histograms with different bounds");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// Quantile estimate from bucket counts alone: find the bucket
+    /// holding the rank-`q` observation and interpolate linearly
+    /// inside it (the first bucket's lower edge is 0). Empty
+    /// histograms report 0; ranks landing in the overflow bucket
+    /// report the highest finite bound (the histogram cannot know
+    /// more).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += c;
+            if (cum as f64) >= rank {
+                if i == self.bounds.len() {
+                    return *self.bounds.last().expect("bounds are non-empty");
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = (rank - prev as f64) / c as f64;
+                return lo + frac * (hi - lo);
+            }
+        }
+        *self.bounds.last().expect("bounds are non-empty")
+    }
+
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Per-bucket counts (non-cumulative); the last entry is the
+    /// overflow bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(values: &[f64]) -> Hist {
+        let mut h = Hist::latency();
+        for &v in values {
+            h.observe(v);
+        }
+        h
+    }
+
+    #[test]
+    fn observe_buckets_and_totals() {
+        let h = filled(&[0.00005, 0.0001, 0.00015, 1.0, 100.0]);
+        // 0.00005 and 0.0001 share the first bucket (le = 0.0001)
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[1], 1); // 0.00015 <= 0.0002
+        assert_eq!(*h.counts().last().unwrap(), 1, "100s lands in overflow");
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 101.10025).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let a = filled(&[0.001, 0.002, 5.0]);
+        let b = filled(&[0.0001, 0.3]);
+        let c = filled(&[40.0, 0.01]);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        let mut cba = c.clone();
+        cba.merge(&b);
+        cba.merge(&a);
+
+        assert_eq!(ab_c, a_bc, "merge grouping must not matter");
+        assert_eq!(ab_c, cba, "merge order must not matter");
+    }
+
+    #[test]
+    fn shard_merge_matches_single_shard() {
+        // the same observations split across N worker shards merge to
+        // exactly the single-shard histogram, for any N
+        let values: Vec<f64> = (0..100).map(|i| 0.0001 * (i as f64 + 0.5)).collect();
+        let single = {
+            let mut h = Hist::latency();
+            for &v in &values {
+                h.observe(v);
+            }
+            h
+        };
+        for shards in [1usize, 2, 3, 7] {
+            let mut parts: Vec<Hist> = (0..shards).map(|_| Hist::latency()).collect();
+            for (i, &v) in values.iter().enumerate() {
+                parts[i % shards].observe(v);
+            }
+            let mut merged = Hist::latency();
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged, single, "{shards}-way shard merge diverged");
+        }
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        // empty: no data, report 0
+        assert_eq!(Hist::latency().quantile(0.5), 0.0);
+        assert_eq!(Hist::latency().quantile(0.99), 0.0);
+
+        // single bucket: all mass in one bucket interpolates inside it
+        let mut h = Hist::latency();
+        for _ in 0..10 {
+            h.observe(0.15); // bucket (0.1024, 0.2048]
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.1024 && p50 <= 0.2048, "p50 {p50} outside its bucket");
+        assert!(h.quantile(0.1) < h.quantile(0.9), "interpolation must be monotone");
+
+        // first bucket interpolates from 0
+        let mut h = Hist::latency();
+        h.observe(0.00005);
+        let q = h.quantile(0.5);
+        assert!(q > 0.0 && q <= 0.0001, "first-bucket quantile {q}");
+
+        // overflow bucket saturates at the highest finite bound
+        let mut h = Hist::latency();
+        h.observe(1e9);
+        assert_eq!(h.quantile(0.99), *LATENCY_BOUNDS.last().unwrap());
+
+        // single observation: every quantile lands in its bucket
+        let mut h = Hist::latency();
+        h.observe(0.003);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v > 0.0016 && v <= 0.0032, "q={q} gave {v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_order_and_bracket() {
+        let mut h = Hist::latency();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 0.001); // 1ms .. 1s uniform
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // true p50 = 0.5s: bucketed estimate must land in its bucket
+        assert!(p50 > 0.4096 && p50 <= 0.8192, "p50 {p50}");
+        assert!(p99 > 0.8192 && p99 <= 1.6384, "p99 {p99}");
+    }
+
+    #[test]
+    fn token_bounds_cover_counts() {
+        let mut h = Hist::tokens();
+        h.observe(1.0);
+        h.observe(3.0);
+        h.observe(8192.0);
+        h.observe(9000.0);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.counts()[2], 1); // 3 <= 4
+        assert_eq!(h.counts()[13], 1); // 8192 is the last finite bound
+        assert_eq!(*h.counts().last().unwrap(), 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability subsystem: zero-dependency metrics, tracing and
+//! profiling for the serving stack.
+//!
+//! Three legs, all observation-only (none may perturb decode
+//! numerics — the parity suites run with everything enabled):
+//!
+//! - **Metrics** — [`hist`] fixed-bucket histograms with exact shard
+//!   merge and bucket-derived quantiles (the primitive under the
+//!   router's TTFT / queue-wait / latency / step-time / prompt-length
+//!   distributions), rendered by [`registry`] as Prometheus text and
+//!   served by the `metrics` protocol op.
+//! - **Tracing** — [`trace`] per-request span timelines ([`Tracer`])
+//!   in a bounded ring, drained by the `trace` op as JSONL and
+//!   optionally appended to `UNI_LORA_TRACE=<path>`.
+//! - **Profiling** — [`profile`] scoped decode-stage timers behind
+//!   `UNI_LORA_PROFILE=1` (zero-cost when off, resolved once like
+//!   the kernel vtable), surfaced in the metrics scrape.
+//!
+//! [`RouterStats`]: crate::server::RouterStats
+
+pub mod hist;
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use hist::Hist;
+pub use registry::MetricsRegistry;
+pub use trace::{SpanEvent, Tracer};

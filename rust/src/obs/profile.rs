@@ -1,0 +1,180 @@
+//! Decode profiling hooks: scoped wall-clock timers attributing fused
+//! decode-step time to its stages (base GEMM, factored rank-r apply,
+//! dense grouped GEMV, attention, logits, sampling, prefill).
+//!
+//! Off by default and resolved ONCE from `UNI_LORA_PROFILE` — the
+//! same latch-on-first-use scheme as the kernel vtable
+//! (`kernels::dispatch::ops`) — so the disabled cost of a hook is one
+//! relaxed atomic load and a branch, paid a handful of times per
+//! decode step next to whole-layer GEMMs. Timers never touch the data
+//! path (they read the clock, not the tensors), so enabling profiling
+//! cannot perturb decode numerics; the parity suites run with it on
+//! to hold that line.
+//!
+//! Accumulation is process-global: relaxed `fetch_add` of elapsed
+//! nanos and call counts per stage, exact under any worker
+//! interleaving (integer adds commute). The server surfaces
+//! [`snapshot`] as the `unilora_profile_*` section of the `metrics`
+//! scrape.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::time::Instant;
+
+pub const STAGE_BASE_GEMM: usize = 0;
+pub const STAGE_FACTORED_APPLY: usize = 1;
+pub const STAGE_DENSE_GEMV: usize = 2;
+pub const STAGE_ATTENTION: usize = 3;
+pub const STAGE_LOGITS: usize = 4;
+pub const STAGE_SAMPLING: usize = 5;
+pub const STAGE_PREFILL: usize = 6;
+
+/// Stage labels, indexed by the `STAGE_*` constants; these are the
+/// stable `stage` label values of `unilora_profile_seconds_total`.
+pub const STAGE_NAMES: [&str; 7] =
+    ["base_gemm", "factored_apply", "dense_gemv", "attention", "logits", "sampling", "prefill"];
+
+const STATE_UNSET: u8 = 0xff;
+
+/// 0 = off, 1 = on, `STATE_UNSET` = not yet resolved from the env.
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNSET);
+
+static NANOS: [AtomicU64; 7] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+static CALLS: [AtomicU64; 7] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Whether profiling is on. First call resolves `UNI_LORA_PROFILE`
+/// and latches the answer (the dispatch-vtable pattern): later env
+/// changes are ignored, so the hot path never re-reads the
+/// environment.
+pub fn enabled() -> bool {
+    let mut s = STATE.load(Ordering::Relaxed);
+    if s == STATE_UNSET {
+        s = u8::from(crate::config::parse_profile(
+            std::env::var("UNI_LORA_PROFILE").ok().as_deref(),
+        ));
+        STATE.store(s, Ordering::Relaxed);
+    }
+    s == 1
+}
+
+/// Pin profiling on or off, overriding the env latch (tests, benches;
+/// single-flow callers only — the same caveat as
+/// `kernels::dispatch::set_choice`).
+pub fn set_enabled(on: bool) {
+    STATE.store(u8::from(on), Ordering::Relaxed);
+}
+
+/// RAII stage timer: created cheap when profiling is off (no clock
+/// read), accumulates elapsed nanos + one call on drop when on. Bind
+/// it (`let _p = profile::stage(...)`) — an unbound guard drops
+/// immediately and times nothing.
+pub struct ScopedStage {
+    start: Option<(usize, Instant)>,
+}
+
+/// Open a scoped timer for `STAGE_*` index `idx`.
+#[inline]
+pub fn stage(idx: usize) -> ScopedStage {
+    ScopedStage { start: enabled().then(|| (idx, Instant::now())) }
+}
+
+impl Drop for ScopedStage {
+    fn drop(&mut self) {
+        if let Some((idx, t0)) = self.start.take() {
+            NANOS[idx].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            CALLS[idx].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Per-stage `(label, seconds, calls)` in stage-index order.
+pub fn snapshot() -> Vec<(&'static str, f64, u64)> {
+    (0..STAGE_NAMES.len())
+        .map(|i| {
+            (
+                STAGE_NAMES[i],
+                NANOS[i].load(Ordering::Relaxed) as f64 * 1e-9,
+                CALLS[i].load(Ordering::Relaxed),
+            )
+        })
+        .collect()
+}
+
+/// Zero every accumulator (tests; the counters are otherwise
+/// monotone for the life of the process).
+pub fn reset() {
+    for i in 0..STAGE_NAMES.len() {
+        NANOS[i].store(0, Ordering::Relaxed);
+        CALLS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test owns the global profile state end to end — parallel
+    /// sub-tests poking `set_enabled` would race each other, so the
+    /// scenarios run sequentially here.
+    #[test]
+    fn profile_accumulates_only_when_enabled() {
+        set_enabled(false);
+        reset();
+        {
+            let _p = stage(STAGE_ATTENTION);
+            std::hint::black_box(1 + 1);
+        }
+        let snap = snapshot();
+        assert_eq!(snap[STAGE_ATTENTION].2, 0, "disabled hooks must not count");
+
+        set_enabled(true);
+        {
+            let _p = stage(STAGE_ATTENTION);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        {
+            let _p = stage(STAGE_LOGITS);
+        }
+        let snap = snapshot();
+        assert_eq!(snap[STAGE_ATTENTION].0, "attention");
+        assert_eq!(snap[STAGE_ATTENTION].2, 1);
+        assert!(snap[STAGE_ATTENTION].1 > 0.0, "elapsed time must accumulate");
+        assert_eq!(snap[STAGE_LOGITS].2, 1);
+        assert_eq!(snap[STAGE_BASE_GEMM].2, 0);
+
+        // counts merge exactly across threads (relaxed adds commute)
+        reset();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for _ in 0..25 {
+                        let _p = stage(STAGE_BASE_GEMM);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(snapshot()[STAGE_BASE_GEMM].2, 100);
+
+        set_enabled(false);
+        reset();
+    }
+}

@@ -1,0 +1,164 @@
+//! Prometheus text exposition over the crate's own metric primitives.
+//!
+//! [`MetricsRegistry`] is a render-time builder, not a store: the
+//! server snapshots its [`RouterStats`] under the stats mutex, then
+//! walks the snapshot through `counter`/`gauge`/`histogram` calls and
+//! ships the rendered text. Keeping the registry stateless means there
+//! is exactly one source of truth (the router's merged stats) and the
+//! `stats` and `metrics` ops can never disagree.
+//!
+//! The output follows the Prometheus text exposition format (version
+//! 0.0.4): `# HELP` / `# TYPE` headers, cumulative `le`-labeled
+//! histogram buckets ending in `+Inf`, and `_sum` / `_count` series.
+//!
+//! [`RouterStats`]: crate::server::RouterStats
+
+use super::hist::Hist;
+use std::fmt::Write;
+
+/// Builds one Prometheus text scrape. Metrics render in call order;
+/// callers keep that order stable so scrapes diff cleanly.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    out: String,
+}
+
+/// Prometheus sample values: integers render bare (`17`, not `17.0`),
+/// everything else uses shortest-roundtrip float formatting.
+fn write_val(out: &mut String, v: f64) {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    fn sample(&mut self, name: &str, v: f64) {
+        self.out.push_str(name);
+        self.out.push(' ');
+        write_val(&mut self.out, v);
+        self.out.push('\n');
+    }
+
+    /// One unlabeled counter sample.
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "counter");
+        self.sample(name, v);
+    }
+
+    /// One unlabeled gauge sample.
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, v);
+    }
+
+    /// A counter family over one label key: one header, one sample per
+    /// `(label value, sample)` pair, in the given order.
+    pub fn counter_vec(&mut self, name: &str, help: &str, key: &str, series: &[(&str, f64)]) {
+        self.header(name, help, "counter");
+        for (lv, v) in series {
+            let _ = write!(self.out, "{name}{{{key}=\"{lv}\"}} ");
+            write_val(&mut self.out, *v);
+            self.out.push('\n');
+        }
+    }
+
+    /// A full histogram: cumulative `le` buckets (ending `+Inf`),
+    /// `_sum`, and `_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, h: &Hist) {
+        self.header(name, help, "histogram");
+        let mut cum = 0u64;
+        for (i, &c) in h.counts().iter().enumerate() {
+            cum += c;
+            if i < h.bounds().len() {
+                let b = h.bounds()[i];
+                let _ = writeln!(self.out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+            } else {
+                let _ = writeln!(self.out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            }
+        }
+        let _ = write!(self.out, "{name}_sum ");
+        write_val(&mut self.out, h.sum());
+        self.out.push('\n');
+        let _ = writeln!(self.out, "{name}_count {}", h.count());
+    }
+
+    /// The rendered scrape.
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_golden() {
+        let mut h = Hist::with_bounds(&[0.0001, 0.0002, 0.0004]);
+        h.observe(0.00005);
+        h.observe(0.00015);
+        h.observe(0.00015);
+        h.observe(9.0);
+
+        let mut reg = MetricsRegistry::new();
+        reg.counter("t_requests_total", "requests accepted", 17.0);
+        reg.gauge("t_kv_bytes", "resident kv bytes", 4096.0);
+        reg.counter_vec(
+            "t_profile_seconds_total",
+            "per-stage seconds",
+            "stage",
+            &[("base_gemm", 1.5), ("attention", 0.25)],
+        );
+        reg.histogram("t_ttft_seconds", "time to first token", &h);
+
+        let want = "\
+# HELP t_requests_total requests accepted
+# TYPE t_requests_total counter
+t_requests_total 17
+# HELP t_kv_bytes resident kv bytes
+# TYPE t_kv_bytes gauge
+t_kv_bytes 4096
+# HELP t_profile_seconds_total per-stage seconds
+# TYPE t_profile_seconds_total counter
+t_profile_seconds_total{stage=\"base_gemm\"} 1.5
+t_profile_seconds_total{stage=\"attention\"} 0.25
+# HELP t_ttft_seconds time to first token
+# TYPE t_ttft_seconds histogram
+t_ttft_seconds_bucket{le=\"0.0001\"} 1
+t_ttft_seconds_bucket{le=\"0.0002\"} 3
+t_ttft_seconds_bucket{le=\"0.0004\"} 3
+t_ttft_seconds_bucket{le=\"+Inf\"} 4
+t_ttft_seconds_sum 9.00035
+t_ttft_seconds_count 4
+";
+        assert_eq!(reg.render(), want);
+    }
+
+    #[test]
+    fn latency_bounds_render_without_exponents() {
+        let mut reg = MetricsRegistry::new();
+        reg.histogram("t_lat_seconds", "latency", &Hist::latency());
+        let text = reg.render();
+        for line in text.lines().filter(|l| l.contains("_bucket{le=\"")) {
+            let label = line.split('"').nth(1).unwrap();
+            assert!(
+                label == "+Inf" || label.chars().all(|c| c.is_ascii_digit() || c == '.'),
+                "le label {label:?} must be a plain decimal"
+            );
+        }
+        assert!(text.contains("le=\"0.0001\""));
+        assert!(text.contains("le=\"26.2144\""));
+        assert!(text.contains("le=\"+Inf\""));
+    }
+}

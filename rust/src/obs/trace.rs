@@ -1,0 +1,273 @@
+//! Per-request span tracing: a bounded in-memory ring of lifecycle
+//! events, drainable over the wire (`trace` op) as JSONL and
+//! optionally appended to a file (`UNI_LORA_TRACE=<path>`).
+//!
+//! Every router-visible milestone of a request — enqueue, admission,
+//! prefill, each emitted token, each streamed frame, cancellation,
+//! deadline expiry, injected faults, the terminal reply — records one
+//! [`SpanEvent`] keyed by the request id the router assigned at
+//! submit. A failing lifecycle-fuzz run is then reconstructable
+//! per-request: filter the drained events by `req` and read the
+//! timeline.
+//!
+//! Recording is observation-only by design: events capture ids,
+//! counts and wall-clock micros, never logits or sampler state, so an
+//! enabled tracer cannot perturb decode numerics (the parity suites
+//! run with it on to prove it). The ring is bounded
+//! (`UNI_LORA_TRACE_RING`, default [`crate::config::DEFAULT_TRACE_RING`];
+//! `0` disables the ring) and drops oldest-first under pressure,
+//! counting what it dropped.
+
+use crate::util::json::{n, obj, s, Json};
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One traced lifecycle milestone. Serialized as one JSONL object:
+/// `{"ev":"step","n":42,"req":7,"slot":1,"t_us":1234}` — `slot`, `n`
+/// and `note` appear only when meaningful for the event kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Router-assigned request id (ids start at 1; 0 = unassigned).
+    pub req: u64,
+    /// Micros since the tracer's epoch (its construction instant) —
+    /// relative so traces are comparable without wall-clock sync.
+    pub t_us: u64,
+    /// Event kind: `enqueue`, `reject`, `admit`, `requeue`, `fault`,
+    /// `prefill`, `step`, `frame`, `deadline`, `cancel`, `replay`,
+    /// `done`.
+    pub ev: &'static str,
+    /// Decode slot the sequence occupies, where one is bound.
+    pub slot: Option<usize>,
+    /// Event-kind-specific count: prompt length for `enqueue`/`admit`,
+    /// the token id for `step`/`frame`, generated-token count for
+    /// `deadline`/`done`.
+    pub n: Option<i64>,
+    /// Event-kind-specific annotation: the adapter for `enqueue`, the
+    /// fault site for `fault`, the terminal error code (or `ok`) for
+    /// `done`.
+    pub note: Option<String>,
+}
+
+impl SpanEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("ev", s(self.ev)),
+            ("req", n(self.req as f64)),
+            ("t_us", n(self.t_us as f64)),
+        ];
+        if let Some(slot) = self.slot {
+            pairs.push(("slot", n(slot as f64)));
+        }
+        if let Some(v) = self.n {
+            pairs.push(("n", n(v as f64)));
+        }
+        if let Some(note) = &self.note {
+            pairs.push(("note", s(note)));
+        }
+        obj(pairs)
+    }
+}
+
+/// The bounded event sink shared by the router and its workers. Cheap
+/// enough to leave on: recording is one short mutex push per
+/// milestone (milestones are per-token at worst, and a token costs a
+/// full model forward).
+pub struct Tracer {
+    epoch: Instant,
+    cap: usize,
+    ring: Mutex<VecDeque<SpanEvent>>,
+    file: Option<Mutex<File>>,
+    dropped: AtomicU64,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("cap", &self.cap)
+            .field("file", &self.file.is_some())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// Ring-only tracer (no file sink) of the given capacity; `0`
+    /// disables recording entirely.
+    pub fn ring_only(cap: usize) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            cap,
+            ring: Mutex::new(VecDeque::new()),
+            file: None,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Tracer from resolved config: ring capacity plus an optional
+    /// JSONL append path. A path that cannot be opened warns and
+    /// disables the file sink rather than failing the server — the
+    /// same fail-safe contract as a malformed fault plan.
+    pub fn from_cfg(cap: usize, path: Option<&str>) -> Tracer {
+        let mut t = Tracer::ring_only(cap);
+        if let Some(p) = path {
+            match OpenOptions::new().create(true).append(true).open(p) {
+                Ok(f) => t.file = Some(Mutex::new(f)),
+                Err(e) => {
+                    eprintln!(
+                        "warning: UNI_LORA_TRACE={p:?} cannot be opened ({e}); \
+                         tracing to the ring only"
+                    );
+                }
+            }
+        }
+        t
+    }
+
+    /// Whether recording does anything at all (ring or file enabled).
+    pub fn enabled(&self) -> bool {
+        self.cap > 0 || self.file.is_some()
+    }
+
+    /// Record one milestone. Oldest events are evicted (and counted)
+    /// once the ring is full; the file sink, when configured, gets
+    /// every event regardless.
+    pub fn rec(
+        &self,
+        req: u64,
+        ev: &'static str,
+        slot: Option<usize>,
+        nv: Option<i64>,
+        note: Option<&str>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let event = SpanEvent {
+            req,
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            ev,
+            slot,
+            n: nv,
+            note: note.map(str::to_string),
+        };
+        if let Some(f) = &self.file {
+            let line = event.to_json().to_string();
+            if let Ok(mut f) = f.lock() {
+                let _ = writeln!(f, "{line}");
+            }
+        }
+        if self.cap > 0 {
+            let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+            while ring.len() >= self.cap {
+                ring.pop_front();
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            ring.push_back(event);
+        }
+    }
+
+    /// Take every ringed event, oldest first. Draining empties the
+    /// ring (the `trace` op is a consuming read, so repeated drains
+    /// see disjoint windows); the file sink is unaffected.
+    pub fn drain(&self) -> Vec<SpanEvent> {
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        ring.drain(..).collect()
+    }
+
+    /// Events evicted from the ring before anyone drained them.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_in_order_and_bounds() {
+        let t = Tracer::ring_only(3);
+        assert!(t.enabled());
+        t.rec(1, "enqueue", None, Some(4), Some("a"));
+        t.rec(1, "admit", Some(0), Some(4), None);
+        let evs = t.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!((evs[0].req, evs[0].ev), (1, "enqueue"));
+        assert_eq!(evs[1].slot, Some(0));
+        assert!(evs[0].t_us <= evs[1].t_us, "timestamps must be monotone");
+        assert!(t.drain().is_empty(), "drain consumes");
+
+        // past capacity the oldest events fall out, counted
+        for i in 0..5 {
+            t.rec(i, "step", None, None, None);
+        }
+        let evs = t.drain();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].req, 2, "oldest evicted first");
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let t = Tracer::ring_only(0);
+        assert!(!t.enabled());
+        t.rec(1, "enqueue", None, None, None);
+        assert!(t.drain().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn span_event_json_shape() {
+        let ev =
+            SpanEvent { req: 7, t_us: 1234, ev: "step", slot: Some(1), n: Some(42), note: None };
+        assert_eq!(
+            ev.to_json().to_string(),
+            r#"{"ev":"step","n":42,"req":7,"slot":1,"t_us":1234}"#
+        );
+        let done = SpanEvent {
+            req: 7,
+            t_us: 2000,
+            ev: "done",
+            slot: None,
+            n: Some(3),
+            note: Some("ok".into()),
+        };
+        assert_eq!(
+            done.to_json().to_string(),
+            r#"{"ev":"done","n":3,"note":"ok","req":7,"t_us":2000}"#
+        );
+    }
+
+    #[test]
+    fn bad_file_path_degrades_to_ring() {
+        let t = Tracer::from_cfg(8, Some("/nonexistent-dir-xyz/trace.jsonl"));
+        t.rec(1, "enqueue", None, None, None);
+        assert_eq!(t.drain().len(), 1, "ring keeps working without the file sink");
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("uni_lora_trace_test_{}.jsonl", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        {
+            let t = Tracer::from_cfg(4, Some(&p));
+            t.rec(1, "enqueue", None, Some(2), None);
+            t.rec(1, "done", None, Some(0), Some("ok"));
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            let j = Json::parse(l).unwrap();
+            assert_eq!(j.req("req").unwrap().as_usize().unwrap(), 1);
+            assert!(j.req("t_us").is_ok());
+        }
+        assert_eq!(Json::parse(lines[1]).unwrap().req("note").unwrap().as_str().unwrap(), "ok");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -20,6 +20,7 @@
 use crate::config::ModelCfg;
 use crate::kernels::dispatch;
 use crate::kernels::{gemm_nn, gemm_nt, gemm_tn, parallel_chunks, parallel_for_work, SendPtr};
+use crate::obs::profile;
 use crate::projection::reconstruct::ModuleDelta;
 use crate::runtime::spec;
 use anyhow::{ensure, Result};
@@ -909,6 +910,11 @@ fn gemm_rows(
 /// [`incr_forward_slot`] verbatim — so row `i` here is bit-identical,
 /// per kernel tier, to stepping entry `i` alone. The fused step can
 /// therefore never change a token stream.
+///
+/// When `UNI_LORA_PROFILE=1`, scoped [`crate::obs::profile`] timers
+/// attribute each region (base GEMM, factored apply, dense grouped
+/// GEMV, attention) — clock reads only, never tensor reads, so the
+/// parity contract holds with profiling on.
 pub fn incr_forward_batch(
     cfg: &ModelCfg,
     base: &BaseMap,
@@ -995,47 +1001,68 @@ pub fn incr_forward_batch(
         // add their rank-r update per row (n = 1 keeps the exact
         // per-slot float order); dense rows run one GEMM per group
         let mut q = vec![0f32; m * h];
-        gemm_rows(&x2, base.at(segs.wq), &mut q, &factored_rows, m, h, h);
-        for &ri in &factored_rows {
-            if let AdapterExec::Factored(fw) = entries[ri].exec {
-                apply_factored(
-                    &x2[ri * h..(ri + 1) * h],
-                    &fw.q[l],
-                    fw.scale,
-                    fw.rank,
-                    &mut q[ri * h..(ri + 1) * h],
-                    1,
-                    h,
-                );
+        {
+            let _prof = profile::stage(profile::STAGE_BASE_GEMM);
+            gemm_rows(&x2, base.at(segs.wq), &mut q, &factored_rows, m, h, h);
+        }
+        {
+            let _prof = profile::stage(profile::STAGE_FACTORED_APPLY);
+            for &ri in &factored_rows {
+                if let AdapterExec::Factored(fw) = entries[ri].exec {
+                    apply_factored(
+                        &x2[ri * h..(ri + 1) * h],
+                        &fw.q[l],
+                        fw.scale,
+                        fw.rank,
+                        &mut q[ri * h..(ri + 1) * h],
+                        1,
+                        h,
+                    );
+                }
             }
         }
-        for (_, rows) in &dense_groups {
-            if let AdapterExec::Dense(aw) = entries[rows[0]].exec {
-                gemm_rows(&x2, &aw.wq[l], &mut q, rows, m, h, h);
+        {
+            let _prof = profile::stage(profile::STAGE_DENSE_GEMV);
+            for (_, rows) in &dense_groups {
+                if let AdapterExec::Dense(aw) = entries[rows[0]].exec {
+                    gemm_rows(&x2, &aw.wq[l], &mut q, rows, m, h, h);
+                }
             }
         }
         // keys: every row shares the frozen base wk
         let mut knew = vec![0f32; m * h];
-        gemm_nn(&x2, base.at(segs.wk), &mut knew, m, h, h, false);
+        {
+            let _prof = profile::stage(profile::STAGE_BASE_GEMM);
+            gemm_nn(&x2, base.at(segs.wk), &mut knew, m, h, h, false);
+        }
         // values: same adapter split as q
         let mut vnew = vec![0f32; m * h];
-        gemm_rows(&x2, base.at(segs.wv), &mut vnew, &factored_rows, m, h, h);
-        for &ri in &factored_rows {
-            if let AdapterExec::Factored(fw) = entries[ri].exec {
-                apply_factored(
-                    &x2[ri * h..(ri + 1) * h],
-                    &fw.v[l],
-                    fw.scale,
-                    fw.rank,
-                    &mut vnew[ri * h..(ri + 1) * h],
-                    1,
-                    h,
-                );
+        {
+            let _prof = profile::stage(profile::STAGE_BASE_GEMM);
+            gemm_rows(&x2, base.at(segs.wv), &mut vnew, &factored_rows, m, h, h);
+        }
+        {
+            let _prof = profile::stage(profile::STAGE_FACTORED_APPLY);
+            for &ri in &factored_rows {
+                if let AdapterExec::Factored(fw) = entries[ri].exec {
+                    apply_factored(
+                        &x2[ri * h..(ri + 1) * h],
+                        &fw.v[l],
+                        fw.scale,
+                        fw.rank,
+                        &mut vnew[ri * h..(ri + 1) * h],
+                        1,
+                        h,
+                    );
+                }
             }
         }
-        for (_, rows) in &dense_groups {
-            if let AdapterExec::Dense(aw) = entries[rows[0]].exec {
-                gemm_rows(&x2, &aw.wv[l], &mut vnew, rows, m, h, h);
+        {
+            let _prof = profile::stage(profile::STAGE_DENSE_GEMV);
+            for (_, rows) in &dense_groups {
+                if let AdapterExec::Dense(aw) = entries[rows[0]].exec {
+                    gemm_rows(&x2, &aw.wv[l], &mut vnew, rows, m, h, h);
+                }
             }
         }
         // new keys/values land in each slot's arena pages
@@ -1049,50 +1076,62 @@ pub fn incr_forward_batch(
         let mut att_out = vec![0f32; m * h];
         let max_pos = entries.iter().map(|e| e.kv.len + 1).max().unwrap_or(1);
         let mut sc = vec![0f32; max_pos];
-        for head in 0..nh {
-            for (i, e) in entries.iter().enumerate() {
-                let p = e.kv.len;
-                let qo = i * h + head * hd;
-                let ko = head * hd;
-                let mut mx = f32::NEG_INFINITY;
-                for j in 0..=p {
-                    let krow = arena.k_row(e.kv, l, j);
-                    let mut dot = 0f32;
-                    for dd in 0..hd {
-                        dot += q[qo + dd] * krow[ko + dd];
+        {
+            let _prof = profile::stage(profile::STAGE_ATTENTION);
+            for head in 0..nh {
+                for (i, e) in entries.iter().enumerate() {
+                    let p = e.kv.len;
+                    let qo = i * h + head * hd;
+                    let ko = head * hd;
+                    let mut mx = f32::NEG_INFINITY;
+                    for j in 0..=p {
+                        let krow = arena.k_row(e.kv, l, j);
+                        let mut dot = 0f32;
+                        for dd in 0..hd {
+                            dot += q[qo + dd] * krow[ko + dd];
+                        }
+                        sc[j] = dot * scale;
+                        if sc[j] > mx {
+                            mx = sc[j];
+                        }
                     }
-                    sc[j] = dot * scale;
-                    if sc[j] > mx {
-                        mx = sc[j];
+                    let mut denom = 0f32;
+                    for j in 0..=p {
+                        sc[j] = (sc[j] - mx).exp();
+                        denom += sc[j];
                     }
-                }
-                let mut denom = 0f32;
-                for j in 0..=p {
-                    sc[j] = (sc[j] - mx).exp();
-                    denom += sc[j];
-                }
-                let orow = &mut att_out[qo..qo + hd];
-                for j in 0..=p {
-                    let wj = sc[j] / denom;
-                    let vrow = arena.v_row(e.kv, l, j);
-                    for dd in 0..hd {
-                        orow[dd] += wj * vrow[ko + dd];
+                    let orow = &mut att_out[qo..qo + hd];
+                    for j in 0..=p {
+                        let wj = sc[j] / denom;
+                        let vrow = arena.v_row(e.kv, l, j);
+                        for dd in 0..hd {
+                            orow[dd] += wj * vrow[ko + dd];
+                        }
                     }
                 }
             }
         }
         let mut x_mid = vec![0f32; m * h];
-        gemm_nn(&att_out, base.at(segs.wo), &mut x_mid, m, h, h, false);
+        {
+            let _prof = profile::stage(profile::STAGE_BASE_GEMM);
+            gemm_nn(&att_out, base.at(segs.wo), &mut x_mid, m, h, h, false);
+        }
         for (xm, xi) in x_mid.iter_mut().zip(&x) {
             *xm += xi;
         }
         let (x3, _) = layer_norm(&x_mid, base.at(segs.ln2_g), base.at(segs.ln2_b), m, h);
         let mut u = vec![0f32; m * f];
-        gemm_nn(&x3, base.at(segs.w1), &mut u, m, h, f, false);
+        {
+            let _prof = profile::stage(profile::STAGE_BASE_GEMM);
+            gemm_nn(&x3, base.at(segs.w1), &mut u, m, h, f, false);
+        }
         let mut gelu_v = vec![0f32; m * f];
         (kops.gelu_map)(&mut gelu_v, &u);
         let mut x_next = vec![0f32; m * h];
-        gemm_nn(&gelu_v, base.at(segs.w2), &mut x_next, m, f, h, false);
+        {
+            let _prof = profile::stage(profile::STAGE_BASE_GEMM);
+            gemm_nn(&gelu_v, base.at(segs.w2), &mut x_next, m, f, h, false);
+        }
         for (xn, xm) in x_next.iter_mut().zip(&x_mid) {
             *xn += xm;
         }

@@ -8,6 +8,8 @@
 //!  "sampling":{...},"stream":true|false,"timeout_ms":N}
 //! {"op":"adapters"}
 //! {"op":"stats"}
+//! {"op":"metrics"}
+//! {"op":"trace"}
 //! ```
 //!
 //! `generate` parsing is strict: unknown keys are an error, `max_new`
@@ -31,6 +33,8 @@
 //! {"ok":true,"tokens":[ids]}
 //! {"ok":true,"adapters":[names]}
 //! {"ok":true,"stats":{...}}
+//! {"ok":true,"metrics":"<prometheus text>"}
+//! {"events":[{span},...],"ok":true}
 //! {"ok":false,"code":"<err-code>","error":"..."}
 //! ```
 //!
@@ -77,9 +81,38 @@
 //! (streaming clients that vanished mid-generation), `conns_rejected`
 //! (connections turned away at the `UNI_LORA_MAX_CONNS` cap),
 //! `drained_ok` / `drained_aborted` (in-flight requests that finished
-//! inside vs. were cut at the shutdown drain deadline), and
+//! inside vs. were cut at the shutdown drain deadline),
 //! `faults_injected` (decisions taken by the seeded `UNI_LORA_FAULTS`
-//! plan; always 0 in production).
+//! plan; always 0 in production), and `decode_wall_secs` (wall-clock
+//! seconds with at least one decode step in flight — the union of step
+//! intervals, i.e. the denominator of `tokens_per_sec`).
+//!
+//! `metrics` answers with the same telemetry — plus the latency/size
+//! histograms the scalar stats cannot carry — as one Prometheus text
+//! exposition (format 0.0.4) string in the `metrics` key: `unilora_*`
+//! counters and gauges mirror the stats fields, and five histograms
+//! (`unilora_ttft_seconds`, `unilora_queue_wait_seconds`,
+//! `unilora_request_latency_seconds`, `unilora_decode_step_seconds`,
+//! `unilora_prompt_tokens`) expose cumulative `_bucket{le=...}`
+//! series with exact cross-worker counts. When the server runs with
+//! `UNI_LORA_PROFILE=1`, `unilora_profile_seconds_total` /
+//! `unilora_profile_calls_total{stage=...}` attribute fused decode
+//! time to base GEMM, factored rank-r apply, dense GEMV, attention,
+//! logits, sampling and prefill. Pipe the string to a file and any
+//! Prometheus scraper ingests it.
+//!
+//! `trace` drains the in-memory span-event ring (destructive: each
+//! event is returned once) as the `events` array. Every event is one
+//! object: `ev` (vocabulary: `enqueue`, `reject`, `admit`, `requeue`,
+//! `fault`, `prefill`, `step`, `frame`, `deadline`, `cancel`,
+//! `replay`, `done`), `req` (the router-assigned request id; 0 =
+//! worker-scoped), `t_us` (microseconds since the tracer's epoch),
+//! plus optional `slot`, `n` (a small integer payload: prompt/token
+//! counts or the token id) and `note` (adapter name, fault site, or
+//! terminal error code — `"ok"` on success). A request's timeline is
+//! the `req`-filtered, `t_us`-ordered subsequence, ending in exactly
+//! one `done` (admitted) or `reject` (never queued). Both ops tolerate
+//! unknown extra keys, like `stats`.
 
 use crate::generation::SamplingParams;
 use crate::util::json::{n, obj, s, Json};
@@ -203,6 +236,12 @@ pub enum Request {
     },
     Adapters,
     Stats,
+    /// Prometheus text scrape: counters, gauges and histograms (plus
+    /// the profiling section when `UNI_LORA_PROFILE=1`).
+    Metrics,
+    /// Destructive drain of the span-event ring: each recorded event
+    /// is returned exactly once.
+    Trace,
 }
 
 impl Request {
@@ -256,6 +295,8 @@ impl Request {
             }
             "adapters" => Ok(Request::Adapters),
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
+            "trace" => Ok(Request::Trace),
             other => Err(anyhow!("unknown op {other:?}")),
         }
     }
@@ -282,6 +323,8 @@ impl Request {
             }
             Request::Adapters => obj(vec![("op", s("adapters"))]).to_string(),
             Request::Stats => obj(vec![("op", s("stats"))]).to_string(),
+            Request::Metrics => obj(vec![("op", s("metrics"))]).to_string(),
+            Request::Trace => obj(vec![("op", s("trace"))]).to_string(),
         }
     }
 }
@@ -295,6 +338,12 @@ pub enum Response {
     Frame { token: Option<i32>, done: bool, tokens: Option<Vec<i32>> },
     Adapters(Vec<String>),
     Stats(Json),
+    /// The Prometheus text exposition, verbatim (newlines escaped on
+    /// the wire by JSON string encoding).
+    Metrics(String),
+    /// Drained span events, oldest first; each is the JSON object
+    /// documented in the module header.
+    Trace(Vec<Json>),
     Error(ServeError),
 }
 
@@ -324,6 +373,13 @@ impl Response {
             .to_string(),
             Response::Stats(j) => {
                 obj(vec![("ok", Json::Bool(true)), ("stats", j.clone())]).to_string()
+            }
+            Response::Metrics(text) => {
+                obj(vec![("ok", Json::Bool(true)), ("metrics", s(text))]).to_string()
+            }
+            Response::Trace(events) => {
+                obj(vec![("ok", Json::Bool(true)), ("events", Json::Arr(events.clone()))])
+                    .to_string()
             }
             Response::Error(e) => obj(vec![
                 ("ok", Json::Bool(false)),
@@ -373,6 +429,12 @@ impl Response {
         }
         if let Some(st) = j.get("stats") {
             return Ok(Response::Stats(st.clone()));
+        }
+        if let Some(m) = j.get("metrics") {
+            return Ok(Response::Metrics(m.as_str()?.to_string()));
+        }
+        if let Some(ev) = j.get("events") {
+            return Ok(Response::Trace(ev.as_arr()?.to_vec()));
         }
         Err(anyhow!("unrecognized response {line:?}"))
     }
@@ -538,5 +600,42 @@ mod tests {
         // unknown keys on OTHER ops stay tolerated (only generate is
         // strict — the op with silently-misinterpreted fields)
         assert_eq!(Request::parse(r#"{"op":"stats","extra":1}"#).unwrap(), Request::Stats);
+    }
+
+    /// Satellite: the observability ops — requests roundtrip, tolerate
+    /// extra keys like `stats`, and the scrape/drain responses carry
+    /// their payloads through JSON intact (the Prometheus text embeds
+    /// newlines; JSON string escaping must preserve them exactly).
+    #[test]
+    fn metrics_and_trace_ops_roundtrip() {
+        assert_eq!(Request::Metrics.to_json(), r#"{"op":"metrics"}"#);
+        assert_eq!(Request::Trace.to_json(), r#"{"op":"trace"}"#);
+        assert_eq!(Request::parse(r#"{"op":"metrics"}"#).unwrap(), Request::Metrics);
+        assert_eq!(Request::parse(r#"{"op":"trace","extra":1}"#).unwrap(), Request::Trace);
+
+        let text = "# HELP t_x_total helps\n# TYPE t_x_total counter\nt_x_total 3\n";
+        let line = Response::Metrics(text.to_string()).to_json();
+        assert!(line.contains(r#""ok":true"#), "{line}");
+        match Response::parse(&line).unwrap() {
+            Response::Metrics(back) => assert_eq!(back, text),
+            other => panic!("{other:?}"),
+        }
+
+        let ev = Json::parse(r#"{"ev":"done","note":"ok","req":3,"t_us":12}"#).unwrap();
+        let line = Response::Trace(vec![ev]).to_json();
+        assert_eq!(line, r#"{"events":[{"ev":"done","note":"ok","req":3,"t_us":12}],"ok":true}"#);
+        match Response::parse(&line).unwrap() {
+            Response::Trace(events) => {
+                assert_eq!(events.len(), 1);
+                assert_eq!(events[0].req("ev").unwrap().as_str().unwrap(), "done");
+                assert_eq!(events[0].req("req").unwrap().as_i64().unwrap(), 3);
+            }
+            other => panic!("{other:?}"),
+        }
+        // an empty drain is a valid, parseable response
+        match Response::parse(&Response::Trace(vec![]).to_json()).unwrap() {
+            Response::Trace(events) => assert!(events.is_empty()),
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -48,15 +48,16 @@
 use super::faults::{Faults, SITE_ADMIT, SITE_FRAME, SITE_SLOW, SITE_STEP};
 use super::protocol::{ErrCode, ServeError};
 use crate::adapters::Registry;
-use crate::config::ModelCfg;
+use crate::config::{self, ModelCfg};
 use crate::generation::SamplingParams;
+use crate::obs::{Hist, Tracer};
 use crate::projection::statics::{gen_statics, Static};
 use crate::runtime::native::kv_arena::KvBudgetExhausted;
 use crate::runtime::Backend;
 use crate::session::{Admission, DecodeSession, SeqRequest, SessionOpts, SessionStats};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
@@ -84,6 +85,13 @@ pub enum GenEvent {
 
 #[derive(Debug)]
 pub struct PendingReq {
+    /// Trace identity: router-assigned at [`Router::submit`] (ids
+    /// start at 1). Callers construct requests with `id: 0` =
+    /// unassigned; every span event for this request carries the
+    /// assigned id, and it threads through [`SeqRequest::request_id`]
+    /// into the decode sessions so a session-level event is
+    /// attributable to its request.
+    pub id: u64,
     pub adapter: String,
     pub prompt: Vec<i32>,
     pub max_new: usize,
@@ -112,12 +120,17 @@ pub struct RouterStats {
     /// cumulative time inside `DecodeSession::step`, summed across
     /// workers (per-worker decode effort; NOT wall time)
     pub decode_secs: f64,
-    /// wall-clock span of decode activity (first step start .. last
-    /// step end, across all workers) — the denominator of
-    /// [`RouterStats::tokens_per_sec`], so concurrent workers add
-    /// throughput instead of dividing it away
-    first_step: Option<Instant>,
-    last_step: Option<Instant>,
+    /// wall-clock seconds with at least one decode step in flight: the
+    /// exact union of the step intervals, so idle gaps between bursts
+    /// never dilute [`RouterStats::tokens_per_sec`] while concurrent
+    /// workers still add throughput instead of dividing it away
+    pub decode_wall_secs: f64,
+    /// high-water mark of the busy span: end of the latest step
+    /// interval folded into `decode_wall_secs` so far
+    busy_until: Option<Instant>,
+    /// latency/size distributions (TTFT, queue wait, end-to-end
+    /// latency, step time, prompt length) backing the `metrics` op
+    pub hists: RouterHists,
     /// enqueue → first emitted token, summed over `ttft_count` requests
     pub ttft_secs: f64,
     pub ttft_count: u64,
@@ -168,6 +181,38 @@ pub struct RouterStats {
     pub total_queue_secs: f64,
 }
 
+/// Fixed-bucket latency/size histograms carried inside [`RouterStats`].
+/// Workers observe under the shared stats mutex, so the bucket counts
+/// here are already the exact cross-worker merge ([`Hist::merge`] is
+/// plain integer addition — the same totals any per-shard split would
+/// merge to).
+#[derive(Debug, Clone)]
+pub struct RouterHists {
+    /// enqueue → first emitted token, seconds
+    pub ttft: Hist,
+    /// enqueue → admission outcome (admitted or terminally failed at
+    /// admit), seconds
+    pub queue_wait: Hist,
+    /// enqueue → terminal reply, seconds, success or error
+    pub latency: Hist,
+    /// one fused decode step, seconds
+    pub step: Hist,
+    /// admitted prompt length, tokens (post-truncation input length)
+    pub prompt_tokens: Hist,
+}
+
+impl Default for RouterHists {
+    fn default() -> RouterHists {
+        RouterHists {
+            ttft: Hist::latency(),
+            queue_wait: Hist::latency(),
+            latency: Hist::latency(),
+            step: Hist::latency(),
+            prompt_tokens: Hist::tokens(),
+        }
+    }
+}
+
 impl RouterStats {
     /// Mean decode slots occupied per step — how full the continuous
     /// batch runs.
@@ -179,24 +224,40 @@ impl RouterStats {
         }
     }
 
-    /// Record one decode step for throughput accounting.
+    /// Record one decode step for throughput accounting. Steps are
+    /// noted at completion under one mutex, so `busy_until` sees their
+    /// intervals in end-time order and a single watermark computes the
+    /// exact union: an interval past the watermark opens a new busy
+    /// span, one straddling it extends the span by the uncovered tail,
+    /// one fully under it adds nothing.
     pub fn note_decode(&mut self, started: Instant, secs: f64) {
         self.decode_secs += secs;
-        let end = started + std::time::Duration::from_secs_f64(secs.max(0.0));
-        if self.first_step.map_or(true, |f| started < f) {
-            self.first_step = Some(started);
-        }
-        if self.last_step.map_or(true, |l| end > l) {
-            self.last_step = Some(end);
+        self.hists.step.observe(secs);
+        let end = started + Duration::from_secs_f64(secs.max(0.0));
+        match self.busy_until {
+            Some(busy) if started < busy => {
+                if end > busy {
+                    self.decode_wall_secs += (end - busy).as_secs_f64();
+                    self.busy_until = Some(end);
+                }
+            }
+            _ => {
+                self.decode_wall_secs += secs.max(0.0);
+                self.busy_until = Some(end);
+            }
         }
     }
 
-    /// Generated tokens per second of wall-clock decode activity
-    /// (first step start to last step end, across all workers).
+    /// Generated tokens per second of busy decode wall-clock (the
+    /// union of step intervals across all workers). Idle stretches
+    /// between request bursts are excluded from the denominator — a
+    /// long-lived server reports its decode throughput, not its
+    /// request arrival rate.
     pub fn tokens_per_sec(&self) -> f64 {
-        match (self.first_step, self.last_step) {
-            (Some(a), Some(b)) if b > a => self.generated_tokens as f64 / (b - a).as_secs_f64(),
-            _ => 0.0,
+        if self.decode_wall_secs > 0.0 {
+            self.generated_tokens as f64 / self.decode_wall_secs
+        } else {
+            0.0
         }
     }
 
@@ -260,6 +321,9 @@ struct Shared {
     hard_stop: AtomicBool,
     /// sequences admitted into a slot but not yet terminally replied to
     in_flight: AtomicUsize,
+    /// request-id source: `submit` hands out ids starting at 1, so a
+    /// trace consumer can treat 0 as "unassigned"
+    next_id: AtomicU64,
 }
 
 /// Default pending-request cap (`Router::new`); servers override it via
@@ -286,6 +350,9 @@ pub struct Router {
     /// reusing the old seed's (the same staleness class the
     /// reconstruction cache's theta fingerprint guards against)
     statics: Arc<Mutex<HashMap<(String, u64), Arc<Vec<Static>>>>>,
+    /// span-event sink shared by every clone; ring-only with the
+    /// default capacity unless built via [`Router::with_tracer`]
+    trace: Arc<Tracer>,
 }
 
 impl Clone for Router {
@@ -294,6 +361,7 @@ impl Clone for Router {
             shared: self.shared.clone(),
             stats: self.stats.clone(),
             statics: self.statics.clone(),
+            trace: self.trace.clone(),
         }
     }
 }
@@ -315,8 +383,15 @@ impl Router {
         Router::with_capacity(DEFAULT_QUEUE_DEPTH)
     }
 
-    /// A router whose queue holds at most `capacity` pending requests.
+    /// A router whose queue holds at most `capacity` pending requests,
+    /// tracing into a default ring-only [`Tracer`].
     pub fn with_capacity(capacity: usize) -> Router {
+        Router::with_tracer(capacity, Arc::new(Tracer::ring_only(config::DEFAULT_TRACE_RING)))
+    }
+
+    /// [`Router::with_capacity`] with an explicit span-event sink —
+    /// how `serve` wires `UNI_LORA_TRACE_RING` / `UNI_LORA_TRACE` in.
+    pub fn with_tracer(capacity: usize, trace: Arc<Tracer>) -> Router {
         Router {
             shared: Arc::new(Shared {
                 queue: Mutex::new(VecDeque::new()),
@@ -326,23 +401,45 @@ impl Router {
                 draining: AtomicBool::new(false),
                 hard_stop: AtomicBool::new(false),
                 in_flight: AtomicUsize::new(0),
+                next_id: AtomicU64::new(0),
             }),
             stats: Arc::new(Mutex::new(RouterStats::default())),
             statics: Arc::new(Mutex::new(HashMap::new())),
+            trace,
         }
+    }
+
+    /// The span-event sink this router (and all its clones) records to.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.trace
     }
 
     pub fn capacity(&self) -> usize {
         self.shared.capacity
     }
 
-    /// Enqueue a request. Rejections hand the request back unchanged
-    /// alongside the typed error the caller should reply with: `busy`
-    /// when the queue is at capacity (backpressure instead of unbounded
-    /// backlog), `shutting_down` once the router is draining.
-    pub fn submit(&self, req: PendingReq) -> Result<(), (PendingReq, ServeError)> {
+    /// Enqueue a request. Assigns the request's trace id (ids start at
+    /// 1; an id a caller pre-set is kept) and records its `enqueue`
+    /// span event. Rejections hand the request back unchanged alongside
+    /// the typed error the caller should reply with — and record a
+    /// terminal `reject` span event: `busy` when the queue is at
+    /// capacity (backpressure instead of unbounded backlog),
+    /// `shutting_down` once the router is draining.
+    pub fn submit(&self, mut req: PendingReq) -> Result<(), (PendingReq, ServeError)> {
+        if req.id == 0 {
+            req.id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        }
+        self.trace.rec(
+            req.id,
+            "enqueue",
+            None,
+            Some(req.prompt.len() as i64),
+            Some(req.adapter.as_str()),
+        );
         if self.draining() {
-            return Err((req, ServeError::shutting_down("server is shutting down")));
+            let e = ServeError::shutting_down("server is shutting down");
+            self.trace.rec(req.id, "reject", None, None, Some(e.code.as_str()));
+            return Err((req, e));
         }
         {
             let mut q = lock_recover(&self.shared.queue);
@@ -353,6 +450,7 @@ impl Router {
                     "busy: request queue full (depth {})",
                     self.shared.capacity
                 ));
+                self.trace.rec(req.id, "reject", None, None, Some(e.code.as_str()));
                 return Err((req, e));
             }
             q.push_back(req);
@@ -397,6 +495,7 @@ impl Router {
     ) -> Result<Vec<i32>, ServeError> {
         let (tx, rx) = mpsc::channel();
         let req = PendingReq {
+            id: 0,
             adapter: adapter.to_string(),
             prompt,
             max_new,
@@ -449,7 +548,11 @@ impl Router {
         let mut st = lock_recover(&self.stats);
         for req in drained {
             st.requests += 1;
-            st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+            let lat = req.enqueued.elapsed().as_secs_f64();
+            st.total_latency_secs += lat;
+            st.hists.latency.observe(lat);
+            let code = ErrCode::ShuttingDown.as_str();
+            self.trace.rec(req.id, "done", None, Some(0), Some(code));
             let _ = req.reply.send(GenEvent::Done(Err(ServeError::shutting_down(
                 "server shutting down: request was queued, not started",
             ))));
@@ -529,7 +632,10 @@ impl Router {
         while let Some(req) = self.pop_blocking() {
             let mut st = lock_recover(&self.stats);
             st.requests += 1;
-            st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+            let lat = req.enqueued.elapsed().as_secs_f64();
+            st.total_latency_secs += lat;
+            st.hists.latency.observe(lat);
+            self.trace.rec(req.id, "done", None, Some(0), Some(err.code.as_str()));
             let _ = req.reply.send(GenEvent::Done(Err(err.clone())));
         }
     }
@@ -545,10 +651,17 @@ impl Router {
         out: Result<Vec<i32>, ServeError>,
     ) {
         st.requests += 1;
-        st.total_latency_secs += book.req.enqueued.elapsed().as_secs_f64();
+        let lat = book.req.enqueued.elapsed().as_secs_f64();
+        st.total_latency_secs += lat;
+        st.hists.latency.observe(lat);
         if self.draining() && out.is_ok() {
             st.drained_ok += 1;
         }
+        let (nn, note) = match &out {
+            Ok(toks) => (toks.len() as i64, "ok"),
+            Err(e) => (book.tokens.len() as i64, e.code.as_str()),
+        };
+        self.trace.rec(book.req.id, "done", None, Some(nn), Some(note));
         self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
         let _ = book.req.reply.send(GenEvent::Done(out));
     }
@@ -576,7 +689,8 @@ impl Router {
     ) -> bool {
         enum Outcome {
             Admitted(Admission),
-            Requeue,
+            /// payload: requeue cause, recorded as the trace note
+            Requeue(&'static str),
             Fail(ServeError),
         }
         let queue_wait = req.enqueued.elapsed().as_secs_f64();
@@ -591,7 +705,8 @@ impl Router {
             }
             if faults.fire(SITE_ADMIT) {
                 lock_recover(&self.stats).faults_injected += 1;
-                return Outcome::Requeue;
+                self.trace.rec(req.id, "fault", None, None, Some("admit"));
+                return Outcome::Requeue("fault");
             }
             let ckpt = match registry.get(&req.adapter) {
                 Some(c) => c,
@@ -607,6 +722,7 @@ impl Router {
                 Err(e) => return Outcome::Fail(ServeError::internal(e)),
             };
             match sess.admit(SeqRequest {
+                request_id: req.id,
                 adapter: req.adapter.clone(),
                 theta: Arc::new(ckpt.theta),
                 statics,
@@ -618,15 +734,21 @@ impl Router {
                 Err(e) => match e.downcast_ref::<KvBudgetExhausted>() {
                     // pages free when live sequences retire; an
                     // admission that can never fit fails permanently
-                    Some(b) if can_requeue && b.needed_pages <= b.budget_pages => Outcome::Requeue,
+                    Some(b) if can_requeue && b.needed_pages <= b.budget_pages => {
+                        Outcome::Requeue("kv_budget")
+                    }
                     _ => Outcome::Fail(ServeError::internal(e.to_string())),
                 },
             }
         })();
         match outcome {
             Outcome::Admitted(adm) => {
+                let plen = req.prompt.len() as i64;
+                self.trace.rec(req.id, "admit", Some(adm.slot), Some(plen), None);
                 let mut st = lock_recover(&self.stats);
                 st.total_queue_secs += queue_wait;
+                st.hists.queue_wait.observe(queue_wait);
+                st.hists.prompt_tokens.observe(req.prompt.len() as f64);
                 if adm.truncated {
                     st.truncated_admits += 1;
                 }
@@ -643,19 +765,24 @@ impl Router {
                 );
                 true
             }
-            Outcome::Requeue => {
+            Outcome::Requeue(why) => {
                 // queue wait keeps accruing from the original enqueue
+                self.trace.rec(req.id, "requeue", None, None, Some(why));
                 self.requeue_front(req);
                 false
             }
             Outcome::Fail(e) => {
                 let mut st = lock_recover(&self.stats);
                 st.total_queue_secs += queue_wait;
+                st.hists.queue_wait.observe(queue_wait);
                 st.requests += 1;
-                st.total_latency_secs += req.enqueued.elapsed().as_secs_f64();
+                let lat = req.enqueued.elapsed().as_secs_f64();
+                st.total_latency_secs += lat;
+                st.hists.latency.observe(lat);
                 if e.code == ErrCode::DeadlineExceeded {
                     st.deadline_exceeded += 1;
                 }
+                self.trace.rec(req.id, "done", None, Some(0), Some(e.code.as_str()));
                 let _ = req.reply.send(GenEvent::Done(Err(e)));
                 true
             }
@@ -677,6 +804,8 @@ impl Router {
         mut book: SlotBook,
     ) {
         book.replay_skip = book.tokens.len();
+        let skip = book.replay_skip as i64;
+        self.trace.rec(book.req.id, "replay", None, Some(skip), None);
         let outcome = (|| {
             let ckpt = registry.get(&book.req.adapter).ok_or_else(|| {
                 ServeError::unknown_adapter(format!("unknown adapter {:?}", book.req.adapter))
@@ -684,6 +813,7 @@ impl Router {
             let statics =
                 self.statics_for(&book.req.adapter, cfg, ckpt.seed).map_err(ServeError::internal)?;
             sess.admit(SeqRequest {
+                request_id: book.req.id,
                 adapter: book.req.adapter.clone(),
                 theta: Arc::new(ckpt.theta),
                 statics,
@@ -752,6 +882,7 @@ impl Router {
                     sess.cancel(si);
                     let book = books.remove(&si).expect("aborting a live book");
                     st.drained_aborted += 1;
+                    self.trace.rec(book.req.id, "cancel", Some(si), None, Some("hard_stop"));
                     self.conclude(
                         &mut st,
                         book,
@@ -780,6 +911,8 @@ impl Router {
                         sess.cancel(si);
                         let book = books.remove(&si).expect("expiring a live book");
                         st.deadline_exceeded += 1;
+                        let done = book.tokens.len() as i64;
+                        self.trace.rec(book.req.id, "deadline", Some(si), Some(done), None);
                         let msg = format!(
                             "deadline exceeded after {} generated token(s)",
                             book.tokens.len()
@@ -829,11 +962,15 @@ impl Router {
             let occupied = sess.active() as u64;
             if faults.fire(SITE_SLOW) {
                 lock_recover(&self.stats).faults_injected += 1;
+                // worker-scoped events (no single owning request) carry
+                // the reserved request id 0
+                self.trace.rec(0, "fault", None, None, Some("slow"));
                 std::thread::sleep(Duration::from_millis(faults.slow_ms()));
             }
             let injected_step = faults.fire(SITE_STEP);
             if injected_step {
                 lock_recover(&self.stats).faults_injected += 1;
+                self.trace.rec(0, "fault", None, None, Some("step"));
             }
             let t0 = Instant::now();
             let step_result = if injected_step {
@@ -913,6 +1050,10 @@ impl Router {
             fold_deltas(&mut st, &snow, &mut last);
             for ev in events {
                 let Some(book) = books.get_mut(&ev.slot) else { continue };
+                // the id threaded through SeqRequest::request_id must
+                // come back on this slot's events — a mismatch means the
+                // session reassigned a slot without the router noticing
+                debug_assert_eq!(ev.req, book.req.id, "session event on the wrong request");
                 let mut lost_client = false;
                 if let Some(tok) = ev.token {
                     if book.replay_skip > 0 {
@@ -925,17 +1066,25 @@ impl Router {
                             // is the next statement, so this ttft IS
                             // time-to-first-byte
                             book.got_first = true;
-                            st.ttft_secs += book.req.enqueued.elapsed().as_secs_f64();
+                            let ttft = book.req.enqueued.elapsed().as_secs_f64();
+                            st.ttft_secs += ttft;
                             st.ttft_count += 1;
+                            st.hists.ttft.observe(ttft);
+                            self.trace.rec(book.req.id, "prefill", Some(ev.slot), None, None);
                         }
+                        self.trace.rec(book.req.id, "step", Some(ev.slot), Some(tok as i64), None);
                         if book.req.stream {
                             if faults.fire(SITE_FRAME) {
                                 // injected "client disconnected": the
                                 // frame write failed
                                 st.faults_injected += 1;
+                                let id = book.req.id;
+                                self.trace.rec(id, "fault", Some(ev.slot), None, Some("frame"));
                                 lost_client = true;
                             } else if book.req.reply.send(GenEvent::Token(tok)).is_ok() {
                                 st.stream_frames_sent += 1;
+                                let id = book.req.id;
+                                self.trace.rec(id, "frame", Some(ev.slot), Some(tok as i64), None);
                             } else {
                                 // the stream handler dropped its
                                 // receiver: the TCP client is gone
@@ -952,6 +1101,8 @@ impl Router {
                     }
                     let book = books.remove(&ev.slot).expect("cancelling a live book");
                     st.client_gone += 1;
+                    let id = book.req.id;
+                    self.trace.rec(id, "cancel", Some(ev.slot), None, Some("client_gone"));
                     self.conclude(
                         &mut st,
                         book,
@@ -987,6 +1138,7 @@ mod tests {
 
     fn req(adapter: &str, tx: &mpsc::Sender<GenEvent>) -> PendingReq {
         PendingReq {
+            id: 0,
             adapter: adapter.into(),
             prompt: vec![1],
             max_new: 1,
@@ -1254,6 +1406,7 @@ mod tests {
         for _ in 0..3 {
             let (tx, rx) = mpsc::channel();
             r.submit(PendingReq {
+                id: 0,
                 adapter: "a".into(),
                 prompt: vec![1, 2, 3],
                 max_new: 2,
@@ -1332,6 +1485,7 @@ mod tests {
             for i in 0..6i32 {
                 let (tx, rx) = mpsc::channel();
                 r.submit(PendingReq {
+                    id: 0,
                     adapter: "a".into(),
                     prompt: vec![1, 2, 3 + (i % 3)],
                     max_new: 1 + (i as usize % 3),
@@ -1414,6 +1568,30 @@ mod tests {
         st.note_decode(t0, 2.0); // worker A: [0, 2]
         st.note_decode(t0, 2.0); // worker B: [0, 2], concurrent
         assert!((st.decode_secs - 4.0).abs() < 1e-9, "summed effort");
+        assert!((st.decode_wall_secs - 2.0).abs() < 1e-9, "overlap counts once");
         assert!((st.tokens_per_sec() - 25.0).abs() < 1e-6, "50 tok over a 2s wall span");
+        assert_eq!(st.hists.step.count(), 2, "note_decode feeds the step histogram");
+    }
+
+    /// Satellite: idle stretches between decode bursts must not dilute
+    /// throughput — `decode_wall_secs` is the union of step intervals,
+    /// not first-step..last-step (which on a long-lived server would
+    /// grow with uptime and drive tokens/s toward the arrival rate).
+    #[test]
+    fn tokens_per_sec_ignores_idle_gaps() {
+        let mut st = RouterStats::default();
+        st.generated_tokens = 30;
+        let t0 = Instant::now();
+        st.note_decode(t0, 1.0); // [0, 1]
+        st.note_decode(t0 + Duration::from_secs(10), 2.0); // [10, 12]: 9s idle gap
+        assert!((st.decode_wall_secs - 3.0).abs() < 1e-9, "gap excluded: {st:?}");
+        assert!((st.tokens_per_sec() - 10.0).abs() < 1e-6);
+        // straddling the watermark adds only the uncovered tail
+        st.note_decode(t0 + Duration::from_secs(11), 2.0); // [11, 13]
+        assert!((st.decode_wall_secs - 4.0).abs() < 1e-9, "tail only: {st:?}");
+        // an interval fully under the watermark adds nothing
+        st.note_decode(t0 + Duration::from_secs(11), 1.0); // [11, 12]
+        assert!((st.decode_wall_secs - 4.0).abs() < 1e-9, "covered: {st:?}");
+        assert!((st.decode_secs - 6.0).abs() < 1e-9, "effort still sums every step");
     }
 }

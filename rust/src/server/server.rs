@@ -26,6 +26,12 @@
 //!   requests with `shutting_down`, lets in-flight sequences finish
 //!   inside `UNI_LORA_DRAIN_MS`, then hard-stops the stragglers, and
 //!   returns the final [`RouterStats`].
+//!
+//! Observability rides on the same socket: the `metrics` op renders
+//! the router's counters and latency histograms as one Prometheus
+//! text scrape ([`Client::metrics_text`]), and the `trace` op drains
+//! the per-request span-event ring (`UNI_LORA_TRACE_RING` entries,
+//! optionally tee'd to a `UNI_LORA_TRACE=<path>` JSONL file).
 
 use super::faults::Faults;
 use super::protocol::{Request, Response, ServeError};
@@ -33,6 +39,7 @@ use super::router::{lock_recover, DEFAULT_QUEUE_DEPTH, GenEvent, PendingReq, Rou
 use crate::adapters::Registry;
 use crate::config::{self, ModelCfg, RuntimeOpts};
 use crate::generation::SamplingParams;
+use crate::obs::{profile, MetricsRegistry, Tracer};
 use crate::runtime::Backend;
 use crate::session::SessionOpts;
 use crate::util::json::{n, obj, Json};
@@ -75,6 +82,12 @@ pub struct ServerConfig {
     /// fault-injection plan; None = `UNI_LORA_FAULTS` (off when
     /// unset). Tests pin this instead of mutating the environment.
     pub faults: Option<Arc<Faults>>,
+    /// span-event ring capacity; 0 disables the in-memory ring
+    /// (`UNI_LORA_TRACE_RING`)
+    pub trace_ring: usize,
+    /// JSONL trace sink appended to as events are recorded; None = ring
+    /// only (`UNI_LORA_TRACE`)
+    pub trace_path: Option<String>,
 }
 
 impl ServerConfig {
@@ -98,6 +111,8 @@ impl ServerConfig {
             ),
             session: None,
             faults: None,
+            trace_ring: config::parse_trace_ring(env("UNI_LORA_TRACE_RING").as_deref()),
+            trace_path: config::parse_trace_path(env("UNI_LORA_TRACE").as_deref()),
         }
     }
 
@@ -145,6 +160,18 @@ impl ServerConfig {
     /// Pin the fault-injection plan (tests; production reads env).
     pub fn with_faults(mut self, faults: Arc<Faults>) -> ServerConfig {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Pin the span-event ring capacity (tests; production reads env).
+    pub fn with_trace_ring(mut self, cap: usize) -> ServerConfig {
+        self.trace_ring = cap;
+        self
+    }
+
+    /// Pin the JSONL trace sink path (tests; production reads env).
+    pub fn with_trace_path(mut self, path: impl Into<String>) -> ServerConfig {
+        self.trace_path = Some(path.into());
         self
     }
 }
@@ -242,7 +269,8 @@ pub fn serve(
 ) -> Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr).context("binding server socket")?;
     let addr = listener.local_addr()?;
-    let router = Router::with_capacity(cfg.queue_depth);
+    let tracer = Arc::new(Tracer::from_cfg(cfg.trace_ring, cfg.trace_path.as_deref()));
+    let router = Router::with_tracer(cfg.queue_depth, tracer);
     let stop = Arc::new(AtomicBool::new(false));
     let w0 = Arc::new(w0);
 
@@ -441,6 +469,14 @@ fn handle_conn(stream: TcpStream, ctx: ConnCtx) {
             Err(e) => Response::Error(ServeError::parse(e.to_string())),
             Ok(Request::Adapters) => Response::Adapters(ctx.registry.names()),
             Ok(Request::Stats) => stats_response(&ctx),
+            Ok(Request::Metrics) => {
+                let st = lock_recover(&ctx.router.stats).clone();
+                Response::Metrics(render_metrics(&st, ctx.workers))
+            }
+            Ok(Request::Trace) => {
+                let events = ctx.router.tracer().drain();
+                Response::Trace(events.iter().map(|e| e.to_json()).collect())
+            }
             Ok(Request::Generate { adapter, prompt, max_new, sampling, stream, timeout_ms }) => {
                 let deadline = request_deadline(timeout_ms, ctx.request_timeout_ms);
                 if stream {
@@ -500,7 +536,141 @@ fn stats_response(ctx: &ConnCtx) -> Response {
         ("drained_ok", n(st.drained_ok as f64)),
         ("drained_aborted", n(st.drained_aborted as f64)),
         ("faults_injected", n(st.faults_injected as f64)),
+        ("decode_wall_secs", n(st.decode_wall_secs)),
     ]))
+}
+
+/// Render one Prometheus text scrape from a stats snapshot. Counters
+/// and gauges mirror the `stats` op (same snapshot, so the two ops can
+/// never disagree); the histograms and the `UNI_LORA_PROFILE=1` stage
+/// attribution exist only here. Metric order is fixed so consecutive
+/// scrapes diff cleanly.
+fn render_metrics(st: &RouterStats, workers: usize) -> String {
+    let mut reg = MetricsRegistry::new();
+    let c = |v: u64| v as f64;
+    reg.counter("unilora_requests_total", "requests replied to, success or error", c(st.requests));
+    reg.counter("unilora_rejected_total", "submits rejected at the queue cap", c(st.rejected));
+    reg.counter("unilora_steps_total", "fused decode step boundaries", c(st.steps));
+    reg.counter("unilora_slot_steps_total", "occupied slots summed over steps", c(st.slot_steps));
+    reg.counter("unilora_generated_tokens_total", "tokens emitted", c(st.generated_tokens));
+    reg.counter(
+        "unilora_decode_cpu_seconds_total",
+        "seconds inside DecodeSession::step, summed across workers",
+        st.decode_secs,
+    );
+    reg.counter(
+        "unilora_decode_busy_seconds_total",
+        "wall-clock seconds with at least one decode step in flight",
+        st.decode_wall_secs,
+    );
+    reg.counter(
+        "unilora_recon_evictions_total",
+        "dense reconstructions evicted from the shared cache",
+        c(st.recon_evictions),
+    );
+    reg.counter_vec(
+        "unilora_admits_total",
+        "admissions by execution mode the session cost model picked",
+        "mode",
+        &[("factored", c(st.factored_admits)), ("dense", c(st.dense_admits))],
+    );
+    reg.counter_vec(
+        "unilora_requests_by_policy_total",
+        "admissions by decode policy (temperature > 0 vs greedy)",
+        "policy",
+        &[("sampled", c(st.sampled_requests)), ("greedy", c(st.greedy_requests))],
+    );
+    reg.counter(
+        "unilora_truncated_admits_total",
+        "prompts truncated to the context window at admission",
+        c(st.truncated_admits),
+    );
+    reg.counter(
+        "unilora_stream_frames_sent_total",
+        "per-token frames written to streaming clients",
+        c(st.stream_frames_sent),
+    );
+    reg.counter(
+        "unilora_deadline_exceeded_total",
+        "requests that ran out of wall-clock, queued or decoding",
+        c(st.deadline_exceeded),
+    );
+    reg.counter(
+        "unilora_cancelled_total",
+        "sequences retired mid-flight via cancel",
+        c(st.cancelled),
+    );
+    reg.counter(
+        "unilora_client_gone_total",
+        "streaming clients that disconnected mid-generation",
+        c(st.client_gone),
+    );
+    reg.counter(
+        "unilora_conns_rejected_total",
+        "connections rejected at the accept cap",
+        c(st.conns_rejected),
+    );
+    reg.counter_vec(
+        "unilora_drained_total",
+        "in-flight requests finished inside vs aborted at the drain deadline",
+        "outcome",
+        &[("ok", c(st.drained_ok)), ("aborted", c(st.drained_aborted))],
+    );
+    reg.counter(
+        "unilora_faults_injected_total",
+        "seeded fault-plan decisions that injected a failure",
+        c(st.faults_injected),
+    );
+    reg.counter(
+        "unilora_kv_page_churn_total",
+        "K/V pages recycled through arena free lists",
+        c(st.kv_page_churn),
+    );
+    reg.gauge(
+        "unilora_kv_bytes_in_flight",
+        "K/V bytes resident across all workers' arenas",
+        c(st.kv_bytes_in_flight),
+    );
+    reg.gauge("unilora_workers", "execution workers running", workers as f64);
+    reg.histogram(
+        "unilora_ttft_seconds",
+        "enqueue to first emitted token (streamed: first frame dispatch)",
+        &st.hists.ttft,
+    );
+    reg.histogram(
+        "unilora_queue_wait_seconds",
+        "enqueue to admission outcome",
+        &st.hists.queue_wait,
+    );
+    reg.histogram(
+        "unilora_request_latency_seconds",
+        "enqueue to terminal reply, success or error",
+        &st.hists.latency,
+    );
+    reg.histogram("unilora_decode_step_seconds", "one fused decode step", &st.hists.step);
+    reg.histogram(
+        "unilora_prompt_tokens",
+        "admitted prompt length after truncation",
+        &st.hists.prompt_tokens,
+    );
+    if profile::enabled() {
+        let snap = profile::snapshot();
+        let secs: Vec<(&str, f64)> = snap.iter().map(|&(name, s, _)| (name, s)).collect();
+        let calls: Vec<(&str, f64)> = snap.iter().map(|&(name, _, k)| (name, k as f64)).collect();
+        reg.counter_vec(
+            "unilora_profile_seconds_total",
+            "fused decode time attributed per stage (UNI_LORA_PROFILE=1)",
+            "stage",
+            &secs,
+        );
+        reg.counter_vec(
+            "unilora_profile_calls_total",
+            "scoped-timer entries per stage (UNI_LORA_PROFILE=1)",
+            "stage",
+            &calls,
+        );
+    }
+    reg.render()
 }
 
 /// Stream one generation: submit with `stream: true`, then relay each
@@ -522,6 +692,7 @@ fn stream_generate(
 ) -> std::io::Result<()> {
     let (tx, rx) = mpsc::channel();
     let req = PendingReq {
+        id: 0,
         adapter: adapter.to_string(),
         prompt,
         max_new,
@@ -647,6 +818,23 @@ impl Client {
     pub fn stats(&mut self) -> Result<Json> {
         match self.call(&Request::Stats)? {
             Response::Stats(j) => Ok(j),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// One Prometheus text scrape (the `metrics` op's payload).
+    pub fn metrics_text(&mut self) -> Result<String> {
+        match self.call(&Request::Metrics)? {
+            Response::Metrics(text) => Ok(text),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Drain the server's span-event ring (destructive — each event
+    /// arrives exactly once), oldest first.
+    pub fn trace_events(&mut self) -> Result<Vec<Json>> {
+        match self.call(&Request::Trace)? {
+            Response::Trace(events) => Ok(events),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
     }

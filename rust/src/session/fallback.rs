@@ -25,6 +25,9 @@ use anyhow::{anyhow, ensure, Result};
 use std::sync::Arc;
 
 struct Slot {
+    /// [`SeqRequest::request_id`], echoed on every event this slot
+    /// emits (observation-only)
+    request_id: u64,
     /// adapter name — half of the grouping key
     key: String,
     /// theta content fingerprint — the other half: slots batch into
@@ -108,6 +111,7 @@ impl DecodeSession for FallbackSession {
             self.stats.sampled_admits += 1;
         }
         self.slots[si] = Some(Slot {
+            request_id: req.request_id,
             key: req.adapter,
             theta_fp: super::theta_fingerprint(&req.theta),
             theta: TensorIn::SharedF32(req.theta),
@@ -130,7 +134,9 @@ impl DecodeSession for FallbackSession {
         for si in 0..self.slots.len() {
             if let Some(s) = &self.slots[si] {
                 if s.fresh && s.state.stillborn() {
-                    events.push(SeqEvent { slot: si, token: None, done: true });
+                    // read the id before the slot is freed
+                    let req = s.request_id;
+                    events.push(SeqEvent { slot: si, req, token: None, done: true });
                     self.slots[si] = None;
                     self.active -= 1;
                 }
@@ -176,7 +182,7 @@ impl DecodeSession for FallbackSession {
                         s.toks[s.state.placed - 1] = tok;
                         self.stats.generated += 1;
                     }
-                    events.push(SeqEvent { slot: si, token, done });
+                    events.push(SeqEvent { slot: si, req: s.request_id, token, done });
                     if done {
                         self.slots[si] = None;
                         self.active -= 1;

@@ -181,6 +181,12 @@ pub struct Admission {
 /// session needs to reconstruct and run it.
 #[derive(Debug, Clone)]
 pub struct SeqRequest {
+    /// Caller-chosen request identity, echoed back on every
+    /// [`SeqEvent`] this sequence emits. The router threads its
+    /// trace-assigned id through here so a drained span timeline is
+    /// attributable across session replays; callers without tracing
+    /// pass 0. Observation-only — no decode path reads it.
+    pub request_id: u64,
     /// Reconstruction-cache key (adapter name). The cache additionally
     /// fingerprints theta, so a re-registered adapter under the same
     /// name can never serve a stale reconstruction.
@@ -199,6 +205,10 @@ pub struct SeqRequest {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SeqEvent {
     pub slot: usize,
+    /// The [`SeqRequest::request_id`] this slot was admitted with —
+    /// lets the router assert events land on the request it thinks
+    /// owns the slot.
+    pub req: u64,
     /// Token emitted this step (`None`: the step ended the sequence
     /// without emitting — EOS, exhausted context window, zero budget).
     pub token: Option<i32>,
@@ -463,6 +473,7 @@ pub fn drive_sampled(
             params.seed = crate::rng::child_seed(sampling.seed, next as u64);
             let slot = sess
                 .admit(SeqRequest {
+                    request_id: next as u64,
                     adapter: adapter.to_string(),
                     theta: theta.clone(),
                     statics: statics.clone(),

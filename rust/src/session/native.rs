@@ -33,6 +33,7 @@ use super::{
     Admission, DecodeSession, ReconCache, SeqEvent, SeqRequest, SeqState, SessionOpts, SessionStats,
 };
 use crate::config::ModelCfg;
+use crate::obs::profile;
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::native::model::{self, AdapterExec, KvArena, KvSlot};
 use crate::runtime::Backend;
@@ -40,6 +41,9 @@ use anyhow::{anyhow, ensure, Result};
 use std::sync::Arc;
 
 struct Slot {
+    /// [`SeqRequest::request_id`], echoed on every event this slot
+    /// emits (observation-only)
+    request_id: u64,
     /// adapter identity — what the cost model counts to decide when a
     /// hot adapter is worth densifying
     adapter: String,
@@ -178,6 +182,7 @@ impl DecodeSession for NativeDecodeSession {
         let mut prompt = req.prompt;
         prompt.truncate(self.cfg.seq);
         self.slots[si] = Some(Slot {
+            request_id: req.request_id,
             adapter: req.adapter,
             theta_fp,
             exec: fetch.exec,
@@ -220,6 +225,7 @@ impl DecodeSession for NativeDecodeSession {
                 stillborn[si] = true;
                 continue;
             }
+            let _prof = profile::stage(profile::STAGE_PREFILL);
             hidden_rows[si] = Some(model::incr_forward_slot(
                 &self.cfg,
                 &base,
@@ -275,6 +281,7 @@ impl DecodeSession for NativeDecodeSession {
         let mut logits_rows: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
         if self.fused {
             if !active_rows.is_empty() {
+                let _prof = profile::stage(profile::STAGE_LOGITS);
                 let m = active_rows.len();
                 let mut x = vec![0f32; m * h];
                 for (ri, &si) in active_rows.iter().enumerate() {
@@ -288,6 +295,7 @@ impl DecodeSession for NativeDecodeSession {
             }
         } else {
             for &si in &active_rows {
+                let _prof = profile::stage(profile::STAGE_LOGITS);
                 logits_rows[si] =
                     Some(model::lm_logits_row(&self.cfg, &base, hidden_rows[si].as_ref().unwrap()));
             }
@@ -298,18 +306,23 @@ impl DecodeSession for NativeDecodeSession {
         let mut events = Vec::new();
         for si in 0..n {
             if stillborn[si] {
-                events.push(SeqEvent { slot: si, token: None, done: true });
+                // read the id before retire() consumes the slot
+                let req = self.slots[si].as_ref().map_or(0, |s| s.request_id);
+                events.push(SeqEvent { slot: si, req, token: None, done: true });
                 self.retire(si);
                 continue;
             }
             let Some(logits) = logits_rows[si].take() else { continue };
             let slot = self.slots[si].as_mut().ok_or_else(|| anyhow!("lost slot {si}"))?;
-            let (token, done) = slot.state.emit(&logits);
+            let (token, done) = {
+                let _prof = profile::stage(profile::STAGE_SAMPLING);
+                slot.state.emit(&logits)
+            };
             slot.pending = token;
             if token.is_some() {
                 self.stats.generated += 1;
             }
-            events.push(SeqEvent { slot: si, token, done });
+            events.push(SeqEvent { slot: si, req: slot.request_id, token, done });
             if done {
                 self.retire(si);
             }

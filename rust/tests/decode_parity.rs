@@ -227,6 +227,7 @@ fn continuous_batching_is_arrival_order_invariant() {
                 let (name, th, p) = &reqs[k];
                 let slot = sess
                     .admit(SeqRequest {
+                        request_id: 0,
                         adapter: name.clone(),
                         theta: Arc::new(th.clone()),
                         statics: statics.clone(),
@@ -365,6 +366,7 @@ fn heterogeneous_mixed_mode_session_matches_legacy() {
     for (k, (name, th, p)) in reqs.iter().enumerate() {
         let slot = sess
             .admit(SeqRequest {
+                request_id: 0,
                 adapter: name.to_string(),
                 theta: Arc::new((*th).clone()),
                 statics: statics.clone(),
@@ -417,6 +419,7 @@ fn fused_step_streams_equal_per_slot_streams() {
             let (name, th) = if k % 2 == 0 { ("fa", &fx.theta) } else { ("fb", &theta_b) };
             let slot = sess
                 .admit(SeqRequest {
+                    request_id: 0,
                     adapter: name.into(),
                     theta: Arc::new(th.clone()),
                     statics: statics.clone(),
@@ -459,6 +462,7 @@ fn admission_surfaces_prompt_truncation_at_the_window_boundary() {
         .begin_decode(ART, Arc::new(fx.w0.clone()), &SessionOpts::with_slots(3))
         .unwrap();
     let mk = |prompt: Vec<i32>| SeqRequest {
+        request_id: 0,
         adapter: "tr".into(),
         theta: Arc::new(fx.theta.clone()),
         statics: Arc::new(fx.statics.clone()),
@@ -511,6 +515,7 @@ fn session_admission_guards() {
         .begin_decode(ART, Arc::new(fx.w0.clone()), &SessionOpts::with_slots(1))
         .unwrap();
     let mk = |prompt: Vec<i32>| SeqRequest {
+        request_id: 0,
         adapter: "g".into(),
         theta: Arc::new(fx.theta.clone()),
         statics: Arc::new(fx.statics.clone()),

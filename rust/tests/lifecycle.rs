@@ -64,6 +64,7 @@ fn session_cancel_frees_pages_and_slot() {
     let statics = Arc::new(gen_statics(&cfg, 7).unwrap());
     let theta = Arc::new(init_theta(&cfg, 5).unwrap());
     let req = |prompt: Vec<i32>| SeqRequest {
+        request_id: 0,
         adapter: "a".into(),
         theta: theta.clone(),
         statics: statics.clone(),
@@ -142,6 +143,7 @@ fn churn_run() -> (Vec<String>, (u64, u64, u64, u64, u64), RouterStats) {
             SamplingParams::default()
         };
         r.submit(PendingReq {
+            id: 0,
             adapter: format!("a{}", i % 3),
             prompt: vec![1, 2, 1 + (i as i32 % 5)],
             max_new: 1 + i % 5,
@@ -198,6 +200,7 @@ fn churn_run() -> (Vec<String>, (u64, u64, u64, u64, u64), RouterStats) {
     for _ in 0..4 {
         let (tx, rx) = mpsc::channel();
         r.submit(PendingReq {
+            id: 0,
             adapter: "a0".into(),
             prompt: vec![1, 2, 3],
             max_new: 4,
@@ -221,7 +224,50 @@ fn churn_run() -> (Vec<String>, (u64, u64, u64, u64, u64), RouterStats) {
     r.stop();
     worker.join().unwrap();
     let fin = r.stats.lock().unwrap().clone();
+    // span causality: every request's drained timeline is well-formed,
+    // for the fuzz requests and the wave alike. Timelines carry
+    // wall-clock micros, so they are checked here and kept OUT of the
+    // replay-equality key.
+    assert_span_causality(&r.tracer().drain(), 76);
+    assert_eq!(r.tracer().dropped(), 0, "the default ring must hold the whole fuzz");
     (outcomes, key, fin)
+}
+
+/// Trace-span causality: group the drained ring by request id and
+/// assert each accepted request's timeline starts at `enqueue`, ends
+/// at exactly one `done`, never decodes (`prefill`/`step`/`frame`)
+/// before an `admit`, and carries non-decreasing timestamps. Request
+/// id 0 is the reserved id for worker-scoped fault events.
+fn assert_span_causality(events: &[uni_lora::obs::SpanEvent], expect_reqs: u64) {
+    use std::collections::BTreeMap;
+    let mut by_req: BTreeMap<u64, Vec<&uni_lora::obs::SpanEvent>> = BTreeMap::new();
+    for ev in events {
+        by_req.entry(ev.req).or_default().push(ev);
+    }
+    let reqs = by_req.keys().filter(|&&r| r != 0).count() as u64;
+    assert_eq!(reqs, expect_reqs, "every submitted request must leave a timeline");
+    for (req, evs) in &by_req {
+        if *req == 0 {
+            for ev in evs {
+                assert_eq!(ev.ev, "fault", "only fault events may carry the reserved id 0");
+            }
+            continue;
+        }
+        assert_eq!(evs[0].ev, "enqueue", "request {req} must start at enqueue: {evs:?}");
+        let dones = evs.iter().filter(|e| e.ev == "done").count();
+        assert_eq!(dones, 1, "request {req} must get exactly one terminal: {evs:?}");
+        assert_eq!(evs.last().unwrap().ev, "done", "request {req}: done is terminal: {evs:?}");
+        let admit_at = evs.iter().position(|e| e.ev == "admit");
+        for (i, ev) in evs.iter().enumerate() {
+            if matches!(ev.ev, "prefill" | "step" | "frame") {
+                let at = admit_at.expect("decode events require an admission");
+                assert!(at < i, "request {req}: {} before admit: {evs:?}", ev.ev);
+            }
+        }
+        for w in evs.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "request {req}: time went backwards: {evs:?}");
+        }
+    }
 }
 
 /// Tentpole acceptance: the seeded churn fuzz. 72 interleaved

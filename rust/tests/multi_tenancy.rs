@@ -57,6 +57,7 @@ fn serves_256_adapters_within_factored_residency_budget() {
             let Some(name) = pending.pop() else { break };
             let ckpt = registry.get(&name).unwrap();
             sess.admit(SeqRequest {
+                request_id: 0,
                 adapter: name,
                 theta: Arc::new(ckpt.theta),
                 statics: statics.clone(),
@@ -137,6 +138,7 @@ fn kv_arena_churn_fuzz_leaks_no_pages() {
             let max_new = rnd(4); // 0 => stillborn: reserves no pages
             let adm = sess
                 .admit(SeqRequest {
+                    request_id: 0,
                     adapter: format!("t{}", admitted % 3),
                     theta: thetas[admitted % 3].clone(),
                     statics: statics.clone(),
@@ -166,6 +168,7 @@ fn kv_arena_churn_fuzz_leaks_no_pages() {
     // still admits after all that churn
     for k in 0..slots {
         sess.admit(SeqRequest {
+            request_id: 0,
             adapter: format!("t{}", k % 3),
             theta: thetas[k % 3].clone(),
             statics: statics.clone(),
@@ -199,6 +202,7 @@ fn admission_rejects_exactly_at_kv_budget_exhaustion() {
     let theta: Arc<Vec<f32>> =
         Arc::new(uni_lora::rng::normals(91, d).iter().map(|v| 0.05 * v).collect());
     let mk = |k: usize| SeqRequest {
+        request_id: 0,
         adapter: format!("b{k}"),
         theta: theta.clone(),
         statics: statics.clone(),

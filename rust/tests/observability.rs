@@ -1,0 +1,308 @@
+//! Observability acceptance: the `metrics` op serves valid Prometheus
+//! text whose counters agree with the `stats` op snapshot (≥5
+//! histograms, `+Inf` buckets equal to `_count`), the
+//! `UNI_LORA_PROFILE` stage attribution appears in the scrape when
+//! enabled, and the `trace` op reconstructs full span timelines for a
+//! streamed, a cancelled and a deadline-exceeded request.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use uni_lora::adapters::{AdapterCheckpoint, Registry};
+use uni_lora::coordinator::init_base;
+use uni_lora::generation::SamplingParams;
+use uni_lora::obs::profile;
+use uni_lora::projection::statics::init_theta;
+use uni_lora::runtime::{Backend, NativeBackend};
+use uni_lora::server::protocol::{ErrCode, Request, Response};
+use uni_lora::server::server::Client;
+use uni_lora::server::{serve, Faults, ServerConfig, ServerHandle};
+use uni_lora::session::SessionOpts;
+use uni_lora::util::json::Json;
+
+const ART: &str = "lm_uni_lm_logits";
+/// EOS token id, biased out where a test needs the full budget.
+const EOS_BIAS: &str = r#""logit_bias":[[3,-1000000000]]"#;
+
+fn no_eos() -> SamplingParams {
+    SamplingParams { logit_bias: vec![(3, -1e9)], ..SamplingParams::default() }
+}
+
+/// One-adapter, one-worker server with every knob pinned through the
+/// config (never the environment).
+fn start(cfgf: impl FnOnce(ServerConfig) -> ServerConfig) -> ServerHandle {
+    let mut exec: Box<dyn Backend> = Box::new(NativeBackend::new().unwrap());
+    let meta = exec.meta(ART).unwrap().clone();
+    let w0 = init_base(&meta, 42);
+    exec.prepare(ART).unwrap();
+    let registry = Registry::new();
+    registry.insert(
+        "a0".into(),
+        AdapterCheckpoint {
+            seed: 5,
+            method: "uni".into(),
+            artifact: ART.into(),
+            theta: init_theta(&meta.cfg, 5).unwrap(),
+            head: vec![],
+        },
+    );
+    let cfg = cfgf(ServerConfig::new("127.0.0.1:0", ART).with_workers(1));
+    serve(cfg, exec, Arc::new(registry), meta.cfg.clone(), w0).unwrap()
+}
+
+/// The value of the sample whose series name (labels included) is
+/// exactly `series` — the text left of the sample's final space.
+fn sample(text: &str, series: &str) -> f64 {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(series) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.parse().expect("sample value parses");
+            }
+        }
+    }
+    panic!("series {series:?} not found in scrape:\n{text}");
+}
+
+/// `(ev, req, note)` of one drained span event; `note` is empty when
+/// the event carries none.
+fn span(j: &Json) -> (String, u64, String) {
+    let ev = j.req("ev").unwrap().as_str().unwrap().to_string();
+    let req = j.req("req").unwrap().as_usize().unwrap() as u64;
+    let note = match j.get("note") {
+        Some(v) => v.as_str().unwrap().to_string(),
+        None => String::new(),
+    };
+    (ev, req, note)
+}
+
+/// The `metrics` op serves well-formed Prometheus text: every sample
+/// line parses, at least five histograms render with cumulative
+/// buckets ending at a `+Inf` equal to `_count`, and the counters
+/// agree with the `stats` op (same snapshot source).
+#[test]
+fn metrics_scrape_is_valid_prometheus_and_matches_stats() {
+    let handle = start(|c| c);
+    let mut client = Client::connect(handle.addr).unwrap();
+    for _ in 0..2 {
+        let toks = client.generate("a0", vec![1, 2, 3], 2).unwrap();
+        assert!(toks.len() <= 2);
+    }
+    let text = client.metrics_text().unwrap();
+    let stats = client.stats().unwrap();
+
+    // every non-comment line is "series value" with a numeric value
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("sample lines split on a space");
+        assert!(!series.is_empty(), "unnamed sample: {line:?}");
+        assert!(value.parse::<f64>().is_ok(), "non-numeric sample value: {line:?}");
+    }
+
+    // the acceptance floor: at least five histogram families
+    let hist_count =
+        text.lines().filter(|l| l.starts_with("# TYPE") && l.ends_with("histogram")).count();
+    assert!(hist_count >= 5, "want >=5 histograms, got {hist_count}:\n{text}");
+    for name in [
+        "unilora_ttft_seconds",
+        "unilora_queue_wait_seconds",
+        "unilora_request_latency_seconds",
+        "unilora_decode_step_seconds",
+        "unilora_prompt_tokens",
+    ] {
+        assert!(text.contains(&format!("# TYPE {name} histogram")), "{name} missing:\n{text}");
+        let count = sample(&text, &format!("{name}_count"));
+        let inf = sample(&text, &format!("{name}_bucket{{le=\"+Inf\"}}"));
+        assert_eq!(count, inf, "{name}: +Inf bucket must equal _count");
+    }
+
+    // counters mirror the stats op
+    let stat = |k: &str| stats.get(k).unwrap().as_f64().unwrap();
+    assert_eq!(sample(&text, "unilora_requests_total"), stat("requests"));
+    assert_eq!(sample(&text, "unilora_generated_tokens_total"), stat("generated_tokens"));
+    assert_eq!(sample(&text, "unilora_kv_bytes_in_flight"), stat("kv_bytes_in_flight"));
+    assert_eq!(sample(&text, "unilora_workers"), 1.0);
+
+    // the per-request distributions saw both requests
+    assert_eq!(sample(&text, "unilora_request_latency_seconds_count"), 2.0);
+    assert_eq!(sample(&text, "unilora_prompt_tokens_count"), 2.0);
+    assert_eq!(sample(&text, "unilora_prompt_tokens_sum"), 6.0, "two 3-token prompts");
+
+    // the busy-span union: positive, surfaced identically in both ops
+    // (the worker has been idle since the scrape), and never larger
+    // than the summed per-step CPU seconds
+    let wall = stat("decode_wall_secs");
+    assert!(wall > 0.0, "decode happened, busy time must be positive");
+    let busy = sample(&text, "unilora_decode_busy_seconds_total");
+    assert!((busy - wall).abs() < 1e-9, "busy seconds diverged: {busy} vs {wall}");
+    assert!(busy <= sample(&text, "unilora_decode_cpu_seconds_total") + 1e-9);
+    handle.shutdown();
+}
+
+/// With profiling pinned on, the scrape gains the per-stage
+/// `unilora_profile_*` counters and decode work lands in them.
+#[test]
+fn profile_stage_attribution_lands_in_the_scrape() {
+    profile::set_enabled(true);
+    let handle = start(|c| c);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let toks = client.generate_sampled("a0", vec![1, 2, 3], 4, no_eos()).unwrap();
+    assert_eq!(toks.len(), 4);
+    let text = client.metrics_text().unwrap();
+    assert!(text.contains("# TYPE unilora_profile_seconds_total counter"), "{text}");
+    assert!(text.contains("# TYPE unilora_profile_calls_total counter"), "{text}");
+    for stage in
+        ["base_gemm", "factored_apply", "dense_gemv", "attention", "logits", "sampling", "prefill"]
+    {
+        let series = format!("unilora_profile_seconds_total{{stage=\"{stage}\"}}");
+        assert!(text.contains(&series), "stage {stage} missing:\n{text}");
+    }
+    // the decode above must have attributed work: one prefill per
+    // admission, one sampling call per emitted row, and fused-step
+    // stages for the single-position steps after the prefill
+    let calls = |stage: &str| {
+        sample(&text, &format!("unilora_profile_calls_total{{stage=\"{stage}\"}}"))
+    };
+    assert!(calls("prefill") >= 1.0, "prefill ran:\n{text}");
+    assert!(calls("sampling") >= 4.0, "four emitted tokens:\n{text}");
+    assert!(calls("base_gemm") >= 1.0, "fused steps ran base GEMMs:\n{text}");
+    assert!(calls("attention") >= 1.0, "fused steps ran attention:\n{text}");
+    handle.shutdown();
+}
+
+/// The `trace` op reconstructs a full per-request timeline for the
+/// three lifecycle shapes the ISSUE names: a streamed request that
+/// completes, a client that disconnects mid-stream, and a request
+/// that outlives its deadline. The drain is destructive, so each
+/// phase reads exactly its own events.
+#[test]
+fn trace_reconstructs_streamed_cancelled_and_deadline_timelines() {
+    let handle = start(|c| {
+        c.with_session(SessionOpts::with_slots(1))
+            .with_faults(Arc::new(Faults::parse("5:slow=1@15").unwrap()))
+            .with_trace_ring(4096)
+    });
+    let addr = handle.addr;
+    let mut client = Client::connect(addr).unwrap();
+
+    // --- phase 1: streamed request, runs to completion -------------
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(
+            writer,
+            r#"{{"op":"generate","adapter":"a0","prompt":[1,21,7],"max_new":3,"sampling":{{{EOS_BIAS}}},"stream":true}}"#
+        )
+        .unwrap();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Frame { done, .. } => {
+                    if done {
+                        break;
+                    }
+                }
+                other => panic!("streamed request must stream: {other:?}"),
+            }
+        }
+    }
+    let spans: Vec<_> = client.trace_events().unwrap().iter().map(span).collect();
+    let reqs: Vec<u64> = spans.iter().map(|s| s.1).filter(|&r| r != 0).collect();
+    let id = reqs[0];
+    assert!(reqs.iter().all(|&r| r == id), "one request, one id: {spans:?}");
+    let kinds: Vec<&str> = spans.iter().filter(|s| s.1 == id).map(|s| s.0.as_str()).collect();
+    assert_eq!(kinds[0], "enqueue", "{spans:?}");
+    let pos = |k: &str| kinds.iter().position(|&e| e == k);
+    let (admit, prefill) = (pos("admit").unwrap(), pos("prefill").unwrap());
+    let (step, frame) = (pos("step").unwrap(), pos("frame").unwrap());
+    assert!(admit < prefill && prefill <= step && step < frame, "{kinds:?}");
+    assert_eq!(kinds.iter().filter(|&&e| e == "step").count(), 3, "{kinds:?}");
+    assert_eq!(kinds.iter().filter(|&&e| e == "frame").count(), 3, "{kinds:?}");
+    assert_eq!(*kinds.last().unwrap(), "done", "{kinds:?}");
+    let done = spans.iter().find(|s| s.0 == "done").unwrap();
+    assert_eq!(done.2, "ok", "completed request ends with done/ok: {spans:?}");
+    let enq = spans.iter().find(|s| s.0 == "enqueue").unwrap();
+    assert_eq!(enq.2, "a0", "enqueue notes the adapter: {spans:?}");
+
+    // --- phase 2: client disconnects mid-stream --------------------
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(
+            writer,
+            r#"{{"op":"generate","adapter":"a0","prompt":[1,21,7],"max_new":40,"sampling":{{{EOS_BIAS}}},"stream":true}}"#
+        )
+        .unwrap();
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(r#""ok":true"#), "expected a frame: {line}");
+        }
+        // drop both halves: the next frame write fails server-side
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = client.stats().unwrap();
+        if stats.get("client_gone").unwrap().as_f64().unwrap() >= 1.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "disconnect was never detected");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let spans: Vec<_> = client.trace_events().unwrap().iter().map(span).collect();
+    let cancel = spans.iter().find(|s| s.0 == "cancel").expect("cancel event");
+    assert_eq!(cancel.2, "client_gone", "{spans:?}");
+    let done = spans.iter().find(|s| s.0 == "done").expect("terminal event");
+    assert_eq!(done.2, "client_gone", "{spans:?}");
+    assert_eq!(done.1, cancel.1, "cancel and terminal belong to the same request");
+
+    // --- phase 3: deadline exceeded mid-flight ---------------------
+    let req = Request::Generate {
+        adapter: "a0".into(),
+        prompt: vec![1, 21, 7],
+        max_new: 50,
+        sampling: no_eos(),
+        stream: false,
+        timeout_ms: 60,
+    };
+    match client.call(&req).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, ErrCode::DeadlineExceeded, "{e:?}"),
+        other => panic!("50 tokens at 15ms/step must miss a 60ms deadline: {other:?}"),
+    }
+    let spans: Vec<_> = client.trace_events().unwrap().iter().map(span).collect();
+    let dl = spans.iter().find(|s| s.0 == "deadline").expect("deadline event");
+    let done = spans.iter().find(|s| s.0 == "done").expect("terminal event");
+    assert_eq!(done.2, "deadline_exceeded", "{spans:?}");
+    assert_eq!(done.1, dl.1, "deadline and terminal belong to the same request");
+    let kinds: Vec<&str> = spans.iter().filter(|s| s.1 == dl.1).map(|s| s.0.as_str()).collect();
+    assert_eq!(kinds[0], "enqueue", "{kinds:?}");
+    assert!(kinds.contains(&"admit"), "the request was decoding when it expired: {kinds:?}");
+    assert_eq!(*kinds.last().unwrap(), "done", "{kinds:?}");
+    handle.shutdown();
+}
+
+/// Draining is destructive and scoped to the ring: a second drain on
+/// an idle server is empty, and a ring of zero capacity records
+/// nothing at all.
+#[test]
+fn trace_drain_consumes_and_zero_ring_disables() {
+    let handle = start(|c| c.with_trace_ring(0));
+    let mut client = Client::connect(handle.addr).unwrap();
+    client.generate("a0", vec![1, 2, 3], 1).unwrap();
+    assert!(client.trace_events().unwrap().is_empty(), "zero ring records nothing");
+    handle.shutdown();
+
+    let handle = start(|c| c.with_trace_ring(64));
+    let mut client = Client::connect(handle.addr).unwrap();
+    client.generate("a0", vec![1, 2, 3], 1).unwrap();
+    assert!(!client.trace_events().unwrap().is_empty(), "default path records spans");
+    assert!(client.trace_events().unwrap().is_empty(), "drain consumes");
+    handle.shutdown();
+}

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Record a per-commit perf snapshot: run the benches with JSON
-# reporting on, then archive BENCH_*.json under bench_history/ keyed by
-# the current commit — the ROADMAP "perf trajectory" loop. Regressions
-# become visible by diffing consecutive snapshots.
+# reporting on, then archive BENCH_*.json (plus the BENCH_*.prom
+# Prometheus scrape the serving bench emits) under bench_history/
+# keyed by the current commit — the ROADMAP "perf trajectory" loop.
+# Regressions become visible by diffing consecutive snapshots.
 #
 # Usage: scripts/bench_snapshot.sh [bench ...]
 #   (default benches: train_step projection serving)
@@ -26,7 +27,7 @@ mkdir -p "$dest"
 
 shopt -s nullglob
 archived=0
-for f in BENCH_*.json; do
+for f in BENCH_*.json BENCH_*.prom; do
   cp "$f" "$dest/$f"
   archived=$((archived + 1))
 done
